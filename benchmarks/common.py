@@ -1,0 +1,89 @@
+"""Shared harness for the paper-table benchmarks.
+
+Two workloads mirror the paper's regimes at laptop scale:
+  * "femnist" — synthetic 28x28 images + the paper's 4-layer CNN
+    (module-granularity LUAR units, delta in 0..3 as in Table 11);
+  * "mixture" — Gaussian mixture + MLP (fast; used by run.py quick mode).
+
+Every benchmark returns rows of (name, seconds, metrics-dict) and run.py
+prints the ``name,us_per_call,derived`` CSV contract.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LuarConfig
+from repro.data.synthetic import gaussian_mixture, synthetic_images
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import FLConfig, FLResult, run_fl
+from repro.fl.server import ServerConfig
+from repro.models.cnn import cnn_init, cnn_apply, mlp_init, mlp_apply, softmax_xent
+
+
+class Task:
+    def __init__(self, loss_fn, eval_fn, params, data, parts):
+        self.loss_fn, self.eval_fn = loss_fn, eval_fn
+        self.params, self.data, self.parts = params, data, parts
+
+
+def make_task(kind: str = "mixture", n_clients: int = 24, alpha: float = 0.1,
+              seed: int = 0) -> Task:
+    if kind == "mixture":
+        x, y = gaussian_mixture(3000, n_classes=10, d=32, seed=seed)
+        xt, yt = gaussian_mixture(800, n_classes=10, d=32, seed=seed + 1)
+        params = mlp_init(jax.random.PRNGKey(seed), n_features=32, n_classes=10)
+        apply_fn = mlp_apply
+    elif kind == "femnist":
+        x, y = synthetic_images(3000, n_classes=16, seed=seed)
+        xt, yt = synthetic_images(800, n_classes=16, seed=seed + 1)
+        params = cnn_init(jax.random.PRNGKey(seed), n_classes=16)
+        apply_fn = cnn_apply
+    else:
+        raise ValueError(kind)
+    parts = dirichlet_partition(y, n_clients, alpha=alpha, seed=seed)
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+    def loss_fn(p, b):
+        return softmax_xent(apply_fn(p, b["x"]), b["y"])
+
+    def eval_fn(p):
+        return {"acc": float(jnp.mean(jnp.argmax(apply_fn(p, xt_j), -1) == yt_j))}
+
+    return Task(loss_fn, eval_fn, params, {"x": x, "y": y}, parts)
+
+
+def fl(task: Task, rounds: int = 30, *, luar: Optional[LuarConfig] = None,
+       server: Optional[ServerConfig] = None, client: Optional[ClientConfig] = None,
+       fedpaq_bits: int = 0, lbgm_threshold: float = 0.0,
+       prune_keep: float = 0.0, dropout_rate: float = 0.0,
+       n_active: int = 8, tau: int = 5, eval_every: int = 0) -> FLResult:
+    cfg = FLConfig(
+        n_clients=len(task.parts), n_active=n_active, tau=tau, batch_size=16,
+        rounds=rounds,
+        client=client or ClientConfig(lr=0.05),
+        server=server or ServerConfig(),
+        luar=luar or LuarConfig(),
+        fedpaq_bits=fedpaq_bits, lbgm_threshold=lbgm_threshold,
+        prune_keep=prune_keep, dropout_rate=dropout_rate,
+        eval_every=eval_every or rounds)
+    return run_fl(task.loss_fn, task.params, task.data, task.parts, cfg,
+                  task.eval_fn)
+
+
+def timed(fn: Callable[[], FLResult]) -> Tuple[FLResult, float]:
+    t0 = time.time()
+    res = fn()
+    return res, time.time() - t0
+
+
+def emit(rows: List[Tuple[str, float, Dict]]):
+    for name, secs, derived in rows:
+        d = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{secs * 1e6:.0f},{d}")

@@ -1,0 +1,38 @@
+"""Figure 1: layers with the smallest gradient norms are NOT the layers
+with the smallest gradient-to-weight ratio — the paper's motivating
+observation, measured on the CNN workload."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import make_task, emit
+from repro.core import build_units, s_metric, unit_sq_norms
+
+
+def rows(quick: bool = True):
+    task = make_task("femnist", n_clients=8)
+    um = build_units(task.params, "module")
+    x = jnp.asarray(task.data["x"][:256])
+    y = jnp.asarray(task.data["y"][:256])
+    g = jax.grad(task.loss_fn)(task.params, {"x": x, "y": y})
+    gnorm = np.sqrt(np.asarray(unit_sq_norms(um, g)))
+    ratio = np.asarray(s_metric(um, g, task.params))
+    rank_g = np.argsort(gnorm)
+    rank_r = np.argsort(ratio)
+    spearman = float(np.corrcoef(np.argsort(rank_g), np.argsort(rank_r))[0, 1])
+    out = {
+        "min_gradnorm_layer": um.names[rank_g[0]],
+        "min_ratio_layer": um.names[rank_r[0]],
+        "rank_agreement": round(spearman, 3),
+    }
+    for n, gn, r in zip(um.names, gnorm, ratio):
+        out[f"{n}"] = f"g{gn:.3g}/s{r:.3g}"
+    return [("fig1/gradnorm_vs_ratio", 0.0, out)]
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,22 @@
+"""Figure 3: per-layer aggregation counts (communications per layer)."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 20 if quick else 150
+    task = make_task("mixture" if quick else "femnist", n_clients=12)
+    res, t = timed(lambda: fl(task, rounds, n_active=4, tau=3,
+                              luar=LuarConfig(delta=1 if quick else 2,
+                                              granularity="module")))
+    counts = {n: int(c) for n, c in zip(res.unit_names, res.agg_count)}
+    counts["rounds"] = rounds
+    return [("fig3/agg_counts", t / rounds, counts)]
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,26 @@
+"""Figure 4: accuracy vs cumulative communication (learning curves)."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 30 if quick else 150
+    task = make_task("mixture" if quick else "femnist")
+    out = []
+    for name, kw in {
+        "fedavg": {},
+        "fedluar": dict(luar=LuarConfig(delta=2, granularity="leaf")),
+        "dropping": dict(luar=LuarConfig(delta=2, granularity="leaf", mode="drop")),
+    }.items():
+        res, t = timed(lambda: fl(task, rounds, eval_every=max(rounds // 6, 1), **kw))
+        curve = "|".join(f"{h['comm_ratio']:.2f}:{h['acc']:.3f}" for h in res.history)
+        out.append((f"fig4/{name}", t / rounds, {"curve(comm:acc)": curve}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

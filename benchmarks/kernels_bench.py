@@ -1,0 +1,49 @@
+"""Microbenchmarks: LUAR server-op + kernel wall times (CPU numbers are
+indicative only; the kernels target TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import LuarConfig, luar_init, luar_round
+from repro.kernels import ops
+from repro.models.cnn import cnn_init
+
+
+def _time(fn, reps=5):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def rows(quick: bool = True):
+    out = []
+    params = cnn_init(jax.random.PRNGKey(0))
+    cfg = LuarConfig(delta=2, granularity="module")
+    state, um = luar_init(params, cfg, jax.random.PRNGKey(1))
+    upd = jax.tree.map(jnp.ones_like, params)
+    step = jax.jit(lambda s, u: luar_round(s, um, cfg, u, params))
+    t = _time(lambda: step(state, upd)[1].s)
+    out.append(("bench/luar_round_cnn", t, {"units": len(um.names)}))
+
+    if not quick:
+        S = 1024
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 8, S, 64), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 8, S, 64), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 8, S, 64), jnp.float32)
+        t = _time(lambda: ops.flash_attention(q, k, v, interpret=True), reps=2)
+        out.append(("bench/flash_attention_interp_1k", t, {"note": "interpret-mode"}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

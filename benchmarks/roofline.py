@@ -1,0 +1,55 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/) and
+prints, per (arch x shape x mesh): the three time terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and what would move the dominant term.
+
+Run the sweep first:  PYTHONPATH=src python -m repro.launch.sweep
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+from repro.launch.sweep import ARCHS, SHAPES, path_for
+
+ADVICE = {
+    "compute_s": "raise arithmetic intensity / fewer remat passes",
+    "memory_s": "Pallas flash-attention keeps score tiles in VMEM",
+    "collective_s": "static LUAR schedule drops gated all-reduces",
+}
+
+
+def rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+    out = []
+    meshes = (False,) if quick else (False, True)
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mp in meshes:
+                p = path_for(arch, shape, mp)
+                if not os.path.exists(p):
+                    continue
+                rec = json.load(open(p))
+                tag = f"roofline/{arch}/{shape}/{'pod2' if mp else 'pod1'}"
+                if "skipped" in rec:
+                    out.append((tag, 0.0, {"skipped": "sub-quadratic-only"}))
+                    continue
+                rl = rec["roofline"]
+                dom = rl["bottleneck"]
+                out.append((tag, rl[dom], {
+                    "compute_s": round(rl["compute_s"], 3),
+                    "memory_s": round(rl["memory_s"], 3),
+                    "collective_s": round(rl["collective_s"], 3),
+                    "bottleneck": dom,
+                    "useful_flops": round(rec.get("useful_flops_ratio", 0), 3),
+                    "fix": ADVICE[dom],
+                }))
+    return out
+
+
+def main(quick: bool = True):
+    from benchmarks.common import emit
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

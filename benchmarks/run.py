@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is the quick profile
+(synthetic mixture task, short rounds); pass ``--full`` for the
+paper-scale settings (synthetic FEMNIST + CNN, long rounds).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (fig1_motivation, fig3_layer_counts, fig4_curves,
+                        kernels_bench, roofline, table1_memory,
+                        table2_comparative, table3_harmonization,
+                        table4_selection, table5_drop_vs_recycle,
+                        table9_delta_sensitivity, table13_alpha,
+                        table15_clients)
+from benchmarks.common import emit
+
+MODULES = {
+    "table1": table1_memory,
+    "table2": table2_comparative,
+    "table3": table3_harmonization,
+    "table4": table4_selection,
+    "table5": table5_drop_vs_recycle,
+    "table9": table9_delta_sensitivity,
+    "table13": table13_alpha,
+    "table15": table15_clients,
+    "fig1": fig1_motivation,
+    "fig3": fig3_layer_counts,
+    "fig4": fig4_curves,
+    "roofline": roofline,
+    "kernels": kernels_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+    names = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        try:
+            emit(MODULES[name].rows(quick))
+        except Exception as e:  # keep the harness running
+            print(f"{name},0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Tables 15-16: scalability across client-population sizes with a fixed
+active cohort (activation ratios 0.5 / 0.25 / 0.125)."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 25 if quick else 120
+    out = []
+    for n_clients in (16, 32, 64):
+        task = make_task("mixture" if quick else "femnist", n_clients=n_clients)
+        base, t = timed(lambda: fl(task, rounds, n_active=8))
+        luar, _ = timed(lambda: fl(task, rounds, n_active=8,
+                                   luar=LuarConfig(delta=2, granularity="leaf")))
+        out.append((f"table15/clients{n_clients}", t / rounds, {
+            "activation": round(8 / n_clients, 3),
+            "acc_fedavg": round(base.history[-1]["acc"], 4),
+            "acc_fedluar": round(luar.history[-1]["acc"], 4),
+            "comm": round(luar.comm_ratio, 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,39 @@
+"""Table 1: server memory footprint — FedAvg a*d vs FedLUAR a*(d-k)+k."""
+import jax
+
+from benchmarks.common import make_task, emit
+from repro.core import build_units, server_memory_bytes
+from repro.configs import get_config
+from repro.models.registry import build
+
+
+def rows(quick: bool = True):
+    out = []
+    # paper-style CNN workload
+    task = make_task("femnist", n_clients=8)
+    um = build_units(task.params, "module")
+    k = sum(sorted(um.unit_bytes)[-2:])          # delta=2 largest units
+    m = server_memory_bytes(um, k, n_active=32)
+    out.append(("table1/cnn_delta2", 0.0, {
+        "fedavg_MB": round(m["fedavg"] / 2**20, 2),
+        "fedluar_MB": round(m["fedluar"] / 2**20, 2),
+        "saving": round(1 - m["fedluar"] / m["fedavg"], 3)}))
+    # an assigned-architecture workload (leaf granularity)
+    cfg = get_config("qwen3-14b", reduced=quick)
+    params_shapes = jax.eval_shape(lambda: build(cfg).init(jax.random.PRNGKey(0)))
+    um2 = build_units(params_shapes, "leaf")
+    k2 = sum(sorted(um2.unit_bytes)[-len(um2.names) // 4:])
+    m2 = server_memory_bytes(um2, k2, n_active=32)
+    out.append((f"table1/{cfg.name}", 0.0, {
+        "fedavg_GB": round(m2["fedavg"] / 2**30, 3),
+        "fedluar_GB": round(m2["fedluar"] / 2**30, 3),
+        "saving": round(1 - m2["fedluar"] / m2["fedavg"], 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,44 @@
+"""Table 2: comparative study — FedAvg vs SOTA communication-efficient FL
+methods vs FedLUAR, accuracy at reduced communication."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 25 if quick else 120
+    kind = "mixture" if quick else "femnist"
+    delta = 2
+    task = make_task(kind)
+    out = []
+
+    def add(name, res, secs, comm=None):
+        out.append((f"table2/{name}", secs / max(res.luar_state.round, 1) if res else secs, {
+            "acc": round(res.history[-1]["acc"], 4),
+            "comm": round(comm if comm is not None else res.comm_ratio, 3)}))
+
+    res, t = timed(lambda: fl(task, rounds))
+    add("fedavg", res, t)
+    res, t = timed(lambda: fl(task, rounds, fedpaq_bits=8))
+    add("fedpaq_8bit", res, t, comm=res.comm_ratio)
+    res, t = timed(lambda: fl(task, rounds, lbgm_threshold=0.9))
+    add("lbgm", res, t)
+    res, t = timed(lambda: fl(task, rounds, prune_keep=0.25))
+    add("prunefl_25pct", res, t, comm=res.comm_ratio)
+    res, t = timed(lambda: fl(task, rounds, dropout_rate=0.5))
+    add("feddropoutavg", res, t, comm=res.comm_ratio)
+    res, t = timed(lambda: fl(task, rounds,
+                              luar=LuarConfig(delta=delta, mode="drop",
+                                              granularity="leaf")))
+    add("dropping", res, t)
+    res, t = timed(lambda: fl(task, rounds,
+                              luar=LuarConfig(delta=delta, granularity="leaf")))
+    add("fedluar", res, t)
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,35 @@
+"""Table 3: LUAR composes with advanced FL optimizers (FedProx / FedOpt /
+FedACG / FedPAQ) — accuracy with and without recycling."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+from repro.fl.client import ClientConfig
+from repro.fl.server import ServerConfig
+
+
+def rows(quick: bool = True):
+    rounds = 25 if quick else 120
+    task = make_task("mixture" if quick else "femnist")
+    luar = LuarConfig(delta=2, granularity="leaf")
+    variants = {
+        "fedprox": dict(client=ClientConfig(lr=0.05, prox_mu=0.001)),
+        "fedopt": dict(server=ServerConfig(kind="fedopt", lr=0.2)),
+        "fedacg": dict(server=ServerConfig(kind="fedacg", acg_lambda=0.5)),
+        "fedpaq": dict(fedpaq_bits=8),
+    }
+    out = []
+    for name, kw in variants.items():
+        base, t1 = timed(lambda: fl(task, rounds, **kw))
+        with_luar, t2 = timed(lambda: fl(task, rounds, luar=luar, **kw))
+        out.append((f"table3/{name}", t1 / rounds, {
+            "acc": round(base.history[-1]["acc"], 4),
+            "acc_luar": round(with_luar.history[-1]["acc"], 4),
+            "comm_luar": round(with_luar.comm_ratio, 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,27 @@
+"""Table 4: layer-selection scheme ablation — LUAR's inverse-s sampling
+vs random / top / bottom / gradient-norm / deterministic."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 25 if quick else 120
+    task = make_task("mixture" if quick else "femnist")
+    out = []
+    for scheme in ("luar", "random", "top", "bottom", "grad_norm",
+                   "deterministic"):
+        res, t = timed(lambda: fl(task, rounds,
+                                  luar=LuarConfig(delta=2, scheme=scheme,
+                                                  granularity="leaf")))
+        out.append((f"table4/{scheme}", t / rounds, {
+            "acc": round(res.history[-1]["acc"], 4),
+            "comm": round(res.comm_ratio, 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

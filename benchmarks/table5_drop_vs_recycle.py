@@ -1,0 +1,28 @@
+"""Table 5: update Dropping vs Recycling at identical communication."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 30 if quick else 150
+    task = make_task("mixture" if quick else "femnist")
+    out = []
+    for delta in ((2, 3) if quick else (2, 3, 4)):
+        rec, t1 = timed(lambda: fl(task, rounds,
+                                   luar=LuarConfig(delta=delta, granularity="leaf")))
+        drp, t2 = timed(lambda: fl(task, rounds,
+                                   luar=LuarConfig(delta=delta, granularity="leaf",
+                                                   mode="drop")))
+        out.append((f"table5/delta{delta}", (t1 + t2) / (2 * rounds), {
+            "acc_recycle": round(rec.history[-1]["acc"], 4),
+            "acc_drop": round(drp.history[-1]["acc"], 4),
+            "comm": round(rec.comm_ratio, 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,26 @@
+"""Tables 9-12: delta sensitivity — accuracy/communication vs the number
+of recycled layers."""
+from benchmarks.common import emit, fl, make_task, timed
+from repro.core import LuarConfig
+
+
+def rows(quick: bool = True):
+    rounds = 25 if quick else 120
+    task = make_task("mixture" if quick else "femnist")
+    out = []
+    n_units = 6  # MLP leaf units
+    for delta in range(0, n_units):
+        res, t = timed(lambda: fl(task, rounds,
+                                  luar=LuarConfig(delta=delta, granularity="leaf")))
+        out.append((f"table9/delta{delta}", t / rounds, {
+            "acc": round(res.history[-1]["acc"], 4),
+            "comm": round(res.comm_ratio, 3)}))
+    return out
+
+
+def main(quick: bool = True):
+    emit(rows(quick))
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,21 @@
+"""End-to-end driver: federated fine-tuning of an assigned-architecture
+LM with FedLUAR (update recycling on the transformer's stacked weight
+tensors) — the paper's "communication-efficient LLM fine-tuning" future-
+work direction, runnable at reduced scale on CPU.
+
+  PYTHONPATH=src python examples/fedluar_lm.py [--arch qwen3-14b] [--rounds 30]
+
+For a ~100M-parameter run on real hardware:
+  python -m repro.launch.train --workload lm --arch qwen3-14b \
+      --lm-scale 6 --rounds 300 --delta 8
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--workload", "lm", "--rounds", "30", "--delta", "6",
+                "--clients", "16", "--active", "4", "--tau", "2",
+                "--batch-size", "8", "--lr", "0.3", "--eval-every", "10"]
+    main(defaults + args)

@@ -1,0 +1,25 @@
+"""Multi-pod dry-run example: lower + compile one architecture for the
+single-pod (16x16) and multi-pod (2x16x16) production meshes and print
+the roofline terms.  Must run as a fresh process per mesh (jax locks the
+device count at first init), so this shells out to repro.launch.dryrun.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import json
+import subprocess
+import sys
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-4b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+
+for flags, mesh in ([], "single-pod (16,16)=256 chips"), (["--multi-pod"], "multi-pod (2,16,16)=512 chips"):
+    print(f"== {mesh}")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", "/tmp/dryrun_example"] + flags,
+        capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    if out.returncode:
+        print(out.stderr[-1000:])
+        sys.exit(1)
+    rec = json.loads(out.stdout)
+    print(json.dumps(rec.get("roofline", rec), indent=1))

@@ -1,0 +1,11 @@
+"""Serving example: batched prefill + greedy decode with a KV cache for
+any assigned architecture (reduced configs on CPU).
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch mamba2-780m]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

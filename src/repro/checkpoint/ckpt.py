@@ -1,0 +1,44 @@
+"""Simple npz-based pytree checkpointing (params + round state + meta)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, params: Any, *, step: int = 0,
+         extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(params)
+    np.savez(path + ".npz", **arrays)
+    meta = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with np.load(path + ".npz") as data:
+        arrays = dict(data)
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = arrays[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), meta

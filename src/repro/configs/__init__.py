@@ -1,0 +1,46 @@
+"""Assigned-architecture registry.
+
+Each module defines ``CONFIG`` (the exact assigned full-scale config).
+``get_config(name)`` returns it; ``get_config(name, reduced=True)``
+returns the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    cache_specs,
+    input_specs,
+    param_counts,
+)
+
+ARCH_IDS: List[str] = [
+    "qwen3-14b",
+    "internvl2-76b",
+    "mixtral-8x7b",
+    "granite-34b",
+    "zamba2-1.2b",
+    "mamba2-780m",
+    "whisper-small",
+    "deepseek-v2-lite-16b",
+    "gemma3-4b",
+    "minitron-8b",
+]
+
+_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

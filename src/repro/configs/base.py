@@ -1,0 +1,280 @@
+"""Model/config system: one ModelConfig covers all 6 architecture families.
+
+Every assigned architecture gets a module in this package exposing
+``CONFIG`` (the exact assigned full-scale config) built from this
+dataclass.  ``reduced()`` produces the CPU smoke-test variant of the same
+family (<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int       # sequence length (KV-cache length for decode)
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int
+    n_kv_heads: int = 0              # 0 -> = n_heads (MHA)
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # attention flavour
+    qk_norm: bool = False
+    gated_mlp: bool = True           # SwiGLU (3 mats) vs plain GELU (2 mats)
+    rope_theta: float = 1e4
+    window: int = 0                  # sliding-window size; 0 = full attention
+    local_global_period: int = 0     # e.g. 6 -> every 6th layer is global (gemma3)
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_capacity_factor: float = 1.25
+    first_layer_dense: bool = False  # deepseek: layer 0 uses dense FFN
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    attn_every: int = 0              # hybrid: shared attn block every k blocks
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # stub frontend frame count
+    # VLM
+    n_vis_tokens: int = 0
+    # numerics
+    dtype: Any = jnp.bfloat16
+    # provenance
+    source: str = ""
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when long-context decode (500k) is feasible: constant-state
+        SSM/hybrid, or dense with sliding-window locality on (almost) all
+        layers."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.window > 0  # SWA / local-global patterns
+
+    def layer_window(self, layer_idx: int) -> int:
+        """Effective attention window for a layer (0 = full)."""
+        if self.window == 0:
+            return 0
+        if self.local_global_period and (layer_idx + 1) % self.local_global_period == 0:
+            return 0  # global layer in a local:global pattern
+        return self.window
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- reduced smoke variant ----------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family variant: 2 layers, d_model<=256, <=4 experts."""
+        kw: Dict[str, Any] = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            dtype=jnp.float32,
+        )
+        if self.n_experts:
+            kw.update(n_experts=4, top_k=min(self.top_k, 2), d_ff_expert=64,
+                      n_shared_experts=min(self.n_shared_experts, 1))
+        if self.kv_lora_rank:
+            kw.update(kv_lora_rank=32, rope_head_dim=16, head_dim=32)
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=16)
+        if self.attn_every:
+            kw.update(attn_every=2)
+        if self.n_enc_layers:
+            kw.update(n_enc_layers=2, enc_seq=16)
+        if self.n_vis_tokens:
+            kw.update(n_vis_tokens=8)
+        if self.window:
+            kw.update(window=16)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (for roofline MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic total and *active* parameter counts (active differs for MoE)."""
+    d, L = cfg.d_model, cfg.n_layers
+    H, K, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    embed = cfg.vocab_size * d
+    total = embed
+    active = embed
+
+    def attn_params() -> int:
+        return d * H * hd + 2 * d * K * hd + H * hd * d
+
+    def mla_params() -> int:
+        r, rp = cfg.kv_lora_rank, cfg.rope_head_dim
+        return (d * H * (hd + rp)                    # q (nope+rope)
+                + d * (r + rp)                       # kv down + k_pe
+                + r * H * (hd + hd)                  # k_nope up + v up
+                + H * hd * d)                        # o
+
+    def dense_ffn(ff: int) -> int:
+        return (3 if cfg.gated_mlp else 2) * d * ff
+
+    if cfg.family in ("dense", "vlm"):
+        per = attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+        total += L * per
+        active += L * per
+    elif cfg.family == "moe":
+        attn = mla_params() if cfg.kv_lora_rank else attn_params()
+        ffe = cfg.d_ff_expert or cfg.d_ff
+        router = d * cfg.n_experts
+        shared = cfg.n_shared_experts * dense_ffn(ffe)
+        moe_total = cfg.n_experts * dense_ffn(ffe) + router + shared
+        moe_active = cfg.top_k * dense_ffn(ffe) + router + shared
+        n_moe = L - (1 if cfg.first_layer_dense else 0)
+        n_dense = L - n_moe
+        total += L * (attn + 2 * d) + n_moe * moe_total + n_dense * dense_ffn(cfg.d_ff)
+        active += L * (attn + 2 * d) + n_moe * moe_active + n_dense * dense_ffn(cfg.d_ff)
+    elif cfg.family == "ssm":
+        di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = (d * (2 * di + 2 * N + nh)   # in_proj (x,z) + B,C + dt
+               + cfg.conv_width * (di + 2 * N)
+               + di * d + 2 * d)
+        total += L * per
+        active += L * per
+    elif cfg.family == "hybrid":
+        di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = (d * (2 * di + 2 * N + nh) + cfg.conv_width * (di + 2 * N)
+               + di * d + 2 * d)
+        shared = attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+        total += L * per + shared
+        active += L * per + shared
+    elif cfg.family == "encdec":
+        enc_per = attn_params() + dense_ffn(cfg.d_ff) + 2 * d
+        dec_per = 2 * attn_params() + dense_ffn(cfg.d_ff) + 3 * d
+        total += cfg.n_enc_layers * enc_per + L * dec_per + cfg.enc_seq * d
+        active = total
+    return {"total": float(total), "active": float(active)}
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train   -> {tokens, labels, (vis_embeds | enc_frames)}
+    prefill -> {tokens, (vis_embeds | enc_frames)}
+    decode  -> {token, pos, (enc_frames)}  (cache specs built separately)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["labels"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:  # decode
+        out["token"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["vis_embeds"] = _sds((B, cfg.n_vis_tokens, d), cfg.dtype)
+    if cfg.family == "encdec":
+        out["enc_frames"] = _sds((B, cfg.enc_seq, d), cfg.dtype)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache of ``cfg``."""
+    L, K, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
+    dt = cfg.dtype
+    out: Dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "encdec"):
+        out["k"] = _sds((L, batch, seq_len, K, hd), dt)
+        out["v"] = _sds((L, batch, seq_len, K, hd), dt)
+        if cfg.family == "encdec":
+            out["enc_out"] = _sds((batch, cfg.enc_seq, cfg.d_model), dt)
+    elif cfg.family == "moe":
+        if cfg.kv_lora_rank:
+            out["c_kv"] = _sds((L, batch, seq_len, cfg.kv_lora_rank), dt)
+            out["k_pe"] = _sds((L, batch, seq_len, cfg.rope_head_dim), dt)
+        else:
+            out["k"] = _sds((L, batch, seq_len, K, hd), dt)
+            out["v"] = _sds((L, batch, seq_len, K, hd), dt)
+    elif cfg.family == "ssm":
+        out["ssm"] = _sds((L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        out["conv"] = _sds((L, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), dt)
+    elif cfg.family == "hybrid":
+        out["ssm"] = _sds((L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        out["conv"] = _sds((L, batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state), dt)
+        n_attn = cfg.n_layers // cfg.attn_every
+        out["k"] = _sds((n_attn, batch, seq_len, K, hd), dt)
+        out["v"] = _sds((n_attn, batch, seq_len, K, hd), dt)
+    return out

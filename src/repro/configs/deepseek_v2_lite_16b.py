@@ -1,0 +1,26 @@
+"""deepseek-v2-lite-16b [moe] — 27L d_model=2048 16H, MLA kv_lora=512,
+vocab=102400, MoE: 2 shared + 64 routed experts top-6, expert ff=1408,
+first layer dense (ff=10944).  The pool's bracket note says "160 routed"
+(that is DeepSeek-V2-full); the assigned line says 64e top-6, which
+matches the Lite model card, so we use 64.  [arXiv:2405.04434]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,            # dense first layer
+    vocab_size=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    d_ff_expert=1408,
+    first_layer_dense=True,
+    kv_lora_rank=512,
+    rope_head_dim=64,
+    source="arXiv:2405.04434",
+)

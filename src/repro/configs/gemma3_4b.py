@@ -1,0 +1,21 @@
+"""gemma3-4b [dense] — 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144; 5 local (window 1024) : 1 global attention pattern, 128k
+context.  [hf:google/gemma-3-1b-pt family, 4B point]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    qk_norm=True,
+    window=1024,
+    local_global_period=6,   # every 6th layer global -> 5:1 local:global
+    rope_theta=1e6,
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,20 @@
+"""internvl2-76b [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256.  InternViT frontend is a stub: input_specs provides
+(B, 256, d) patch embeddings.  LM backbone = Llama-3-70B-class.
+[arXiv:2404.16821]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=5e5,
+    n_vis_tokens=256,
+    source="arXiv:2404.16821",
+)

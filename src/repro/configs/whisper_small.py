@@ -1,0 +1,20 @@
+"""whisper-small [audio] — 12L enc + 12L dec, d_model=768 12H (MHA)
+d_ff=3072 vocab=51865; mel+conv frontend is a stub: input_specs provides
+(B, 1500, d) frame embeddings.  [arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    gated_mlp=False,
+    vocab_size=51865,
+    n_enc_layers=12,
+    enc_seq=1500,
+    source="arXiv:2212.04356",
+)

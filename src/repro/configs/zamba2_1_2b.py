@@ -1,0 +1,21 @@
+"""zamba2-1.2b [hybrid] — 38L d_model=2048 32H (MHA kv=32) d_ff=8192
+vocab=32000, ssm_state=64; Mamba2 backbone with a weight-shared
+attention+MLP block applied every 6 blocks.  [arXiv:2411.15242]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    source="arXiv:2411.15242",
+)

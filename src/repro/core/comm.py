@@ -1,0 +1,56 @@
+"""Communication/memory accounting (Table 1, Table 2 'Comm' columns).
+
+Upload cost of a round = bytes of all units NOT in R_t, times active
+clients.  All ratios are relative to FedAvg (delta=0) as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.units import UnitMap
+
+
+class CommStats(NamedTuple):
+    bytes_uploaded: jax.Array       # cumulative client->server bytes
+    rounds: jax.Array
+
+
+def comm_init() -> CommStats:
+    return CommStats(jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
+                               else jnp.float32), jnp.zeros((), jnp.int32))
+
+
+def round_upload_bytes(um: UnitMap, mask: jax.Array, n_active: int) -> jax.Array:
+    """Bytes uploaded this round given recycle mask R_t."""
+    sizes = jnp.asarray(um.unit_bytes, jnp.float32)
+    return jnp.sum(jnp.where(mask, 0.0, sizes)) * n_active
+
+
+def comm_update(stats: CommStats, um: UnitMap, mask: jax.Array,
+                n_active: int) -> CommStats:
+    return CommStats(stats.bytes_uploaded + round_upload_bytes(um, mask, n_active),
+                     stats.rounds + 1)
+
+
+def comm_ratio(stats: CommStats, um: UnitMap, n_active: int) -> float:
+    """Cumulative cost relative to FedAvg over the same number of rounds."""
+    full = float(sum(um.unit_bytes)) * n_active * float(stats.rounds)
+    return float(stats.bytes_uploaded) / max(full, 1.0)
+
+
+def server_memory_bytes(um: UnitMap, delta_bytes: int, n_active: int) -> dict:
+    """Table 1 model: FedAvg a*d vs FedLUAR a*(d-k)+k."""
+    d = sum(um.unit_bytes)
+    k = delta_bytes
+    return {
+        "fedavg": n_active * d,
+        "fedluar": n_active * (d - k) + k,
+    }
+
+
+def expected_delta_bytes(um: UnitMap, mask: np.ndarray) -> int:
+    return int(sum(b for b, m in zip(um.unit_bytes, mask) if m))

@@ -1,0 +1,118 @@
+"""High-level FedLUAR API: one object owning config + state + accounting.
+
+    luar = FedLUAR(params, delta=4)
+    for round in ...:
+        applied = luar.aggregate(client_mean_update, params)
+        params = jax.tree.map(lambda p, d: p + d, params, applied)
+    luar.comm_ratio()   # cumulative upload cost vs FedAvg
+
+``use_kernel=True`` routes the per-unit select + Eq.(1) norms through the
+fused Pallas server op (kernels/luar_agg.py) — one HBM pass per layer
+instead of three; on CPU it runs in interpret mode and is only sensible
+for validation.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import comm_init, comm_ratio, comm_update
+from repro.core.metric import recycle_probs
+from repro.core.recycle import LuarConfig, LuarState, luar_init, luar_round
+from repro.core.selection import select_recycle_set
+from repro.core.units import UnitMap
+
+
+class FedLUAR:
+    def __init__(self, params: Any, *, delta: int = 0, scheme: str = "luar",
+                 mode: str = "recycle", granularity: str = "leaf",
+                 max_staleness: int = 0, n_active: int = 1,
+                 seed: int = 0, use_kernel: bool = False):
+        self.cfg = LuarConfig(delta=delta, scheme=scheme, mode=mode,
+                              granularity=granularity,
+                              max_staleness=max_staleness)
+        self.state, self.um = luar_init(params, self.cfg, jax.random.PRNGKey(seed))
+        if use_kernel and any(isinstance(u, tuple) for u in self.um.leaf_unit):
+            raise ValueError("use_kernel supports leaf/module granularity only")
+        self.comm = comm_init()
+        self.n_active = n_active
+        self.use_kernel = use_kernel
+
+    # -- Alg. 2 line 5: what the clients must NOT upload this round -------
+    @property
+    def recycle_set(self) -> np.ndarray:
+        return np.asarray(self.state.mask)
+
+    @property
+    def recycled_unit_names(self):
+        return [n for n, m in zip(self.um.names, self.recycle_set) if m]
+
+    # -- Alg. 1 ------------------------------------------------------------
+    def aggregate(self, fresh_update: Any, params: Any) -> Any:
+        self.comm = comm_update(self.comm, self.um, self.state.mask,
+                                self.n_active)
+        if self.use_kernel:
+            applied, new_state = _kernel_round(self.state, self.um, self.cfg,
+                                               fresh_update, params)
+        else:
+            applied, new_state = luar_round(self.state, self.um, self.cfg,
+                                            fresh_update, params)
+        self.state = new_state
+        return applied
+
+    # -- accounting ---------------------------------------------------------
+    def comm_ratio(self) -> float:
+        return comm_ratio(self.comm, self.um, self.n_active)
+
+    def diagnostics(self) -> dict:
+        return {
+            "round": int(self.state.round),
+            "s": np.asarray(self.state.s),
+            "probs": np.asarray(recycle_probs(self.state.s)),
+            "staleness": np.asarray(self.state.staleness),
+            "agg_count": np.asarray(self.state.agg_count),
+            "comm_ratio": self.comm_ratio(),
+        }
+
+
+def _kernel_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
+                  fresh_update: Any, params: Any):
+    """Alg. 1 with the fused Pallas server op per unit: one pass computes
+    the recycle/aggregate select and both Eq.(1) norms."""
+    from repro.core.units import n_units
+    from repro.kernels import ops
+
+    if cfg.mode == "recycle":
+        prev = jax.tree.leaves(state.prev_update)
+    else:
+        prev = [jnp.zeros_like(a) for a in jax.tree.leaves(state.prev_update)]
+    fresh = jax.tree.leaves(fresh_update)
+    xs = jax.tree.leaves(params)
+
+    n = n_units(um)
+    d2 = [jnp.zeros((), jnp.float32) for _ in range(n)]
+    x2 = [jnp.zeros((), jnp.float32) for _ in range(n)]
+    applied_leaves = []
+    for u, f, p, x in zip(um.leaf_unit, fresh, prev, xs):
+        a, dd, xx = ops.luar_agg(f, x, p, state.mask[u].astype(jnp.float32))
+        applied_leaves.append(a)
+        d2[u] = d2[u] + dd
+        x2[u] = x2[u] + xx
+    applied = jax.tree.unflatten(um.treedef, applied_leaves)
+
+    eps = 1e-12
+    s = jnp.sqrt(jnp.stack(d2) + eps) / jnp.sqrt(jnp.stack(x2) + eps)
+    key, sub = jax.random.split(state.key)
+    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s,
+                                   grad_sq=jnp.stack(d2))
+    new_staleness = jnp.where(state.mask, state.staleness + 1, 0)
+    if cfg.max_staleness > 0:
+        next_mask = next_mask & (new_staleness < cfg.max_staleness)
+    new_state = LuarState(
+        prev_update=applied, mask=next_mask, s=s, staleness=new_staleness,
+        agg_count=state.agg_count + (~state.mask).astype(jnp.int32),
+        round=state.round + 1, key=key)
+    return applied, new_state

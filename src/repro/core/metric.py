@@ -1,0 +1,23 @@
+"""Eq. (1) and (2): the gradient-to-weight ratio metric and the sampling
+distribution over layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap, unit_sq_norms
+
+_EPS = 1e-12
+
+
+def s_metric(um: UnitMap, update, params) -> jax.Array:
+    """s_{t,l} = ||Delta_{t,l}|| / ||x_{t,l}||  per unit, (n_units,) f32."""
+    d2 = unit_sq_norms(um, update)
+    x2 = unit_sq_norms(um, params)
+    return jnp.sqrt(d2 + _EPS) / jnp.sqrt(x2 + _EPS)
+
+
+def recycle_probs(s: jax.Array) -> jax.Array:
+    """p_{t,l} = (1/s_{t,l}) / sum_l (1/s_{t,l})."""
+    inv = 1.0 / jnp.clip(s, _EPS)
+    return inv / jnp.sum(inv)

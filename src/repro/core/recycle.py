@@ -1,0 +1,106 @@
+"""Algorithm 1 — Layer-wise Update Aggregation with Recycling (LUAR).
+
+Functional state machine: ``luar_init`` builds the round state;
+``luar_round`` consumes the freshly aggregated client update and returns
+the applied global update Delta-hat plus the next state (with R_{t+1}
+already sampled, so the server can tell the next cohort which layers to
+omit — Alg. 2 line 5).
+
+Everything inside ``luar_round`` is jit-compatible; the recycle set is a
+per-unit boolean mask.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metric import s_metric, recycle_probs
+from repro.core.selection import select_recycle_set
+from repro.core.units import UnitMap, build_units, n_units, select_per_leaf, unit_sq_norms
+
+
+class LuarConfig(NamedTuple):
+    delta: int = 0                  # layers to recycle; 0 -> vanilla FedAvg
+    scheme: str = "luar"            # selection scheme (Table 4)
+    mode: str = "recycle"           # "recycle" | "drop" (Table 5 ablation)
+    granularity: str = "leaf"       # "leaf" | "module"
+    max_staleness: int = 0          # beyond-paper: force re-aggregation after
+                                    # this many consecutive recycles (0 = off).
+                                    # The paper bounds staleness only in
+                                    # expectation (stochastic selection); this
+                                    # makes the Lemma-1 k explicit and worst-
+                                    # case bounded.
+
+
+class LuarState(NamedTuple):
+    prev_update: Any                # \hat{Delta}_{t-1}
+    mask: jax.Array                 # R_t  (n_units,) bool
+    s: jax.Array                    # s_{t-1,l} (diagnostic)
+    staleness: jax.Array            # consecutive recycles per unit (int32)
+    agg_count: jax.Array            # aggregations per unit (Fig. 3)
+    round: jax.Array                # t
+    key: jax.Array
+
+
+def luar_init(params: Any, cfg: LuarConfig, key) -> tuple[LuarState, UnitMap]:
+    um = build_units(params, cfg.granularity)
+    n = n_units(um)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = LuarState(
+        prev_update=zeros,
+        mask=jnp.zeros((n,), bool),          # R_0 = empty set (Alg. 2 line 2)
+        s=jnp.zeros((n,), jnp.float32),
+        staleness=jnp.zeros((n,), jnp.int32),
+        agg_count=jnp.zeros((n,), jnp.int32),
+        round=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+    return state, um
+
+
+def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
+               fresh_update: Any, params: Any):
+    """One LUAR aggregation (Alg. 1).
+
+    fresh_update: the client-averaged update u_t (valid only for units
+    outside R_t — inside R_t the clients did not upload, so whatever is
+    there is ignored).  params: x_t (pre-update).
+
+    Returns (applied_update \\hat{Delta}_t, new_state).
+    """
+    mask = state.mask
+    if cfg.mode == "recycle":
+        recycled_src = state.prev_update
+    elif cfg.mode == "drop":
+        recycled_src = jax.tree.map(jnp.zeros_like, state.prev_update)
+    else:
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+
+    applied = select_per_leaf(um, mask, recycled_src, fresh_update)
+
+    # Eq. (1) on what the server actually has (recycled units keep a stale
+    # numerator until they are re-aggregated — the stochastic selection
+    # guarantees they eventually are).
+    s = s_metric(um, applied, params)
+    grad_sq = unit_sq_norms(um, applied)
+
+    key, sub = jax.random.split(state.key)
+    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s, grad_sq=grad_sq)
+    new_staleness = jnp.where(mask, state.staleness + 1, 0)
+    if cfg.max_staleness > 0:
+        # staleness bound: a unit recycled max_staleness times in a row is
+        # forced back into the aggregation set next round
+        next_mask = next_mask & (new_staleness < cfg.max_staleness)
+
+    new_state = LuarState(
+        prev_update=applied,
+        mask=next_mask,
+        s=s,
+        staleness=new_staleness,
+        agg_count=state.agg_count + (~mask).astype(jnp.int32),
+        round=state.round + 1,
+        key=key,
+    )
+    return applied, new_state

@@ -1,0 +1,61 @@
+"""Layer-selection schemes (Table 4 ablation) and weighted sampling
+without replacement.
+
+``Random_Choice([L], delta, p)`` from Alg. 1 is weighted sampling without
+replacement; the Gumbel-top-k trick realises exactly the sequential
+(Plackett-Luce) draw jit-compatibly: argtop_k(log p + Gumbel noise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metric import recycle_probs
+
+SCHEMES = ("luar", "random", "grad_norm", "top", "bottom", "deterministic")
+
+_EPS = 1e-12
+
+
+def gumbel_topk_mask(key, logp: jax.Array, k: int) -> jax.Array:
+    """Boolean mask with exactly k True, sampled w/o replacement ~ p."""
+    n = logp.shape[0]
+    g = -jnp.log(-jnp.log(jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0)))
+    scores = logp + g
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros((n,), bool).at[idx].set(True)
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros((scores.shape[0],), bool).at[idx].set(True)
+
+
+def select_recycle_set(key, scheme: str, delta: int, *,
+                       s: jax.Array, grad_sq: jax.Array) -> jax.Array:
+    """Choose R_{t+1}: per-unit boolean mask with delta True entries.
+
+    s: Eq.(1) metric per unit.  grad_sq: per-unit squared update norms
+    (for the gradient-norm ablation scheme).
+    """
+    n = s.shape[0]
+    delta = min(delta, n)
+    if delta == 0:
+        return jnp.zeros((n,), bool)
+    if scheme == "luar":
+        p = recycle_probs(s)
+        return gumbel_topk_mask(key, jnp.log(p + _EPS), delta)
+    if scheme == "random":
+        return gumbel_topk_mask(key, jnp.zeros((n,)), delta)
+    if scheme == "grad_norm":
+        # favour layers with the smallest update norm (the SOTA heuristic
+        # the paper argues against)
+        p = recycle_probs(jnp.sqrt(grad_sq + _EPS))
+        return gumbel_topk_mask(key, jnp.log(p + _EPS), delta)
+    if scheme == "top":            # input-side layers
+        return jnp.arange(n) < delta
+    if scheme == "bottom":         # output-side layers
+        return jnp.arange(n) >= (n - delta)
+    if scheme == "deterministic":  # always the delta smallest-s layers
+        return topk_mask(-s, delta)
+    raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")

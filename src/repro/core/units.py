@@ -1,0 +1,110 @@
+"""Layer units: the granularity at which LUAR recycles.
+
+The paper recycles per network layer (each conv/FC tensor on ResNet/CNN,
+each weight tensor on DistilBERT).  For pytree models we support:
+  - "module": group leaves by their first path component (the paper's
+    granularity for the CNN: conv1/conv2/fc1/fc2 -> 4 units);
+  - "leaf": every parameter leaf is a unit (transformer stacks: each
+    stacked tensor like blocks.attn.wq is one unit);
+  - "depth": stacked leaves (under blocks/enc_blocks/dec_blocks, scanned
+    over the first axis) expand into one unit PER LAYER — the closest
+    match to the paper's per-layer granularity on an L-layer transformer
+    (40-layer DistilBERT-style model -> 40 units per weight kind).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STACKED_PREFIXES = ("blocks", "enc_blocks", "dec_blocks")
+
+# leaf -> unit mapping: an int (whole leaf is one unit) or (start, count)
+# (stacked leaf: units start..start+count-1, one per first-axis slice)
+LeafUnit = Union[int, Tuple[int, int]]
+
+
+class UnitMap(NamedTuple):
+    names: Tuple[str, ...]          # unit names, ordered
+    leaf_unit: Tuple[LeafUnit, ...]
+    treedef: Any
+    unit_bytes: Tuple[int, ...]     # parameter bytes per unit
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def build_units(params: Any, granularity: str = "leaf") -> UnitMap:
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names: List[str] = []
+    leaf_unit: List[LeafUnit] = []
+    nbytes: List[int] = []
+    index: Dict[str, int] = {}
+    for path, leaf in leaves_with_path:
+        full = _path_str(path)
+        total = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if granularity == "depth" and full.split(".")[0] in _STACKED_PREFIXES \
+                and leaf.ndim >= 2:
+            L = leaf.shape[0]
+            start = len(names)
+            for i in range(L):
+                names.append(f"{full}[{i}]")
+                nbytes.append(total // L)
+            leaf_unit.append((start, L))
+            continue
+        key = full.split(".")[0] if granularity == "module" else full
+        if key not in index:
+            index[key] = len(names)
+            names.append(key)
+            nbytes.append(0)
+        u = index[key]
+        leaf_unit.append(u)
+        nbytes[u] += total
+    return UnitMap(tuple(names), tuple(leaf_unit), treedef, tuple(nbytes))
+
+
+def n_units(um: UnitMap) -> int:
+    return len(um.names)
+
+
+def unit_sq_norms(um: UnitMap, tree: Any) -> jax.Array:
+    """Per-unit squared L2 norms, shape (n_units,) f32."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    acc = [jnp.zeros((), jnp.float32) for _ in um.names]
+    for u, leaf in zip(um.leaf_unit, leaves):
+        sq = jnp.square(leaf.astype(jnp.float32))
+        if isinstance(u, tuple):
+            start, L = u
+            per_depth = jnp.sum(sq.reshape(L, -1), axis=1)
+            for i in range(L):
+                acc[start + i] = acc[start + i] + per_depth[i]
+        else:
+            acc[u] = acc[u] + jnp.sum(sq)
+    return jnp.stack(acc)
+
+
+def select_per_leaf(um: UnitMap, mask: jax.Array, when_true: Any, when_false: Any) -> Any:
+    """tree_map-style select driven by a per-unit boolean mask."""
+    lt = jax.tree_util.tree_leaves(when_true)
+    lf = jax.tree_util.tree_leaves(when_false)
+    out = []
+    for u, a, b in zip(um.leaf_unit, lt, lf):
+        if isinstance(u, tuple):
+            start, L = u
+            m = jax.lax.dynamic_slice_in_dim(mask, start, L)
+            m = m.reshape((L,) + (1,) * (a.ndim - 1))
+            out.append(jnp.where(m, a, b))
+        else:
+            out.append(jnp.where(mask[u], a, b))
+    return jax.tree_util.tree_unflatten(um.treedef, out)

@@ -1,0 +1,109 @@
+"""Comparison communication-efficient FL methods (Table 2 / Table 3).
+
+  fedpaq_quantize : QSGD-style per-tensor stochastic uniform quantization
+                    with 2^bits levels (comm cost ~= bits/32).
+  lbgm            : Look-Back Gradient Multiplier — per layer-unit, if the
+                    fresh update is sufficiently collinear with the last
+                    *transmitted* update, the client sends only the scalar
+                    projection coefficient (cost ~= 4 bytes).
+  dropping        : LuarConfig(mode="drop") in repro.core (Table 5).
+  prunefl_mask    : magnitude pruning of the update (PruneFL-flavoured
+                    upload sparsification with a kept-fraction).
+  feddropoutavg   : random dropout of update entries with rate fdr.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import UnitMap, unit_sq_norms
+
+Params = Any
+
+
+# -- FedPAQ ------------------------------------------------------------------
+
+
+def fedpaq_quantize(update: Params, key, bits: int = 4) -> Params:
+    """Stochastic uniform quantization, per tensor, symmetric range."""
+    levels = 2 ** bits - 1
+    leaves, treedef = jax.tree.flatten(update)
+    keys = jax.random.split(key, len(leaves))
+
+    def q(x, k):
+        scale = jnp.max(jnp.abs(x)) + 1e-12
+        y = (x / scale + 1.0) / 2.0 * levels              # [0, levels]
+        lo = jnp.floor(y)
+        p = y - lo
+        yq = lo + jax.random.bernoulli(k, p).astype(x.dtype)
+        return (yq / levels * 2.0 - 1.0) * scale
+
+    return jax.tree.unflatten(treedef, [q(x, k) for x, k in zip(leaves, keys)])
+
+
+def fedpaq_comm_ratio(bits: int) -> float:
+    return bits / 32.0
+
+
+# -- LBGM --------------------------------------------------------------------
+
+
+class LBGMState(NamedTuple):
+    anchor: Params                  # last fully-transmitted update
+    anchor_sq: jax.Array            # per-unit ||anchor||^2
+
+
+def lbgm_init(params: Params, um: UnitMap) -> LBGMState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return LBGMState(zeros, jnp.zeros((len(um.names),), jnp.float32))
+
+
+def lbgm_round(state: LBGMState, um: UnitMap, fresh: Params,
+               threshold: float = 0.95) -> Tuple[Params, LBGMState, jax.Array]:
+    """Returns (applied_update, new_state, per-unit sent_full mask)."""
+    fresh_sq = unit_sq_norms(um, fresh)
+    # per-unit <fresh, anchor>
+    dots = [jnp.zeros((), jnp.float32) for _ in um.names]
+    for u, f, a in zip(um.leaf_unit, jax.tree.leaves(fresh), jax.tree.leaves(state.anchor)):
+        dots[u] = dots[u] + jnp.sum(f.astype(jnp.float32) * a.astype(jnp.float32))
+    dot = jnp.stack(dots)
+    cos2 = jnp.square(dot) / jnp.clip(fresh_sq * state.anchor_sq, 1e-20)
+    reuse = cos2 >= threshold ** 2                         # look-back OK
+    coeff = dot / jnp.clip(state.anchor_sq, 1e-20)
+
+    fresh_leaves = jax.tree.leaves(fresh)
+    anchor_leaves = jax.tree.leaves(state.anchor)
+    out, new_anchor = [], []
+    for u, f, a in zip(um.leaf_unit, fresh_leaves, anchor_leaves):
+        applied = jnp.where(reuse[u], coeff[u] * a, f)
+        out.append(applied)
+        new_anchor.append(jnp.where(reuse[u], a, f))
+    applied = jax.tree.unflatten(um.treedef, out)
+    anchor = jax.tree.unflatten(um.treedef, new_anchor)
+    new_sq = jnp.where(reuse, state.anchor_sq, fresh_sq)
+    return applied, LBGMState(anchor, new_sq), ~reuse
+
+
+# -- PruneFL-flavoured magnitude sparsification -------------------------------
+
+
+def magnitude_prune(update: Params, keep_fraction: float) -> Params:
+    def prune(x):
+        flat = jnp.abs(x.reshape(-1))
+        k = max(1, int(keep_fraction * flat.shape[0]))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+    return jax.tree.map(prune, update)
+
+
+# -- FedDropoutAvg -------------------------------------------------------------
+
+
+def dropout_avg(update: Params, key, fdr: float = 0.5) -> Params:
+    leaves, treedef = jax.tree.flatten(update)
+    keys = jax.random.split(key, len(leaves))
+    out = [jnp.where(jax.random.bernoulli(k, 1.0 - fdr, x.shape), x, 0.0) / (1.0 - fdr)
+           for x, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,62 @@
+"""Client-side local training: tau mini-batch SGD(+momentum) steps
+(Alg. 2 lines 6-10), returning the accumulated update
+Delta_t^i = x_{t,tau}^i - x_{t,0}^i.
+
+Supports the FedProx proximal term and MOON-free advanced-optimizer
+hooks (the server side lives in fl/server.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+Params = Any
+
+
+class ClientConfig(NamedTuple):
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    prox_mu: float = 0.0            # FedProx
+
+
+def local_update(loss_fn: Callable[[Params, Dict], jax.Array],
+                 params: Params, batches: Dict[str, jax.Array],
+                 cfg: ClientConfig) -> Params:
+    """Run tau local steps.  ``batches`` arrays are (tau, ...) stacked.
+
+    Returns Delta^i (same pytree as params)."""
+    x0 = params
+
+    def loss_with_prox(p, batch):
+        loss = loss_fn(p, batch)
+        if cfg.prox_mu:
+            sq = sum(jnp.sum(jnp.square(a - b)) for a, b in
+                     zip(jax.tree.leaves(p), jax.tree.leaves(x0)))
+            loss = loss + 0.5 * cfg.prox_mu * sq
+        return loss
+
+    grad_fn = jax.grad(loss_with_prox)
+
+    def step(carry, batch):
+        p, opt = carry
+        g = grad_fn(p, batch)
+        p, opt = optim.sgd_update(p, g, opt, lr=cfg.lr, momentum=cfg.momentum,
+                                  weight_decay=cfg.weight_decay)
+        return (p, opt), None
+
+    (p_final, _), _ = jax.lax.scan(step, (params, optim.sgd_init(params)), batches)
+    return jax.tree.map(lambda a, b: a - b, p_final, x0)
+
+
+def batched_local_updates(loss_fn, params: Params,
+                          client_batches: Dict[str, jax.Array],
+                          cfg: ClientConfig) -> Params:
+    """vmap over the active cohort.  client_batches arrays: (a, tau, ...).
+    Returns stacked Delta^i with leading axis a."""
+    fn = lambda b: local_update(loss_fn, params, b, cfg)
+    return jax.vmap(fn)(client_batches)

@@ -1,0 +1,147 @@
+"""Algorithm 2 — the FedLUAR round engine (simulation form).
+
+One jitted ``round_step`` does: broadcast -> vmap'd client local training
+(tau SGD steps each) -> cohort mean -> LUAR (Alg. 1) -> server optimizer.
+The host loop only samples cohorts and minibatch indices (numpy RNG) and
+tracks communication bytes.
+
+At pod scale the same algorithm runs through launch/steps.py with the
+cohort mapped onto mesh axes; this module is the single-host simulator
+used by tests, benchmarks and examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CommStats, LuarConfig, comm_init, comm_ratio,
+                        comm_update, luar_init, luar_round)
+from repro.fl import baselines
+from repro.fl.client import ClientConfig, batched_local_updates
+from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point, mutate
+
+Params = Any
+
+
+@dataclass
+class FLConfig:
+    n_clients: int = 128
+    n_active: int = 32
+    tau: int = 20
+    batch_size: int = 32
+    rounds: int = 50
+    seed: int = 0
+    client: ClientConfig = field(default_factory=ClientConfig)
+    server: ServerConfig = field(default_factory=ServerConfig)
+    luar: LuarConfig = field(default_factory=LuarConfig)
+    # extra baselines composable with LUAR (Tables 2/3)
+    fedpaq_bits: int = 0            # 0 = off
+    lbgm_threshold: float = 0.0     # 0 = off
+    prune_keep: float = 0.0         # PruneFL-style magnitude keep-fraction
+    dropout_rate: float = 0.0       # FedDropoutAvg fdr
+    eval_every: int = 5
+
+
+@dataclass
+class FLResult:
+    history: List[Dict[str, float]] = field(default_factory=list)
+    comm_ratio: float = 1.0
+    agg_count: Optional[np.ndarray] = None
+    unit_names: Optional[tuple] = None
+    params: Any = None
+    luar_state: Any = None
+
+
+def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
+                          cohort: np.ndarray, tau: int, bs: int, rng) -> Dict[str, jnp.ndarray]:
+    """(a, tau, bs, ...) batches sampled with replacement per client."""
+    out: Dict[str, list] = {k: [] for k in data}
+    for c in cohort:
+        idx = parts[c]
+        sel = rng.choice(idx, size=(tau, bs), replace=True)
+        for k, arr in data.items():
+            out[k].append(arr[sel])
+    return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
+
+
+def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
+           init_params: Params,
+           data: Dict[str, np.ndarray],
+           parts: List[np.ndarray],
+           cfg: FLConfig,
+           eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None) -> FLResult:
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k1, k2 = jax.random.split(key, 3)
+
+    params = init_params
+    luar_state, um = luar_init(params, cfg.luar, k1)
+    server_state = server_init(params, cfg.server, k2)
+    comm = comm_init()
+    lbgm_state = baselines.lbgm_init(params, um) if cfg.lbgm_threshold else None
+
+    @jax.jit
+    def round_step(params, luar_state, server_state, lbgm_state, batches, qkey):
+        start = broadcast_point(params, server_state, cfg.server)
+        deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
+        fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        if cfg.fedpaq_bits:
+            fresh = baselines.fedpaq_quantize(fresh, qkey, cfg.fedpaq_bits)
+        if cfg.prune_keep:
+            fresh = baselines.magnitude_prune(fresh, cfg.prune_keep)
+        if cfg.dropout_rate:
+            fresh = baselines.dropout_avg(fresh, qkey, cfg.dropout_rate)
+        lbgm_sent = None
+        if cfg.lbgm_threshold:
+            fresh, lbgm_state, lbgm_sent = baselines.lbgm_round(
+                lbgm_state, um, fresh, cfg.lbgm_threshold)
+        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+        params, server_state = apply_update(params, applied, server_state, cfg.server)
+        return params, luar_state, server_state, lbgm_state, lbgm_sent
+
+    result = FLResult()
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    total_bytes = sizes.sum()
+    uploaded = 0.0
+    full_per_round = total_bytes * cfg.n_active
+
+    for t in range(cfg.rounds):
+        cohort = rng.choice(cfg.n_clients, size=cfg.n_active, replace=False)
+        batches = _stack_client_batches(data, parts, cohort, cfg.tau,
+                                        cfg.batch_size, rng)
+        key, qkey = jax.random.split(key)
+        # upload accounting uses the CURRENT R_t (pre-round mask)
+        mask_now = np.asarray(luar_state.mask)
+        params, luar_state, server_state, lbgm_state, lbgm_sent = round_step(
+            params, luar_state, server_state, lbgm_state, batches, qkey)
+        scale = (cfg.fedpaq_bits / 32.0) if cfg.fedpaq_bits else 1.0
+        if cfg.prune_keep:
+            # sparse upload: values + indices ~= 2 * keep_fraction
+            scale *= min(2.0 * cfg.prune_keep, 1.0)
+        if cfg.dropout_rate:
+            scale *= (1.0 - cfg.dropout_rate)
+        round_bytes = sizes[~mask_now].sum() * scale
+        if lbgm_sent is not None:
+            sent = np.asarray(lbgm_sent)
+            round_bytes = (sizes[(~mask_now) & sent].sum() * scale
+                           + 4.0 * ((~mask_now) & ~sent).sum())
+        uploaded += round_bytes * cfg.n_active
+
+        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1):
+            metrics = dict(eval_fn(params))
+            metrics.update(round=t + 1,
+                           comm_ratio=uploaded / (full_per_round * (t + 1)))
+            result.history.append(metrics)
+
+    result.comm_ratio = uploaded / (full_per_round * cfg.rounds)
+    result.agg_count = np.asarray(luar_state.agg_count)
+    result.unit_names = um.names
+    result.params = params
+    result.luar_state = luar_state
+    return result

@@ -1,0 +1,77 @@
+"""Server-side federated optimizers applied to the LUAR-aggregated global
+update \\hat{Delta}_t (Section 4.2 — LUAR is agnostic to the optimizer):
+
+  fedavg : x <- x + Delta-hat
+  fedopt : server Adam on the pseudo-gradient -Delta-hat (Reddi et al.)
+  fedacg : global-momentum acceleration; the server broadcasts the
+           look-ahead point x + lam*m and accumulates m <- lam*m + Delta.
+  fedmut : after the update, per-cohort mutation seeds are derived by
+           adding +/- alpha * Delta-hat with random per-layer signs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+Params = Any
+
+
+class ServerConfig(NamedTuple):
+    kind: str = "fedavg"            # fedavg | fedopt | fedacg | fedmut
+    lr: float = 1.0                 # server learning rate (fedopt)
+    acg_lambda: float = 0.7         # FedACG momentum
+    mut_alpha: float = 0.5          # FedMut mutation scale
+
+
+class ServerState(NamedTuple):
+    adam: Optional[optim.AdamState]
+    momentum: Optional[Params]
+    key: jax.Array
+
+
+def server_init(params: Params, cfg: ServerConfig, key) -> ServerState:
+    adam = optim.adam_init(params) if cfg.kind == "fedopt" else None
+    mom = (jax.tree.map(jnp.zeros_like, params)
+           if cfg.kind in ("fedacg",) else None)
+    return ServerState(adam, mom, key)
+
+
+def broadcast_point(params: Params, state: ServerState, cfg: ServerConfig) -> Params:
+    """What the server sends to clients (FedACG sends a look-ahead)."""
+    if cfg.kind == "fedacg":
+        return jax.tree.map(lambda p, m: p + cfg.acg_lambda * m, params, state.momentum)
+    return params
+
+
+def apply_update(params: Params, applied: Params, state: ServerState,
+                 cfg: ServerConfig) -> Tuple[Params, ServerState]:
+    """x_{t+1} = server_opt(x_t, Delta-hat_t)   (Alg. 2 line 12)."""
+    key, sub = jax.random.split(state.key)
+    if cfg.kind == "fedavg" or cfg.kind == "fedmut":
+        new_p = jax.tree.map(lambda p, d: p + d, params, applied)
+        return new_p, state._replace(key=key)
+    if cfg.kind == "fedopt":
+        pseudo_grad = jax.tree.map(lambda d: -d, applied)
+        new_p, adam = optim.adam_update(params, pseudo_grad, state.adam, lr=cfg.lr)
+        return new_p, ServerState(adam, state.momentum, key)
+    if cfg.kind == "fedacg":
+        mom = jax.tree.map(lambda m, d: cfg.acg_lambda * m + d,
+                           state.momentum, applied)
+        new_p = jax.tree.map(lambda p, m: p + m, params, mom)
+        return new_p, ServerState(state.adam, mom, key)
+    raise ValueError(f"unknown server optimizer {cfg.kind!r}")
+
+
+def mutate(params: Params, applied: Params, key, alpha: float) -> Params:
+    """FedMut-style mutation of the broadcast model (simplified: one
+    mutated seed; the sign flips per parameter tensor)."""
+    leaves, treedef = jax.tree.flatten(params)
+    d_leaves = jax.tree.leaves(applied)
+    keys = jax.random.split(key, len(leaves))
+    out = [p + alpha * jnp.where(jax.random.bernoulli(k), 1.0, -1.0) * d
+           for p, d, k in zip(leaves, d_leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

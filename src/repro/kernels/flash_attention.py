@@ -1,0 +1,105 @@
+"""Flash attention Pallas TPU kernel (prefill/train hot spot).
+
+Grid is (B*H, Sq/bq, Skv/bk); the KV axis is innermost and carries the
+online-softmax accumulators in VMEM scratch across grid steps.  GQA is
+handled in the K/V index maps (no materialised head broadcast).  Block
+shapes are (8,128)-aligned for the MXU/VREG layout; the TPU is the
+target — on this CPU container the kernel runs under interpret=True and
+is validated against ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, bq: int, bk: int, nkv: int, causal: bool, window: int,
+            scale: float):
+    qi, kj = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1)
+    acc_scr[...] = alpha[:, None] * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,Sq,hd), k/v (B,K,Skv,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "block must divide sequence"
+    nq, nkv = Sq // bq, Skv // bk
+
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * K, Skv, hd)
+    vf = v.reshape(B * K, Skv, hd)
+
+    def kv_idx(bh, qi, kj):
+        return ((bh // H) * K + (bh % H) // G, kj, 0)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, nkv=nkv, causal=causal, window=window,
+        scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_idx),
+            pl.BlockSpec((1, bk, hd), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd)

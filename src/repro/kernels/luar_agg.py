@@ -1,0 +1,93 @@
+"""Fused LUAR server-side aggregation kernel (the paper's hot spot).
+
+Per layer and per round the server needs three HBM sweeps over the
+layer's update: (a) select recycled-vs-fresh update, (b) ||applied||^2
+and (c) ||x||^2 for the Eq. (1) metric s_{t,l}.  This kernel fuses them
+into ONE pass: each (8,128)-aligned tile is read once, the select is
+written, and the two squared norms accumulate in SMEM across the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+_ROWS = 8
+
+
+def _kernel(mask_ref, d_ref, x_ref, r_ref, o_ref, d2_ref, x2_ref, acc_scr):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    use_recycled = mask_ref[0] > 0
+    d = d_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    applied = jnp.where(use_recycled, r, d)
+    o_ref[...] = applied.astype(o_ref.dtype)
+    acc_scr[0, 0] += jnp.sum(applied * applied)
+    acc_scr[0, 1] += jnp.sum(x * x)
+
+    @pl.when(i == n - 1)
+    def _flush():
+        d2_ref[0, 0] = acc_scr[0, 0]
+        x2_ref[0, 0] = acc_scr[0, 1]
+
+
+def luar_agg(delta: jax.Array, x: jax.Array, recycled: jax.Array,
+             use_recycled: jax.Array, *, block_rows: int = 256,
+             interpret: bool = False):
+    """Flat-or-any-shape single-layer LUAR aggregation.
+
+    Returns (applied_update (same shape), ||applied||^2, ||x||^2)."""
+    shape, dtype = delta.shape, delta.dtype
+    flat = delta.reshape(-1)
+    n = flat.shape[0]
+    width = _LANES
+    rows = -(-n // width)
+    pad_rows = -(-rows // _ROWS) * _ROWS
+    bt = min(block_rows, pad_rows)
+    while pad_rows % bt:
+        bt //= 2
+    grid = pad_rows // bt
+
+    def prep(a):
+        f = a.reshape(-1).astype(jnp.float32)
+        f = jnp.pad(f, (0, pad_rows * width - n))
+        return f.reshape(pad_rows, width)
+
+    mask = (use_recycled > 0).astype(jnp.int32).reshape(1)
+    out, d2, x2 = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bt, width), lambda i: (i, 0)),
+            pl.BlockSpec((bt, width), lambda i: (i, 0)),
+            pl.BlockSpec((bt, width), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, width), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pad_rows, width), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 2), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(mask, prep(delta), prep(x), prep(recycled))
+    applied = out.reshape(-1)[:n].reshape(shape).astype(dtype)
+    return applied, d2[0, 0], x2[0, 0]

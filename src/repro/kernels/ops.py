@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container ``interpret=True`` (set via ``REPRO_INTERPRET=1``
+or the explicit argument) executes the kernel bodies in Python for
+validation; on a real TPU the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import luar_agg as _la
+from repro.kernels import ssd_scan as _ss
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = partial(_fa.flash_attention, causal=causal, window=window,
+                 block_q=block_q, block_k=block_k, interpret=interpret)
+    return jax.jit(fn)(q, k, v)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = partial(_ss.ssd_scan, chunk=chunk, interpret=interpret)
+    return jax.jit(fn)(x, dt, A, Bm, Cm, D)
+
+
+def luar_agg(delta, x, recycled, use_recycled, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = partial(_la.luar_agg, interpret=interpret)
+    return jax.jit(fn)(delta, x, recycled, use_recycled)

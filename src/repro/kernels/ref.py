@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, window: int = 0) -> jax.Array:
+    """q (B,H,Sq,hd), k/v (B,K,Skv,hd).  GQA-aware naive attention."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    dpos = jnp.arange(Sq)[:, None] - jnp.arange(Skv)[None, :] + (Skv - Sq)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= dpos >= 0
+    if window > 0:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D, initial_state=None):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x (B,S,nh,P), dt (B,S,nh), A (nh,), Bm/Cm (B,S,N), D (nh,).
+    Returns (y (B,S,nh,P), final_state (B,nh,P,N))."""
+    Bsz, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    s0 = (jnp.zeros((Bsz, nh, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # (B,nh,P),(B,nh),(B,N),(B,N)
+        a = jnp.exp(dtt * A)                        # (B,nh)
+        state = a[..., None, None] * state + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct) + D[None, :, None] * xt
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bm.astype(f32), 1, 0), jnp.moveaxis(Cm.astype(f32), 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def luar_agg_ref(delta: jax.Array, x: jax.Array, recycled: jax.Array,
+                 use_recycled: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused server-side LUAR op for one layer: select the applied update
+    and produce the squared norms for Eq. (1)'s s_{t,l}.
+
+    delta/x/recycled: same shape.  use_recycled: scalar bool/float.
+    Returns (applied_update, ||applied||^2, ||x||^2)."""
+    applied = jnp.where(use_recycled > 0, recycled, delta)
+    d2 = jnp.sum(jnp.square(applied.astype(jnp.float32)))
+    x2 = jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return applied, d2, x2

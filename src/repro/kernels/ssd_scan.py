@@ -1,0 +1,108 @@
+"""Mamba2 SSD chunk-scan Pallas TPU kernel.
+
+Grid is (B*nh, S/T): the chunk axis is innermost/sequential and the
+(P, N) state lives in VMEM scratch across chunks.  Within a chunk the
+quadratic dual form runs on the MXU ((T,T) and (T,P)x(P,N) matmuls); the
+inter-chunk recurrence is one rank-T update.  B/C projections are shared
+across heads (n_groups=1) via the index map.  Validated under
+interpret=True against ref.ssd_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref,
+            y_ref, state_ref, s_scr, *, T: int, nc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)                      # (T, P)
+    dt = dt_ref[0].astype(jnp.float32)                    # (T,)
+    A = a_ref[0].astype(jnp.float32)                      # ()
+    D = d_ref[0].astype(jnp.float32)
+    Bm = b_ref[0].astype(jnp.float32)                     # (T, N)
+    Cm = c_ref[0].astype(jnp.float32)
+
+    a = dt * A                                            # (T,) <= 0
+    cum = jnp.cumsum(a)
+    seg = cum[:, None] - cum[None, :]                     # (T, T)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    W = scores * L * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    state = s_scr[...]                                    # (P, N)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y + D * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum) * dt               # (T,)
+    upd = jax.lax.dot_general(x * decay_end[:, None], Bm,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    s_scr[...] = jnp.exp(cum[-1]) * state + upd
+
+    @pl.when(c == nc - 1)
+    def _flush():
+        state_ref[0] = s_scr[...]
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array, D: jax.Array,
+             *, chunk: int = 128, interpret: bool = False):
+    """x (B,S,nh,P), dt (B,S,nh), A/D (nh,), Bm/Cm (B,S,N).
+
+    Returns (y (B,S,nh,P), final_state (B,nh,P,N))."""
+    B, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    T = min(chunk, S)
+    assert S % T == 0, "chunk must divide sequence"
+    nc = S // T
+
+    xf = jnp.moveaxis(x, 2, 1).reshape(B * nh, S, P)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(B * nh, S)
+    Af = jnp.broadcast_to(A[None], (B, nh)).reshape(B * nh)
+    Df = jnp.broadcast_to(D[None], (B, nh)).reshape(B * nh)
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, T=T, nc=nc),
+        grid=(B * nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, T, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, T), lambda h, c: (h, c)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+            pl.BlockSpec((1, T, N), lambda h, c: (h // nh, c, 0)),
+            pl.BlockSpec((1, T, N), lambda h, c: (h // nh, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, P, N), lambda h, c: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nh, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B * nh, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xf, dtf, Af, Df, Bm, Cm)
+    y = jnp.moveaxis(y.reshape(B, nh, S, P), 1, 2)
+    return y, state.reshape(B, nh, P, N)

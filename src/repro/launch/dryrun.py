@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh)
+combination against placeholder devices, and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+      --shape train_4k [--multi-pod] [--static] [--delta-frac 0.25] \
+      [--out experiments/dryrun]
+
+No arrays are allocated: inputs are ShapeDtypeStructs; the product is
+compiled.memory_analysis() / cost_analysis() plus the parsed collective
+schedule, dumped as JSON for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, input_specs, cache_specs, param_counts
+from repro.core.recycle import LuarConfig
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.policy import use_policy
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   make_policy, param_shardings, replicated)
+from repro.launch.steps import (TrainState, make_decode_step,
+                                make_fedluar_train_step, make_prefill_step,
+                                train_state_shapes)
+from repro.models.registry import build
+
+
+def _static_mask(um, frac: float):
+    """Representative static recycle set: the largest units by bytes
+    (the paper's FEMNIST/AG-News observation: the biggest layer is
+    recycled most often)."""
+    n = len(um.names)
+    k = max(1, int(round(frac * n)))
+    order = np.argsort(um.unit_bytes)[::-1]
+    mask = [False] * n
+    for i in order[:k]:
+        mask[i] = True
+    return tuple(mask)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              static: bool = False, delta_frac: float = 0.25,
+              strategy: str = "fsdp_sp", compile_: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": "full-attention arch; 500k decode requires "
+                           "sub-quadratic attention (DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(cfg)
+    t0 = time.time()
+
+    pol = make_policy(mesh, cfg, strategy, shape) if shape.kind != "decode" else None
+    with use_policy(pol):
+        if shape.kind == "train":
+            state_shapes, um = train_state_shapes(model)
+            mask = _static_mask(um, delta_frac) if static else None
+            delta = max(1, int(round(delta_frac * len(um.names))))
+            step = make_fedluar_train_step(
+                model, LuarConfig(delta=delta), um, static_mask=mask)
+            psh = param_shardings(state_shapes.params, mesh, cfg, strategy)
+            rep = replicated(mesh)
+            luar_sh = state_shapes.luar.__class__(
+                prev_update=psh, mask=rep, s=rep, staleness=rep,
+                agg_count=rep, round=rep, key=rep)
+            state_sh = TrainState(params=psh, momentum=psh, luar=luar_sh)
+            bsh = batch_shardings(cfg, shape, mesh, strategy)
+            fn = jax.jit(step, in_shardings=(state_sh, bsh),
+                         out_shardings=(state_sh, rep))
+            lowered = fn.lower(state_shapes, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            psh = param_shardings(params_shapes, mesh, cfg, strategy)
+            bsh = batch_shardings(cfg, shape, mesh, strategy)
+            fn = jax.jit(make_prefill_step(model), in_shardings=(psh, bsh))
+            lowered = fn.lower(params_shapes, input_specs(cfg, shape))
+        else:  # decode
+            params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            # serving layout: weight-stationary TP.  FSDP weight gathers
+            # dominate per-token cost (measured 16x worse collective term —
+            # EXPERIMENTS.md §Perf H4); the score-tile TP trap of training
+            # does not apply to single-token queries.
+            serve_strategy = "naive_tp" if strategy == "fsdp_sp" else strategy
+            psh = param_shardings(params_shapes, mesh, cfg, serve_strategy)
+            csh = cache_shardings(cfg, shape, mesh, strategy)
+            bsh = batch_shardings(cfg, shape, mesh, strategy)
+            cshapes = cache_specs(cfg, shape.global_batch, shape.seq_len)
+            fn = jax.jit(make_decode_step(model),
+                         in_shardings=(psh, csh, bsh),
+                         out_shardings=(None, csh))
+            lowered = fn.lower(params_shapes, cshapes, input_specs(cfg, shape))
+
+        rec: Dict[str, Any] = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "static": static, "strategy": strategy, "lower_s": round(time.time() - t0, 1),
+        }
+        if not compile_:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- analysis -------------------------------------------------------
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover - backend specific
+        rec["memory_analysis"] = f"unavailable: {e}"
+
+    flops = bytes_accessed = 0.0
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        flops = float(ca.get("flops", 0.0))
+        bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        rec["cost_analysis"] = {"flops": flops, "bytes_accessed": bytes_accessed}
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = f"unavailable: {e}"
+
+    # trip-count-corrected HLO analysis (cost_analysis counts loop bodies
+    # once — see launch/hlo.py docstring)
+    text = compiled.as_text()
+    analysis = hlo.analyze(text)
+    rec["hlo_analysis"] = {k: v for k, v in analysis.items()}
+    rec["roofline"] = hlo.roofline(analysis)
+
+    pc = param_counts(cfg)
+    n_chips = 512 if multi_pod else 256
+    if shape.kind == "train":
+        model_flops = 6.0 * pc["active"] * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * pc["active"] * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * pc["active"] * shape.global_batch
+    rec["model_flops_per_chip"] = model_flops / n_chips
+    if analysis["flops"]:
+        rec["useful_flops_ratio"] = rec["model_flops_per_chip"] / analysis["flops"]
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--static", action="store_true")
+    ap.add_argument("--delta-frac", type=float, default=0.25)
+    ap.add_argument("--strategy", default="fsdp_sp", choices=["fsdp_sp", "naive_tp"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    rec = lower_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                    static=args.static, delta_frac=args.delta_frac,
+                    strategy=args.strategy)
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "pod2" if args.multi_pod else "pod1"
+    sfx = (("_" + args.strategy) if args.strategy != "fsdp_sp" else "") + ("_static" if args.static else "") + (f"_{args.tag}" if args.tag else "")
+    path = os.path.join(args.out, f"{args.arch}_{args.shape}_{mesh_tag}{sfx}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+    print(json.dumps(rec, indent=2, default=str))
+    print(f"\nwrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

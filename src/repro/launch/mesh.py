@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod : (2, 16, 16) = 512 chips, axes (pod, data, model) — the 'pod'
+axis is the FL silo boundary (DESIGN.md §3): FedLUAR's recycling gates
+the cross-pod all-reduce per layer.
+
+These are FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate mesh over the locally-available devices (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)

@@ -1,0 +1,87 @@
+"""Distribution policy: how model-internal compute maps onto the mesh.
+
+The model code is policy-agnostic; when a policy is active (set by the
+launcher/dry-run around tracing), attention/MoE/SSM pick distributed
+execution paths:
+
+  seq_axis  : self-attention runs under shard_map with queries sequence-
+              sharded on this axis and K/V all-gathered (context/sequence
+              parallelism).  Avoids the naive-TP trap of sharding head_dim
+              (which all-reduces full score tiles — see EXPERIMENTS.md
+              §Perf iteration 1).
+  head_axis : SSM / MHA head sharding constraint (zamba2: H=32 % 16 == 0;
+              mamba2: nh=48 % 16 == 0) — fully local per-head compute.
+  ep_axis   : MoE expert parallelism (DeepSeek 64e) or per-expert ffn TP
+              (Mixtral 8e) under shard_map with a psum combine.
+  batch_axes: data-parallel axes (the FL client-cohort axes).
+
+No policy (the default) = single-host semantics; CPU tests never touch
+this module.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class Policy:
+    mesh: Any
+    batch_axes: Tuple[str, ...] = ("data",)
+    seq_axis: Optional[str] = "model"
+    head_axis: Optional[str] = "model"
+    ep_axis: Optional[str] = "model"
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 1)
+
+
+_ACTIVE: Optional[Policy] = None
+
+
+def active() -> Optional[Policy]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[Policy]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = policy
+    try:
+        yield policy
+    finally:
+        _ACTIVE = prev
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint when a policy is active, else identity."""
+    pol = _ACTIVE
+    if pol is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(pol.mesh, P(*spec)))
+
+
+def gather_params(tree):
+    """ZeRO-3 weight gather at point-of-use.
+
+    FSDP-sharded weights are constrained to replicated right before the
+    layer uses them: XLA inserts one all-gather per layer per pass (and a
+    reduce-scatter for the weight gradient) instead of resharding the
+    much larger activations — without this GSPMD picks 'involuntary full
+    rematerialization' plans that all-gather (B,S,ff) tensors (see
+    EXPERIMENTS.md §Perf iteration 2)."""
+    pol = _ACTIVE
+    if pol is None:
+        return tree
+    return jax.tree.map(
+        lambda a: jax.lax.with_sharding_constraint(
+            a, jax.sharding.NamedSharding(pol.mesh, P(*([None] * a.ndim)))),
+        tree)

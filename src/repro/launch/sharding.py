@@ -1,0 +1,252 @@
+"""Sharding rules: parameter layouts, batch/cache layouts per strategy.
+
+Strategies
+----------
+"fsdp_sp" (default, the tuned layout — EXPERIMENTS.md §Perf):
+  * weights: FSDP — the penultimate dim shards over ('data','model')
+    combined when divisible (ZeRO-3 style; gathered per layer inside the
+    scan), else over whichever axis divides.  No tensor-parallel split of
+    head_dim.
+  * MoE expert stacks: expert dim on 'model' when divisible (EP), the
+    d_model dim on 'data'.
+  * activations: batch on the data axes, sequence on 'model'
+    (sequence/context parallelism — attention runs under shard_map with
+    K/V all-gathers, launch/policy.py).  SSM stacks keep S unsharded and
+    shard the SSD heads instead.
+  * embeddings (V, d): vocab over ('data','model') — CE logsumexp psums.
+
+"naive_tp" (the first-cut Megatron-ish rule, kept as the §Perf baseline):
+  * weights: dim -2 on 'data', dim -1 on 'model'.  For GQA models whose
+    K*hd does not split into whole heads this shards head_dim and XLA
+    all-reduces full score tiles every layer — measured 20x worse
+    collective time (see EXPERIMENTS.md §Perf iteration 1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import data_axes, model_axis_size
+from repro.launch.policy import Policy
+
+STRATEGIES = ("fsdp_sp", "naive_tp")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def layout(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(batch_axes, seq_axis) for train/prefill activations.
+
+    If the global batch divides the whole mesh, run pure ZeRO-3 data
+    parallelism (batch over every axis, sequence unsharded — smallest
+    score tiles, no sequence collectives).  Otherwise batch covers the
+    data axes and the sequence dim shards on 'model' (context/sequence
+    parallelism).  SSM/hybrid stacks never sequence-shard (the recurrence
+    is sequential): they head-shard instead."""
+    daxes = data_axes(mesh)
+    dtot = int(np.prod([_axis_size(mesh, a) for a in daxes]))
+    msz = model_axis_size(mesh)
+    B = shape.global_batch
+    if cfg.n_experts and shape.seq_len % msz == 0:
+        # MoE always sequence-shards: group-wise routing keeps the
+        # dispatch tensors O(S/msz * E * C(S/msz)) — EXPERIMENTS.md §Perf H2
+        return daxes, "model"
+    if B % (dtot * msz) == 0 and B >= dtot * msz:
+        return daxes + ("model",), None
+    seq = None
+    if cfg.family in ("dense", "vlm", "moe", "encdec") and shape.seq_len % msz == 0:
+        seq = "model"
+    return daxes, seq
+
+
+def make_policy(mesh, cfg: ModelConfig, strategy: str = "fsdp_sp",
+                shape: Optional[ShapeSpec] = None) -> Optional[Policy]:
+    if strategy != "fsdp_sp":
+        return None
+    if shape is None:
+        return Policy(mesh=mesh, batch_axes=data_axes(mesh),
+                      seq_axis="model", head_axis="model", ep_axis="model")
+    baxes, seq = layout(cfg, shape, mesh)
+    head = "model" if seq is None and "model" not in baxes else (
+        "model" if seq is None else None)
+    # pure-DP: nothing to head-shard (everything already local)
+    if "model" in baxes:
+        head = None
+    return Policy(mesh=mesh, batch_axes=baxes, seq_axis=seq,
+                  head_axis=head, ep_axis="model")
+
+
+def _is_expert(path: str, ndim: int) -> bool:
+    return any(k in path for k in ("w_gate", "w_up", "w_down")) and \
+        "moe" in path and ndim >= 3
+
+
+def param_spec(path: str, shape: tuple, mesh, cfg: ModelConfig,
+               strategy: str = "fsdp_sp") -> P:
+    ndim = len(shape)
+    dsz = _axis_size(mesh, "data")
+    msz = _axis_size(mesh, "model")
+    if ndim <= 1:
+        return P()
+
+    if strategy == "naive_tp":
+        if "embed" in path:
+            return P("model" if _fits(shape[0], msz) else None, None)
+        if _is_expert(path, ndim):
+            e_dim = ndim - 3
+            if _fits(shape[e_dim], msz):
+                spec = [None] * ndim
+                spec[e_dim] = "model"
+                if _fits(shape[-2], dsz):
+                    spec[-2] = "data"
+                return P(*spec)
+        spec = [None] * ndim
+        if _fits(shape[-2], dsz):
+            spec[-2] = "data"
+        if _fits(shape[-1], msz):
+            spec[-1] = "model"
+        return P(*spec)
+
+    # ---- fsdp_sp --------------------------------------------------------
+    both = dsz * msz
+
+    def fsdp_axis(dim: int):
+        if _fits(dim, both):
+            return ("data", "model")
+        if _fits(dim, dsz):
+            return "data"
+        if _fits(dim, msz):
+            return "model"
+        return None
+
+    if "embed" in path:
+        return P(fsdp_axis(shape[0]), None)
+    if _is_expert(path, ndim):
+        e_dim = ndim - 3
+        if _fits(shape[e_dim], msz):
+            spec = [None] * ndim
+            spec[e_dim] = "model"
+            if _fits(shape[-2], dsz):
+                spec[-2] = "data"
+            return P(*spec)
+        # expert dim does not divide: FSDP the d dim, TP the ffn dim
+        spec = [None] * ndim
+        if _fits(shape[-2], dsz):
+            spec[-2] = "data"
+        if _fits(shape[-1], msz):
+            spec[-1] = "model"
+        return P(*spec)
+    spec = [None] * ndim
+    spec[-2] = fsdp_axis(shape[-2])
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return ".".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_shardings(params_shapes: Any, mesh, cfg: ModelConfig,
+                    strategy: str = "fsdp_sp"):
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              mesh, cfg, strategy))
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _bspec(mesh, batch: int):
+    daxes = data_axes(mesh)
+    dtotal = int(np.prod([_axis_size(mesh, a) for a in daxes]))
+    return daxes if (dtotal > 1 and batch % dtotal == 0 and batch >= dtotal) else None
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    strategy: str = "fsdp_sp") -> Dict[str, Any]:
+    """Shardings for the input_specs() tree."""
+    msz = model_axis_size(mesh)
+    if strategy == "fsdp_sp" and shape.kind in ("train", "prefill"):
+        baxes, seq = layout(cfg, shape, mesh)
+        dtot = int(np.prod([_axis_size(mesh, a) for a in baxes]))
+        bspec = baxes if (dtot > 1 and shape.global_batch % dtot == 0
+                          and shape.global_batch >= dtot) else None
+    else:
+        bspec = _bspec(mesh, shape.global_batch)
+        seq = None
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = NamedSharding(mesh, P(bspec, seq))
+        out["labels"] = NamedSharding(mesh, P(bspec, seq))
+    elif shape.kind == "prefill":
+        out["tokens"] = NamedSharding(mesh, P(bspec, seq))
+    else:
+        out["token"] = NamedSharding(mesh, P(bspec, None))
+        out["pos"] = replicated(mesh)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        nv_seq = seq if cfg.n_vis_tokens % msz == 0 else None
+        out["vis_embeds"] = NamedSharding(mesh, P(bspec, nv_seq, None))
+    if cfg.family == "encdec":
+        enc_seq = seq if (seq and cfg.enc_seq % msz == 0) else None
+        out["enc_frames"] = NamedSharding(mesh, P(bspec, enc_seq, None))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    strategy: str = "fsdp_sp") -> Dict[str, Any]:
+    """Decode-cache layouts.
+
+    decode_32k : batch on (pod,data), sequence on 'model'.
+    long_500k  : batch=1 -> sequence sharded over every available axis.
+    SSM states : batch on data axes, SSD heads on 'model' when divisible.
+    """
+    daxes = data_axes(mesh)
+    dtotal = int(np.prod([_axis_size(mesh, a) for a in daxes]))
+    msz = model_axis_size(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    b_ok = B % max(dtotal, 1) == 0 and dtotal > 1 and B >= dtotal
+    bspec = daxes if b_ok else None
+
+    if b_ok:
+        seq_axes = "model" if S % msz == 0 else None
+    else:
+        all_ax = daxes + ("model",)
+        tot = dtotal * msz
+        seq_axes = all_ax if S % tot == 0 else ("model" if S % msz == 0 else None)
+
+    out: Dict[str, Any] = {}
+
+    def kv():
+        return NamedSharding(mesh, P(None, bspec, seq_axes, None, None))
+
+    if cfg.family in ("dense", "vlm", "encdec"):
+        out["k"] = kv()
+        out["v"] = kv()
+        if cfg.family == "encdec":
+            out["enc_out"] = NamedSharding(mesh, P(bspec, None, None))
+    elif cfg.family == "moe":
+        if cfg.kv_lora_rank:
+            out["c_kv"] = NamedSharding(mesh, P(None, bspec, seq_axes, None))
+            out["k_pe"] = NamedSharding(mesh, P(None, bspec, seq_axes, None))
+        else:
+            out["k"] = kv()
+            out["v"] = kv()
+    if cfg.family in ("ssm", "hybrid"):
+        nh_spec = "model" if cfg.ssm_heads % msz == 0 else None
+        out["ssm"] = NamedSharding(mesh, P(None, bspec, nh_spec, None, None))
+        out["conv"] = NamedSharding(mesh, P(None, bspec, None, None))
+        if cfg.family == "hybrid":
+            out["k"] = kv()
+            out["v"] = kv()
+    return out

@@ -1,0 +1,119 @@
+"""Jitted distributed step functions with FedLUAR integrated.
+
+The production train step IS one FedLUAR round at tau=1 granularity:
+each (pod, data) device group is a client cohort; XLA's gradient
+all-reduce over those axes is the upload; LUAR gates it per layer-unit.
+
+Two variants (DESIGN.md §3):
+  * dynamic (paper-faithful): the recycle mask R_t is a traced array —
+    numerics exactly Alg. 1/2, collectives unchanged.
+  * static (beyond-paper): R_t is baked into the executable.  Recycled
+    units never read the fresh gradient, so XLA dead-code-eliminates
+    their weight-grad matmuls AND their cross-client all-reduce.  The
+    server samples R_{t+1} between steps and dispatches to a cached
+    executable per mask pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.recycle import LuarConfig, LuarState, luar_round
+from repro.core.units import UnitMap, build_units, select_per_leaf
+from repro.models.registry import Model
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    momentum: Params
+    luar: LuarState
+
+
+def train_state_shapes(model: Model) -> Tuple[TrainState, UnitMap]:
+    """abstract TrainState (ShapeDtypeStructs only, no allocation)."""
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    um = build_units(params, "leaf")
+    n = len(um.names)
+    sds = jax.ShapeDtypeStruct
+    luar = LuarState(
+        prev_update=params,
+        mask=sds((n,), jnp.bool_),
+        s=sds((n,), jnp.float32),
+        staleness=sds((n,), jnp.int32),
+        agg_count=sds((n,), jnp.int32),
+        round=sds((), jnp.int32),
+        key=sds((2,), jnp.uint32),
+    )
+    return TrainState(params=params, momentum=params, luar=luar), um
+
+
+def make_fedluar_train_step(
+    model: Model,
+    luar_cfg: LuarConfig,
+    um: UnitMap,
+    *,
+    lr: float = 1e-3,
+    momentum: float = 0.9,
+    static_mask: Optional[Sequence[bool]] = None,
+) -> Callable:
+    """Returns step(state, batch) -> (state, loss)."""
+
+    def step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(model.train_loss)(state.params, batch)
+
+        if static_mask is None:
+            # paper-faithful dynamic recycling
+            new_m = jax.tree.map(lambda m, g: momentum * m + g,
+                                 state.momentum, grads)
+            update = jax.tree.map(lambda m: -lr * m, new_m)
+            applied, luar = luar_round(state.luar, um, luar_cfg,
+                                       update, state.params)
+        else:
+            # static schedule: recycled leaves never touch `grads`
+            assert all(isinstance(u, int) for u in um.leaf_unit), \
+                "static scheduling requires leaf granularity (whole stacked " \
+                "tensors gate the collective; per-depth gating cannot DCE " \
+                "inside a scanned layer loop)"
+            leaves_m = jax.tree.leaves(state.momentum)
+            leaves_g = jax.tree.leaves(grads)
+            leaves_prev = jax.tree.leaves(state.luar.prev_update)
+            new_m_leaves, applied_leaves = [], []
+            for u, m, g, prev in zip(um.leaf_unit, leaves_m, leaves_g, leaves_prev):
+                if static_mask[u]:
+                    new_m_leaves.append(m)          # frozen; g is DCE'd
+                    applied_leaves.append(prev)
+                else:
+                    nm = momentum * m + g
+                    new_m_leaves.append(nm)
+                    applied_leaves.append(-lr * nm)
+            treedef = um.treedef
+            new_m = jax.tree.unflatten(treedef, new_m_leaves)
+            applied = jax.tree.unflatten(treedef, applied_leaves)
+            mask_arr = jnp.asarray(list(static_mask))
+            luar = state.luar._replace(
+                prev_update=applied,
+                staleness=jnp.where(mask_arr, state.luar.staleness + 1, 0),
+                agg_count=state.luar.agg_count + (~mask_arr).astype(jnp.int32),
+                round=state.luar.round + 1,
+            )
+
+        params = jax.tree.map(lambda p, d: p + d, state.params, applied)
+        return TrainState(params, new_m, luar), loss
+
+    return step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def step(params, batch):
+        return model.prefill(params, batch)
+    return step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return step

@@ -1,0 +1,107 @@
+"""Run the full dry-run sweep: every (arch x shape x mesh) combination as
+an isolated subprocess (XLA_FLAGS set per process), results cached as
+JSON under experiments/dryrun/.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--jobs 3] [--only-missing]
+  PYTHONPATH=src python -m repro.launch.sweep --table   # print summary
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from concurrent.futures import ThreadPoolExecutor
+
+ARCHS = ["qwen3-14b", "internvl2-76b", "mixtral-8x7b", "granite-34b",
+         "zamba2-1.2b", "mamba2-780m", "whisper-small",
+         "deepseek-v2-lite-16b", "gemma3-4b", "minitron-8b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT = "experiments/dryrun"
+
+
+def combos(include_multipod: bool = True):
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield (arch, shape, False)
+            if include_multipod:
+                yield (arch, shape, True)
+
+
+def path_for(arch, shape, multi_pod, strategy="fsdp_sp", static=False):
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    sfx = (("_" + strategy) if strategy != "fsdp_sp" else "") + ("_static" if static else "")
+    return os.path.join(OUT, f"{arch}_{shape}_{mesh_tag}{sfx}.json")
+
+
+def run_one(arch, shape, multi_pod, timeout=1800):
+    p = path_for(arch, shape, multi_pod)
+    if os.path.exists(p):
+        return (arch, shape, multi_pod, "cached")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH="src")
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+        if r.returncode != 0:
+            err = (r.stderr or "")[-2000:]
+            with open(p.replace(".json", ".err"), "w") as f:
+                f.write(err)
+            return (arch, shape, multi_pod, "FAIL")
+        return (arch, shape, multi_pod, "ok")
+    except subprocess.TimeoutExpired:
+        return (arch, shape, multi_pod, "TIMEOUT")
+
+
+def table():
+    rows = []
+    for arch, shape, mp in combos():
+        p = path_for(arch, shape, mp)
+        if not os.path.exists(p):
+            rows.append((arch, shape, mp, "missing", {}))
+            continue
+        rec = json.load(open(p))
+        if "skipped" in rec:
+            rows.append((arch, shape, mp, "skip", {}))
+            continue
+        rows.append((arch, shape, mp, "ok", rec))
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':5s} {'stat':7s} "
+           f"{'comp_s':>8s} {'mem_s':>8s} {'coll_s':>8s} {'bottleneck':12s} "
+           f"{'temp_GB':>8s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch, shape, mp, st, rec in rows:
+        mesh = "pod2" if mp else "pod1"
+        if st != "ok":
+            print(f"{arch:22s} {shape:12s} {mesh:5s} {st:7s}")
+            continue
+        rl = rec.get("roofline", {})
+        ma = rec.get("memory_analysis", {})
+        temp = ma.get("temp_size_in_bytes", 0) / 1e9 if isinstance(ma, dict) else 0
+        print(f"{arch:22s} {shape:12s} {mesh:5s} {st:7s} "
+              f"{rl.get('compute_s', 0):8.3f} {rl.get('memory_s', 0):8.3f} "
+              f"{rl.get('collective_s', 0):8.3f} {rl.get('bottleneck', '?'):12s} "
+              f"{temp:8.2f} {rec.get('useful_flops_ratio', 0):7.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--pod1-only", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        table()
+        return
+    os.makedirs(OUT, exist_ok=True)
+    todo = list(combos(include_multipod=not args.pod1_only))
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        for res in ex.map(lambda c: run_one(*c), todo):
+            print(*res, flush=True)
+
+
+if __name__ == "__main__":
+    main()

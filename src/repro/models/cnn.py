@@ -1,0 +1,74 @@
+"""FEMNIST-class CNN (the paper's FL workload: 2 conv + 2 FC = 4 LUAR
+layer-units, matching Table 11's delta in {0..3} out of 4) plus a small
+MLP for fast unit tests.  Pure JAX, channels-last."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+Params = Dict[str, Any]
+
+
+def cnn_init(key, n_classes: int = 62, in_ch: int = 1, width: int = 32) -> Params:
+    ks = nn.split_keys(key, 4)
+    f32 = jnp.float32
+    return {
+        "conv1": {"w": nn.dense_init(ks[0], (5, 5, in_ch, width), f32, 0.1),
+                  "b": jnp.zeros((width,), f32)},
+        "conv2": {"w": nn.dense_init(ks[1], (5, 5, width, 2 * width), f32, 0.1),
+                  "b": jnp.zeros((2 * width,), f32)},
+        "fc1": {"w": nn.dense_init(ks[2], (7 * 7 * 2 * width, 128), f32, 0.05),
+                "b": jnp.zeros((128,), f32)},
+        "fc2": {"w": nn.dense_init(ks[3], (128, n_classes), f32, 0.05),
+                "b": jnp.zeros((n_classes,), f32)},
+    }
+
+
+def _conv(x, p):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(out + p["b"])
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def cnn_apply(params: Params, images: jax.Array) -> jax.Array:
+    """images (B, 28, 28, C) -> logits (B, n_classes)."""
+    x = _pool(_conv(images, params["conv1"]))
+    x = _pool(_conv(x, params["conv2"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def mlp_init(key, n_features: int = 64, n_classes: int = 10, width: int = 64) -> Params:
+    ks = nn.split_keys(key, 3)
+    f32 = jnp.float32
+    return {
+        "fc1": {"w": nn.dense_init(ks[0], (n_features, width), f32, 0.1),
+                "b": jnp.zeros((width,), f32)},
+        "fc2": {"w": nn.dense_init(ks[1], (width, width), f32, 0.1),
+                "b": jnp.zeros((width,), f32)},
+        "fc3": {"w": nn.dense_init(ks[2], (width, n_classes), f32, 0.1),
+                "b": jnp.zeros((n_classes,), f32)},
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,154 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE weight-shared
+attention+MLP block applied after every ``attn_every`` mamba blocks
+(arXiv:2411.15242).  The shared block is weight-tied across all of its
+applications (the per-application LoRA of the paper is omitted — see
+DESIGN.md §7), which makes it a single LUAR recycling unit whose update
+aggregates gradients from all application sites.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import policy as _policy
+from repro.models import layers as nn
+from repro.models import ssm
+from repro.models.transformer import _tree_slice, block_init as attn_block_init
+
+Params = Dict[str, Any]
+
+
+def attn_sites(cfg: ModelConfig) -> List[int]:
+    """Mamba-layer indices after which the shared block is applied."""
+    return [i for i in range(cfg.n_layers) if (i + 1) % cfg.attn_every == 0]
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = nn.split_keys(key, cfg.n_layers + 2)
+    blocks = [ssm.block_init(k, cfg) for k in ks[: cfg.n_layers]]
+    return {
+        "embed": nn.embed_init(ks[-1], cfg),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "shared_attn": attn_block_init(ks[-2], cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+def _shared_block(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    p = _policy.gather_params(p)
+    h = nn.rms_norm(x, p["norm1"])
+    x = x + nn.attn_apply(p["attn"], cfg, h)
+    h = nn.rms_norm(x, p["norm2"])
+    return x + nn.mlp_apply(p["mlp"], h)
+
+
+def _segments(cfg: ModelConfig) -> List[Tuple[int, int, bool]]:
+    """[(start, length, attn_after)] — static segmentation of the stack."""
+    out, start = [], 0
+    for site in attn_sites(cfg):
+        out.append((start, site + 1 - start, True))
+        start = site + 1
+    if start < cfg.n_layers:
+        out.append((start, cfg.n_layers - start, False))
+    return out
+
+
+def forward(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    blk = jax.checkpoint(partial(ssm.block_apply, cfg=cfg))
+    for start, length, attn_after in _segments(cfg):
+        def body(carry, p):
+            out, _ = blk(p, x=carry)
+            return out, None
+        x, _ = jax.lax.scan(body, x, _tree_slice(params["blocks"], start, length))
+        if attn_after:
+            x = jax.checkpoint(partial(_shared_block, cfg=cfg))(params["shared_attn"], x=x)
+    return nn.rms_norm(x, params["final_norm"])
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    h = forward(params, cfg, x)
+    return nn.cross_entropy(_policy.gather_params(params["embed"]), h, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    B, S, _ = x.shape
+    W = cfg.conv_width
+    ssm_states, conv_tails, ks, vs = [], [], [], []
+    for start, length, attn_after in _segments(cfg):
+        def body(carry, p):
+            x = carry
+            h = nn.rms_norm(x, p["norm_in"])
+            _, xbc, _ = ssm._split_proj(cfg, h @ p["in_proj"])
+            tail = xbc[:, -(W - 1):, :]
+            out, state = ssm.block_apply(p, cfg, x)
+            return out, (state, tail)
+        x, (st, tl) = jax.lax.scan(jax.checkpoint(body), x,
+                                   _tree_slice(params["blocks"], start, length))
+        ssm_states.append(st)
+        conv_tails.append(tl)
+        if attn_after:
+            sp = params["shared_attn"]
+            h = nn.rms_norm(x, sp["norm1"])
+            q, k, v = nn.attn_qkv(sp["attn"], cfg, h, jnp.arange(S))
+            o = nn.attention(q, k, v)
+            x = x + o.reshape(B, S, -1) @ sp["attn"]["wo"]
+            h = nn.rms_norm(x, sp["norm2"])
+            x = x + nn.mlp_apply(sp["mlp"], h)
+            ks.append(k)
+            vs.append(v)
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h[:, -1:])[:, 0]
+    return logits, {
+        "ssm": jnp.concatenate(ssm_states, axis=0),
+        "conv": jnp.concatenate(conv_tails, axis=0),
+        "k": jnp.stack(ks), "v": jnp.stack(vs),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                batch: Dict[str, jax.Array]):
+    token, pos = batch["token"], batch["pos"]
+    x = nn.embed_lookup(params["embed"], token)
+    convs, ssms, new_k, new_v = [], [], [], []
+    app = 0
+    for start, length, attn_after in _segments(cfg):
+        def body(carry, xs):
+            p, conv, st = xs
+            x = carry
+            x, conv, st = ssm.block_decode(p, cfg, x, conv, st)
+            return x, (conv, st)
+        xs = (_tree_slice(params["blocks"], start, length),
+              jax.lax.slice_in_dim(cache["conv"], start, start + length, axis=0),
+              jax.lax.slice_in_dim(cache["ssm"], start, start + length, axis=0))
+        x, (conv, st) = jax.lax.scan(body, x, xs)
+        convs.append(conv)
+        ssms.append(st)
+        if attn_after:
+            sp = params["shared_attn"]
+            h = nn.rms_norm(x, sp["norm1"])
+            o, kc, vc = nn.attn_decode(sp["attn"], cfg, h,
+                                       cache["k"][app], cache["v"][app], pos)
+            x = x + o
+            h = nn.rms_norm(x, sp["norm2"])
+            x = x + nn.mlp_apply(sp["mlp"], h)
+            new_k.append(kc)
+            new_v.append(vc)
+            app += 1
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h)[:, 0]
+    return logits, {
+        "ssm": jnp.concatenate(ssms, axis=0),
+        "conv": jnp.concatenate(convs, axis=0),
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+    }

@@ -1,0 +1,368 @@
+"""Shared model primitives: norms, RoPE, chunked/banded attention, MLPs.
+
+Everything is pure-functional JAX over nested-dict pytrees.  Attention is
+query-chunked (flash-style online softmax is unnecessary here because each
+chunk materialises only a (chunk x band) score tile); sliding-window
+layers use a *banded* K/V slice so SWA compute is genuinely O(S*w), which
+matters for honest roofline numbers on mixtral / gemma3 / zamba2.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # variance in f32, application in the input dtype: avoids a full f32
+    # upcast of the residual stream (XLA hoists that convert out of the
+    # backward layer loop, costing an (L,B,S,d) f32 buffer)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, hd) rotated by positions (S,) or scalar."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast (S, half) across batch/head dims: x is (..., S, n, hd)
+    cos = cos[..., :, None, :]
+    sin = sin[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+
+def _attend_tile(q, k, v, q_pos, k_pos, window: int, causal: bool) -> jax.Array:
+    """q: (B,Cq,K,G,hd)  k,v: (B,Ck,K,hd)  positions: (Cq,), (Ck,).
+
+    Returns (B,Cq,K,G,hd).  window<=0 means unlimited.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    dpos = q_pos[:, None] - k_pos[None, :]                    # (Cq, Ck)
+    mask = jnp.ones_like(dpos, dtype=bool)
+    if causal:
+        mask &= dpos >= 0
+    if window > 0:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # guard fully-masked rows (can happen for padded tiles)
+    p = jnp.where(jnp.any(mask, axis=-1)[None, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(v.dtype), v)
+    return out
+
+
+_SCORE_BUDGET = 2 ** 31            # ~2 GiB of f32 score tile per chunk
+
+
+def _pick_chunk(Sq: int, B: int, H: int, Skv: int, chunk: int) -> int:
+    """Largest chunk whose (B,H,chunk,Skv) f32 score tile fits the budget."""
+    cap = max(1, _SCORE_BUDGET // max(1, B * H * Skv * 4))
+    c = min(chunk, cap, Sq)
+    c = max(c, 1)
+    while Sq % c:
+        c -= 1 if c <= 8 else c // 2   # find a divisor
+    return max(c, 1)
+
+
+def attention(
+    q: jax.Array,                  # (B, Sq, H, hd)
+    k: jax.Array,                  # (B, Skv, K, hd)
+    v: jax.Array,                  # (B, Skv, K, hd)
+    *,
+    q_offset: Any = 0,             # int or traced scalar: position of q[0]
+    window: int = 0,               # static sliding window (0 = full)
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Query-chunked (and K/V-banded for SWA) attention.  GQA-aware.
+
+    Under an active distribution policy with a ``seq_axis``, full
+    self-attention runs sequence-parallel via shard_map (queries stay
+    sequence-sharded; K/V are all-gathered once per layer) — see
+    launch/policy.py.
+    """
+    from repro.launch import policy as _policy
+
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    pol = _policy.active()
+    if (pol is not None and pol.seq_axis is not None
+            and isinstance(q_offset, int) and q_offset == 0 and Sq == Skv):
+        n = pol.axis_size(pol.seq_axis)
+        if n > 1 and Sq % n == 0:
+            return _sp_attention(pol, q, k, v, window=window, causal=causal,
+                                 chunk=chunk)
+    return _attention_local(q, k, v, q_offset=q_offset, window=window,
+                            causal=causal, chunk=chunk)
+
+
+def _sp_attention(pol, q, k, v, *, window, causal, chunk):
+    import jax.experimental.shard_map as _shmap
+    from jax.sharding import PartitionSpec as P
+
+    B, Sq, H, hd = q.shape
+    n = pol.axis_size(pol.seq_axis)
+    baxes = pol.batch_axes
+    bsz = 1
+    for a in baxes:
+        bsz *= pol.axis_size(a)
+    bspec = baxes if (bsz > 1 and B % bsz == 0 and B >= bsz) else None
+    spec = P(bspec, pol.seq_axis, None, None)
+
+    def local_fn(q_l, k_l, v_l):
+        k_full = jax.lax.all_gather(k_l, pol.seq_axis, axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_l, pol.seq_axis, axis=1, tiled=True)
+        off = jax.lax.axis_index(pol.seq_axis) * (Sq // n)
+        return _attention_local(q_l, k_full, v_full, q_offset=off,
+                                window=window, causal=causal, chunk=chunk)
+
+    fn = _shmap.shard_map(local_fn, mesh=pol.mesh, in_specs=(spec, spec, spec),
+                          out_specs=spec, check_rep=False)
+    return fn(q, k, v)
+
+
+def _attention_local(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset: Any = 0,
+    window: int = 0,
+    causal: bool = True,
+    chunk: int = 1024,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+
+    cq = _pick_chunk(Sq, B, H, Skv, chunk)
+    n_chunks = Sq // cq
+
+    band = Skv if window <= 0 else min(Skv, window + cq)
+
+    def one_chunk(ci):
+        qs = ci * cq + q_offset                                 # global pos of chunk
+        q_pos = qs + jnp.arange(cq)
+        qc = jax.lax.dynamic_slice_in_dim(qg, ci * cq, cq, axis=1)
+        if band == Skv:
+            kc, vc, k_pos = k, v, jnp.arange(Skv)
+        else:
+            start = jnp.clip(qs - window, 0, Skv - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            k_pos = start + jnp.arange(band)
+        return _attend_tile(qc, kc, vc, q_pos, k_pos, window, causal)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    else:
+        # checkpoint: masks/softmax tiles are recomputed in the backward
+        # rather than stacked across chunks as loop residuals
+        out = jax.lax.map(jax.checkpoint(one_chunk), jnp.arange(n_chunks))  # (n, B, cq, K, G, hdv)
+        out = jnp.moveaxis(out, 0, 1)
+        out = out.reshape(B, Sq, *out.shape[3:])
+    return out.reshape(B, Sq, H, -1)   # hdv may differ from hd (MLA)
+
+
+def decode_attention(
+    q: jax.Array,                  # (B, 1, H, hd)
+    k_cache: jax.Array,            # (B, S, K, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,                # scalar: index of the new token
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over a (possibly partially-filled) cache."""
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale
+    k_pos = jnp.arange(S)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= (pos - k_pos) < window
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply) shared by dense/vlm/hybrid/encdec
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype=None) -> Params:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    dt = dtype or cfg.dtype
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dt),
+        "wk": dense_init(ks[1], (d, K * hd), dt),
+        "wv": dense_init(ks[2], (d, K * hd), dt),
+        "wo": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def attn_qkv(p: Params, cfg, x: jax.Array, positions: jax.Array):
+    """Project + rope.  x: (B,S,d) -> q (B,S,H,hd), k/v (B,S,K,hd)."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p: Params, cfg, x: jax.Array, *, window: int = 0,
+               causal: bool = True) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = attn_qkv(p, cfg, x, jnp.arange(S))
+    out = attention(q, k, v, window=window, causal=causal)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def attn_decode(p: Params, cfg, x: jax.Array, k_cache, v_cache, pos,
+                *, window: int = 0):
+    """x: (B,1,d).  Returns (out, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    q, k, v = attn_qkv(p, cfg, x, pos[None] if pos.ndim == 0 else pos)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    out = decode_attention(q, k_cache, v_cache, pos, window=window)
+    return out.reshape(B, 1, -1) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, dtype, gated: bool = True) -> Params:
+    ks = split_keys(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff), dtype),
+         "w_down": dense_init(ks[1], (ff, d), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        h = silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg) -> jax.Array:
+    return dense_init(key, (cfg.vocab_size, cfg.d_model), cfg.dtype)
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0)
+
+
+def unembed_logits(embed: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied unembedding: (B,S,d) -> (B,S,V)."""
+    return jnp.einsum("bsd,vd->bsv", x, embed, preferred_element_type=jnp.float32)
+
+
+def cross_entropy(embed: jax.Array, x: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None, chunk: int = 512) -> jax.Array:
+    """Sequence-chunked CE so (B,S,V) never fully materialises.
+
+    Under a sequence-sharded distribution policy the chunk loop is
+    disabled: logits stay (B, S/'model', V) sharded — chunk slices would
+    straddle shard boundaries and force GSPMD to replicate them."""
+    from repro.launch import policy as _policy
+
+    B, S, _ = x.shape
+    pol = _policy.active()
+    if pol is not None and pol.seq_axis is not None:
+        chunk = S
+    cs = chunk if S % chunk == 0 and S > chunk else S
+    n = S // cs
+
+    def one(ci):
+        xc = jax.lax.dynamic_slice_in_dim(x, ci * cs, cs, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, ci * cs, cs, axis=1)
+        logits = unembed_logits(embed, xc)                       # (B,cs,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = lse - gold
+        if mask is not None:
+            mc = jax.lax.dynamic_slice_in_dim(mask, ci * cs, cs, axis=1)
+            nll = nll * mc
+        return jnp.sum(nll)
+
+    if n == 1:
+        tot = one(0)
+    else:
+        # checkpoint: recompute chunk logits in the backward instead of
+        # saving (B,cs,V) f32 per chunk
+        tot = jnp.sum(jax.lax.map(jax.checkpoint(one), jnp.arange(n)))
+    denom = jnp.sum(mask) if mask is not None else (B * S)
+    return tot / denom

@@ -1,0 +1,456 @@
+"""Mixture-of-Experts decoders: Mixtral-8x7B (GQA + SWA, 8e top-2) and
+DeepSeek-V2-Lite (MLA compressed KV + 2 shared + 64 routed top-6, first
+layer dense).
+
+Routing uses TPU-idiomatic capacity-based einsum dispatch (tokens beyond
+an expert's capacity are dropped) — the MaxText approach — rather than a
+ragged gather.  The expert dimension shards on the mesh 'model' axis when
+E divides it (DeepSeek: EP-16); otherwise expert weights are TP-sharded
+on the ffn dim (Mixtral).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import policy as _policy
+from repro.models import layers as nn
+
+Params = Dict[str, Any]
+
+
+def capacity(cfg: ModelConfig, S: int) -> int:
+    c = int(math.ceil(cfg.top_k * S * cfg.moe_capacity_factor / cfg.n_experts))
+    return max(1, min(c, S * cfg.top_k))
+
+
+# ---------------------------------------------------------------------------
+# routed expert layer
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, E, ffe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = nn.split_keys(key, 5)
+    p = {
+        "router": nn.dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": nn.dense_init(ks[1], (E, d, ffe), cfg.dtype),
+        "w_up": nn.dense_init(ks[2], (E, d, ffe), cfg.dtype),
+        "w_down": nn.dense_init(ks[3], (E, ffe, d), cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = nn.mlp_init(ks[4], d, cfg.n_shared_experts * ffe, cfg.dtype)
+    return p
+
+
+def router_probs(p: Params, x: jax.Array, cfg: ModelConfig):
+    """Top-k routing.  Returns (gates (B,S,k) f32 renormalised, idx (B,S,k))
+    plus the aux load-balance loss."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss (mean prob * mean assignment rate)
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E), axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch.  x: (B,S,d) -> (y, aux_loss).
+
+    Under a distribution policy with a sequence axis the shard_map
+    *group-wise* path runs instead: routing/capacity are computed per
+    sequence shard (capacity C scales with the shard length, not the full
+    S, so the dispatch tensors shrink by the axis size) and the expert
+    compute is exchanged with an all-to-all (EP, DeepSeek) or combined
+    with a psum (ffn-TP, Mixtral).  See EXPERIMENTS.md §Perf H2/H3."""
+    from repro.launch import policy as _pol
+    pol = _pol.active()
+    if pol is not None and pol.seq_axis is not None and pol.ep_axis:
+        n = pol.axis_size(pol.ep_axis)
+        if n > 1 and x.shape[1] % n == 0:
+            return _moe_shardmap(p, cfg, x, pol)
+    return _moe_dense(p, cfg, x)
+
+
+def _dispatch_combine(cfg: ModelConfig, gates, idx, S: int, C: int, dtype):
+    """Build (B,S,E,C) dispatch/combine one-hot tensors."""
+    B = gates.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    # position bookkeeping in f32 (cumsum), but the big (B,S*k,E,C)
+    # one-hots are built directly in the compute dtype — halves the HBM
+    # traffic of the dispatch path (EXPERIMENTS.md §Perf H3 iteration 2)
+    mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)              # (B,S,k,E)
+    mask_f = mask.reshape(B, S * k, E)
+    pos = jnp.cumsum(mask_f, axis=1) - mask_f                     # slot within expert
+    keep = (mask_f * (pos < C)).astype(dtype)
+    disp = jax.nn.one_hot(pos, C, dtype=dtype) * keep[..., None]  # (B,S*k,E,C)
+    comb = disp * gates.reshape(B, S * k)[..., None, None].astype(dtype)
+    disp = disp.reshape(B, S, k, E, C).sum(axis=2)                # (B,S,E,C)
+    comb = comb.reshape(B, S, k, E, C).sum(axis=2)
+    return disp, comb
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    h = nn.silu(jnp.einsum("becd,edf->becf", xe, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", xe, w_up)
+    return jnp.einsum("becf,efd->becd", h, w_down)
+
+
+def _moe_dense(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Reference (single-host / no-policy) path: global routing."""
+    B, S, d = x.shape
+    C = capacity(cfg, S)
+    gates, idx, aux = router_probs(p, x, cfg)
+    disp, comb = _dispatch_combine(cfg, gates, idx, S, C, x.dtype)
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)                    # (B,E,C,d)
+    ye = _expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"])
+    y = jnp.einsum("becd,bsec->bsd", ye, comb)
+    if "shared" in p:
+        y = y + nn.mlp_apply(p["shared"], x)
+    return y, aux
+
+
+def _moe_shardmap(p: Params, cfg: ModelConfig, x: jax.Array, pol) -> Tuple[jax.Array, jax.Array]:
+    """Group-wise routed MoE under shard_map (tokens sequence-sharded)."""
+    import jax.experimental.shard_map as _shmap
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E = cfg.n_experts
+    axis = pol.ep_axis
+    n = pol.axis_size(axis)
+    ep = E % n == 0
+
+    bsz = 1
+    for a in pol.batch_axes:
+        bsz *= pol.axis_size(a)
+    bspec = pol.batch_axes if (bsz > 1 and B % bsz == 0 and B >= bsz) else None
+    xspec = P(bspec, pol.seq_axis, None)
+    if ep:
+        wspec = {"w_gate": P(axis, None, None), "w_up": P(axis, None, None),
+                 "w_down": P(axis, None, None)}
+    else:
+        # E does not divide the axis (Mixtral 8e on 16-way 'model'):
+        # ffe-BLOCK parallelism — every rank holds a ffe/n slice of every
+        # expert (matches the stored layout, no weight movement), the
+        # dispatched slots are all-gathered across the sequence shards and
+        # the partial outputs psum_scatter back.  NB (i) a plain ffn-TP
+        # psum would be UNSOUND (model-axis peers hold different
+        # sequence-sharded tokens; caught by tests/test_distributed.py);
+        # (ii) re-virtualising experts to expert-major EP makes GSPMD
+        # fully rematerialise the weights (refuted — EXPERIMENTS.md §Perf
+        # H2 iteration 2).
+        wspec = {"w_gate": P(None, None, axis), "w_up": P(None, None, axis),
+                 "w_down": P(None, axis, None)}
+    shared = p.get("shared", {})
+    shared_spec = jax.tree.map(lambda a: P(*([None] * a.ndim)), shared)
+
+    def local_fn(x_l, router, w_gate, w_up, w_down, shared_l):
+        Bl, Sl, _ = x_l.shape
+        C = capacity(cfg, Sl)
+        gates, idx, aux = router_probs({"router": router}, x_l, cfg)
+        aux = jax.lax.pmean(aux, axis)
+        disp, comb = _dispatch_combine(cfg, gates, idx, Sl, C, x_l.dtype)
+        xe = jnp.einsum("bsec,bsd->becd", disp, x_l)              # (B,E,C,d)
+        if ep:
+            # EP: exchange token groups so each shard holds its experts'
+            # tokens from every sequence shard
+            xe = jax.lax.all_to_all(xe, axis, split_axis=1, concat_axis=2,
+                                    tiled=True)                    # (B,E/n,C*n,d)
+            ye = _expert_ffn(xe, w_gate, w_up, w_down)
+            ye = jax.lax.all_to_all(ye, axis, split_axis=2, concat_axis=1,
+                                    tiled=True)                    # (B,E,C,d)
+        else:
+            # ffe-block parallel: gather every shard's slots, compute the
+            # local ffe-slice for all of them, psum_scatter the partials
+            xe = jax.lax.all_gather(xe, axis, axis=2, tiled=True)  # (B,E,C*n,d)
+            ye = _expert_ffn(xe, w_gate, w_up, w_down)
+            ye = jax.lax.psum_scatter(ye, axis, scatter_dimension=2,
+                                      tiled=True)                  # (B,E,C,d)
+        y = jnp.einsum("becd,bsec->bsd", ye, comb)
+        if shared_l:
+            y = y + nn.mlp_apply(shared_l, x_l)
+        return y, aux
+
+    fn = _shmap.shard_map(
+        local_fn, mesh=pol.mesh,
+        in_specs=(xspec, P(None, None), wspec["w_gate"], wspec["w_up"],
+                  wspec["w_down"], shared_spec),
+        out_specs=(xspec, P()),
+        check_rep=False)
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"], shared)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    r, rp = cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = nn.split_keys(key, 6)
+    return {
+        "wq": nn.dense_init(ks[0], (d, H * (hd + rp)), cfg.dtype),
+        "w_dkv": nn.dense_init(ks[1], (d, r), cfg.dtype),
+        "w_kpe": nn.dense_init(ks[2], (d, rp), cfg.dtype),
+        "w_uk": nn.dense_init(ks[3], (r, H * hd), cfg.dtype),
+        "w_uv": nn.dense_init(ks[4], (r, H * hd), cfg.dtype),
+        "wo": nn.dense_init(ks[5], (H * hd, d), cfg.dtype),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, hd, rp = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd + rp)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = nn.rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_ckv(p, cfg, x, positions):
+    c_kv = x @ p["w_dkv"]                                          # (B,S,r)
+    k_pe = (x @ p["w_kpe"])[:, :, None, :]                         # (B,S,1,rp)
+    k_pe = nn.rope(k_pe, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_apply(p: Params, cfg: ModelConfig, x: jax.Array):
+    """Train/prefill path: expand the compressed KV per token (each token
+    pays the up-projection once).  Returns (out, c_kv, k_pe) so prefill can
+    cache the *compressed* KV."""
+    B, S, _ = x.shape
+    H, hd, rp = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+    pos = jnp.arange(S)
+    q_nope, q_pe = _mla_q(p, cfg, x, pos)
+    c_kv, k_pe = _mla_ckv(p, cfg, x, pos)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, hd)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, hd)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, S, H, rp))], axis=-1)
+    o = nn.attention(q, k, v)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return out, c_kv, k_pe
+
+
+def mla_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+               ckv_cache: jax.Array, kpe_cache: jax.Array, pos: jax.Array):
+    """Absorbed decode: score against the compressed cache directly —
+    O(S·r) per head instead of re-expanding the 32k cache each step."""
+    B = x.shape[0]
+    H, hd, rp, r = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.kv_lora_rank
+    q_nope, q_pe = _mla_q(p, cfg, x, pos[None])
+    c_kv, k_pe = _mla_ckv(p, cfg, x, pos[None])
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), pos, axis=1)
+    kpe_cache = jax.lax.dynamic_update_slice_in_dim(
+        kpe_cache, k_pe.astype(kpe_cache.dtype), pos, axis=1)
+
+    w_uk = p["w_uk"].reshape(r, H, hd)
+    q_c = jnp.einsum("bqhd,rhd->bhqr", q_nope, w_uk)              # absorb W_uk
+    s = jnp.einsum("bhqr,bsr->bhqs", q_c.astype(jnp.float32),
+                   ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bqhp,bsp->bhqs", q_pe.astype(jnp.float32),
+                       kpe_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd + rp)
+    k_pos = jnp.arange(ckv_cache.shape[1])
+    s = jnp.where((k_pos <= pos)[None, None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bhqr", pr.astype(ckv_cache.dtype), ckv_cache)
+    w_uv = p["w_uv"].reshape(r, H, hd)
+    o = jnp.einsum("bhqr,rhd->bqhd", ctx, w_uv).reshape(B, 1, H * hd)
+    return o @ p["wo"], ckv_cache, kpe_cache
+
+
+# ---------------------------------------------------------------------------
+# blocks / model
+# ---------------------------------------------------------------------------
+
+
+
+
+def _gather_block(p: Params) -> Params:
+    """ZeRO-3 gather for a MoE block: attention/norm/shared weights are
+    gathered at use; routed expert stacks stay sharded (EP handles them —
+    gathering 64 experts would defeat expert parallelism)."""
+    if _policy.active() is None:
+        return p
+    out = dict(p)
+    for k in ("attn", "norm1", "norm2", "mlp"):
+        if k in out:
+            out[k] = _policy.gather_params(out[k])
+    if "moe" in out:
+        moe_p = dict(out["moe"])
+        for k in ("router", "shared"):
+            if k in moe_p:
+                moe_p[k] = _policy.gather_params(moe_p[k])
+        out["moe"] = moe_p
+    return out
+
+
+def _attn_init(key, cfg):
+    return mla_init(key, cfg) if cfg.kv_lora_rank else nn.attn_init(key, cfg)
+
+
+def block_init(key, cfg: ModelConfig, dense_ffn: bool = False) -> Params:
+    ks = nn.split_keys(key, 2)
+    p = {
+        "attn": _attn_init(ks[0], cfg),
+        "norm1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "norm2": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if dense_ffn:
+        p["mlp"] = nn.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype, cfg.gated_mlp)
+    else:
+        p["moe"] = moe_init(ks[1], cfg)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    n_dense = 1 if cfg.first_layer_dense else 0
+    ks = nn.split_keys(key, cfg.n_layers + 2)
+    p: Params = {"embed": nn.embed_init(ks[-1], cfg),
+                 "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype)}
+    if n_dense:
+        p["layer0"] = block_init(ks[0], cfg, dense_ffn=True)
+    blocks = [block_init(k, cfg) for k in ks[n_dense: cfg.n_layers]]
+    p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return p
+
+
+def _ffn(p: Params, cfg: ModelConfig, x: jax.Array):
+    if "mlp" in p:
+        return nn.mlp_apply(p["mlp"], x), jnp.zeros((), jnp.float32)
+    return moe_apply(p["moe"], cfg, x)
+
+
+def _block(cfg: ModelConfig, p: Params, x: jax.Array, aux: jax.Array):
+    p = _gather_block(p)
+    h = nn.rms_norm(x, p["norm1"])
+    if cfg.kv_lora_rank:
+        o, _, _ = mla_apply(p["attn"], cfg, h)
+    else:
+        o = nn.attn_apply(p["attn"], cfg, h, window=cfg.window)
+    x = x + o
+    h = nn.rms_norm(x, p["norm2"])
+    y, a = _ffn(p, cfg, h)
+    return x + y, aux + a
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               aux_weight: float = 0.01) -> jax.Array:
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    aux = jnp.zeros((), jnp.float32)
+    if "layer0" in params:
+        x, aux = _block(cfg, params["layer0"], x, aux)
+
+    blk = jax.checkpoint(partial(_block, cfg))
+
+    def body(carry, p):
+        x, aux = carry
+        x, aux = blk(p, x, aux)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    h = nn.rms_norm(x, params["final_norm"])
+    ce = nn.cross_entropy(_policy.gather_params(params["embed"]), h, batch["labels"])
+    return ce + aux_weight * aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _prefill_block(cfg, p, x):
+    """Returns (x, cache_entries) for one block."""
+    p = _gather_block(p)
+    B, S, _ = x.shape
+    h = nn.rms_norm(x, p["norm1"])
+    if cfg.kv_lora_rank:
+        o, c_kv, k_pe = mla_apply(p["attn"], cfg, h)
+        entries = (c_kv, k_pe)
+    else:
+        q, k, v = nn.attn_qkv(p["attn"], cfg, h, jnp.arange(S))
+        o_ = nn.attention(q, k, v, window=cfg.window)
+        o = o_.reshape(B, S, -1) @ p["attn"]["wo"]
+        entries = (k, v)
+    x = x + o
+    h = nn.rms_norm(x, p["norm2"])
+    y, _ = _ffn(p, cfg, h)
+    return x + y, entries
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    params = {**params, "embed": _policy.gather_params(params["embed"])}
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    first = []
+    if "layer0" in params:
+        x, e0 = _prefill_block(cfg, params["layer0"], x)
+        first = [jax.tree.map(lambda a: a[None], e0)]
+
+    def body(carry, p):
+        x = carry
+        x, entries = _prefill_block(cfg, p, x)
+        return x, entries
+
+    x, stacked = jax.lax.scan(jax.checkpoint(partial(body)), x, params["blocks"])
+    entries = jax.tree.map(lambda f, s: jnp.concatenate([f, s], axis=0),
+                           first[0], stacked) if first else stacked
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h[:, -1:])[:, 0]
+    if cfg.kv_lora_rank:
+        cache = {"c_kv": entries[0], "k_pe": entries[1]}
+    else:
+        cache = {"k": entries[0], "v": entries[1]}
+    return logits, cache
+
+
+def _decode_block(cfg, p, x, cache_entries, pos):
+    h = nn.rms_norm(x, p["norm1"])
+    if cfg.kv_lora_rank:
+        o, c1, c2 = mla_decode(p["attn"], cfg, h, cache_entries[0], cache_entries[1], pos)
+    else:
+        o, c1, c2 = nn.attn_decode(p["attn"], cfg, h, cache_entries[0], cache_entries[1],
+                                   pos, window=cfg.window)
+    x = x + o
+    h = nn.rms_norm(x, p["norm2"])
+    y, _ = _ffn(p, cfg, h)
+    return x + y, (c1, c2)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                batch: Dict[str, jax.Array]):
+    token, pos = batch["token"], batch["pos"]
+    names = ("c_kv", "k_pe") if cfg.kv_lora_rank else ("k", "v")
+    c1, c2 = cache[names[0]], cache[names[1]]
+    x = nn.embed_lookup(params["embed"], token)
+    off = 0
+    firsts = None
+    if "layer0" in params:
+        x, e0 = _decode_block(cfg, params["layer0"], x, (c1[0], c2[0]), pos)
+        firsts = jax.tree.map(lambda a: a[None], e0)
+        off = 1
+
+    def body(carry, xs):
+        p, e1, e2 = xs
+        x = carry
+        x, entries = _decode_block(cfg, p, x, (e1, e2), pos)
+        return x, entries
+
+    x, stacked = jax.lax.scan(body, x, (params["blocks"], c1[off:], c2[off:]))
+    if firsts is not None:
+        stacked = jax.tree.map(lambda f, s: jnp.concatenate([f, s], axis=0), firsts, stacked)
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h)[:, 0]
+    return logits, {names[0]: stacked[0], names[1]: stacked[1]}

@@ -1,0 +1,37 @@
+"""Family dispatch: build a functional Model bundle from a ModelConfig."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable            # (key) -> params
+    train_loss: Callable      # (params, batch) -> scalar
+    prefill: Callable         # (params, batch) -> (logits, cache)
+    decode_step: Callable     # (params, cache, batch) -> (logits, cache)
+
+
+_FAMILY = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def build(cfg: ModelConfig) -> Model:
+    mod = _FAMILY[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init(key, cfg),
+        train_loss=lambda params, batch: mod.train_loss(params, cfg, batch),
+        prefill=lambda params, batch: mod.prefill(params, cfg, batch),
+        decode_step=lambda params, cache, batch: mod.decode_step(params, cfg, cache, batch),
+    )

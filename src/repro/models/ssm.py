@@ -1,0 +1,265 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), attention-free.
+
+The chunked SSD algorithm: within a chunk the quadratic dual form runs on
+the MXU; across chunks a (cheap) recurrence carries the (nh, P, N) state.
+``ssd_chunked`` is the pure-jnp reference the Pallas kernel is validated
+against; decode is the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (reference implementation; kernels/ssd_scan.py mirrors this)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, D: jax.Array,
+                chunk: int, initial_state: jax.Array | None = None):
+    """SSD over a full sequence.
+
+    x  : (B, S, nh, P)   per-head inputs
+    dt : (B, S, nh)      post-softplus step sizes
+    A  : (nh,)           negative decay rates
+    Bm : (B, S, N)       input projections  (n_groups = 1, shared over heads)
+    Cm : (B, S, N)       output projections
+    D  : (nh,)           skip
+    Returns (y (B,S,nh,P), final_state (B,nh,P,N)).
+    """
+    Bsz, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    T = min(chunk, S)
+    if S % T != 0:
+        T = S
+    nc = S // T
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nc, T, nh, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, T, nh).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, T, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, T, N).astype(f32)
+
+    a = dtc * A.astype(f32)                                        # (B,nc,T,nh) <= 0
+    cum = jnp.cumsum(a, axis=2)                                    # inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,Ti,Tj,nh)
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (dual quadratic form)
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)                 # (B,nc,Ti,Tj)
+    W = scores[..., None] * L * dtc[:, :, None, :, :]              # (B,nc,Ti,Tj,nh)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", W, xc)
+
+    # chunk-local end states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,T,nh)
+    Sc = jnp.einsum("bcth,bctn,bcthp->bchpn",
+                    decay_to_end * dtc, Bc, xc)                    # (B,nc,nh,P,N)
+
+    # inter-chunk recurrence
+    total = jnp.exp(cum[:, :, -1, :])                              # (B,nc,nh)
+    s0 = (jnp.zeros((Bsz, nh, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(s, inp):
+        tot, sc = inp                                              # (B,nh), (B,nh,P,N)
+        s_out = s                                                  # state entering chunk
+        s = tot[..., None, None] * s + sc
+        return s, s_out
+
+    final, s_in = jax.lax.scan(step, s0, (jnp.moveaxis(total, 1, 0),
+                                          jnp.moveaxis(Sc, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                                # (B,nc,nh,P,N)
+
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp",
+                         Cc, jnp.exp(cum), s_in)
+    y = y_intra + y_inter + D.astype(f32)[None, None, None, :, None] * xc
+    return y.reshape(Bsz, S, nh, P).astype(x.dtype), final
+
+
+def ssd_decode(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+               Bm: jax.Array, Cm: jax.Array, D: jax.Array):
+    """One recurrent step.  state (B,nh,P,N), x (B,nh,P), dt (B,nh),
+    Bm/Cm (B,N).  Returns (y (B,nh,P), new state)."""
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    a = jnp.exp(dtf * A.astype(f32))                               # (B,nh)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtf, xf, Bm.astype(f32))
+    state = a[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(f32))
+    y = y + D.astype(f32)[None, :, None] * xf
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig) -> Params:
+    d, di, N, nh, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.conv_width)
+    ks = nn.split_keys(key, 4)
+    return {
+        "norm_in": jnp.zeros((d,), cfg.dtype),
+        "in_proj": nn.dense_init(ks[0], (d, 2 * di + 2 * N + nh), cfg.dtype),
+        "conv_w": nn.dense_init(ks[1], (w, di + 2 * N), cfg.dtype, scale=0.5),
+        "conv_b": jnp.zeros((di + 2 * N,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),             # softplus ~ 0.01
+        "norm_gate": jnp.zeros((di,), cfg.dtype),
+        "out_proj": nn.dense_init(ks[2], (di, d), cfg.dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  xbc (B,S,C), w (w,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],                                        # (w, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return nn.silu(out + b)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xbc, dt
+
+
+def block_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+                initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence mamba2 block.  Returns (out, final_ssm_state)."""
+    from repro.launch import policy as _pol
+    p = _pol.gather_params(p)
+    B, S, _ = x.shape
+    di, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = nn.rms_norm(x, p["norm_in"])
+    z, xbc, dt = _split_proj(cfg, h @ p["in_proj"])
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xi = xbc[..., :di].reshape(B, S, nh, P)
+    Bm, Cm = xbc[..., di: di + N], xbc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    # under a distribution policy the per-head SSD scan is head-sharded
+    # (fully local recurrence; B/C are n_groups=1 and stay replicated)
+    from repro.launch import policy as _policy
+    pol = _policy.active()
+    if pol is not None and pol.head_axis and nh % pol.axis_size(pol.head_axis) == 0:
+        bsz = 1
+        for a in pol.batch_axes:
+            bsz *= pol.axis_size(a)
+        bspec = pol.batch_axes if (bsz > 1 and B % bsz == 0 and B >= bsz) else None
+        xi = _policy.constrain(xi, bspec, None, pol.head_axis, None)
+        dt = _policy.constrain(dt, bspec, None, pol.head_axis)
+    y, state = ssd_chunked(xi, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk, initial_state)
+    y = y.reshape(B, S, di) * nn.silu(z)
+    y = nn.rms_norm(y, p["norm_gate"])
+    return x + y @ p["out_proj"], state
+
+
+def block_decode(p: Params, cfg: ModelConfig, x: jax.Array,
+                 conv_state: jax.Array, ssm_state: jax.Array):
+    """One-token step.  x (B,1,d); conv_state (B,w-1,C); ssm (B,nh,P,N)."""
+    B = x.shape[0]
+    di, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = nn.rms_norm(x, p["norm_in"])
+    z, xbc, dt = _split_proj(cfg, h @ p["in_proj"])                # (B,1,*)
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc_t = nn.silu(conv).astype(x.dtype)                          # (B,C)
+    xi = xbc_t[..., :di].reshape(B, nh, P)
+    Bm, Cm = xbc_t[..., di: di + N], xbc_t[..., di + N:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode(ssm_state, xi, dtv, A, Bm, Cm, p["D"])
+    y = y.reshape(B, 1, di) * nn.silu(z)
+    y = nn.rms_norm(y, p["norm_gate"])
+    return x + y @ p["out_proj"], window[:, 1:], ssm_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = nn.split_keys(key, cfg.n_layers + 1)
+    blocks = [block_init(k, cfg) for k in ks[: cfg.n_layers]]
+    return {
+        "embed": nn.embed_init(ks[-1], cfg),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+def forward(params: Params, cfg: ModelConfig, x: jax.Array,
+            collect_states: bool = False):
+    blk = jax.checkpoint(partial(block_apply, cfg=cfg))
+
+    def body(carry, p):
+        out, state = blk(p, x=carry)
+        return out, state if collect_states else None
+
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    return nn.rms_norm(x, params["final_norm"]), states
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    from repro.launch import policy as _pol
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    h, _ = forward(params, cfg, x)
+    return nn.cross_entropy(_pol.gather_params(params["embed"]), h, batch["labels"])
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    B, S, _ = x.shape
+    C = cfg.d_inner + 2 * cfg.ssm_state
+    W = cfg.conv_width
+
+    def body(carry, p):
+        x = carry
+        h = nn.rms_norm(x, p["norm_in"])
+        _, xbc, _ = _split_proj(cfg, h @ p["in_proj"])
+        conv_tail = xbc[:, -(W - 1):, :]                           # pre-activation tail
+        out, state = block_apply(p, cfg, x)
+        return out, (state, conv_tail)
+
+    x, (states, conv_tails) = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h[:, -1:])[:, 0]
+    return logits, {"ssm": states, "conv": conv_tails}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                batch: Dict[str, jax.Array]):
+    x = nn.embed_lookup(params["embed"], batch["token"])
+
+    def body(carry, xs):
+        p, conv, ssm = xs
+        x = carry
+        x, conv, ssm = block_decode(p, cfg, x, conv, ssm)
+        return x, (conv, ssm)
+
+    x, (conv, ssm) = jax.lax.scan(body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h)[:, 0]
+    return logits, {"ssm": ssm, "conv": conv}

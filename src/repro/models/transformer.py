@@ -1,0 +1,179 @@
+"""Dense decoder-only transformer (qwen3 / granite / gemma3 / minitron and
+the internvl2 LM backbone).
+
+Layers are stacked and scanned.  Architectures with a local:global
+attention pattern (gemma3) are split into *segments* of consecutive
+layers sharing one static window, so sliding-window layers use the banded
+attention path (true O(S*w) compute) while global layers use the full
+path — the scan runs per segment.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch import policy as _policy
+from repro.models import layers as nn
+
+Params = Dict[str, Any]
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[int, int, int]]:
+    """[(start, length, window)] grouping consecutive equal-window layers."""
+    out: List[Tuple[int, int, int]] = []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        if out and out[-1][2] == w:
+            s, n, _ = out[-1]
+            out[-1] = (s, n + 1, w)
+        else:
+            out.append((i, 1, w))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig) -> Params:
+    ks = nn.split_keys(key, 2)
+    return {
+        "attn": nn.attn_init(ks[0], cfg),
+        "mlp": nn.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype, cfg.gated_mlp),
+        "norm1": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "norm2": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = nn.split_keys(key, cfg.n_layers + 2)
+    blocks = [block_init(k, cfg) for k in ks[: cfg.n_layers]]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": nn.embed_init(ks[-1], cfg),
+        "blocks": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: ModelConfig, window: int, p: Params, x: jax.Array) -> jax.Array:
+    p = _policy.gather_params(p)          # ZeRO-3: gather weights at use
+    h = nn.rms_norm(x, p["norm1"])
+    x = x + nn.attn_apply(p["attn"], cfg, h, window=window)
+    h = nn.rms_norm(x, p["norm2"])
+    x = x + nn.mlp_apply(p["mlp"], h)
+    return x
+
+
+def _tree_slice(tree, start: int, length: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0), tree)
+
+
+def forward(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """(B,S,d) hidden in -> final-normed hidden out."""
+    for start, length, window in segments(cfg):
+        blk = partial(_block, cfg, window)
+        blk = jax.checkpoint(blk)
+
+        def body(carry, p):
+            return blk(p, carry), None
+
+        x, _ = jax.lax.scan(body, x, _tree_slice(params["blocks"], start, length))
+    return nn.rms_norm(x, params["final_norm"])
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    x = nn.embed_lookup(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "vis_embeds" in batch:
+        # overlay the (stub-frontend) patch embeddings on the first Nv slots
+        nv = cfg.n_vis_tokens
+        x = jnp.concatenate([batch["vis_embeds"].astype(x.dtype), x[:, nv:]], axis=1)
+    return x
+
+
+def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    # the token-lookup keeps the FSDP-sharded embed (its scatter-add grad
+    # then stays sharded); only the CE unembed gathers a replicated copy
+    x = embed_inputs(params, cfg, batch)
+    h = forward(params, cfg, x)
+    mask = None
+    if cfg.family == "vlm":
+        B, S = batch["tokens"].shape
+        mask = (jnp.arange(S) >= cfg.n_vis_tokens)[None, :] * jnp.ones((B, 1))
+    return nn.cross_entropy(_policy.gather_params(params["embed"]), h,
+                            batch["labels"], mask)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Full forward that also materialises the KV cache.
+
+    Returns (last-token logits (B,V), cache {k,v: (L,B,S,K,hd)}).
+    """
+    params = {**params, "embed": _policy.gather_params(params["embed"])}
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    ks, vs = [], []
+    for start, length, window in segments(cfg):
+        def body(carry, p, window=window):
+            p = _policy.gather_params(p)
+            h = nn.rms_norm(carry, p["norm1"])
+            q, k, v = nn.attn_qkv(p["attn"], cfg, h, jnp.arange(S))
+            o = nn.attention(q, k, v, window=window)
+            carry = carry + o.reshape(B, S, -1) @ p["attn"]["wo"]
+            h = nn.rms_norm(carry, p["norm2"])
+            carry = carry + nn.mlp_apply(p["mlp"], h)
+            return carry, (k, v)
+
+        x, (k_seg, v_seg) = jax.lax.scan(
+            jax.checkpoint(body), x, _tree_slice(params["blocks"], start, length))
+        ks.append(k_seg)
+        vs.append(v_seg)
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h[:, -1:])[:, 0]
+    cache = {"k": jnp.concatenate(ks, axis=0), "v": jnp.concatenate(vs, axis=0)}
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
+                batch: Dict[str, jax.Array]):
+    """One new token against a KV cache.  batch: {token (B,1), pos ()}.
+
+    Returns (logits (B,V), new cache).
+    """
+    token, pos = batch["token"], batch["pos"]
+    x = nn.embed_lookup(params["embed"], token)
+    new_k, new_v = [], []
+    for start, length, window in segments(cfg):
+        def body(carry, xs, window=window):
+            p, kc, vc = xs
+            h = nn.rms_norm(carry, p["norm1"])
+            o, kc, vc = nn.attn_decode(p["attn"], cfg, h, kc, vc, pos, window=window)
+            carry = carry + o
+            h = nn.rms_norm(carry, p["norm2"])
+            carry = carry + nn.mlp_apply(p["mlp"], h)
+            return carry, (kc, vc)
+
+        xs = (_tree_slice(params["blocks"], start, length),
+              jax.lax.slice_in_dim(cache["k"], start, start + length, axis=0),
+              jax.lax.slice_in_dim(cache["v"], start, start + length, axis=0))
+        x, (k_seg, v_seg) = jax.lax.scan(body, x, xs)
+        new_k.append(k_seg)
+        new_v.append(v_seg)
+    h = nn.rms_norm(x, params["final_norm"])
+    logits = nn.unembed_logits(params["embed"], h)[:, 0]
+    return logits, {"k": jnp.concatenate(new_k, axis=0), "v": jnp.concatenate(new_v, axis=0)}

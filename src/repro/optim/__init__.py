@@ -1,0 +1,66 @@
+"""Minimal pure-pytree optimizers (no optax dependency).
+
+The paper's local optimizer is mini-batch SGD with momentum 0.9; FedOpt
+needs a server-side Adam.  LR schedules mirror the paper's step decay.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class SGDState(NamedTuple):
+    momentum: Params
+
+
+def sgd_init(params: Params) -> SGDState:
+    return SGDState(jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params: Params, grads: Params, state: SGDState, *,
+               lr: float, momentum: float = 0.9,
+               weight_decay: float = 0.0) -> Tuple[Params, SGDState]:
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+    new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, SGDState(new_m)
+
+
+class AdamState(NamedTuple):
+    m: Params
+    v: Params
+    count: jax.Array
+
+
+def adam_init(params: Params) -> AdamState:
+    return AdamState(jax.tree.map(jnp.zeros_like, params),
+                     jax.tree.map(jnp.zeros_like, params),
+                     jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: Params, grads: Params, state: AdamState, *,
+                lr: float, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8) -> Tuple[Params, AdamState]:
+    count = state.count + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state.v, grads)
+    c = count.astype(jnp.float32)
+    mh = 1.0 / (1 - b1 ** c)
+    vh = 1.0 / (1 - b2 ** c)
+    new_p = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mh) / (jnp.sqrt(v_ * vh) + eps),
+        params, m, v)
+    return new_p, AdamState(m, v, count)
+
+
+def step_decay(base_lr: float, round_idx, decay_rounds, factor: float = 0.1):
+    """Paper-style step decay (decay at the listed rounds)."""
+    mult = 1.0
+    for r in decay_rounds:
+        mult = jnp.where(round_idx >= r, mult * factor, mult)
+    return base_lr * mult

@@ -1,0 +1,35 @@
+"""End-to-end driver smoke tests: the CLI trainer and the serving loop."""
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.serve import serve
+from repro.launch.train import main as train_main
+
+
+def test_train_driver_mlp(capsys):
+    train_main(["--workload", "mlp", "--rounds", "6", "--clients", "8",
+                "--active", "4", "--tau", "2", "--delta", "2",
+                "--eval-every", "3"])
+    out = capsys.readouterr().out
+    assert '"acc"' in out and '"comm_ratio"' in out
+
+
+def test_train_driver_lm_with_ckpt(tmp_path, capsys):
+    ck = str(tmp_path / "m")
+    train_main(["--workload", "lm", "--arch", "gemma3-4b", "--rounds", "4",
+                "--clients", "6", "--active", "2", "--tau", "2",
+                "--batch-size", "4", "--seq-len", "16", "--delta", "4",
+                "--eval-every", "2", "--ckpt", ck])
+    out = capsys.readouterr().out
+    assert '"val_loss"' in out and "checkpoint" in out
+    import os
+    assert os.path.exists(ck + ".npz")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-780m", "zamba2-1.2b",
+                                  "whisper-small"])
+def test_serve_loop(arch):
+    out, stats = serve(arch, batch=2, prompt_len=8, steps=4)
+    assert out.shape == (2, 4)
+    assert bool(jnp.all(out >= 0))
+    assert stats["decode_s_per_tok"] > 0

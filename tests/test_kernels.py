@@ -1,0 +1,161 @@
+"""Per-kernel allclose sweeps (interpret=True) against the pure-jnp
+oracles in kernels/ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,K,S,hd", [
+    (1, 2, 2, 128, 32),     # MHA
+    (2, 4, 2, 256, 64),     # GQA 2:1
+    (1, 8, 1, 128, 64),     # MQA
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_shapes(B, H, K, S, hd, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=3e-2)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                              interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """The model's chunked jnp attention and the kernel agree."""
+    from repro.models.layers import attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, S, H, K, hd = 2, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out_model = attention(q, k, v, chunk=64)
+    out_kernel = ops.flash_attention(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(out_kernel, 1, 2)),
+                               np.asarray(out_model), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,nh,P,N,T", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 4, 64, 32, 64),
+])
+def test_ssd_scan_vs_sequential_ref(B, S, nh, P, N, T):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    D = jnp.ones((nh,))
+    y, st = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=T, interpret=True)
+    ye, ste = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(ste), atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """Different chunk sizes give the same answer (chunking is exact)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, nh, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    D = jnp.zeros((nh,))
+    y32, s32 = ssd_chunked(x, dt, A, Bm, Cm, D, 32)
+    y128, s128 = ssd_chunked(x, dt, A, Bm, Cm, D, 128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s128), atol=1e-4)
+
+
+def test_ssd_decode_continues_prefill():
+    """Running SSD over S tokens == SSD over S-1 then one decode step."""
+    from repro.models.ssm import ssd_chunked, ssd_decode
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    B, S, nh, P, N = 1, 65, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    D = jnp.ones((nh,))
+    y_full, st_full = ssd_chunked(x, dt, A, Bm, Cm, D, 64)
+    _, st_prefix = ssd_chunked(x[:, :-1], dt[:, :-1], A, Bm[:, :-1],
+                               Cm[:, :-1], D, 64)
+    y_t, st_t = ssd_decode(st_prefix, x[:, -1], dt[:, -1], A, Bm[:, -1],
+                           Cm[:, -1], D)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, -1]),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_t), np.asarray(st_full),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# LUAR aggregation kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [100, 1000, 128 * 256 + 17])
+@pytest.mark.parametrize("use_recycled", [0.0, 1.0])
+def test_luar_agg(n, use_recycled):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    d = jax.random.normal(ks[0], (n,))
+    x = jax.random.normal(ks[1], (n,))
+    r = jax.random.normal(ks[2], (n,))
+    a, d2, x2 = ops.luar_agg(d, x, r, jnp.asarray(use_recycled), interpret=True)
+    ae, d2e, x2e = ref.luar_agg_ref(d, x, r, jnp.asarray(use_recycled))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ae), atol=1e-6)
+    assert np.isclose(float(d2), float(d2e), rtol=1e-4)
+    assert np.isclose(float(x2), float(x2e), rtol=1e-4)
+
+
+def test_luar_agg_2d_shape():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    d = jax.random.normal(ks[0], (37, 53))
+    x = jax.random.normal(ks[1], (37, 53))
+    r = jax.random.normal(ks[2], (37, 53))
+    a, d2, x2 = ops.luar_agg(d, x, r, jnp.asarray(1.0), interpret=True)
+    assert a.shape == (37, 53)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=1e-6)

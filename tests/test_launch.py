@@ -1,0 +1,206 @@
+"""Launch-layer tests: sharding rules (property-based), HLO analyzer
+(against a known toy program), step construction."""
+import re
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.recycle import LuarConfig
+from repro.launch import hlo
+from repro.launch.sharding import param_spec, layout
+from repro.launch.steps import make_fedluar_train_step, train_state_shapes
+from repro.models.registry import build
+
+FakeDevices = namedtuple("FakeDevices", ["shape"])
+
+
+class FakeMesh:
+    def __init__(self, shape, axes):
+        self.devices = FakeDevices(shape)
+        self.axis_names = axes
+
+
+MESH1 = FakeMesh((16, 16), ("data", "model"))
+MESH2 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+CFG = get_config("qwen3-14b")
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4))
+@settings(deadline=None, max_examples=100)
+def test_param_spec_never_shards_nondivisible(dims):
+    """Property: every sharded dim divides its axis-size product."""
+    for mesh in (MESH1, MESH2):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for strategy in ("fsdp_sp", "naive_tp"):
+            spec = param_spec("blocks.attn.wq", tuple(dims), mesh, CFG, strategy)
+            for dim, s in zip(dims, spec):
+                if s is None:
+                    continue
+                axes = s if isinstance(s, tuple) else (s,)
+                prod = int(np.prod([sizes[a] for a in axes]))
+                assert dim % prod == 0 and dim >= prod
+
+
+def test_param_spec_1d_replicated():
+    assert param_spec("final_norm", (5120,), MESH1, CFG) == P()
+
+
+def test_param_spec_expert_parallel():
+    spec = param_spec("blocks.moe.w_gate", (26, 64, 2048, 1408), MESH1,
+                      get_config("deepseek-v2-lite-16b"))
+    assert spec[1] == "model"          # 64 experts over 16-way EP
+
+
+def test_param_spec_mixtral_tp_fallback():
+    spec = param_spec("blocks.moe.w_gate", (32, 8, 4096, 14336), MESH1,
+                      get_config("mixtral-8x7b"))
+    assert spec[1] is None             # 8 experts cannot shard 16 ways
+
+
+def test_naive_tp_shards_last_dim():
+    spec = param_spec("blocks.attn.wk", (40, 5120, 1024), MESH1, CFG, "naive_tp")
+    assert spec[-1] == "model"         # the head_dim-splitting trap
+
+
+def test_layout_pure_dp_when_batch_divides():
+    baxes, seq = layout(CFG, SHAPES["train_4k"], MESH1)   # B=256 == 16*16
+    assert "model" in baxes and seq is None
+
+
+def test_layout_sp_when_batch_small():
+    baxes, seq = layout(CFG, SHAPES["prefill_32k"], MESH1)  # B=32
+    assert baxes == ("data",) and seq == "model"
+
+
+def test_layout_ssm_never_seq_shards():
+    cfg = get_config("mamba2-780m")
+    _, seq = layout(cfg, SHAPES["prefill_32k"], MESH1)
+    assert seq is None
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_analyzer_multiplies_loop_trip_counts():
+    """A scan of L matmuls must report ~L x the flops of one matmul."""
+    L, n = 12, 64
+
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    lowered = jax.jit(jax.grad(f)).lower(
+        jax.ShapeDtypeStruct((L, n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32))
+    text = lowered.compile().as_text()
+    a = hlo.analyze(text)
+    one_matmul = 2 * n * n * n
+    # fwd + bwd(2 matmuls) per layer = 3 matmuls/layer minimum
+    assert a["flops"] >= 3 * L * one_matmul * 0.9
+    assert a["flops"] <= 6 * L * one_matmul  # not wildly over
+
+
+def test_hlo_shape_parsing():
+    shapes = hlo._shape_list_bytes("f32[16,256]{1,0} bf16[8]")
+    assert hlo._bytes_of(shapes[0]) == 16 * 256 * 4
+    assert hlo._bytes_of(shapes[1]) == 8 * 2
+
+
+def test_hlo_roofline_bottleneck():
+    r = hlo.roofline({"flops": 1e15, "hbm_bytes": 1e9, "collective_bytes": 1e9})
+    assert r["bottleneck"] == "compute_s"
+    r = hlo.roofline({"flops": 1e9, "hbm_bytes": 1e9, "collective_bytes": 1e12})
+    assert r["bottleneck"] == "collective_s"
+
+
+# ---------------------------------------------------------------------------
+# FedLUAR train step (single device semantics)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_step():
+    cfg = get_config("qwen3-14b", reduced=True)
+    model = build(cfg)
+    state_shapes, um = train_state_shapes(model)
+    return cfg, model, um
+
+
+def test_train_state_shapes_no_allocation(tiny_step):
+    cfg, model, um = tiny_step
+    state_shapes, _ = train_state_shapes(model)
+    for leaf in jax.tree.leaves(state_shapes):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    assert len(um.names) > 5
+
+
+def test_fedluar_step_dynamic_runs(tiny_step):
+    cfg, model, um = tiny_step
+    from repro.launch.steps import TrainState
+    from repro.core.recycle import luar_init
+    params = model.init(jax.random.PRNGKey(0))
+    luar_state, _ = luar_init(params, LuarConfig(delta=3), jax.random.PRNGKey(1))
+    momentum = jax.tree.map(jnp.zeros_like, params)
+    state = TrainState(params, momentum, luar_state)
+    step = make_fedluar_train_step(model, LuarConfig(delta=3), um, lr=1e-2)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    new_state, loss = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(loss))
+    assert int(jnp.sum(new_state.luar.mask)) == 3
+
+
+def test_fedluar_step_static_freezes_masked_units(tiny_step):
+    cfg, model, um = tiny_step
+    from repro.launch.steps import TrainState
+    from repro.core.recycle import luar_init
+    params = model.init(jax.random.PRNGKey(0))
+    luar_state, _ = luar_init(params, LuarConfig(delta=0), jax.random.PRNGKey(1))
+    momentum = jax.tree.map(jnp.zeros_like, params)
+    state = TrainState(params, momentum, luar_state)
+    mask = tuple(i < 2 for i in range(len(um.names)))   # first two units recycled
+    step = make_fedluar_train_step(model, LuarConfig(delta=2), um,
+                                   lr=1e-2, static_mask=mask)
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    new_state, loss = jax.jit(step)(state, batch)
+    # recycled units: prev_update was zeros -> params unchanged
+    leaves_old = jax.tree.leaves(params)
+    leaves_new = jax.tree.leaves(new_state.params)
+    changed = [not np.allclose(np.asarray(a), np.asarray(b))
+               for a, b in zip(leaves_old, leaves_new)]
+    for u, ch in zip(um.leaf_unit, changed):
+        if mask[u]:
+            assert not ch, f"masked unit {um.names[u]} moved"
+
+
+def test_static_mask_removes_grad_work(tiny_step):
+    """Beyond-paper claim: baking R_t into the executable DCEs the masked
+    units' weight-gradient matmuls -> fewer HLO flops than dynamic."""
+    cfg, model, um = tiny_step
+    state_shapes, _ = train_state_shapes(model)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+
+    def flops_of(static_mask):
+        step = make_fedluar_train_step(model, LuarConfig(delta=4), um,
+                                       static_mask=static_mask)
+        lowered = jax.jit(step).lower(state_shapes, batch)
+        return hlo.analyze(lowered.compile().as_text())["flops"]
+
+    n = len(um.names)
+    heavy = sorted(range(n), key=lambda i: -um.unit_bytes[i])[: n // 2]
+    mask = tuple(i in heavy for i in range(n))
+    f_dyn = flops_of(None)
+    f_static = flops_of(mask)
+    assert f_static < f_dyn * 0.97, (f_static, f_dyn)

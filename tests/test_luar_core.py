@@ -1,0 +1,410 @@
+"""Unit + property tests for the paper's core: Eq. (1)/(2), Alg. 1,
+selection schemes, communication/memory accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LuarConfig, build_units, comm_init, comm_update,
+                        comm_ratio, gumbel_topk_mask, luar_init, luar_round,
+                        recycle_probs, round_upload_bytes, s_metric,
+                        select_recycle_set, server_memory_bytes,
+                        unit_sq_norms)
+from repro.models.cnn import cnn_init, mlp_init
+
+
+@pytest.fixture(scope="module")
+def cnn_params():
+    return cnn_init(jax.random.PRNGKey(0))
+
+
+def _const_update(params, val=0.01):
+    return jax.tree.map(lambda a: val * jnp.ones_like(a), params)
+
+
+# ---------------------------------------------------------------------------
+# units
+# ---------------------------------------------------------------------------
+
+
+def test_module_units_match_paper_cnn(cnn_params):
+    um = build_units(cnn_params, "module")
+    assert um.names == ("conv1", "conv2", "fc1", "fc2")  # 4 layers, Table 11
+
+
+def test_leaf_units(cnn_params):
+    um = build_units(cnn_params, "leaf")
+    assert len(um.names) == 8  # w+b per layer
+
+
+def test_unit_bytes(cnn_params):
+    um = build_units(cnn_params, "module")
+    total = sum(um.unit_bytes)
+    expect = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cnn_params))
+    assert total == expect
+
+
+def test_unit_sq_norms_matches_manual(cnn_params):
+    um = build_units(cnn_params, "module")
+    norms = unit_sq_norms(um, cnn_params)
+    manual = sum(float(jnp.sum(v["w"] ** 2) + jnp.sum(v["b"] ** 2))
+                 for v in [cnn_params["conv1"]])
+    assert np.isclose(float(norms[0]), manual, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) / (2)
+# ---------------------------------------------------------------------------
+
+
+def test_s_metric_definition(cnn_params):
+    um = build_units(cnn_params, "module")
+    upd = _const_update(cnn_params, 0.1)
+    s = s_metric(um, upd, cnn_params)
+    d2 = unit_sq_norms(um, upd)
+    x2 = unit_sq_norms(um, cnn_params)
+    np.testing.assert_allclose(np.asarray(s),
+                               np.sqrt(np.asarray(d2)) / np.sqrt(np.asarray(x2)),
+                               rtol=1e-4)
+
+
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e3), min_size=2, max_size=64))
+@settings(deadline=None, max_examples=50)
+def test_recycle_probs_is_distribution(svals):
+    p = recycle_probs(jnp.asarray(svals, jnp.float32))
+    assert np.all(np.asarray(p) >= 0)
+    assert np.isclose(float(jnp.sum(p)), 1.0, atol=1e-5)
+
+
+def test_recycle_probs_inverse_ordering():
+    s = jnp.asarray([0.1, 1.0, 10.0])
+    p = recycle_probs(s)
+    assert p[0] > p[1] > p[2]  # small s (stable layer) -> likelier recycled
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=32), st.integers(min_value=0, max_value=32),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=60)
+def test_gumbel_topk_exactly_k(n, k, seed):
+    k = min(k, n)
+    logp = jnp.zeros((n,))
+    mask = gumbel_topk_mask(jax.random.PRNGKey(seed), logp, k)
+    assert int(jnp.sum(mask)) == k
+
+
+def test_gumbel_topk_respects_weights():
+    # a unit with overwhelming probability is (almost) always selected
+    logp = jnp.log(jnp.asarray([0.97, 0.01, 0.01, 0.01]))
+    hits = 0
+    for i in range(50):
+        mask = gumbel_topk_mask(jax.random.PRNGKey(i), logp, 1)
+        hits += int(mask[0])
+    assert hits >= 40
+
+
+@pytest.mark.parametrize("scheme", ["luar", "random", "grad_norm", "top",
+                                    "bottom", "deterministic"])
+def test_selection_schemes_count(scheme):
+    s = jnp.asarray([0.1, 0.5, 0.01, 2.0, 0.3])
+    gsq = jnp.asarray([1.0, 2.0, 0.5, 3.0, 0.1])
+    mask = select_recycle_set(jax.random.PRNGKey(0), scheme, 2, s=s, grad_sq=gsq)
+    assert int(jnp.sum(mask)) == 2
+
+
+def test_top_bottom_deterministic_positions():
+    s = jnp.arange(1, 6, dtype=jnp.float32)
+    g = jnp.ones((5,))
+    top = select_recycle_set(jax.random.PRNGKey(0), "top", 2, s=s, grad_sq=g)
+    bot = select_recycle_set(jax.random.PRNGKey(0), "bottom", 2, s=s, grad_sq=g)
+    det = select_recycle_set(jax.random.PRNGKey(0), "deterministic", 2, s=s, grad_sq=g)
+    assert list(np.asarray(top)) == [True, True, False, False, False]
+    assert list(np.asarray(bot)) == [False, False, False, True, True]
+    assert list(np.asarray(det)) == [True, True, False, False, False]  # smallest s
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 round semantics
+# ---------------------------------------------------------------------------
+
+
+def test_delta0_is_fedavg(cnn_params):
+    cfg = LuarConfig(delta=0, granularity="module")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(1))
+    fresh = _const_update(cnn_params)
+    applied, state = luar_round(state, um, cfg, fresh, cnn_params)
+    for a, f in zip(jax.tree.leaves(applied), jax.tree.leaves(fresh)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(f))
+    assert not bool(jnp.any(state.mask))
+
+
+def test_round0_mask_empty_then_recycles(cnn_params):
+    cfg = LuarConfig(delta=2, granularity="module")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(1))
+    assert not bool(jnp.any(state.mask))          # R_0 = empty (Alg. 2)
+    fresh = _const_update(cnn_params)
+    applied1, state = luar_round(state, um, cfg, fresh, cnn_params)
+    assert int(jnp.sum(state.mask)) == 2          # R_1 sampled
+    fresh2 = _const_update(cnn_params, 0.5)
+    applied2, state2 = luar_round(state, um, cfg, fresh2, cnn_params)
+    # masked units must carry round-1's update; unmasked carry fresh2
+    mask = np.asarray(state.mask)
+    l1 = jax.tree.leaves(applied1)
+    l2 = jax.tree.leaves(applied2)
+    lf = jax.tree.leaves(fresh2)
+    for u, a1, a2, f2 in zip(um.leaf_unit, l1, l2, lf):
+        if mask[u]:
+            np.testing.assert_array_equal(np.asarray(a2), np.asarray(a1))
+        else:
+            np.testing.assert_array_equal(np.asarray(a2), np.asarray(f2))
+
+
+def test_drop_mode_zeroes(cnn_params):
+    cfg = LuarConfig(delta=2, granularity="module", mode="drop")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(1))
+    fresh = _const_update(cnn_params)
+    _, state = luar_round(state, um, cfg, fresh, cnn_params)
+    applied, _ = luar_round(state, um, cfg, fresh, cnn_params)
+    mask = np.asarray(state.mask)
+    for u, a in zip(um.leaf_unit, jax.tree.leaves(applied)):
+        if mask[u]:
+            assert float(jnp.max(jnp.abs(a))) == 0.0
+
+
+def test_staleness_and_agg_count_bookkeeping(cnn_params):
+    cfg = LuarConfig(delta=1, granularity="module")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(3))
+    fresh = _const_update(cnn_params)
+    T = 10
+    for _ in range(T):
+        _, state = luar_round(state, um, cfg, fresh, cnn_params)
+    agg = np.asarray(state.agg_count)
+    # every round, exactly n_units - delta units aggregate (round 0: all)
+    assert agg.sum() == (len(um.names) - 1) * (T - 1) + len(um.names)
+    assert int(state.round) == T
+
+
+# ---------------------------------------------------------------------------
+# comm / memory accounting
+# ---------------------------------------------------------------------------
+
+
+def test_comm_monotone_in_delta(cnn_params):
+    um = build_units(cnn_params, "module")
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    full = float(round_upload_bytes(um, jnp.zeros(4, bool), 32))
+    assert full == sizes.sum() * 32
+    mask = jnp.asarray([True, False, False, False])
+    assert float(round_upload_bytes(um, mask, 32)) == (sizes.sum() - sizes[0]) * 32
+
+
+def test_comm_ratio_accumulates(cnn_params):
+    um = build_units(cnn_params, "module")
+    stats = comm_init()
+    mask = jnp.asarray([True, True, False, False])
+    for _ in range(4):
+        stats = comm_update(stats, um, mask, 8)
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    expect = sizes[2:].sum() / sizes.sum()
+    assert np.isclose(comm_ratio(stats, um, 8), expect, rtol=1e-6)
+
+
+def test_server_memory_model(cnn_params):
+    """Table 1: a*(d-k)+k < a*d whenever k > 0."""
+    um = build_units(cnn_params, "module")
+    m = server_memory_bytes(um, delta_bytes=um.unit_bytes[2], n_active=32)
+    assert m["fedluar"] < m["fedavg"]
+    d = sum(um.unit_bytes)
+    assert m["fedavg"] == 32 * d
+    assert m["fedluar"] == 32 * (d - um.unit_bytes[2]) + um.unit_bytes[2]
+
+
+# ---------------------------------------------------------------------------
+# kappa < 1/16 diagnostic (Theorem 2's condition is checkable)
+# ---------------------------------------------------------------------------
+
+
+def test_kappa_estimate():
+    """kappa = ||grad restricted to R||^2 / ||grad||^2 <= 1 and == fraction
+    for uniform gradients."""
+    params = mlp_init(jax.random.PRNGKey(0))
+    um = build_units(params, "module")
+    g = jax.tree.map(jnp.ones_like, params)
+    gsq = unit_sq_norms(um, g)
+    mask = jnp.asarray([True, False, False])
+    kappa = float(jnp.sum(jnp.where(mask, gsq, 0.0)) / jnp.sum(gsq))
+    assert 0.0 < kappa < 1.0
+
+
+def test_max_staleness_bound(cnn_params):
+    """Beyond-paper: with max_staleness=K, no unit is ever recycled more
+    than K consecutive rounds (worst-case Lemma-1 k bound)."""
+    cfg = LuarConfig(delta=3, granularity="module", scheme="deterministic",
+                     max_staleness=2)
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(5))
+    fresh = _const_update(cnn_params)
+    max_seen = 0
+    for _ in range(20):
+        _, state = luar_round(state, um, cfg, fresh, cnn_params)
+        max_seen = max(max_seen, int(jnp.max(state.staleness)))
+    assert max_seen <= 2
+
+
+def test_max_staleness_off_allows_unbounded(cnn_params):
+    cfg = LuarConfig(delta=3, granularity="module", scheme="deterministic")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(5))
+    fresh = _const_update(cnn_params)
+    for _ in range(10):
+        _, state = luar_round(state, um, cfg, fresh, cnn_params)
+    assert int(jnp.max(state.staleness)) > 2  # deterministic keeps recycling
+
+
+# ---------------------------------------------------------------------------
+# high-level API + fused kernel path
+# ---------------------------------------------------------------------------
+
+
+def test_fedluar_api_matches_functional(cnn_params):
+    from repro.core import FedLUAR
+    api = FedLUAR(cnn_params, delta=2, granularity="module", seed=1,
+                  n_active=8)
+    cfg = LuarConfig(delta=2, granularity="module")
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(1))
+    fresh = _const_update(cnn_params)
+    for _ in range(4):
+        a1 = api.aggregate(fresh, cnn_params)
+        a2, state = luar_round(state, um, cfg, fresh, cnn_params)
+        for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    d = api.diagnostics()
+    assert d["round"] == 4 and 0 < d["comm_ratio"] <= 1.0
+    assert len(api.recycled_unit_names) == 2
+
+
+def test_fedluar_kernel_path_matches(cnn_params):
+    """The fused Pallas server op (interpret mode) reproduces the jnp
+    aggregation bit-for-bit on the applied update and matches s."""
+    from repro.core import FedLUAR
+    fresh = _const_update(cnn_params, 0.05)
+    a = FedLUAR(cnn_params, delta=2, granularity="module", seed=3)
+    b = FedLUAR(cnn_params, delta=2, granularity="module", seed=3,
+                use_kernel=True)
+    for _ in range(3):
+        ua = a.aggregate(fresh, cnn_params)
+        ub = b.aggregate(fresh, cnn_params)
+        for x, y in zip(jax.tree.leaves(ua), jax.tree.leaves(ub)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+        # tile-wise SMEM accumulation vs tree-sum: tiny order difference
+        np.testing.assert_allclose(np.asarray(a.state.s), np.asarray(b.state.s),
+                                   rtol=1e-3)
+        np.testing.assert_array_equal(np.asarray(a.state.mask),
+                                      np.asarray(b.state.mask))
+
+
+# ---------------------------------------------------------------------------
+# depth granularity (per-layer units on scanned stacks)
+# ---------------------------------------------------------------------------
+
+
+def test_depth_granularity_unit_count():
+    import jax
+    from repro.configs import get_config
+    from repro.models.registry import build
+    cfg = get_config("qwen3-14b", reduced=True)          # 2 scanned layers
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    um_leaf = build_units(params, "leaf")
+    um_depth = build_units(params, "depth")
+    n_stacked = sum(1 for u in um_leaf.leaf_unit
+                    if um_leaf.names[u].startswith("blocks"))
+    assert len(um_depth.names) == len(um_leaf.names) + n_stacked * (cfg.n_layers - 1)
+    assert f"blocks.attn.wq[0]" in um_depth.names
+    assert sum(um_depth.unit_bytes) == sum(um_leaf.unit_bytes)
+
+
+def test_depth_granularity_recycles_single_layer():
+    """Recycling one depth-unit leaves the other layers' slices fresh."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.registry import build
+    cfg = get_config("qwen3-14b", reduced=True)
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    um = build_units(params, "depth")
+    lcfg = LuarConfig(delta=5, granularity="depth")
+    state, um2 = luar_init(params, lcfg, jax.random.PRNGKey(2))
+    fresh1 = _const_update(params, 0.1)
+    a1, state = luar_round(state, um2, lcfg, fresh1, params)
+    fresh2 = _const_update(params, 0.7)
+    a2, state2 = luar_round(state, um2, lcfg, fresh2, params)
+    mask = np.asarray(state.mask)
+    assert mask.sum() == 5
+    l1, l2, lf = (jax.tree.leaves(t) for t in (a1, a2, fresh2))
+    for u, x1, x2, f2 in zip(um2.leaf_unit, l1, l2, lf):
+        if isinstance(u, tuple):
+            start, L = u
+            for i in range(L):
+                want = np.asarray(x1)[i] if mask[start + i] else np.asarray(f2)[i]
+                np.testing.assert_array_equal(np.asarray(x2)[i], want)
+        else:
+            want = np.asarray(x1) if mask[u] else np.asarray(f2)
+            np.testing.assert_array_equal(np.asarray(x2), want)
+
+
+def test_depth_norms_match_slicewise():
+    import jax
+    from repro.configs import get_config
+    from repro.models.registry import build
+    cfg = get_config("mamba2-780m", reduced=True)
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    um = build_units(params, "depth")
+    norms = np.asarray(unit_sq_norms(um, params))
+    # pick one stacked unit and verify against a manual slice norm
+    idx = um.names.index("blocks.in_proj[1]")
+    manual = float(jnp.sum(jnp.square(params["blocks"]["in_proj"][1].astype(jnp.float32))))
+    assert np.isclose(norms[idx], manual, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# exhaustive scheme x granularity x mode sweep (cheap invariants)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("granularity", ["leaf", "module", "depth"])
+@pytest.mark.parametrize("scheme", ["luar", "random", "deterministic"])
+@pytest.mark.parametrize("mode", ["recycle", "drop"])
+def test_round_invariants_all_combos(cnn_params, granularity, scheme, mode):
+    """For every combo: mask has exactly delta bits, applied matches the
+    pytree structure, comm accounting stays within [0, full]."""
+    cfg = LuarConfig(delta=2, scheme=scheme, mode=mode, granularity=granularity)
+    state, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(7))
+    fresh = _const_update(cnn_params)
+    for _ in range(3):
+        applied, state = luar_round(state, um, cfg, fresh, cnn_params)
+    assert int(jnp.sum(state.mask)) == 2
+    assert jax.tree.structure(applied) == jax.tree.structure(cnn_params)
+    full = float(round_upload_bytes(um, jnp.zeros(len(um.names), bool), 1))
+    up = float(round_upload_bytes(um, state.mask, 1))
+    assert 0.0 <= up <= full
+    assert bool(jnp.all(jnp.isfinite(state.s)))
+
+
+@given(st.integers(2, 40), st.integers(0, 40))
+@settings(deadline=None, max_examples=30)
+def test_upload_bytes_linearity(n, k):
+    """Property: upload bytes = total - sum of masked unit sizes."""
+    k = min(k, n)
+    sizes = tuple(int(x) for x in np.random.default_rng(n).integers(1, 1000, n))
+    um = UnitMapStub(sizes)
+    mask = jnp.zeros((n,), bool).at[:k].set(True)
+    got = float(round_upload_bytes(um, mask, 3))
+    want = (sum(sizes) - sum(sizes[:k])) * 3
+    assert got == want
+
+
+class UnitMapStub:
+    def __init__(self, sizes):
+        self.unit_bytes = sizes

@@ -1,0 +1,214 @@
+"""Mathematical properties of the model primitives."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as nn
+from repro.models.ssm import ssd_chunked
+from repro.kernels.ref import ssd_ref
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32))
+    r = nn.rope(x, jnp.arange(16), 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+
+    def dot_at(i, j):
+        qi = nn.rope(q, jnp.asarray([i]), 1e4)
+        kj = nn.rope(k, jnp.asarray([j]), 1e4)
+        return float(jnp.sum(qi * kj))
+
+    assert np.isclose(dot_at(5, 3), dot_at(12, 10), atol=1e-4)
+    assert np.isclose(dot_at(0, 0), dot_at(7, 7), atol=1e-4)
+
+
+def test_rope_zero_position_identity():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 2, 32))
+    r = nn.rope(x, jnp.asarray([0]), 1e4)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(x), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rms_norm
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 8), st.integers(2, 128))
+@settings(deadline=None, max_examples=20)
+def test_rms_norm_unit_rms(b, d):
+    x = jax.random.normal(jax.random.PRNGKey(b * 131 + d), (b, d)) * 3.0
+    out = nn.rms_norm(x, jnp.zeros((d,)))
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=0.05)
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    a = nn.rms_norm(x, jnp.zeros((64,)))
+    b = nn.rms_norm(10.0 * x, jnp.zeros((64,)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k.astype(jnp.float32)) / math.sqrt(hd)
+    dpos = jnp.arange(Sq)[:, None] - jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(dpos, bool)
+    if causal:
+        mask &= dpos >= 0
+    if window:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd)
+
+
+@pytest.mark.parametrize("H,K", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("chunk", [8, 64, 1024])
+def test_chunked_attention_matches_naive(H, K, window, chunk):
+    B, S, hd = 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = nn.attention(q, k, v, window=window, chunk=chunk)
+    expect = _naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_attention_matches_last_row():
+    B, S, H, K, hd = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    full = _naive_attention(q, k, v)
+    dec = nn.decode_attention(q[:, -1:], k, v, jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_banded_swa_ignores_distant_tokens():
+    """SWA: perturbing a key outside the window changes nothing."""
+    B, S, H, hd, w = 1, 128, 2, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out1 = nn.attention(q, k, v, window=w, chunk=32)
+    k2 = k.at[:, 10].set(100.0)
+    v2 = v.at[:, 10].set(100.0)
+    out2 = nn.attention(q, k2, v2, window=w, chunk=32)
+    np.testing.assert_allclose(np.asarray(out1[:, 40:]), np.asarray(out2[:, 40:]),
+                               atol=1e-5)
+
+
+def test_pick_chunk_divides():
+    for Sq in (17, 64, 256, 1500, 4096):
+        c = nn._pick_chunk(Sq, 2, 8, 4096, 1024)
+        assert Sq % c == 0 and c >= 1
+
+
+# ---------------------------------------------------------------------------
+# SSD dual form
+# ---------------------------------------------------------------------------
+
+
+def test_ssd_equals_attention_like_dual():
+    """With A=0 (no decay) and dt=1, SSD reduces to (unnormalised) linear
+    attention: y_t = C_t . sum_{j<=t} B_j x_j^T."""
+    B, S, nh, P, N = 1, 16, 1, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (B, S, nh, P))
+    Bm = jax.random.normal(ks[1], (B, S, N))
+    Cm = jax.random.normal(ks[2], (B, S, N))
+    dt = jnp.ones((B, S, nh))
+    A = jnp.zeros((nh,))
+    D = jnp.zeros((nh,))
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=4)
+    # manual linear attention
+    expect = np.zeros((B, S, nh, P), np.float32)
+    state = np.zeros((P, N), np.float32)
+    for t in range(S):
+        state = state + np.outer(np.asarray(x)[0, t, 0], np.asarray(Bm)[0, t])
+        expect[0, t, 0] = state @ np.asarray(Cm)[0, t]
+    np.testing.assert_allclose(np.asarray(y), expect, atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(1, 3), st.integers(2, 4))
+@settings(deadline=None, max_examples=10)
+def test_ssd_chunked_matches_sequential(bi, nhi):
+    S, P, N = 32, 8, 4
+    key = jax.random.PRNGKey(bi * 31 + nhi)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (bi, S, nhi, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bi, S, nhi))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (nhi,)))
+    Bm = jax.random.normal(ks[3], (bi, S, N)) * 0.4
+    Cm = jax.random.normal(ks[4], (bi, S, N)) * 0.4
+    D = jnp.ones((nhi,))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=8)
+    y2, s2 = ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# cross entropy
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_ce_matches_full():
+    V, d, B, S = 97, 16, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    embed = jax.random.normal(ks[0], (V, d))
+    x = jax.random.normal(ks[1], (B, S, d))
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    chunked = nn.cross_entropy(embed, x, labels, chunk=16)
+    logits = jnp.einsum("bsd,vd->bsv", x, embed)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    full = jnp.mean(lse - gold)
+    assert np.isclose(float(chunked), float(full), rtol=1e-5)
+
+
+def test_ce_mask():
+    V, d, B, S = 31, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    embed = jax.random.normal(ks[0], (V, d))
+    x = jax.random.normal(ks[1], (B, S, d))
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    mask = jnp.zeros((B, S)).at[:, 8:].set(1.0)
+    m = nn.cross_entropy(embed, x, labels, mask=mask, chunk=S)
+    # perturbing masked labels does not change the loss
+    labels2 = labels.at[:, :8].set((labels[:, :8] + 5) % V)
+    m2 = nn.cross_entropy(embed, x, labels2, mask=mask, chunk=S)
+    assert np.isclose(float(m), float(m2), rtol=1e-6)

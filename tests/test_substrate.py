@@ -1,0 +1,175 @@
+"""Substrate tests: baselines, partitioner, optimizers, checkpointing,
+data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import ckpt
+from repro.core import build_units
+from repro.data.synthetic import (gaussian_mixture, lm_batch,
+                                  synthetic_images, synthetic_tokens)
+from repro.fl import baselines
+from repro.fl.partition import dirichlet_partition, partition_stats
+from repro.models.cnn import cnn_init, cnn_apply, mlp_init, softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+
+def test_fedpaq_quantization_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    tree = {"a": x}
+    for bits in (2, 4, 8):
+        q = baselines.fedpaq_quantize(tree, jax.random.PRNGKey(1), bits)["a"]
+        levels = 2 ** bits - 1
+        step = 2 * float(jnp.max(jnp.abs(x))) / levels
+        assert float(jnp.max(jnp.abs(q - x))) <= step + 1e-5
+    assert baselines.fedpaq_comm_ratio(8) == 0.25
+
+
+def test_fedpaq_stochastic_unbiased():
+    x = {"a": jnp.full((2000,), 0.3)}
+    qs = [baselines.fedpaq_quantize(x, jax.random.PRNGKey(i), 2)["a"].mean()
+          for i in range(20)]
+    assert abs(float(np.mean(qs)) - 0.3) < 0.02
+
+
+def test_lbgm_reuses_collinear_updates():
+    params = mlp_init(jax.random.PRNGKey(0))
+    um = build_units(params, "module")
+    state = baselines.lbgm_init(params, um)
+    g = jax.tree.map(jnp.ones_like, params)
+    # round 1: anchors empty -> everything sent in full
+    applied, state, sent = baselines.lbgm_round(state, um, g)
+    assert bool(jnp.all(sent))
+    # round 2: identical direction, half magnitude -> nothing sent in full
+    g2 = jax.tree.map(lambda a: 0.5 * a, g)
+    applied2, state2, sent2 = baselines.lbgm_round(state, um, g2)
+    assert not bool(jnp.any(sent2))
+    for a, e in zip(jax.tree.leaves(applied2), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(e), atol=1e-5)
+
+
+def test_magnitude_prune_fraction():
+    x = {"a": jax.random.normal(jax.random.PRNGKey(0), (1000,))}
+    pruned = baselines.magnitude_prune(x, 0.1)["a"]
+    nz = int(jnp.sum(pruned != 0))
+    assert 90 <= nz <= 110
+
+
+def test_dropout_avg_expectation():
+    x = {"a": jnp.ones((5000,))}
+    d = baselines.dropout_avg(x, jax.random.PRNGKey(0), fdr=0.5)["a"]
+    assert abs(float(d.mean()) - 1.0) < 0.05   # inverse-scaled
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+
+
+def test_dirichlet_partition_covers_all():
+    _, y = gaussian_mixture(2000, n_classes=10, d=8, seed=0)
+    parts = dirichlet_partition(y, 16, alpha=0.5, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 2000
+    assert len(np.unique(allidx)) == 2000
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    _, y = gaussian_mixture(4000, n_classes=10, d=8, seed=0)
+    s_iid = partition_stats(dirichlet_partition(y, 16, 100.0, seed=1), y)
+    s_noniid = partition_stats(dirichlet_partition(y, 16, 0.1, seed=1), y)
+    assert s_noniid["mean_label_entropy"] < s_iid["mean_label_entropy"]
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_momentum_closed_form():
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([1.0])}
+    st_ = optim.sgd_init(p)
+    p1, st_ = optim.sgd_update(p, g, st_, lr=0.1, momentum=0.9)
+    p2, st_ = optim.sgd_update(p1, g, st_, lr=0.1, momentum=0.9)
+    # m1 = 1; p1 = 1 - .1 ; m2 = 1.9; p2 = p1 - .19
+    assert np.isclose(float(p1["w"][0]), 0.9)
+    assert np.isclose(float(p2["w"][0]), 0.71)
+
+
+def test_adam_step_direction():
+    p = {"w": jnp.asarray([0.0])}
+    g = {"w": jnp.asarray([2.0])}
+    st_ = optim.adam_init(p)
+    p1, st_ = optim.adam_update(p, g, st_, lr=0.01)
+    assert float(p1["w"][0]) < 0  # moves against gradient
+    assert np.isclose(float(p1["w"][0]), -0.01, rtol=1e-3)  # ~lr for step 1
+
+
+@given(st.integers(0, 400))
+@settings(deadline=None, max_examples=20)
+def test_step_decay(r):
+    lr = optim.step_decay(0.2, jnp.asarray(r), (100, 150))
+    expect = 0.2 * (0.1 if r >= 100 else 1.0) * (0.1 if r >= 150 else 1.0)
+    assert np.isclose(float(lr), expect, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = cnn_init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, params, step=7, extra={"note": "test"})
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored, meta = ckpt.restore(path, like)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# data + CNN forward
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_images_learnable_shapes():
+    x, y = synthetic_images(64, n_classes=62)
+    assert x.shape == (64, 28, 28, 1)
+    params = cnn_init(jax.random.PRNGKey(0))
+    logits = cnn_apply(params, jnp.asarray(x))
+    assert logits.shape == (64, 62)
+    loss = softmax_xent(logits, jnp.asarray(y))
+    assert np.isfinite(float(loss))
+
+
+def test_synthetic_tokens_classes_distinguishable():
+    d = synthetic_tokens(200, seq_len=32, vocab=256, n_classes=4, seed=0)
+    toks, labels = d["tokens"], d["labels"]
+    band = 256 // 4
+    # tokens should fall in the label's band well above chance
+    frac = np.mean((toks // band) == labels[:, None])
+    assert frac > 0.5
+    lm = lm_batch(toks)
+    assert lm["tokens"].shape == (200, 31)
+    np.testing.assert_array_equal(lm["labels"], toks[:, 1:])
+
+
+def test_gaussian_mixture_train_test_share_task():
+    xtr, ytr = gaussian_mixture(500, n_classes=5, d=16, seed=0)
+    xte, yte = gaussian_mixture(500, n_classes=5, d=16, seed=9)
+    # nearest-class-mean classifier trained on train labels works on test
+    means = np.stack([xtr[ytr == c].mean(0) for c in range(5)])
+    pred = np.argmin(((xte[:, None] - means[None]) ** 2).sum(-1), axis=1)
+    assert (pred == yte).mean() > 0.9
