@@ -17,7 +17,7 @@ from benchmarks import (fig1_motivation, fig3_layer_counts, fig4_curves,
                         table2_comparative, table3_harmonization,
                         table4_selection, table5_drop_vs_recycle,
                         table9_delta_sensitivity, table13_alpha,
-                        table15_clients)
+                        table15_clients, time_to_accuracy)
 from benchmarks.common import emit
 
 MODULES = {
@@ -34,6 +34,7 @@ MODULES = {
     "fig4": fig4_curves,
     "roofline": roofline,
     "kernels": kernels_bench,
+    "tta": time_to_accuracy,
 }
 
 

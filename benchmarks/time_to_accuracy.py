@@ -1,0 +1,70 @@
+"""Time-to-accuracy under heterogeneous clients (the repro.sim payoff).
+
+For each heterogeneity scenario x algorithm, runs the event-driven
+simulator and reports the SIMULATED wall-clock seconds to reach the
+target accuracy — the systems-level claim the byte ratios of Table 2
+only imply: recycled units skip the uplink, so under thin mobile links
+FedLUAR's rounds close faster and time-to-accuracy drops.
+
+Bandwidths are rescaled to the benchmark model's size (a full mobile
+upload = ~2 simulated seconds) so the tiny CPU-scale models exercise the
+same upload-dominated regime as the paper-scale workloads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.configs.base import get_scenario
+from repro.core import LuarConfig
+from repro.core.units import build_units
+from repro.fl.client import ClientConfig
+from repro.fl.rounds import FLConfig
+from repro.sim import SimConfig, run_sim, time_to_target
+
+from benchmarks.common import Task, make_task, timed
+
+
+def scaled_scenario(name: str, model_bytes: float):
+    """Rescale a named scenario so the mobile mode is upload-dominated
+    for a model of ``model_bytes``: full upload ~2 s, download ~0.25 s,
+    local compute ~0.3 s."""
+    sc = get_scenario(name)
+    return sc.replace(up_bw=model_bytes / 2.0, down_bw=model_bytes * 4.0,
+                      step_time=0.06)
+
+
+ALGOS: List[Tuple[str, Dict]] = [
+    ("fedavg", dict()),
+    ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf"))),
+    ("fedpaq", dict(fedpaq_bits=8)),
+    ("fedluar_paq", dict(luar=LuarConfig(delta=2, granularity="leaf"),
+                         fedpaq_bits=8)),
+]
+
+
+def rows(quick: bool = True):
+    task: Task = make_task("mixture" if quick else "femnist")
+    rounds = 30 if quick else 60
+    target = 0.9 if quick else 0.7
+    um = build_units(task.params, "leaf")
+    model_bytes = float(sum(um.unit_bytes))
+
+    out = []
+    for scen in ("uniform", "lognormal", "bimodal"):
+        sc = scaled_scenario(scen, model_bytes)
+        for algo, kw in ALGOS:
+            cfg = FLConfig(n_clients=len(task.parts), n_active=8, tau=5,
+                           batch_size=16, rounds=rounds,
+                           client=ClientConfig(lr=0.05), eval_every=2, **kw)
+            res, secs = timed(lambda: run_sim(
+                task.loss_fn, task.params, task.data, task.parts, cfg,
+                SimConfig(scenario=sc), task.eval_fn))
+            t_hit = time_to_target(res, "acc", target)
+            out.append((f"tta_{scen}_{algo}", secs, {
+                "t_target_s": round(t_hit, 2) if math.isfinite(t_hit) else "inf",
+                "sim_time_s": round(res.sim_time, 2),
+                "acc": round(res.history[-1]["acc"], 3),
+                "comm": round(res.comm_ratio, 3),
+            }))
+    return out

@@ -1,0 +1,99 @@
+"""Heterogeneous/async federated learning with the event-driven simulator.
+
+Byte counts only matter if they buy wall-clock time.  This example runs
+FedAvg, FedLUAR and FedPAQ through ``repro.sim`` under the bimodal
+"mobile vs datacenter" population — 80% of clients sit behind a thin
+uplink, so the round barrier waits on mobile uploads — and reports the
+SIMULATED seconds each method needs to reach the target loss.  FedLUAR's
+recycle mask removes ~1/3 of the payload from every uplink, which under
+this profile turns directly into faster rounds.  A FedBuff-style
+buffered-async pass shows the same model trained without any barrier.
+
+  PYTHONPATH=src python examples/async_hetero.py       (CPU, <2 min)
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_scenario
+from repro.core import LuarConfig
+from repro.core.units import build_units
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import FLConfig
+from repro.models.cnn import mlp_init, mlp_apply, softmax_xent
+from repro.sim import SimConfig, describe, run_sim, sample_resources, time_to_target
+
+# 1. non-IID federated task (as in quickstart.py)
+x, y = gaussian_mixture(4000, n_classes=10, d=32, seed=0)
+xt, yt = gaussian_mixture(1000, n_classes=10, d=32, seed=1)
+parts = dirichlet_partition(y, n_clients=32, alpha=0.1)
+params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+loss_fn = lambda p, b: softmax_xent(mlp_apply(p, b["x"]), b["y"])
+xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+
+
+def eval_fn(p):
+    return {"loss": float(softmax_xent(mlp_apply(p, xt_j), yt_j)),
+            "acc": float(jnp.mean(jnp.argmax(mlp_apply(p, xt_j), -1) == yt_j))}
+
+
+# 2. the bimodal population, with bandwidths scaled to this model's size
+#    so the mobile uplink is the bottleneck (full upload ~2 sim-seconds)
+um = build_units(params, "leaf")
+model_bytes = float(sum(um.unit_bytes))
+scenario = get_scenario("bimodal").replace(
+    up_bw=model_bytes / 2.0, down_bw=model_bytes * 4.0, step_time=0.06)
+print("bimodal population:", describe(sample_resources(scenario, 32)))
+
+TARGET_LOSS = 0.35
+ALGOS = [
+    ("fedavg", dict()),
+    ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf"))),
+    ("fedpaq", dict(fedpaq_bits=8)),
+]
+
+
+def fl_cfg(**kw):
+    return FLConfig(n_clients=32, n_active=8, tau=5, rounds=40,
+                    client=ClientConfig(lr=0.05), eval_every=2, **kw)
+
+
+# 3. synchronous-with-deadline rounds under the bimodal profile
+print(f"\nsync rounds, bimodal profile (target loss {TARGET_LOSS}):")
+print(f"{'algo':<10} {'t_target(sim s)':>16} {'total(sim s)':>13} "
+      f"{'final acc':>10} {'comm vs fedavg':>15}")
+t_fedavg = None
+times = {}
+for name, kw in ALGOS:
+    res = run_sim(loss_fn, params, {"x": x, "y": y}, parts, fl_cfg(**kw),
+                  SimConfig(scenario=scenario), eval_fn)
+    t_hit = time_to_target(res, "loss", TARGET_LOSS, mode="min")
+    times[name] = t_hit
+    t_str = f"{t_hit:.1f}" if math.isfinite(t_hit) else "never"
+    print(f"{name:<10} {t_str:>16} {res.sim_time:>13.1f} "
+          f"{res.history[-1]['acc']:>10.3f} {res.comm_ratio:>15.2f}")
+
+if math.isfinite(times["fedavg"]) and math.isfinite(times["fedluar"]):
+    speedup = times["fedavg"] / times["fedluar"]
+    print(f"\nFedLUAR reaches loss {TARGET_LOSS} {speedup:.2f}x faster than "
+          "FedAvg in simulated wall-clock (recycled units skip the thin "
+          "mobile uplink).")
+else:
+    print(f"\nWARNING: a method never reached loss {TARGET_LOSS}; "
+          f"no speedup claim (fedavg={times['fedavg']}, "
+          f"fedluar={times['fedluar']}).")
+
+# 4. the same population without a round barrier: FedBuff buffered async
+print("\nfedbuff buffered-async (buffer=4, staleness discount 1/sqrt(1+tau)):")
+for name, kw in ALGOS[:2]:
+    res = run_sim(loss_fn, params, {"x": x, "y": y}, parts, fl_cfg(**kw),
+                  SimConfig(scenario=scenario, mode="fedbuff", buffer_size=4,
+                            concurrency=8), eval_fn)
+    t_hit = time_to_target(res, "loss", TARGET_LOSS, mode="min")
+    t_str = f"{t_hit:.1f}" if math.isfinite(t_hit) else "never"
+    print(f"{name:<10} t_target={t_str:>8} sim s   total={res.sim_time:.1f} "
+          f"sim s   acc={res.history[-1]['acc']:.3f} "
+          f"updates={res.n_received}")

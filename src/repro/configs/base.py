@@ -251,6 +251,64 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Federated-systems heterogeneity scenarios (repro.sim)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimScenario:
+    """Population-level distribution of client compute/bandwidth resources.
+
+    ``repro.sim.profiles.sample_resources`` draws one ``ClientResources``
+    per client from this spec.  Means are per-client EXPECTED values; the
+    ``kind`` decides how individual clients scatter around them:
+
+      uniform   — every client identical (heterogeneity disabled; the
+                  regime where the event simulator must reproduce the
+                  synchronous ``fl/rounds.py`` trajectory bit-for-bit)
+      lognormal — multiplicative scatter with spread ``sigma`` on compute
+                  and both links (WAN-style long tail)
+      bimodal   — "mobile vs datacenter": a ``fast_fraction`` of clients
+                  gets ``fast_speedup``x compute and ``fast_bw_scale``x
+                  bandwidth; the rest are the slow mobile mode
+    """
+    name: str = "uniform"
+    kind: str = "uniform"            # uniform | lognormal | bimodal
+    step_time: float = 0.02          # mean seconds per local SGD step
+    up_bw: float = 1.0e6             # mean uplink bytes/s (mobile-grade)
+    down_bw: float = 8.0e6           # mean downlink bytes/s (asymmetric link)
+    sigma: float = 0.5               # lognormal log-space spread
+    fast_fraction: float = 0.2       # bimodal: datacenter share
+    fast_speedup: float = 20.0       # bimodal: compute multiple
+    fast_bw_scale: float = 50.0      # bimodal: bandwidth multiple
+    dropout: float = 0.0             # per-dispatch client-vanish probability
+
+    def replace(self, **kw) -> "SimScenario":
+        return dataclasses.replace(self, **kw)
+
+
+SIM_SCENARIOS: Dict[str, SimScenario] = {
+    "uniform": SimScenario("uniform", "uniform"),
+    "lognormal": SimScenario("lognormal", "lognormal", sigma=0.6),
+    "bimodal": SimScenario("bimodal", "bimodal", step_time=0.04,
+                           up_bw=4.0e5, down_bw=6.0e6),
+    # bimodal + flaky mobile devices (straggler/dropout stress)
+    "bimodal_flaky": SimScenario("bimodal_flaky", "bimodal", step_time=0.04,
+                                 up_bw=4.0e5, down_bw=6.0e6, dropout=0.1),
+}
+
+
+def get_scenario(name_or_spec) -> SimScenario:
+    if isinstance(name_or_spec, SimScenario):
+        return name_or_spec
+    try:
+        return SIM_SCENARIOS[name_or_spec]
+    except KeyError:
+        raise KeyError(f"unknown sim scenario {name_or_spec!r}; "
+                       f"have {sorted(SIM_SCENARIOS)}") from None
+
+
 def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
     """ShapeDtypeStruct tree for the decode cache of ``cfg``."""
     L, K, hd = cfg.n_layers, cfg.kv_heads, cfg.hd

@@ -1,14 +1,28 @@
 """FedLUAR core: the paper's contribution as a composable JAX module."""
 from repro.core.comm import (  # noqa: F401
+    ClientResources,
     CommStats,
     comm_init,
     comm_ratio,
     comm_update,
+    compute_time,
+    download_time,
+    masked_upload_bytes,
+    payload_scale,
+    round_trip_time,
     round_upload_bytes,
     server_memory_bytes,
+    upload_time,
 )
 from repro.core.metric import recycle_probs, s_metric  # noqa: F401
-from repro.core.recycle import LuarConfig, LuarState, luar_init, luar_round  # noqa: F401
+from repro.core.recycle import (  # noqa: F401
+    LuarConfig,
+    LuarState,
+    luar_init,
+    luar_round,
+    staleness_discount,
+    staleness_weighted_merge,
+)
 from repro.core.selection import SCHEMES, gumbel_topk_mask, select_recycle_set  # noqa: F401
 from repro.core.units import UnitMap, build_units, n_units, unit_sq_norms  # noqa: F401
 from repro.core.luar import FedLUAR  # noqa: F401

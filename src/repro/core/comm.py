@@ -1,7 +1,20 @@
-"""Communication/memory accounting (Table 1, Table 2 'Comm' columns).
+"""Communication/memory accounting (Table 1, Table 2 'Comm' columns)
+plus the per-client wall-clock cost model used by ``repro.sim``.
 
 Upload cost of a round = bytes of all units NOT in R_t, times active
 clients.  All ratios are relative to FedAvg (delta=0) as in the paper.
+
+Cumulative byte accounting is HOST-side (Python float64/int): a float32
+device scalar silently loses integer precision past ~16M bytes, which a
+single transformer round exceeds.  ``round_upload_bytes`` stays a
+device-side helper for jitted code paths.
+
+The wall-clock model prices one client round trip as
+
+    download(model) + tau * step_time + upload(~R_t payload)
+
+so the LUAR recycle mask directly shrinks the modeled upload time — the
+systems-level payoff the event-driven simulator measures.
 """
 from __future__ import annotations
 
@@ -15,24 +28,45 @@ from repro.core.units import UnitMap
 
 
 class CommStats(NamedTuple):
-    bytes_uploaded: jax.Array       # cumulative client->server bytes
-    rounds: jax.Array
+    bytes_uploaded: float           # cumulative client->server bytes (host f64)
+    rounds: int
 
 
 def comm_init() -> CommStats:
-    return CommStats(jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
-                               else jnp.float32), jnp.zeros((), jnp.int32))
+    return CommStats(0.0, 0)
 
 
 def round_upload_bytes(um: UnitMap, mask: jax.Array, n_active: int) -> jax.Array:
-    """Bytes uploaded this round given recycle mask R_t."""
+    """Bytes uploaded this round given recycle mask R_t (device-side)."""
     sizes = jnp.asarray(um.unit_bytes, jnp.float32)
     return jnp.sum(jnp.where(mask, 0.0, sizes)) * n_active
 
 
-def comm_update(stats: CommStats, um: UnitMap, mask: jax.Array,
+def masked_upload_bytes(um: UnitMap, mask: Any, scale: float = 1.0) -> float:
+    """Host-side payload bytes of ONE client upload under recycle mask R_t.
+
+    ``scale`` folds in orthogonal compressors (FedPAQ bits/32, pruning,
+    dropout) exactly as the round engine accounts them."""
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    mask = np.asarray(mask, bool)
+    return float(sizes[~mask].sum()) * scale
+
+
+def payload_scale(fedpaq_bits: int = 0, prune_keep: float = 0.0,
+                  dropout_rate: float = 0.0) -> float:
+    """Relative upload size of the compressor stack (1.0 = dense fp32)."""
+    scale = (fedpaq_bits / 32.0) if fedpaq_bits else 1.0
+    if prune_keep:
+        # sparse upload: values + indices ~= 2 * keep_fraction
+        scale *= min(2.0 * prune_keep, 1.0)
+    if dropout_rate:
+        scale *= (1.0 - dropout_rate)
+    return scale
+
+
+def comm_update(stats: CommStats, um: UnitMap, mask: Any,
                 n_active: int) -> CommStats:
-    return CommStats(stats.bytes_uploaded + round_upload_bytes(um, mask, n_active),
+    return CommStats(stats.bytes_uploaded + masked_upload_bytes(um, mask) * n_active,
                      stats.rounds + 1)
 
 
@@ -54,3 +88,46 @@ def server_memory_bytes(um: UnitMap, delta_bytes: int, n_active: int) -> dict:
 
 def expected_delta_bytes(um: UnitMap, mask: np.ndarray) -> int:
     return int(sum(b for b, m in zip(um.unit_bytes, mask) if m))
+
+
+# ---------------------------------------------------------------------------
+# Per-client wall-clock cost model (repro.sim)
+# ---------------------------------------------------------------------------
+
+
+class ClientResources(NamedTuple):
+    """One simulated device: compute speed and link bandwidths.
+
+    step_time : seconds per local SGD step
+    up_bw     : uplink bytes/second
+    down_bw   : downlink bytes/second
+    dropout   : probability the device vanishes mid-round
+    """
+    step_time: float
+    up_bw: float
+    down_bw: float
+    dropout: float = 0.0
+
+
+def download_time(um: UnitMap, res: ClientResources) -> float:
+    """Broadcast is always the full model: recycled units still change on
+    the server (the recycled update is applied), so clients cannot skip
+    them on the way down."""
+    return float(sum(um.unit_bytes)) / res.down_bw
+
+
+def compute_time(tau: int, res: ClientResources) -> float:
+    return tau * res.step_time
+
+
+def upload_time(um: UnitMap, mask: Any, res: ClientResources,
+                scale: float = 1.0) -> float:
+    """Mask-aware: units in R_t are never serialized to the uplink."""
+    return masked_upload_bytes(um, mask, scale) / res.up_bw
+
+
+def round_trip_time(um: UnitMap, mask: Any, res: ClientResources, tau: int,
+                    scale: float = 1.0) -> float:
+    """Dispatch-to-arrival latency of one client round."""
+    return (download_time(um, res) + compute_time(tau, res)
+            + upload_time(um, mask, res, scale))

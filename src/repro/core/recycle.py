@@ -104,3 +104,33 @@ def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
         key=key,
     )
     return applied, new_state
+
+
+# ---------------------------------------------------------------------------
+# Staleness-aware aggregation (buffered-async / FedBuff path, repro.sim)
+# ---------------------------------------------------------------------------
+
+
+def staleness_discount(staleness: jax.Array, alpha: float = 0.5) -> jax.Array:
+    """FedBuff-style polynomial discount w = (1 + tau)^-alpha for an update
+    computed ``tau`` server versions ago (alpha=0.5 -> 1/sqrt(1+tau))."""
+    return (1.0 + staleness.astype(jnp.float32)) ** (-alpha)
+
+
+def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
+                             alpha: float = 0.5) -> Any:
+    """Merge a buffer of K client updates into one pseudo-update.
+
+    stacked_updates: pytree whose leaves have leading axis K (one slice per
+    buffered client delta); staleness: (K,) int server-version lags.
+    Returns the discount-weighted mean — the ``u_t`` fed to ``luar_round``
+    when the server aggregates a buffer instead of a synchronous cohort.
+    """
+    w = staleness_discount(staleness, alpha)
+    w = w / jnp.sum(w)
+
+    def merge(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf * wb, axis=0)
+
+    return jax.tree.map(merge, stacked_updates)

@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CommStats, LuarConfig, comm_init, comm_ratio,
-                        comm_update, luar_init, luar_round)
+from repro.core import (LuarConfig, luar_init, luar_round, payload_scale)
 from repro.fl import baselines
 from repro.fl.client import ClientConfig, batched_local_updates
 from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point, mutate
@@ -70,6 +69,58 @@ def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
     return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
 
 
+def apply_compressors(update: Params, qkey, cfg: FLConfig) -> Params:
+    """The orthogonal upload-compressor stack (FedPAQ/PruneFL/DropoutAvg),
+    applied identically on the synchronous and buffered-async paths —
+    ``payload_scale`` prices exactly this sequence."""
+    if cfg.fedpaq_bits:
+        update = baselines.fedpaq_quantize(update, qkey, cfg.fedpaq_bits)
+    if cfg.prune_keep:
+        update = baselines.magnitude_prune(update, cfg.prune_keep)
+    if cfg.dropout_rate:
+        update = baselines.dropout_avg(update, qkey, cfg.dropout_rate)
+    return update
+
+
+def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
+                    cfg: FLConfig, um) -> Callable:
+    """Build the jitted synchronous round body (Alg. 2 lines 5-12).
+
+    Shared by ``run_fl`` and by ``repro.sim``'s deadline engine so the
+    event-driven simulator reproduces this trajectory bit-for-bit when
+    heterogeneity is disabled: both paths run the SAME traced computation
+    on the same cohort batches."""
+
+    @jax.jit
+    def round_step(params, luar_state, server_state, lbgm_state, batches, qkey):
+        start = broadcast_point(params, server_state, cfg.server)
+        deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
+        fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        fresh = apply_compressors(fresh, qkey, cfg)
+        lbgm_sent = None
+        if cfg.lbgm_threshold:
+            fresh, lbgm_state, lbgm_sent = baselines.lbgm_round(
+                lbgm_state, um, fresh, cfg.lbgm_threshold)
+        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+        params, server_state = apply_update(params, applied, server_state, cfg.server)
+        return params, luar_state, server_state, lbgm_state, lbgm_sent
+
+    return round_step
+
+
+def client_payload_bytes(sizes: np.ndarray, mask: np.ndarray, cfg: FLConfig,
+                         lbgm_sent: Optional[np.ndarray] = None) -> float:
+    """ONE client's upload bytes this round: units outside R_t, shrunk by
+    the orthogonal compressor stack (host-side float64)."""
+    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
+    round_bytes = sizes[~mask].sum() * scale
+    if lbgm_sent is not None:
+        sent = np.asarray(lbgm_sent)
+        round_bytes = (sizes[(~mask) & sent].sum() * scale
+                       + 4.0 * ((~mask) & ~sent).sum())
+    return float(round_bytes)
+
+
 def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
            init_params: Params,
            data: Dict[str, np.ndarray],
@@ -83,27 +134,8 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     params = init_params
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
-    comm = comm_init()
     lbgm_state = baselines.lbgm_init(params, um) if cfg.lbgm_threshold else None
-
-    @jax.jit
-    def round_step(params, luar_state, server_state, lbgm_state, batches, qkey):
-        start = broadcast_point(params, server_state, cfg.server)
-        deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
-        fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        if cfg.fedpaq_bits:
-            fresh = baselines.fedpaq_quantize(fresh, qkey, cfg.fedpaq_bits)
-        if cfg.prune_keep:
-            fresh = baselines.magnitude_prune(fresh, cfg.prune_keep)
-        if cfg.dropout_rate:
-            fresh = baselines.dropout_avg(fresh, qkey, cfg.dropout_rate)
-        lbgm_sent = None
-        if cfg.lbgm_threshold:
-            fresh, lbgm_state, lbgm_sent = baselines.lbgm_round(
-                lbgm_state, um, fresh, cfg.lbgm_threshold)
-        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
-        params, server_state = apply_update(params, applied, server_state, cfg.server)
-        return params, luar_state, server_state, lbgm_state, lbgm_sent
+    round_step = make_round_step(loss_fn, cfg, um)
 
     result = FLResult()
     sizes = np.asarray(um.unit_bytes, np.float64)
@@ -120,18 +152,8 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
         mask_now = np.asarray(luar_state.mask)
         params, luar_state, server_state, lbgm_state, lbgm_sent = round_step(
             params, luar_state, server_state, lbgm_state, batches, qkey)
-        scale = (cfg.fedpaq_bits / 32.0) if cfg.fedpaq_bits else 1.0
-        if cfg.prune_keep:
-            # sparse upload: values + indices ~= 2 * keep_fraction
-            scale *= min(2.0 * cfg.prune_keep, 1.0)
-        if cfg.dropout_rate:
-            scale *= (1.0 - cfg.dropout_rate)
-        round_bytes = sizes[~mask_now].sum() * scale
-        if lbgm_sent is not None:
-            sent = np.asarray(lbgm_sent)
-            round_bytes = (sizes[(~mask_now) & sent].sum() * scale
-                           + 4.0 * ((~mask_now) & ~sent).sum())
-        uploaded += round_bytes * cfg.n_active
+        uploaded += client_payload_bytes(sizes, mask_now, cfg,
+                                         lbgm_sent) * cfg.n_active
 
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1):
             metrics = dict(eval_fn(params))

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams in newer releases; take
+# whichever this jax ships (shared by all kernels in this package)
+_CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _CompilerParams
+
 _LANES = 128
 _ROWS = 8
 
@@ -85,7 +87,7 @@ def luar_agg(delta: jax.Array, x: jax.Array, recycled: jax.Array,
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         scratch_shapes=[pltpu.SMEM((1, 2), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(mask, prep(delta), prep(x), prep(recycled))

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref,
             y_ref, state_ref, s_scr, *, T: int, nc: int):
@@ -100,7 +102,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
             jax.ShapeDtypeStruct((B * nh, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xf, dtf, Af, Df, Bm, Cm)

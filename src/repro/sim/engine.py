@@ -1,0 +1,339 @@
+"""Event-driven federated simulator with a wall-clock cost model.
+
+Two server modes over the same virtual-clock event queue:
+
+  sync    — synchronous-with-deadline (Alg. 2 under systems realism):
+            the server over-provisions a cohort, every member's round
+            trip is priced by the cost model (download + tau local steps
+            + mask-aware upload), and the round closes at the first of
+            {all arrivals, ``collect`` arrivals, the deadline}.  Late
+            clients are stragglers and their updates are discarded.
+  fedbuff — buffered asynchronous aggregation: clients run continuously
+            against whatever model version they last downloaded; the
+            server merges every ``buffer_size`` arrivals into one
+            staleness-discounted pseudo-update (core/recycle.py) and
+            advances the model version.
+
+Both modes compose with the LUAR core: the recycle set R_t means clients
+skip those units on the uplink, which shrinks modeled upload time — the
+mechanism by which byte savings become wall-clock savings.
+
+Equivalence guarantee (tested): sync mode with the "uniform" scenario,
+``deadline=inf``, no over-provisioning and no dropout replays the exact
+RNG streams of ``fl/rounds.run_fl`` and runs the same jitted round body
+(``make_round_step``), so it reproduces the synchronous trajectory
+bit-for-bit — same seeds, same params.
+
+Numerics vs. timing are decoupled (standard discrete-event style): local
+training executes when an arrival is popped, but the virtual clock only
+moves according to the cost model.  Systems randomness (dropout) draws
+from a dedicated RNG stream so it never perturbs the learning RNG.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_scenario
+from repro.core import (luar_init, luar_round, payload_scale,
+                        round_trip_time, staleness_weighted_merge)
+from repro.core.comm import ClientResources, compute_time, download_time
+from repro.fl import baselines
+from repro.fl.client import local_update
+from repro.fl.rounds import (FLConfig, _stack_client_batches,
+                             apply_compressors, client_payload_bytes,
+                             make_round_step)
+from repro.fl.server import (apply_update, broadcast_point, server_init)
+from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, EventQueue
+from repro.sim.profiles import sample_resources
+
+Params = Any
+
+
+@dataclass
+class SimConfig:
+    scenario: Any = "uniform"        # SimScenario or name in SIM_SCENARIOS
+    mode: str = "sync"               # "sync" | "fedbuff"
+    # sync mode
+    deadline: float = math.inf       # seconds before the round closes
+    overprovision: float = 1.0       # cohort = round(n_active * this)
+    collect: int = 0                 # close after this many arrivals (0 = all)
+    # fedbuff mode
+    buffer_size: int = 8             # K arrivals per aggregation
+    staleness_alpha: float = 0.5     # discount (1+tau)^-alpha
+    concurrency: int = 0             # clients in flight (0 -> n_active)
+    max_sim_time: float = math.inf   # fedbuff stop condition (virtual seconds)
+    sys_seed: int = 0                # systems RNG stream (dropout), separate
+                                     # from the FLConfig data/cohort stream
+
+
+@dataclass
+class SimResult:
+    history: List[Dict[str, float]] = field(default_factory=list)
+    comm_ratio: float = 1.0
+    sim_time: float = 0.0            # virtual seconds at finish
+    rounds_done: int = 0             # aggregations applied (server versions)
+    n_received: int = 0              # client updates accepted by the server
+    n_stragglers: int = 0            # arrived-too-late / past-deadline drops
+    n_dropped: int = 0               # device-vanished dispatches
+    params: Any = None
+    luar_state: Any = None
+    resources: Optional[List[ClientResources]] = None
+
+
+def time_to_target(result: SimResult, metric: str, target: float,
+                   mode: str = "max") -> float:
+    """First virtual time at which ``metric`` crosses ``target`` (inf if
+    never).  mode="max" for accuracy-like, "min" for loss-like metrics."""
+    for h in result.history:
+        v = h.get(metric)
+        if v is None:
+            continue
+        if (mode == "max" and v >= target) or (mode == "min" and v <= target):
+            return h["t_sim"]
+    return math.inf
+
+
+def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
+            init_params: Params,
+            data: Dict[str, np.ndarray],
+            parts: List[np.ndarray],
+            cfg: FLConfig,
+            sim: SimConfig,
+            eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None) -> SimResult:
+    scenario = get_scenario(sim.scenario)
+    resources = sample_resources(scenario, cfg.n_clients, sim.sys_seed)
+    if sim.mode == "sync":
+        return _run_sync(loss_fn, init_params, data, parts, cfg, sim,
+                         resources, eval_fn)
+    if sim.mode == "fedbuff":
+        return _run_fedbuff(loss_fn, init_params, data, parts, cfg, sim,
+                            resources, eval_fn)
+    raise ValueError(f"unknown sim mode {sim.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# synchronous-with-deadline
+# ---------------------------------------------------------------------------
+
+
+def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
+              resources, eval_fn) -> SimResult:
+    # learning-side RNG: IDENTICAL stream structure to run_fl
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k1, k2 = jax.random.split(key, 3)
+    sys_rng = np.random.default_rng(np.random.SeedSequence([sim.sys_seed, 0xE7]))
+
+    params = init_params
+    luar_state, um = luar_init(params, cfg.luar, k1)
+    server_state = server_init(params, cfg.server, k2)
+    lbgm_state = baselines.lbgm_init(params, um) if cfg.lbgm_threshold else None
+    round_step = make_round_step(loss_fn, cfg, um)
+
+    cohort_size = max(1, int(round(cfg.n_active * sim.overprovision)))
+    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    total_bytes = sizes.sum()
+
+    queue = EventQueue()
+    res = SimResult(resources=resources)
+    uploaded = 0.0
+
+    for t in range(cfg.rounds):
+        cohort = rng.choice(cfg.n_clients, size=cohort_size, replace=False)
+        batches = _stack_client_batches(data, parts, cohort, cfg.tau,
+                                        cfg.batch_size, rng)
+        key, qkey = jax.random.split(key)
+        mask_now = np.asarray(luar_state.mask)
+
+        # -- dispatch the cohort; price each member's round trip ----------
+        t0 = queue.now
+        n_scheduled = 0
+        for pos, c in enumerate(cohort):
+            r = resources[c]
+            if r.dropout and sys_rng.random() < r.dropout:
+                # device vanishes after download+compute, before upload
+                queue.push(t0 + download_time(um, r) + compute_time(cfg.tau, r),
+                           DROPOUT, int(c), {"pos": pos})
+                continue
+            queue.push(t0 + round_trip_time(um, mask_now, r, cfg.tau, scale),
+                       ARRIVAL, int(c), {"pos": pos})
+            n_scheduled += 1
+        if math.isfinite(sim.deadline):
+            queue.push(t0 + sim.deadline, DEADLINE)
+        target = min(sim.collect, n_scheduled) if sim.collect else n_scheduled
+
+        # -- drain events until the round closes --------------------------
+        arrived_pos: List[int] = []
+        while queue:
+            ev = queue.pop()
+            if ev.kind == DEADLINE:
+                break
+            if ev.kind == DROPOUT:
+                res.n_dropped += 1
+                continue
+            arrived_pos.append(ev.payload["pos"])
+            if len(arrived_pos) >= target:
+                break
+        res.n_stragglers += n_scheduled - len(arrived_pos)
+        # pending DROPOUT events (device vanished later than the round
+        # closed) still count as dropped, not as stragglers
+        res.n_dropped += sum(1 for ev in queue.clear_pending()
+                             if ev.kind == DROPOUT)
+
+        if not arrived_pos:
+            continue                      # nobody made it; model unchanged
+
+        # -- aggregate the survivors (cohort order, not arrival order, so
+        #    the homogeneous all-arrive case is bitwise run_fl) -----------
+        arrived_pos.sort()
+        if len(arrived_pos) == cohort_size:
+            sub = batches
+        else:
+            # each distinct survivor count is a new leading dim and costs
+            # one XLA compile of round_step; counts concentrate fast under
+            # a fixed deadline, but pad-to-cohort with a weight mask would
+            # be the upgrade if recompiles ever dominate (it would also
+            # forfeit the bitwise-equality path with run_fl, so not now)
+            idx = np.asarray(arrived_pos)
+            sub = {k: v[idx] for k, v in batches.items()}
+        params, luar_state, server_state, lbgm_state, lbgm_sent = round_step(
+            params, luar_state, server_state, lbgm_state, sub, qkey)
+        per_client = client_payload_bytes(sizes, mask_now, cfg, lbgm_sent)
+        uploaded += per_client * len(arrived_pos)
+        res.n_received += len(arrived_pos)
+        res.rounds_done += 1
+
+        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
+                                    or t == cfg.rounds - 1):
+            metrics = dict(eval_fn(params))
+            metrics.update(round=t + 1, t_sim=queue.now,
+                           comm_ratio=uploaded / max(total_bytes * res.n_received, 1.0))
+            res.history.append(metrics)
+
+    res.sim_time = queue.now
+    res.comm_ratio = uploaded / max(total_bytes * res.n_received, 1.0)
+    res.params = params
+    res.luar_state = luar_state
+    return res
+
+
+# ---------------------------------------------------------------------------
+# FedBuff-style buffered async
+# ---------------------------------------------------------------------------
+
+
+def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
+                 sim: SimConfig, resources, eval_fn) -> SimResult:
+    if cfg.lbgm_threshold:
+        raise NotImplementedError("LBGM needs a synchronous anchor; "
+                                  "use sim mode='sync'")
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k1, k2 = jax.random.split(key, 3)
+    sys_rng = np.random.default_rng(np.random.SeedSequence([sim.sys_seed, 0xE7]))
+
+    params = init_params
+    luar_state, um = luar_init(params, cfg.luar, k1)
+    server_state = server_init(params, cfg.server, k2)
+    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    total_bytes = sizes.sum()
+    alpha = sim.staleness_alpha
+
+    client_fn = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.client))
+    compress_fn = jax.jit(lambda delta, qkey: apply_compressors(delta, qkey, cfg))
+
+    @jax.jit
+    def agg_fn(params, luar_state, server_state, stacked, staleness):
+        fresh = staleness_weighted_merge(stacked, staleness, alpha)
+        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+        params, server_state = apply_update(params, applied, server_state,
+                                            cfg.server)
+        return params, luar_state, server_state
+
+    queue = EventQueue()
+    res = SimResult(resources=resources)
+    uploaded = 0.0
+    version = 0
+    jobs: Dict[int, dict] = {}
+    buffer: List[tuple] = []            # (delta, staleness_at_arrival)
+
+    def dispatch(c: int, now: float):
+        r = resources[c]
+        idx = parts[c]
+        sel = rng.choice(idx, size=(cfg.tau, cfg.batch_size), replace=True)
+        batches = {k: jnp.asarray(arr[sel]) for k, arr in data.items()}
+        mask_now = np.asarray(luar_state.mask)
+        jobs[c] = {
+            "start": broadcast_point(params, server_state, cfg.server),
+            "batches": batches,
+            "version": version,
+            "bytes": client_payload_bytes(sizes, mask_now, cfg),
+        }
+        if r.dropout and sys_rng.random() < r.dropout:
+            queue.push(now + download_time(um, r) + compute_time(cfg.tau, r),
+                       DROPOUT, c)
+        else:
+            queue.push(now + round_trip_time(um, mask_now, r, cfg.tau, scale),
+                       ARRIVAL, c)
+
+    concurrency = min(sim.concurrency or cfg.n_active, cfg.n_clients)
+    first = rng.choice(cfg.n_clients, size=concurrency, replace=False)
+    # sorted list of idle client ids, maintained incrementally (O(log n)
+    # insert + O(n) pop, vs rebuilding a sorted set per event)
+    idle = sorted(set(range(cfg.n_clients)) - set(int(c) for c in first))
+    for c in first:
+        dispatch(int(c), 0.0)
+
+    # hard event cap so a pathological population (e.g. dropout ~1) cannot
+    # spin the loop forever when max_sim_time is inf
+    max_events = 100 * (cfg.rounds * sim.buffer_size + concurrency)
+    n_events = 0
+    while version < cfg.rounds and queue and queue.now < sim.max_sim_time:
+        n_events += 1
+        if n_events > max_events:
+            break
+        ev = queue.pop()
+        c = ev.client
+        job = jobs.pop(c)
+        bisect.insort(idle, c)          # the slot's device is idle again
+        if ev.kind == ARRIVAL:
+            key, qkey = jax.random.split(key)
+            delta = compress_fn(client_fn(job["start"], job["batches"]), qkey)
+            buffer.append((delta, version - job["version"]))
+            uploaded += job["bytes"]
+            res.n_received += 1
+            if len(buffer) >= sim.buffer_size:
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *[d for d, _ in buffer])
+                stal = jnp.asarray([s for _, s in buffer], jnp.int32)
+                params, luar_state, server_state = agg_fn(
+                    params, luar_state, server_state, stacked, stal)
+                buffer.clear()
+                version += 1
+                res.rounds_done = version
+                if eval_fn is not None and (version % cfg.eval_every == 0
+                                            or version == cfg.rounds):
+                    metrics = dict(eval_fn(params))
+                    metrics.update(round=version, t_sim=queue.now,
+                                   comm_ratio=uploaded / max(
+                                       total_bytes * res.n_received, 1.0))
+                    res.history.append(metrics)
+        else:
+            res.n_dropped += 1
+        # the slot is free again: hand the next idle client a fresh model
+        dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
+
+    res.sim_time = queue.now
+    res.comm_ratio = uploaded / max(total_bytes * res.n_received, 1.0)
+    res.params = params
+    res.luar_state = luar_state
+    return res

@@ -1,0 +1,63 @@
+"""Virtual-clock discrete-event queue for the federated systems simulator.
+
+Events are (time, seq, kind, client, payload); ``seq`` is a monotonically
+increasing push counter so simultaneous events pop in dispatch (FIFO)
+order — the tie-break that makes homogeneous runs deterministic and lets
+the ideal-regime sync engine reproduce `fl/rounds.py` bit-for-bit (the
+cohort arrives "at once" but still aggregates in cohort order).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+ARRIVAL = "arrival"        # a client finished download+compute+upload
+DEADLINE = "deadline"      # the synchronous round deadline fired
+DROPOUT = "dropout"        # a dispatched client vanished (never uploads)
+
+
+class Event(NamedTuple):
+    time: float
+    seq: int
+    kind: str
+    client: int
+    payload: Dict[str, Any]
+
+
+class EventQueue:
+    """Min-heap on (time, seq).  Pure host-side; no RNG of its own."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+        self.now = 0.0          # advances monotonically on pop
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, kind: str, client: int = -1,
+             payload: Optional[Dict[str, Any]] = None) -> Event:
+        if not math.isfinite(time):
+            raise ValueError(f"event time must be finite, got {time}")
+        if time < self.now:
+            raise ValueError(f"cannot schedule into the past: {time} < {self.now}")
+        ev = Event(float(time), self._seq, kind, client, payload or {})
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        ev = heapq.heappop(self._heap)
+        self.now = ev.time
+        return ev
+
+    def peek_time(self) -> float:
+        return self._heap[0].time if self._heap else math.inf
+
+    def clear_pending(self) -> list:
+        """Drop and return every queued event (sync engine: close out a
+        round; the caller still needs the kinds for accounting)."""
+        events = list(self._heap)
+        self._heap.clear()
+        return events

@@ -1,0 +1,59 @@
+"""Sampling per-client resources from a population heterogeneity scenario.
+
+A ``SimScenario`` (configs/base.py) describes the population; this module
+draws one ``ClientResources`` per client.  Sampling is seeded and uses a
+dedicated RNG stream so the systems side never perturbs the data/cohort
+RNG stream of the learning algorithm (required for the ideal-regime
+equivalence with ``fl/rounds.py``).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.configs.base import SimScenario, get_scenario
+from repro.core.comm import ClientResources
+
+
+def sample_resources(scenario, n_clients: int, seed: int = 0) -> List[ClientResources]:
+    sc: SimScenario = get_scenario(scenario)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x51D]))
+    if sc.kind == "uniform":
+        return [ClientResources(sc.step_time, sc.up_bw, sc.down_bw, sc.dropout)
+                for _ in range(n_clients)]
+    if sc.kind == "lognormal":
+        # multiplicative scatter with mean 1 (mu = -sigma^2/2)
+        mu = -0.5 * sc.sigma ** 2
+        slow = rng.lognormal(mu, sc.sigma, n_clients)        # compute slowdown
+        link = rng.lognormal(mu, sc.sigma, n_clients)        # shared link quality
+        return [ClientResources(sc.step_time * s, sc.up_bw * l,
+                                sc.down_bw * l, sc.dropout)
+                for s, l in zip(slow, link)]
+    if sc.kind == "bimodal":
+        fast = rng.random(n_clients) < sc.fast_fraction
+        jitter = rng.lognormal(0.0, 0.1, n_clients)          # mild within-mode scatter
+        out = []
+        for f, j in zip(fast, jitter):
+            if f:   # datacenter: fast compute, fat symmetric pipes, reliable
+                out.append(ClientResources(sc.step_time / sc.fast_speedup * j,
+                                           sc.up_bw * sc.fast_bw_scale,
+                                           sc.down_bw * sc.fast_bw_scale, 0.0))
+            else:   # mobile: slow compute, thin uplink, flaky
+                out.append(ClientResources(sc.step_time * j, sc.up_bw,
+                                           sc.down_bw, sc.dropout))
+        return out
+    raise ValueError(f"unknown scenario kind {sc.kind!r}")
+
+
+def describe(resources: Sequence[ClientResources]) -> dict:
+    """Population summary (for logs/benchmarks)."""
+    st = np.array([r.step_time for r in resources])
+    up = np.array([r.up_bw for r in resources])
+    return {
+        "n": len(resources),
+        "step_time_p50": float(np.median(st)),
+        "step_time_p95": float(np.percentile(st, 95)),
+        "up_bw_p50": float(np.median(up)),
+        "up_bw_p05": float(np.percentile(up, 5)),
+    }

@@ -1,0 +1,104 @@
+"""Shared test config.
+
+1. Puts ``src/`` on sys.path so ``pytest`` works without PYTHONPATH=src
+   (the tier-1 command still sets it; this is a fallback).
+2. Installs a minimal ``hypothesis`` stand-in when the real package is
+   absent so the four property-test modules still collect AND run: the
+   stub's ``@given`` re-runs the test body over a seeded pseudo-random
+   sample of the strategy space (a bounded fuzz, not full shrinking).
+   With real hypothesis installed the stub never activates.
+"""
+from __future__ import annotations
+
+import os
+import random
+import sys
+import types
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _STUB_MAX_EXAMPLES = int(os.environ.get("STUB_HYPOTHESIS_MAX_EXAMPLES", "20"))
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _settings(**kw):
+        def deco(fn):
+            fn._stub_settings = kw
+            return fn
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            import functools
+            import inspect
+
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            drawn_names = [p.name for p in params[len(params) - len(strategies):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(fn, "_stub_settings", {})
+                n = min(cfg.get("max_examples", _STUB_MAX_EXAMPLES),
+                        _STUB_MAX_EXAMPLES)
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    # bind drawn values to the rightmost parameters BY NAME
+                    # so leading fixture args (passed by pytest as kwargs)
+                    # don't collide with them
+                    drawn = {name: s.example(rng)
+                             for name, s in zip(drawn_names, strategies)}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn (rightmost) parameters from pytest's fixture
+            # resolution; remaining leading params stay visible as fixtures
+            kept = params[:len(params) - len(strategies)]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            wrapper._stub_settings = getattr(fn, "_stub_settings", {})
+            return wrapper
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _given
+    _mod.settings = _settings
+    _mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+    _mod.strategies = _st
+    _mod.__stub__ = True
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st

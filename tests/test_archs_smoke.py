@@ -133,6 +133,11 @@ def test_vlm_loss_masks_vision_slots(models):
 def test_mixtral_swa_window_active(models):
     """Tokens beyond the sliding window cannot influence the last logit."""
     cfg, m, params = models["mixtral-8x7b"]
+    # capacity-based MoE dispatch is sequence-global (a token can displace
+    # a later token past expert capacity); use a no-drop capacity so the
+    # only cross-token path is attention
+    cfg = cfg.replace(moe_capacity_factor=float(cfg.n_experts))
+    m = build(cfg)
     assert cfg.window == 16  # reduced SWA
     seq = 3 * cfg.window
     batch = {"tokens": jax.random.randint(KEY, (1, seq), 0, cfg.vocab_size)}

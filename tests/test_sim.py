@@ -1,0 +1,278 @@
+"""repro.sim — event queue, heterogeneity profiles, cost model, and the
+two server modes.  The load-bearing check is the equivalence path: the
+event-driven engine with heterogeneity disabled and deadline=inf must
+reproduce the synchronous ``fl/rounds.py`` trajectory BIT-FOR-BIT."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SIM_SCENARIOS, get_scenario
+from repro.core import (CommStats, LuarConfig, comm_init, comm_update,
+                        staleness_discount, staleness_weighted_merge)
+from repro.core.comm import ClientResources, round_trip_time, upload_time
+from repro.core.units import build_units
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import FLConfig, run_fl
+from repro.models.cnn import mlp_init, mlp_apply, softmax_xent
+from repro.sim import (EventQueue, SimConfig, run_sim, sample_resources,
+                       time_to_target)
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y = gaussian_mixture(1200, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 16, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    def eval_fn(p):
+        return {"acc": float(jnp.mean(jnp.argmax(mlp_apply(p, xj), -1) == yj))}
+
+    return dict(loss_fn=loss_fn, params=params, data={"x": x, "y": y},
+                parts=parts, eval_fn=eval_fn)
+
+
+def _cfg(**kw):
+    kw.setdefault("client", ClientConfig(lr=0.05))
+    kw.setdefault("rounds", 8)
+    kw.setdefault("eval_every", 4)
+    return FLConfig(n_clients=16, n_active=6, tau=3, batch_size=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+
+def test_event_queue_orders_by_time_then_fifo():
+    q = EventQueue()
+    q.push(2.0, "arrival", 0)
+    q.push(1.0, "arrival", 1)
+    q.push(1.0, "arrival", 2)        # same time: FIFO by push order
+    order = [(q.pop().client, q.now) for _ in range(3)]
+    assert order == [(1, 1.0), (2, 1.0), (0, 2.0)]
+
+
+def test_event_queue_rejects_past_and_nonfinite():
+    q = EventQueue()
+    q.push(1.0, "arrival", 0)
+    q.pop()
+    with pytest.raises(ValueError):
+        q.push(0.5, "arrival", 1)
+    with pytest.raises(ValueError):
+        q.push(math.inf, "deadline")
+
+
+def test_sim_run_is_seed_deterministic(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    sim = SimConfig(scenario="bimodal", deadline=60.0, sys_seed=3)
+    a = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                cfg, sim, task["eval_fn"])
+    b = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                cfg, sim, task["eval_fn"])
+    assert a.sim_time == b.sim_time
+    assert a.history == b.history
+    for p, q_ in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert np.array_equal(np.asarray(p), np.asarray(q_))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity profiles + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_profiles_deterministic_and_shaped():
+    for name in SIM_SCENARIOS:
+        r1 = sample_resources(name, 32, seed=7)
+        r2 = sample_resources(name, 32, seed=7)
+        assert r1 == r2 and len(r1) == 32
+    uni = sample_resources("uniform", 8)
+    assert len(set(uni)) == 1            # heterogeneity disabled = identical
+
+
+def test_bimodal_has_two_modes():
+    res = sample_resources("bimodal", 400, seed=0)
+    ups = np.array([r.up_bw for r in res])
+    sc = get_scenario("bimodal")
+    fast = ups > 10 * sc.up_bw
+    assert 0.05 < fast.mean() < 0.5      # both populations present
+    slow_med = np.median([r.step_time for r, f in zip(res, fast) if not f])
+    fast_med = np.median([r.step_time for r, f in zip(res, fast) if f])
+    assert fast_med < slow_med / 5
+
+
+def test_recycle_mask_shrinks_upload_time():
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+    um = build_units(params, "leaf")
+    r = ClientResources(step_time=0.01, up_bw=1e5, down_bw=1e6)
+    full = upload_time(um, np.zeros(len(um.names), bool), r)
+    masked = upload_time(um, np.array([True] + [False] * (len(um.names) - 1)), r)
+    assert masked < full
+    assert round_trip_time(um, np.zeros(len(um.names), bool), r, tau=5) > full
+
+
+# ---------------------------------------------------------------------------
+# equivalence: ideal-regime event engine == synchronous round engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delta", [0, 2])
+def test_sync_ideal_matches_run_fl_bitwise(task, delta):
+    cfg = _cfg(luar=LuarConfig(delta=delta))
+    ref = run_fl(task["loss_fn"], task["params"], task["data"], task["parts"],
+                 cfg, task["eval_fn"])
+    got = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario="uniform", deadline=math.inf),
+                  task["eval_fn"])
+    for p, q_ in zip(jax.tree.leaves(ref.params), jax.tree.leaves(got.params)):
+        assert np.array_equal(np.asarray(p), np.asarray(q_))
+    assert np.array_equal(np.asarray(ref.luar_state.mask),
+                          np.asarray(got.luar_state.mask))
+    assert [h["acc"] for h in ref.history] == [h["acc"] for h in got.history]
+    assert np.isclose(ref.comm_ratio, got.comm_ratio)
+    assert got.n_stragglers == 0 and got.n_dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# systems behaviours
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_drops_stragglers(task):
+    cfg = _cfg()
+    sc = get_scenario("bimodal")
+    # deadline chosen between the datacenter (~0.01s) and mobile (~0.2s)
+    # round-trip times for this model size
+    fast = SimConfig(scenario=sc, deadline=0.1, overprovision=1.5)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, fast, task["eval_fn"])
+    assert res.n_stragglers > 0
+    assert res.sim_time <= 0.1 * cfg.rounds + 1e-9
+    assert res.n_received + res.n_stragglers + res.n_dropped \
+        == int(round(cfg.n_active * 1.5)) * cfg.rounds
+
+
+def test_dropout_past_deadline_still_counted(task):
+    """A device that vanishes later than the round closes is dropped, not
+    a straggler: the full dispatch ledger must still balance."""
+    cfg = _cfg()
+    sc = get_scenario("bimodal_flaky")        # dropout on the mobile mode
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario=sc, deadline=0.05, sys_seed=1),
+                  task["eval_fn"])
+    assert res.n_dropped > 0
+    assert res.n_received + res.n_stragglers + res.n_dropped \
+        == cfg.n_active * cfg.rounds
+
+
+def test_dropout_clients_never_upload(task):
+    cfg = _cfg()
+    sc = get_scenario("uniform").replace(dropout=0.5)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario=sc), task["eval_fn"])
+    assert res.n_dropped > 0
+    assert res.n_received + res.n_dropped == cfg.n_active * cfg.rounds
+
+
+def test_overprovision_collect_k(task):
+    """Over-provisioned cohort, close at k arrivals: slowest are dropped."""
+    cfg = _cfg()
+    sim = SimConfig(scenario="lognormal", overprovision=2.0, collect=cfg.n_active)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, sim, task["eval_fn"])
+    assert res.n_received == cfg.n_active * cfg.rounds
+    assert res.n_stragglers == cfg.n_active * cfg.rounds   # 2x - k
+    assert res.history[-1]["acc"] > 0.5
+
+
+def test_fedbuff_progresses_and_counts(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    sim = SimConfig(scenario="bimodal", mode="fedbuff", buffer_size=4,
+                    concurrency=8)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, sim, task["eval_fn"])
+    assert res.rounds_done == cfg.rounds
+    assert res.n_received >= cfg.rounds * 4
+    assert res.history[-1]["acc"] > 0.5
+    assert res.sim_time > 0
+
+
+def test_luar_cuts_wall_clock_under_thin_uplink(task):
+    """The tentpole claim at test scale: with upload-dominated mobile
+    links, the recycle mask turns byte savings into time savings."""
+    params = task["params"]
+    um = build_units(params, "leaf")
+    model_bytes = float(sum(um.unit_bytes))
+    sc = get_scenario("uniform").replace(
+        step_time=1e-4, up_bw=model_bytes / 10.0, down_bw=model_bytes * 10.0)
+    times = {}
+    for name, delta in [("fedavg", 0), ("fedluar", 3)]:
+        cfg = _cfg(luar=LuarConfig(delta=delta))
+        res = run_sim(task["loss_fn"], params, task["data"], task["parts"],
+                      cfg, SimConfig(scenario=sc), task["eval_fn"])
+        times[name] = res.sim_time
+    assert times["fedluar"] < 0.8 * times["fedavg"]
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware aggregation path
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_discount_monotone():
+    w = staleness_discount(jnp.arange(5), alpha=0.5)
+    assert np.all(np.diff(np.asarray(w)) < 0)
+    assert np.isclose(float(w[0]), 1.0)
+
+
+def test_staleness_merge_equal_staleness_is_mean():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    out = staleness_weighted_merge(tree, jnp.zeros(3, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(tree["a"]).mean(0), rtol=1e-6)
+
+
+def test_staleness_merge_downweights_stale():
+    tree = {"a": jnp.stack([jnp.ones(4), -jnp.ones(4)])}
+    out = staleness_weighted_merge(tree, jnp.asarray([0, 8]), alpha=1.0)
+    assert np.all(np.asarray(out["a"]) > 0)      # fresh +1 outweighs stale -1
+
+
+# ---------------------------------------------------------------------------
+# host-side comm accounting precision (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+class _UMStub:
+    def __init__(self, sizes):
+        self.unit_bytes = tuple(sizes)
+
+
+def test_comm_accounting_exact_past_float32_range():
+    um = _UMStub([1 << 24])              # 16 MiB units
+    stats = comm_init()
+    mask = np.zeros(1, bool)
+    for _ in range(10):
+        stats = comm_update(stats, um, mask, 1)
+        stats = CommStats(stats.bytes_uploaded + 1.0, stats.rounds)  # odd byte
+    # float32 accumulation would round the +1s away past 2**24
+    assert stats.bytes_uploaded == 10 * (1 << 24) + 10
+    assert isinstance(stats.bytes_uploaded, float)
+    assert stats.rounds == 10
+
+
+def test_time_to_target_helper(task):
+    cfg = _cfg(rounds=12, eval_every=2)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario="uniform"), task["eval_fn"])
+    t = time_to_target(res, "acc", 0.8)
+    assert math.isfinite(t) and t <= res.sim_time
+    assert time_to_target(res, "acc", 2.0) == math.inf
