@@ -67,4 +67,29 @@ def rows(quick: bool = True):
                 "acc": round(res.history[-1]["acc"], 3),
                 "comm": round(res.comm_ratio, 3),
             }))
+
+    # buffered async under the bimodal population: the mask ledger vs the
+    # PR-1 merge.  Wasted uplink is bytes stale clients uploaded for
+    # units the current mask recycles — the ledger uses them instead
+    sc = scaled_scenario("bimodal", model_bytes)
+    for name, ledger, penalty in (("ledger", True, 0.0),
+                                  ("ledger_pen", True, 1.0),
+                                  ("noledger", False, 0.0)):
+        cfg = FLConfig(n_clients=len(task.parts), n_active=8, tau=5,
+                       batch_size=16, rounds=rounds,
+                       client=ClientConfig(lr=0.05), eval_every=2,
+                       luar=LuarConfig(delta=2, granularity="leaf",
+                                       staleness_penalty=penalty))
+        res, secs = timed(lambda: run_sim(
+            task.loss_fn, task.params, task.data, task.parts, cfg,
+            SimConfig(scenario=sc, mode="fedbuff", buffer_size=4,
+                      concurrency=16, mask_ledger=ledger), task.eval_fn))
+        t_hit = time_to_target(res, "acc", target)
+        out.append((f"tta_fedbuff_{name}", secs, {
+            "t_target_s": round(t_hit, 2) if math.isfinite(t_hit) else "inf",
+            "sim_time_s": round(res.sim_time, 2),
+            "acc": round(res.history[-1]["acc"], 3),
+            "wasted_mb": round(res.wasted_upload_bytes / 1e6, 3),
+            "stal_q90": res.staleness_q["q90"] if res.staleness_q else 0.0,
+        }))
     return out

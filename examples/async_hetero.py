@@ -86,14 +86,50 @@ else:
           f"no speedup claim (fedavg={times['fedavg']}, "
           f"fedluar={times['fedluar']}).")
 
-# 4. the same population without a round barrier: FedBuff buffered async
+# 4. the same population without a round barrier: FedBuff buffered async.
+#    Under version skew each in-flight client carries a possibly-stale
+#    recycle mask; the mask ledger versions every dispatched R_t so the
+#    merge averages each unit only over clients that actually uploaded
+#    it — wasted uplink drops to exactly zero (vs the maskless merge)
 print("\nfedbuff buffered-async (buffer=4, staleness discount 1/sqrt(1+tau)):")
-for name, kw in ALGOS[:2]:
+FEDBUFF_ROWS = [
+    ("fedavg", dict(), True),
+    ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf")), True),
+    ("fedluar/pen", dict(luar=LuarConfig(delta=2, granularity="leaf",
+                                         staleness_penalty=1.0)), True),
+    ("fedluar/nl", dict(luar=LuarConfig(delta=2, granularity="leaf")), False),
+]
+for name, kw, ledger in FEDBUFF_ROWS:
     res = run_sim(loss_fn, params, {"x": x, "y": y}, parts, fl_cfg(**kw),
-                  SimConfig(scenario=scenario, mode="fedbuff", buffer_size=4,
-                            concurrency=8), eval_fn)
+                  SimConfig(scenario=scenario, mode="fedbuff",
+                            buffer_size=4, concurrency=8,
+                            mask_ledger=ledger), eval_fn)
     t_hit = time_to_target(res, "loss", TARGET_LOSS, mode="min")
     t_str = f"{t_hit:.1f}" if math.isfinite(t_hit) else "never"
-    print(f"{name:<10} t_target={t_str:>8} sim s   total={res.sim_time:.1f} "
+    q90 = res.staleness_q["q90"] if res.staleness_q else 0.0
+    print(f"{name:<13} t_target={t_str:>8} sim s   total={res.sim_time:.1f} "
           f"sim s   acc={res.history[-1]['acc']:.3f} "
-          f"updates={res.n_received}")
+          f"updates={res.n_received} wasted_kb={res.wasted_upload_bytes/1e3:.1f} "
+          f"stal_q90={q90:.1f}")
+print("(/pen = staleness-conditioned selection, the knob that keeps honest "
+      "async LUAR converging;\n /nl = mask ledger off: the merge prices "
+      "stale uploads against the CURRENT mask,\n discarding the bytes the "
+      "ledger puts to work — and silently averaging units clients\n never "
+      "uploaded, which only LOOKS fine because the simulator knows them)")
+
+# 5. FedAsync (buffer=1): the discount scales the server mixing rate, and
+#    adaptive alpha re-fits it to the observed staleness quantiles
+print("\nfedasync (buffer=1, concurrency=4), fixed vs adaptive alpha:")
+for tag, kw in (("alpha=0.5", dict(staleness_alpha=0.5)),
+                ("adaptive", dict(staleness_alpha=0.5, adaptive_alpha=True))):
+    res = run_sim(loss_fn, params, {"x": x, "y": y}, parts,
+                  fl_cfg(luar=LuarConfig(delta=2, granularity="leaf",
+                                         staleness_penalty=1.0)),
+                  SimConfig(scenario=scenario, mode="fedbuff", buffer_size=1,
+                            concurrency=4, **kw), eval_fn)
+    t_hit = time_to_target(res, "loss", TARGET_LOSS, mode="min")
+    t_str = f"{t_hit:.1f}" if math.isfinite(t_hit) else "never"
+    alphas = sorted(set(round(a, 2) for a in res.alphas))
+    print(f"{tag:<10} t_target={t_str:>8} sim s   acc={res.history[-1]['acc']:.3f} "
+          f"stal_q={res.staleness_q}   alphas={alphas[:4]}"
+          f"{'...' if len(alphas) > 4 else ''}")

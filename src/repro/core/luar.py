@@ -29,11 +29,12 @@ from repro.core.units import UnitMap
 class FedLUAR:
     def __init__(self, params: Any, *, delta: int = 0, scheme: str = "luar",
                  mode: str = "recycle", granularity: str = "leaf",
-                 max_staleness: int = 0, n_active: int = 1,
-                 seed: int = 0, use_kernel: bool = False):
+                 max_staleness: int = 0, staleness_penalty: float = 0.0,
+                 n_active: int = 1, seed: int = 0, use_kernel: bool = False):
         self.cfg = LuarConfig(delta=delta, scheme=scheme, mode=mode,
                               granularity=granularity,
-                              max_staleness=max_staleness)
+                              max_staleness=max_staleness,
+                              staleness_penalty=staleness_penalty)
         self.state, self.um = luar_init(params, self.cfg, jax.random.PRNGKey(seed))
         if use_kernel and any(isinstance(u, tuple) for u in self.um.leaf_unit):
             raise ValueError("use_kernel supports leaf/module granularity only")
@@ -106,9 +107,11 @@ def _kernel_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
     eps = 1e-12
     s = jnp.sqrt(jnp.stack(d2) + eps) / jnp.sqrt(jnp.stack(x2) + eps)
     key, sub = jax.random.split(state.key)
-    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s,
-                                   grad_sq=jnp.stack(d2))
     new_staleness = jnp.where(state.mask, state.staleness + 1, 0)
+    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s,
+                                   grad_sq=jnp.stack(d2),
+                                   staleness=new_staleness,
+                                   staleness_penalty=cfg.staleness_penalty)
     if cfg.max_staleness > 0:
         next_mask = next_mask & (new_staleness < cfg.max_staleness)
     new_state = LuarState(

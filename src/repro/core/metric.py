@@ -17,7 +17,19 @@ def s_metric(um: UnitMap, update, params) -> jax.Array:
     return jnp.sqrt(d2 + _EPS) / jnp.sqrt(x2 + _EPS)
 
 
-def recycle_probs(s: jax.Array) -> jax.Array:
-    """p_{t,l} = (1/s_{t,l}) / sum_l (1/s_{t,l})."""
+def recycle_probs(s: jax.Array, staleness: jax.Array = None,
+                  staleness_penalty: float = 0.0) -> jax.Array:
+    """p_{t,l} = (1/s_{t,l}) / sum_l (1/s_{t,l}).
+
+    With ``staleness_penalty`` > 0 the unnormalized weight of unit l is
+    additionally damped by exp(-penalty * staleness_l), so a unit that has
+    been recycled many consecutive rounds re-enters aggregation with
+    boosted probability — the staleness-conditioned selection used by the
+    buffered-async (FedBuff) path, where the expectation argument of the
+    paper no longer bounds worst-case lag.  penalty=0 (the default) is
+    bitwise the paper's Eq. (2).
+    """
     inv = 1.0 / jnp.clip(s, _EPS)
+    if staleness is not None and staleness_penalty:
+        inv = inv * jnp.exp(-staleness_penalty * staleness.astype(jnp.float32))
     return inv / jnp.sum(inv)

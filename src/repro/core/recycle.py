@@ -20,6 +20,8 @@ from repro.core.metric import s_metric, recycle_probs
 from repro.core.selection import select_recycle_set
 from repro.core.units import UnitMap, build_units, n_units, select_per_leaf, unit_sq_norms
 
+_MERGE_EPS = 1e-30                  # guards the per-unit renormalization
+
 
 class LuarConfig(NamedTuple):
     delta: int = 0                  # layers to recycle; 0 -> vanilla FedAvg
@@ -32,6 +34,12 @@ class LuarConfig(NamedTuple):
                                     # expectation (stochastic selection); this
                                     # makes the Lemma-1 k explicit and worst-
                                     # case bounded.
+    staleness_penalty: float = 0.0  # staleness-conditioned selection: each
+                                    # unit's selection score is damped by
+                                    # exp(-penalty * consecutive_recycles), so
+                                    # long-recycled units re-enter aggregation
+                                    # with boosted probability (async path;
+                                    # 0 = off, bitwise the paper's sampling).
 
 
 class LuarState(NamedTuple):
@@ -61,16 +69,25 @@ def luar_init(params: Any, cfg: LuarConfig, key) -> tuple[LuarState, UnitMap]:
 
 
 def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
-               fresh_update: Any, params: Any):
+               fresh_update: Any, params: Any, mask_override=None):
     """One LUAR aggregation (Alg. 1).
 
     fresh_update: the client-averaged update u_t (valid only for units
     outside R_t — inside R_t the clients did not upload, so whatever is
     there is ignored).  params: x_t (pre-update).
 
+    mask_override: optional (n_units,) bool replacing ``state.mask`` as
+    the recycle set actually applied THIS round.  The buffered-async
+    engine passes the per-unit "no valid client uploaded this unit" mask
+    derived from its mask ledger: under version skew the dispatched R_t
+    differs per client, so the effective recycle set is what arrived,
+    not what was sampled.  Staleness/agg_count bookkeeping follows the
+    effective mask; R_{t+1} is sampled as usual.  When every buffered
+    client saw the current mask this equals ``state.mask`` exactly.
+
     Returns (applied_update \\hat{Delta}_t, new_state).
     """
-    mask = state.mask
+    mask = state.mask if mask_override is None else mask_override
     if cfg.mode == "recycle":
         recycled_src = state.prev_update
     elif cfg.mode == "drop":
@@ -87,8 +104,10 @@ def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
     grad_sq = unit_sq_norms(um, applied)
 
     key, sub = jax.random.split(state.key)
-    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s, grad_sq=grad_sq)
     new_staleness = jnp.where(mask, state.staleness + 1, 0)
+    next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s,
+                                   grad_sq=grad_sq, staleness=new_staleness,
+                                   staleness_penalty=cfg.staleness_penalty)
     if cfg.max_staleness > 0:
         # staleness bound: a unit recycled max_staleness times in a row is
         # forced back into the aggregation set next round
@@ -118,19 +137,86 @@ def staleness_discount(staleness: jax.Array, alpha: float = 0.5) -> jax.Array:
 
 
 def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
-                             alpha: float = 0.5) -> Any:
+                             alpha: float = 0.5, *,
+                             validity: Optional[jax.Array] = None,
+                             um: Optional[UnitMap] = None,
+                             fallback: Any = None) -> Any:
     """Merge a buffer of K client updates into one pseudo-update.
 
     stacked_updates: pytree whose leaves have leading axis K (one slice per
     buffered client delta); staleness: (K,) int server-version lags.
     Returns the discount-weighted mean — the ``u_t`` fed to ``luar_round``
     when the server aggregates a buffer instead of a synchronous cohort.
+
+    validity: optional (K, n_units) bool — True where buffered client k
+    actually uploaded unit u (i.e. u was NOT in the recycle mask that
+    client downloaded; the mask ledger reconstructs this per client).
+    With it, a unit is only ever averaged over the clients that uploaded
+    it, so a stale client that skipped a unit can never inject garbage
+    into it, and the per-unit combination is guarded so an all-invalid
+    unit never divides by zero.  How a unit's missing weight mass is
+    handled depends on ``fallback``:
+
+      fallback given (the server's prev_update):  a client skipped unit
+        u exactly because its dispatched mask said "u will be recycled",
+        so its discount weight is allocated to the recycled direction —
+        merged_u = (sum_{k in V_u} w_k d_ku + (sum_k w_k - z_u) fb_u)
+        / sum_k w_k with z_u the valid weight mass.  A unit nobody
+        uploaded is exactly fb_u (fallback-to-recycle), a unit everybody
+        uploaded is exactly the plain discounted mean, and in between
+        the recycled direction absorbs the missing mass instead of a
+        small (stale, client-biased) subset being renormalized to full
+        magnitude — the stable choice under non-IID staleness.
+
+      fallback None:  the weights renormalize over the valid subset
+        (convex per-unit mean); an all-invalid unit comes out zero.
+
+    Requires ``um`` to map units onto pytree leaves.  validity=None is
+    bitwise the original whole-buffer behaviour, and so is the validity
+    path whenever every client saw the current mask.
     """
     w = staleness_discount(staleness, alpha)
-    w = w / jnp.sum(w)
+    if validity is None:
+        w = w / jnp.sum(w)
 
-    def merge(leaf):
-        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return jnp.sum(leaf * wb, axis=0)
+        def merge(leaf):
+            wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            return jnp.sum(leaf * wb, axis=0)
 
-    return jax.tree.map(merge, stacked_updates)
+        return jax.tree.map(merge, stacked_updates)
+
+    if um is None:
+        raise ValueError("validity merge needs the UnitMap (um=...)")
+    wv = w[:, None] * validity.astype(w.dtype)          # (K, n_units)
+    z = jnp.sum(wv, axis=0)                             # valid mass per unit
+    if fallback is not None:
+        wtot = jnp.sum(w)
+        wn = wv / wtot                                  # full-buffer mass
+        miss = (wtot - z) / wtot                        # -> recycled direction
+    else:
+        wn = wv / jnp.maximum(z, _MERGE_EPS)[None, :]   # subset-renormalized
+        miss = None
+    leaves = jax.tree_util.tree_leaves(stacked_updates)
+    fb = (jax.tree_util.tree_leaves(fallback) if fallback is not None
+          else [jnp.zeros(l.shape[1:], l.dtype) for l in leaves])
+    out = []
+    for u, leaf, f in zip(um.leaf_unit, leaves, fb):
+        if isinstance(u, tuple):                        # stacked depth unit
+            start, L = u
+            tail = (1,) * (leaf.ndim - 2)
+            wb = wn[:, start:start + L].reshape((-1, L) + tail)
+            merged = jnp.sum(leaf * wb, axis=0)
+            if miss is not None:
+                merged = merged + miss[start:start + L].reshape((L,) + tail) * f
+            else:                       # zero out all-invalid units
+                ok = (z > 0.0)[start:start + L].reshape((L,) + tail)
+                merged = jnp.where(ok, merged, f)
+        else:
+            wb = wn[:, u].reshape((-1,) + (1,) * (leaf.ndim - 1))
+            merged = jnp.sum(leaf * wb, axis=0)
+            if miss is not None:
+                merged = merged + miss[u] * f
+            else:
+                merged = jnp.where(z[u] > 0.0, merged, f)
+        out.append(merged)              # miss path: all-invalid -> exactly f
+    return jax.tree_util.tree_unflatten(um.treedef, out)

@@ -32,30 +32,49 @@ def topk_mask(scores: jax.Array, k: int) -> jax.Array:
 
 
 def select_recycle_set(key, scheme: str, delta: int, *,
-                       s: jax.Array, grad_sq: jax.Array) -> jax.Array:
+                       s: jax.Array, grad_sq: jax.Array,
+                       staleness: jax.Array = None,
+                       staleness_penalty: float = 0.0) -> jax.Array:
     """Choose R_{t+1}: per-unit boolean mask with delta True entries.
 
     s: Eq.(1) metric per unit.  grad_sq: per-unit squared update norms
     (for the gradient-norm ablation scheme).
+
+    staleness / staleness_penalty: optional staleness-conditioned
+    selection for the async path — each unit's (log-)selection score is
+    reduced by ``penalty * staleness``, so units recycled many versions
+    in a row re-enter aggregation with boosted probability.  Positional
+    schemes (top/bottom) ignore the penalty.  penalty=0 is bitwise the
+    original behaviour.
     """
     n = s.shape[0]
     delta = min(delta, n)
+    conditioned = staleness is not None and staleness_penalty
     if delta == 0:
         return jnp.zeros((n,), bool)
     if scheme == "luar":
-        p = recycle_probs(s)
+        p = recycle_probs(s, staleness, staleness_penalty)
         return gumbel_topk_mask(key, jnp.log(p + _EPS), delta)
     if scheme == "random":
-        return gumbel_topk_mask(key, jnp.zeros((n,)), delta)
+        logp = jnp.zeros((n,))
+        if conditioned:
+            logp = -staleness_penalty * staleness.astype(jnp.float32)
+        return gumbel_topk_mask(key, logp, delta)
     if scheme == "grad_norm":
         # favour layers with the smallest update norm (the SOTA heuristic
         # the paper argues against)
-        p = recycle_probs(jnp.sqrt(grad_sq + _EPS))
+        p = recycle_probs(jnp.sqrt(grad_sq + _EPS), staleness, staleness_penalty)
         return gumbel_topk_mask(key, jnp.log(p + _EPS), delta)
     if scheme == "top":            # input-side layers
         return jnp.arange(n) < delta
     if scheme == "bottom":         # output-side layers
         return jnp.arange(n) >= (n - delta)
     if scheme == "deterministic":  # always the delta smallest-s layers
+        if conditioned:
+            # log-domain so the additive penalty composes with the s
+            # ranking (log is monotone: penalty=0 would reproduce -s)
+            return topk_mask(-(jnp.log(s + _EPS)
+                               + staleness_penalty
+                               * staleness.astype(jnp.float32)), delta)
         return topk_mask(-s, delta)
     raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")

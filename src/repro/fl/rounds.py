@@ -108,17 +108,31 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
     return round_step
 
 
+def client_payload_bytes_per_unit(sizes: np.ndarray, mask: np.ndarray,
+                                  cfg: FLConfig,
+                                  lbgm_sent: Optional[np.ndarray] = None) -> np.ndarray:
+    """ONE client's upload bytes this round, PER UNIT (host-side float64).
+
+    ``mask`` must be the recycle mask the client actually DOWNLOADED at
+    dispatch — under buffered async that can be several versions older
+    than the server's current mask, and pricing against the current one
+    would misattribute bytes (the wasted-upload ledger in ``repro.sim``
+    is built on this distinction).  LBGM units that only ship a scalar
+    coefficient cost 4 bytes."""
+    up = ~np.asarray(mask, bool)
+    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
+    per_unit = np.where(up, np.asarray(sizes, np.float64) * scale, 0.0)
+    if lbgm_sent is not None:
+        sent = np.asarray(lbgm_sent, bool)
+        per_unit = np.where(up & ~sent, 4.0, per_unit)
+    return per_unit
+
+
 def client_payload_bytes(sizes: np.ndarray, mask: np.ndarray, cfg: FLConfig,
                          lbgm_sent: Optional[np.ndarray] = None) -> float:
     """ONE client's upload bytes this round: units outside R_t, shrunk by
     the orthogonal compressor stack (host-side float64)."""
-    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
-    round_bytes = sizes[~mask].sum() * scale
-    if lbgm_sent is not None:
-        sent = np.asarray(lbgm_sent)
-        round_bytes = (sizes[(~mask) & sent].sum() * scale
-                       + 4.0 * ((~mask) & ~sent).sum())
-    return float(round_bytes)
+    return float(client_payload_bytes_per_unit(sizes, mask, cfg, lbgm_sent).sum())
 
 
 def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],

@@ -11,8 +11,8 @@ deadlines, dropout, and FedBuff-style buffered async aggregation.
     time_to_target(res, "acc", 0.9)     # simulated seconds to 90% acc
 """
 from repro.configs.base import SIM_SCENARIOS, SimScenario, get_scenario  # noqa: F401
-from repro.sim.engine import (SimConfig, SimResult, run_sim,  # noqa: F401
-                              time_to_target)
+from repro.sim.engine import (MaskLedger, SimConfig, SimResult,  # noqa: F401
+                              run_sim, time_to_target)
 from repro.sim.events import (ARRIVAL, DEADLINE, DROPOUT, Event,  # noqa: F401
                               EventQueue)
 from repro.sim.profiles import describe, sample_resources  # noqa: F401

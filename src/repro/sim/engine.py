@@ -14,6 +14,23 @@ Two server modes over the same virtual-clock event queue:
             staleness-discounted pseudo-update (core/recycle.py) and
             advances the model version.
 
+The fedbuff mode is staleness-aware at the MASK level (the LUAR axis of
+staleness the paper never faces): the server keeps a ``MaskLedger`` — a
+ring buffer of every dispatched recycle set R_v keyed by model version —
+and each in-flight client record carries the version it downloaded.  At
+merge time the ledger reconstructs exactly which units each buffered
+client uploaded, the merge renormalizes its discount weights PER UNIT
+over the clients that actually uploaded that unit, and a unit no valid
+client uploaded falls back to recycling the server's prev_update
+(``staleness_weighted_merge(validity=...)`` + ``luar_round``'s mask
+override).  Consequently no uploaded byte is ever silently discarded:
+``SimResult.wasted_per_unit`` is exactly zero with the ledger enabled
+on a run that completes without ledger misses (rejected miss payloads
+and buffer remnants stranded by a max_sim_time cutoff are explicitly
+charged to the same ledger), whereas the PR-1 semantics
+(``mask_ledger=False``) silently discard every byte a stale client
+uploaded for a unit the CURRENT mask recycles.
+
 Both modes compose with the LUAR core: the recycle set R_t means clients
 skip those units on the uplink, which shrinks modeled upload time — the
 mechanism by which byte savings become wall-clock savings.
@@ -33,6 +50,7 @@ from __future__ import annotations
 
 import bisect
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -42,18 +60,62 @@ import numpy as np
 
 from repro.configs.base import get_scenario
 from repro.core import (luar_init, luar_round, payload_scale,
-                        round_trip_time, staleness_weighted_merge)
+                        round_trip_time, staleness_discount,
+                        staleness_weighted_merge)
 from repro.core.comm import ClientResources, compute_time, download_time
 from repro.fl import baselines
 from repro.fl.client import local_update
 from repro.fl.rounds import (FLConfig, _stack_client_batches,
                              apply_compressors, client_payload_bytes,
-                             make_round_step)
+                             client_payload_bytes_per_unit, make_round_step)
 from repro.fl.server import (apply_update, broadcast_point, server_init)
 from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, EventQueue
 from repro.sim.profiles import sample_resources
 
 Params = Any
+
+
+class MaskLedger:
+    """Ring buffer of dispatched recycle sets R_v keyed by server version.
+
+    The fedbuff server records R_v when the first client at version v is
+    dispatched (idempotent: the mask only changes when an aggregation
+    advances the version); an arrival looks up the version it downloaded
+    to reconstruct exactly which units it uploaded.  Bounded capacity:
+    when full, the oldest version is evicted and any still-in-flight
+    client of that version becomes a *ledger miss* on arrival — its
+    update is rejected outright (excluded from the merge, not counted as
+    received) and its payload charged as wasted, the conservative choice
+    since the server can no longer verify which recycle set the payload
+    was built against.  Size the capacity above the worst-case
+    version lag (a slow client in flight across > capacity aggregations)
+    to make misses impossible.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"ledger capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._masks: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._masks)
+
+    def __contains__(self, version: int) -> bool:
+        return version in self._masks
+
+    def record(self, version: int, mask: np.ndarray) -> None:
+        if version in self._masks:
+            return
+        self._masks[version] = np.array(mask, bool, copy=True)
+        while len(self._masks) > self.capacity:
+            self._masks.popitem(last=False)
+            self.evictions += 1
+
+    def get(self, version: int) -> Optional[np.ndarray]:
+        """The mask dispatched at ``version``, or None if evicted."""
+        return self._masks.get(version)
 
 
 @dataclass
@@ -69,6 +131,16 @@ class SimConfig:
     staleness_alpha: float = 0.5     # discount (1+tau)^-alpha
     concurrency: int = 0             # clients in flight (0 -> n_active)
     max_sim_time: float = math.inf   # fedbuff stop condition (virtual seconds)
+    mask_ledger: bool = True         # versioned-mask merge: average each unit
+                                     # only over clients that uploaded it;
+                                     # False = PR-1 semantics (merge against
+                                     # the CURRENT mask, stale uploads for
+                                     # recycled units silently discarded)
+    ledger_capacity: int = 64        # MaskLedger ring size (versions)
+    adaptive_alpha: bool = False     # schedule alpha from observed staleness
+                                     # quantiles (FedAsync-style; see
+                                     # _schedule_alpha)
+    staleness_window: int = 512      # trailing arrivals the schedule looks at
     sys_seed: int = 0                # systems RNG stream (dropout), separate
                                      # from the FLConfig data/cohort stream
 
@@ -82,6 +154,25 @@ class SimResult:
     n_received: int = 0              # client updates accepted by the server
     n_stragglers: int = 0            # arrived-too-late / past-deadline drops
     n_dropped: int = 0               # device-vanished dispatches
+    n_inflight_end: int = 0          # dispatches still in flight at finish
+    # staleness-aware LUAR accounting (fedbuff; sync fills in the trivia)
+    wasted_per_unit: Optional[np.ndarray] = None
+    #   ^ uploaded-then-discarded bytes per unit; exactly zero with the
+    #     mask ledger enabled and no ledger misses (every uploaded unit
+    #     is used by the merge)
+    wasted_upload_bytes: float = 0.0   # total (== wasted_per_unit.sum())
+    ledger_misses: int = 0           # arrivals whose dispatch-mask version
+                                     # was already evicted; with the ledger
+                                     # enabled these are rejected outright
+                                     # (not merged, not in n_received)
+    n_stranded_end: int = 0          # accepted uploads left in a partially
+                                     # filled buffer when a truncated run
+                                     # (max_sim_time / event cap) stopped;
+                                     # their unmerged payload is charged to
+                                     # the waste ledger
+    staleness_observed: Optional[np.ndarray] = None   # per accepted arrival
+    staleness_q: Optional[Dict[str, float]] = None    # q50/q90/max summary
+    alphas: List[float] = field(default_factory=list)  # alpha per aggregation
     params: Any = None
     luar_state: Any = None
     resources: Optional[List[ClientResources]] = None
@@ -98,6 +189,40 @@ def time_to_target(result: SimResult, metric: str, target: float,
         if (mode == "max" and v >= target) or (mode == "min" and v <= target):
             return h["t_sim"]
     return math.inf
+
+
+def _staleness_quantiles(observed: List[int]) -> Optional[Dict[str, float]]:
+    if not observed:
+        return None
+    arr = np.asarray(observed, np.float64)
+    return {"q50": float(np.quantile(arr, 0.5)),
+            "q90": float(np.quantile(arr, 0.9)),
+            "max": float(arr.max())}
+
+
+_ALPHA_TARGET_W = 0.1               # weight a q90-stale update is pushed to
+
+
+def _schedule_alpha(base: float, observed: List[int], window: int) -> float:
+    """FedAsync-style adaptive alpha from observed staleness quantiles.
+
+    Picks the alpha that discounts an update at the 90th-percentile
+    observed staleness (over the trailing ``window`` arrivals) down to
+    weight ~1/10 — (1 + q90)^-alpha = 0.1 — clipped to [base/4, 4*base]
+    so a pathological tail cannot flatten or obliterate the discount.
+    The stability-first direction matters: the stale tail should be
+    background signal, not a co-driver (empirically, under-discounting a
+    q90 ~ 10 tail on non-IID data diverges, while alpha ~ 1 recovers).
+    With no staleness observed yet (or q90 = 0, where any alpha yields
+    weight 1) it returns ``base``.
+    """
+    if not observed:
+        return base
+    q90 = float(np.quantile(np.asarray(observed[-window:], np.float64), 0.9))
+    if q90 <= 0.0:
+        return base
+    return float(np.clip(math.log(1.0 / _ALPHA_TARGET_W) / math.log1p(q90),
+                         0.25 * base, 4.0 * base))
 
 
 def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
@@ -143,7 +268,11 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     total_bytes = sizes.sum()
 
     queue = EventQueue()
-    res = SimResult(resources=resources)
+    res = SimResult(resources=resources,
+                    wasted_per_unit=np.zeros(len(um.names), np.float64))
+    # synchronous rounds cannot see mask staleness: every cohort member
+    # downloads the current R_t and the merge applies that same R_t
+    res.staleness_observed = np.zeros(0, np.int32)
     uploaded = 0.0
 
     for t in range(cfg.rounds):
@@ -182,9 +311,21 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             arrived_pos.append(ev.payload["pos"])
             if len(arrived_pos) >= target:
                 break
-        res.n_stragglers += n_scheduled - len(arrived_pos)
+        n_strag = n_scheduled - len(arrived_pos)
+        res.n_stragglers += n_strag
+        if n_strag:
+            # a straggler's uplink was spent and discarded (deadline /
+            # collect cutoff): charge it as wasted traffic, symmetric with
+            # the fedbuff engine's rejected-arrival accounting (LBGM
+            # scalar compression is unknowable for non-aggregated clients,
+            # so the dense mask-priced payload is the conservative charge)
+            strag_per_unit = client_payload_bytes_per_unit(sizes, mask_now, cfg)
+            uploaded += float(strag_per_unit.sum()) * n_strag
+            res.wasted_per_unit += strag_per_unit * n_strag
+            res.wasted_upload_bytes += float(strag_per_unit.sum()) * n_strag
         # pending DROPOUT events (device vanished later than the round
-        # closed) still count as dropped, not as stragglers
+        # closed) still count as dropped, not as stragglers — a dropout
+        # vanishes before its upload starts, so it spends no uplink
         res.n_dropped += sum(1 for ev in queue.clear_pending()
                              if ev.kind == DROPOUT)
 
@@ -233,8 +374,12 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
 def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                  sim: SimConfig, resources, eval_fn) -> SimResult:
     if cfg.lbgm_threshold:
-        raise NotImplementedError("LBGM needs a synchronous anchor; "
-                                  "use sim mode='sync'")
+        raise NotImplementedError(
+            "LBGM has no per-client anchor story under buffered async: each "
+            "client's basis coefficients are relative to a synchronous "
+            "anchor the fedbuff server never holds.  Either disable it "
+            "(FLConfig.lbgm_threshold=0) or run the synchronous engine "
+            "(SimConfig(mode='sync')), where LBGM is fully supported.")
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     key, k1, k2 = jax.random.split(key, 3)
@@ -246,25 +391,48 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
     sizes = np.asarray(um.unit_bytes, np.float64)
     total_bytes = sizes.sum()
+    n_units = len(um.names)
     alpha = sim.staleness_alpha
+    fedasync = sim.buffer_size == 1      # FedAsync-style immediate apply
 
     client_fn = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.client))
     compress_fn = jax.jit(lambda delta, qkey: apply_compressors(delta, qkey, cfg))
 
     @jax.jit
-    def agg_fn(params, luar_state, server_state, stacked, staleness):
-        fresh = staleness_weighted_merge(stacked, staleness, alpha)
-        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+    def agg_fn(params, luar_state, server_state, stacked, staleness,
+               validity, alpha_t):
+        # per-unit validity merge: a unit is averaged only over the clients
+        # whose dispatched mask says they uploaded it; the weight mass of
+        # clients that skipped a unit goes to the recycled direction
+        # (fallback), which keeps small stale subsets from being blown up
+        # to full magnitude under non-IID data
+        fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
+                                         validity=validity, um=um,
+                                         fallback=luar_state.prev_update)
+        if fedasync:
+            # a K=1 buffer renormalizes any discount back to 1, so the
+            # staleness weight must scale the server mixing rate instead:
+            # x <- x + (1+tau)^-alpha * delta  (FedAsync)
+            eta = staleness_discount(staleness[0], alpha_t)
+            fresh = jax.tree.map(lambda l: l * eta, fresh)
+        # units NO valid client uploaded recycle prev_update; when every
+        # buffered client saw the current mask this is state.mask exactly
+        eff_mask = ~jnp.any(validity, axis=0)
+        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh,
+                                         params, mask_override=eff_mask)
         params, server_state = apply_update(params, applied, server_state,
                                             cfg.server)
         return params, luar_state, server_state
 
     queue = EventQueue()
-    res = SimResult(resources=resources)
+    ledger = MaskLedger(sim.ledger_capacity)
+    res = SimResult(resources=resources,
+                    wasted_per_unit=np.zeros(n_units, np.float64))
     uploaded = 0.0
     version = 0
+    observed: List[int] = []            # staleness of every accepted arrival
     jobs: Dict[int, dict] = {}
-    buffer: List[tuple] = []            # (delta, staleness_at_arrival)
+    buffer: List[tuple] = []            # (delta, staleness, validity row)
 
     def dispatch(c: int, now: float):
         r = resources[c]
@@ -272,11 +440,14 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         sel = rng.choice(idx, size=(cfg.tau, cfg.batch_size), replace=True)
         batches = {k: jnp.asarray(arr[sel]) for k, arr in data.items()}
         mask_now = np.asarray(luar_state.mask)
+        ledger.record(version, mask_now)
+        per_unit = client_payload_bytes_per_unit(sizes, mask_now, cfg)
         jobs[c] = {
             "start": broadcast_point(params, server_state, cfg.server),
             "batches": batches,
-            "version": version,
-            "bytes": client_payload_bytes(sizes, mask_now, cfg),
+            "version": version,         # the mask version this client saw
+            "per_unit": per_unit,       # uplink bytes by unit (dispatch mask)
+            "bytes": float(per_unit.sum()),
         }
         if r.dropout and sys_rng.random() < r.dropout:
             queue.push(now + download_time(um, r) + compute_time(cfg.tau, r),
@@ -285,6 +456,10 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             queue.push(now + round_trip_time(um, mask_now, r, cfg.tau, scale),
                        ARRIVAL, c)
 
+    def charge_waste(wasted: np.ndarray):
+        res.wasted_per_unit += wasted
+        res.wasted_upload_bytes += float(wasted.sum())
+
     concurrency = min(sim.concurrency or cfg.n_active, cfg.n_clients)
     first = rng.choice(cfg.n_clients, size=concurrency, replace=False)
     # sorted list of idle client ids, maintained incrementally (O(log n)
@@ -292,31 +467,67 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     idle = sorted(set(range(cfg.n_clients)) - set(int(c) for c in first))
     for c in first:
         dispatch(int(c), 0.0)
+    if math.isfinite(sim.max_sim_time):
+        # exact cutoff: events scheduled past this never execute
+        queue.push(sim.max_sim_time, DEADLINE)
 
     # hard event cap so a pathological population (e.g. dropout ~1) cannot
     # spin the loop forever when max_sim_time is inf
     max_events = 100 * (cfg.rounds * sim.buffer_size + concurrency)
     n_events = 0
-    while version < cfg.rounds and queue and queue.now < sim.max_sim_time:
+    while version < cfg.rounds and queue:
         n_events += 1
         if n_events > max_events:
             break
         ev = queue.pop()
+        if ev.kind == DEADLINE:
+            break
         c = ev.client
         job = jobs.pop(c)
         bisect.insort(idle, c)          # the slot's device is idle again
         if ev.kind == ARRIVAL:
+            uploaded += job["bytes"]    # the uplink was spent either way
+            mask_v = ledger.get(job["version"])
+            if mask_v is None:
+                res.ledger_misses += 1
+            if sim.mask_ledger and mask_v is None:
+                # dispatch mask evicted: the server can no longer verify
+                # which recycle set the payload was built against — reject
+                # the update outright and charge every uploaded byte
+                charge_waste(job["per_unit"].copy())
+                dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
+                continue
             key, qkey = jax.random.split(key)
             delta = compress_fn(client_fn(job["start"], job["batches"]), qkey)
-            buffer.append((delta, version - job["version"]))
-            uploaded += job["bytes"]
+            stal = version - job["version"]
+            observed.append(stal)
+            if sim.mask_ledger:
+                valid = ~mask_v         # every uploaded unit is used
+                uncharged = job["per_unit"]
+            else:
+                # PR-1 semantics: the server merges against the CURRENT
+                # mask, so bytes a stale client uploaded for a now-recycled
+                # unit are discarded — the waste the ledger eliminates
+                # (job["per_unit"] is zero on units the client skipped)
+                mask_now = np.asarray(luar_state.mask)
+                valid = ~mask_now
+                charge_waste(np.where(mask_now, job["per_unit"], 0.0))
+                uncharged = np.where(mask_now, 0.0, job["per_unit"])
+            # uncharged: payload bytes still unaccounted if this update
+            # never reaches a merge (stranded in a partial buffer)
+            buffer.append((delta, stal, valid, uncharged))
             res.n_received += 1
             if len(buffer) >= sim.buffer_size:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                       *[d for d, _ in buffer])
-                stal = jnp.asarray([s for _, s in buffer], jnp.int32)
+                                       *[d for d, _, _, _ in buffer])
+                stal_arr = jnp.asarray([s for _, s, _, _ in buffer], jnp.int32)
+                valid_arr = jnp.asarray(np.stack([v for _, _, v, _ in buffer]))
+                alpha_t = (_schedule_alpha(alpha, observed, sim.staleness_window)
+                           if sim.adaptive_alpha else alpha)
+                res.alphas.append(alpha_t)
                 params, luar_state, server_state = agg_fn(
-                    params, luar_state, server_state, stacked, stal)
+                    params, luar_state, server_state, stacked, stal_arr,
+                    valid_arr, jnp.float32(alpha_t))
                 buffer.clear()
                 version += 1
                 res.rounds_done = version
@@ -332,8 +543,17 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         # the slot is free again: hand the next idle client a fresh model
         dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
 
+    # a truncated run (max_sim_time / event cap) can strand accepted
+    # uploads in a partially filled buffer: they never reach a merge, so
+    # their remaining payload is wasted traffic
+    res.n_stranded_end = len(buffer)
+    for _, _, _, uncharged in buffer:
+        charge_waste(uncharged)
+    res.n_inflight_end = len(jobs)      # incl. pending DROPOUT dispatches
     res.sim_time = queue.now
     res.comm_ratio = uploaded / max(total_bytes * res.n_received, 1.0)
+    res.staleness_observed = np.asarray(observed, np.int32)
+    res.staleness_q = _staleness_quantiles(observed)
     res.params = params
     res.luar_state = luar_state
     return res

@@ -55,6 +55,14 @@ class EventQueue:
     def peek_time(self) -> float:
         return self._heap[0].time if self._heap else math.inf
 
+    def pending_count(self, kind: Optional[str] = None) -> int:
+        """Queued events, optionally of one kind only (end-of-run
+        accounting: e.g. ARRIVAL events still pending when the fedbuff
+        engine stops are dispatches left in flight)."""
+        if kind is None:
+            return len(self._heap)
+        return sum(1 for ev in self._heap if ev.kind == kind)
+
     def clear_pending(self) -> list:
         """Drop and return every queued event (sync engine: close out a
         round; the caller still needs the kinds for accounting)."""

@@ -3,10 +3,14 @@
 1. Puts ``src/`` on sys.path so ``pytest`` works without PYTHONPATH=src
    (the tier-1 command still sets it; this is a fallback).
 2. Installs a minimal ``hypothesis`` stand-in when the real package is
-   absent so the four property-test modules still collect AND run: the
+   absent so the property-test modules still collect AND run: the
    stub's ``@given`` re-runs the test body over a seeded pseudo-random
    sample of the strategy space (a bounded fuzz, not full shrinking).
-   With real hypothesis installed the stub never activates.
+   With real hypothesis installed the stub never activates.  Setting
+   STUB_HYPOTHESIS_MAX_EXAMPLES explicitly overrides every per-test
+   ``@settings(max_examples=...)`` cap — the CI ``full`` job uses this
+   (installing WITHOUT hypothesis) to soak the slow-marked property
+   tests at a much deeper budget than the tier-1 default of 20.
 """
 from __future__ import annotations
 
@@ -22,7 +26,11 @@ if _SRC not in sys.path:
 try:
     import hypothesis  # noqa: F401
 except ImportError:
-    _STUB_MAX_EXAMPLES = int(os.environ.get("STUB_HYPOTHESIS_MAX_EXAMPLES", "20"))
+    # blank/zero/negative env values must not silently turn the fuzz tier
+    # into a vacuous pass: only an explicit positive budget overrides
+    _STUB_ENV = os.environ.get("STUB_HYPOTHESIS_MAX_EXAMPLES")
+    _STUB_OVERRIDE = int(_STUB_ENV) if _STUB_ENV and int(_STUB_ENV) > 0 else None
+    _STUB_MAX_EXAMPLES = _STUB_OVERRIDE or 20
 
     class _Strategy:
         def __init__(self, draw):
@@ -68,8 +76,13 @@ except ImportError:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 cfg = getattr(fn, "_stub_settings", {})
-                n = min(cfg.get("max_examples", _STUB_MAX_EXAMPLES),
-                        _STUB_MAX_EXAMPLES)
+                if _STUB_OVERRIDE is not None:
+                    # an explicit env budget overrides per-test @settings
+                    # caps — the CI `full` job raises it for soak runs
+                    n = _STUB_OVERRIDE
+                else:
+                    n = min(cfg.get("max_examples", _STUB_MAX_EXAMPLES),
+                            _STUB_MAX_EXAMPLES)
                 rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
                 for _ in range(n):
                     # bind drawn values to the rightmost parameters BY NAME

@@ -1,0 +1,602 @@
+"""Versioned staleness-aware LUAR for buffered async: the mask ledger,
+the per-unit validity merge, staleness-conditioned selection, adaptive
+alpha, and the property/regression tier over the recycle–sim stack.
+
+The load-bearing claims:
+  * with the mask ledger enabled a fedbuff run NEVER discards an
+    uploaded byte (``SimResult.wasted_per_unit`` is exactly zero), while
+    the PR-1 semantics (``mask_ledger=False``) waste every byte a stale
+    client uploads for a unit the current mask recycles;
+  * in the no-staleness regime the whole machinery is bitwise inert.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LuarConfig, luar_init, luar_round, recycle_probs,
+                        select_recycle_set, staleness_weighted_merge)
+from repro.core.selection import gumbel_topk_mask
+from repro.core.units import build_units
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import (FLConfig, client_payload_bytes,
+                             client_payload_bytes_per_unit, run_fl)
+from repro.models.cnn import cnn_init, mlp_init, mlp_apply, softmax_xent
+from repro.sim import ARRIVAL, EventQueue, MaskLedger, SimConfig, run_sim
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y = gaussian_mixture(1200, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 16, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    def eval_fn(p):
+        return {"acc": float(jnp.mean(jnp.argmax(mlp_apply(p, xj), -1) == yj))}
+
+    return dict(loss_fn=loss_fn, params=params, data={"x": x, "y": y},
+                parts=parts, eval_fn=eval_fn)
+
+
+def _cfg(**kw):
+    kw.setdefault("client", ClientConfig(lr=0.05))
+    kw.setdefault("rounds", 8)
+    kw.setdefault("eval_every", 4)
+    kw.setdefault("n_active", 6)
+    return FLConfig(n_clients=16, tau=3, batch_size=8, **kw)
+
+
+def _run(task, cfg, sim):
+    return run_sim(task["loss_fn"], task["params"], task["data"],
+                   task["parts"], cfg, sim, task["eval_fn"])
+
+
+def _trees_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# MaskLedger (ring buffer of dispatched masks keyed by version)
+# ---------------------------------------------------------------------------
+
+
+def test_mask_ledger_records_and_gets():
+    led = MaskLedger(capacity=4)
+    m0 = np.array([True, False, False])
+    led.record(0, m0)
+    assert 0 in led and len(led) == 1
+    np.testing.assert_array_equal(led.get(0), m0)
+    assert led.get(99) is None
+
+
+def test_mask_ledger_record_is_idempotent():
+    led = MaskLedger(capacity=4)
+    m = np.array([True, False])
+    led.record(0, m)
+    led.record(0, np.array([False, True]))      # same version: ignored
+    np.testing.assert_array_equal(led.get(0), m)
+    assert len(led) == 1
+
+
+def test_mask_ledger_evicts_oldest():
+    led = MaskLedger(capacity=2)
+    for v in range(4):
+        led.record(v, np.array([v % 2 == 0]))
+    assert led.evictions == 2
+    assert led.get(0) is None and led.get(1) is None
+    assert led.get(2) is not None and led.get(3) is not None
+
+
+def test_mask_ledger_copies_and_validates():
+    with pytest.raises(ValueError):
+        MaskLedger(capacity=0)
+    led = MaskLedger()
+    m = np.array([True, False])
+    led.record(0, m)
+    m[0] = False                                # caller mutates its copy
+    assert bool(led.get(0)[0])                  # ledger unaffected
+
+
+def test_event_queue_pending_count():
+    q = EventQueue()
+    q.push(1.0, ARRIVAL, 0)
+    q.push(2.0, ARRIVAL, 1)
+    q.push(3.0, "deadline")
+    assert q.pending_count() == 3
+    assert q.pending_count(ARRIVAL) == 2
+    q.pop()
+    assert q.pending_count(ARRIVAL) == 1
+
+
+# ---------------------------------------------------------------------------
+# staleness_weighted_merge properties (satellite: hypothesis tier)
+# ---------------------------------------------------------------------------
+
+_TEMPLATE = {"a": jnp.zeros((3,), jnp.float32),
+             "b": jnp.zeros((2, 2), jnp.float32)}
+_UM = build_units(_TEMPLATE, "leaf")            # 2 units
+_NU = len(_UM.names)
+
+
+def _stacked(rng, k):
+    return {"a": jnp.asarray(rng.standard_normal((k, 3)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((k, 2, 2)), jnp.float32)}
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=1, max_value=6),
+       st.floats(min_value=0.0, max_value=2.0),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=25)
+def test_merge_weights_sum_to_one(k, alpha, seed):
+    """Merging K copies of the SAME tree returns that tree: the discount
+    weights are a convex combination, with or without a validity mask."""
+    rng = np.random.default_rng(seed)
+    one = _stacked(rng, 1)
+    stacked = jax.tree.map(lambda l: jnp.repeat(l, k, axis=0), one)
+    stal = jnp.asarray(rng.integers(0, 10, k), jnp.int32)
+    plain = staleness_weighted_merge(stacked, stal, alpha)
+    # validity with every unit covered by at least one client
+    v = rng.random((k, _NU)) < 0.5
+    v[rng.integers(0, k)] = True
+    masked = staleness_weighted_merge(stacked, stal, alpha,
+                                      validity=jnp.asarray(v), um=_UM)
+    for got in (plain, masked):
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(one)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w)[0],
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=25)
+def test_merge_alpha_zero_is_plain_mean(k, seed):
+    rng = np.random.default_rng(seed)
+    stacked = _stacked(rng, k)
+    stal = jnp.asarray(rng.integers(0, 20, k), jnp.int32)
+    got = staleness_weighted_merge(stacked, stal, alpha=0.0)
+    gotv = staleness_weighted_merge(stacked, stal, alpha=0.0,
+                                    validity=jnp.ones((k, _NU), bool), um=_UM)
+    for g, gv, l in zip(jax.tree.leaves(got), jax.tree.leaves(gotv),
+                        jax.tree.leaves(stacked)):
+        want = np.asarray(l).mean(axis=0)
+        np.testing.assert_allclose(np.asarray(g), want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(gv), want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=1, max_value=6),
+       st.floats(min_value=0.0, max_value=2.0),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=25)
+def test_merge_never_divides_by_zero(k, alpha, seed):
+    """A unit NO valid client uploaded must come out finite: equal to the
+    fallback (recycled prev_update) when given, zeros otherwise."""
+    rng = np.random.default_rng(seed)
+    stacked = _stacked(rng, k)
+    stal = jnp.asarray(rng.integers(0, 10, k), jnp.int32)
+    v = np.ones((k, _NU), bool)
+    dead = int(rng.integers(0, _NU))
+    v[:, dead] = False                          # nobody uploaded this unit
+    fb = {"a": jnp.full((3,), 7.0, jnp.float32),
+          "b": jnp.full((2, 2), 7.0, jnp.float32)}
+    got = staleness_weighted_merge(stacked, stal, alpha,
+                                   validity=jnp.asarray(v), um=_UM,
+                                   fallback=fb)
+    got0 = staleness_weighted_merge(stacked, stal, alpha,
+                                    validity=jnp.asarray(v), um=_UM)
+    for i, (g, g0, f, l) in enumerate(zip(
+            jax.tree.leaves(got), jax.tree.leaves(got0),
+            jax.tree.leaves(fb), jax.tree.leaves(stacked))):
+        assert np.all(np.isfinite(np.asarray(g)))
+        u = _UM.leaf_unit[i]
+        if u == dead:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(f))
+            np.testing.assert_array_equal(np.asarray(g0),
+                                          np.zeros_like(np.asarray(g0)))
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=2, max_value=6),
+       st.floats(min_value=0.0, max_value=2.0),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=25)
+def test_merge_invariant_to_buffer_permutation(k, alpha, seed):
+    """FedBuff semantics: the server must not care in which order the
+    buffer filled (permute deltas + staleness + validity together)."""
+    rng = np.random.default_rng(seed)
+    stacked = _stacked(rng, k)
+    stal = jnp.asarray(rng.integers(0, 10, k), jnp.int32)
+    v = rng.random((k, _NU)) < 0.7
+    v[0] = True
+    perm = rng.permutation(k)
+    a = staleness_weighted_merge(stacked, stal, alpha,
+                                 validity=jnp.asarray(v), um=_UM)
+    b = staleness_weighted_merge(
+        jax.tree.map(lambda l: l[perm], stacked), stal[perm], alpha,
+        validity=jnp.asarray(v[perm]), um=_UM)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_merge_depth_granularity_units():
+    """The validity merge follows (start, L) stacked depth units too."""
+    template = {"blocks": {"w": jnp.zeros((3, 4), jnp.float32)}}
+    um = build_units(template, "depth")         # 3 units, one per slice
+    assert len(um.names) == 3
+    rng = np.random.default_rng(0)
+    stacked = {"blocks": {"w": jnp.asarray(rng.standard_normal((2, 3, 4)),
+                                           jnp.float32)}}
+    v = jnp.asarray([[True, False, False], [True, True, False]])
+    fb = {"blocks": {"w": jnp.full((3, 4), -1.0, jnp.float32)}}
+    got = np.asarray(staleness_weighted_merge(
+        stacked, jnp.zeros(2, jnp.int32), 0.5, validity=v, um=um,
+        fallback=fb)["blocks"]["w"])
+    raw = np.asarray(stacked["blocks"]["w"])
+    np.testing.assert_allclose(got[0], raw[:, 0].mean(0), rtol=1e-5)  # both
+    # only k=1 uploaded slice 1: k=0's weight mass goes to the fallback
+    np.testing.assert_allclose(got[1], 0.5 * raw[1, 1] + 0.5 * (-1.0),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(got[2], -np.ones((4,)))             # fallback
+    # without a fallback the valid subset renormalizes to full weight
+    got0 = np.asarray(staleness_weighted_merge(
+        stacked, jnp.zeros(2, jnp.int32), 0.5, validity=v,
+        um=um)["blocks"]["w"])
+    np.testing.assert_allclose(got0[1], raw[1, 1], rtol=1e-5)
+    np.testing.assert_array_equal(got0[2], np.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# gumbel_topk_mask matches Plackett-Luce marginals (satellite: statistical)
+# ---------------------------------------------------------------------------
+
+
+def _pl_top2_inclusion(p: np.ndarray) -> np.ndarray:
+    """Exact P(i in top-2) under sequential (Plackett-Luce) sampling w/o
+    replacement: P(i first) + sum_j P(j first) P(i second | j first)."""
+    n = len(p)
+    inc = np.zeros(n)
+    for i in range(n):
+        inc[i] = p[i] + sum(p[j] * p[i] / (1.0 - p[j])
+                            for j in range(n) if j != i)
+    return inc
+
+
+@pytest.mark.slow
+def test_gumbel_topk_matches_plackett_luce_marginals():
+    p = np.asarray([0.5, 0.25, 0.15, 0.10])
+    want = _pl_top2_inclusion(p)
+    keys = jax.random.split(jax.random.PRNGKey(42), 2000)
+    masks = jax.vmap(lambda k: gumbel_topk_mask(k, jnp.log(jnp.asarray(p)), 2))(keys)
+    masks = np.asarray(masks)
+    assert np.all(masks.sum(axis=1) == 2)       # always exactly delta units
+    freq = masks.mean(axis=0)
+    # binomial sd at 2000 draws is <= 0.011; 0.045 is a > 4-sigma band
+    np.testing.assert_allclose(freq, want, atol=0.045)
+
+
+def test_select_recycle_set_clamps_delta_to_n():
+    s = jnp.asarray([0.1, 0.5, 0.2, 0.9])
+    g = jnp.ones((4,))
+    for delta in (4, 7, 100):
+        mask = select_recycle_set(jax.random.PRNGKey(0), "luar", delta,
+                                  s=s, grad_sq=g)
+        assert bool(jnp.all(mask))              # delta >= n selects everything
+
+
+# ---------------------------------------------------------------------------
+# staleness-conditioned selection
+# ---------------------------------------------------------------------------
+
+
+def test_recycle_probs_staleness_penalty_damps_stale_units():
+    s = jnp.asarray([1.0, 1.0, 1.0])
+    stal = jnp.asarray([0, 3, 0], jnp.int32)
+    base = np.asarray(recycle_probs(s))
+    pen = np.asarray(recycle_probs(s, stal, 0.5))
+    np.testing.assert_allclose(base, np.full(3, 1 / 3), rtol=1e-6)
+    assert pen[1] < base[1]                     # stale unit damped ...
+    assert pen[0] > base[0] and pen[2] > base[2]  # ... others boosted
+    assert np.isclose(pen.sum(), 1.0, atol=1e-6)
+
+
+def test_recycle_probs_penalty_zero_is_bitwise_noop():
+    s = jnp.asarray([0.3, 1.7, 0.9])
+    stal = jnp.asarray([5, 0, 2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(recycle_probs(s)),
+                                  np.asarray(recycle_probs(s, stal, 0.0)))
+
+
+def test_staleness_penalty_rotates_deterministic_selection():
+    """End-to-end through luar_round: the deterministic scheme recycles
+    the same units forever (unbounded staleness) unless the penalty
+    forces long-recycled units back into aggregation."""
+    params = cnn_init(jax.random.PRNGKey(0))
+    fresh = jax.tree.map(lambda a: 0.01 * jnp.ones_like(a), params)
+
+    def run(penalty):
+        cfg = LuarConfig(delta=3, granularity="module", scheme="deterministic",
+                         staleness_penalty=penalty)
+        state, um = luar_init(params, cfg, jax.random.PRNGKey(5))
+        worst = 0
+        for _ in range(12):
+            _, state = luar_round(state, um, cfg, fresh, params)
+            worst = max(worst, int(jnp.max(state.staleness)))
+        return worst, np.asarray(state.agg_count)
+
+    worst_off, _ = run(0.0)
+    worst_on, agg_on = run(2.0)
+    assert worst_off > 4                        # stuck without the penalty
+    assert worst_on < worst_off                 # penalty forces re-entry
+    assert np.all(agg_on > 0)                   # every unit aggregated
+
+
+@pytest.mark.parametrize("scheme", ["luar", "random", "grad_norm"])
+def test_staleness_penalty_keeps_exact_delta(scheme):
+    s = jnp.asarray([0.1, 0.5, 0.01, 2.0, 0.3])
+    g = jnp.asarray([1.0, 2.0, 0.5, 3.0, 0.1])
+    stal = jnp.asarray([4, 0, 9, 1, 0], jnp.int32)
+    mask = select_recycle_set(jax.random.PRNGKey(1), scheme, 2, s=s, grad_sq=g,
+                              staleness=stal, staleness_penalty=1.0)
+    assert int(jnp.sum(mask)) == 2
+
+
+# ---------------------------------------------------------------------------
+# luar_round mask override (per-unit fallback-to-recycle)
+# ---------------------------------------------------------------------------
+
+
+def test_luar_round_mask_override_recycles_per_unit():
+    params = cnn_init(jax.random.PRNGKey(0))
+    cfg = LuarConfig(delta=0, granularity="module")
+    state, um = luar_init(params, cfg, jax.random.PRNGKey(1))
+    fresh1 = jax.tree.map(lambda a: 0.2 * jnp.ones_like(a), params)
+    applied1, state = luar_round(state, um, cfg, fresh1, params)
+    fresh2 = jax.tree.map(lambda a: 0.7 * jnp.ones_like(a), params)
+    override = jnp.asarray([True, False, True, False])
+    applied2, state2 = luar_round(state, um, cfg, fresh2, params,
+                                  mask_override=override)
+    ov = np.asarray(override)
+    for u, a1, a2, f2 in zip(um.leaf_unit, jax.tree.leaves(applied1),
+                             jax.tree.leaves(applied2), jax.tree.leaves(fresh2)):
+        want = a1 if ov[u] else f2              # overridden -> prev_update
+        np.testing.assert_array_equal(np.asarray(a2), np.asarray(want))
+    # bookkeeping follows the effective mask, not state.mask (empty here)
+    np.testing.assert_array_equal(np.asarray(state2.staleness > 0), ov)
+    np.testing.assert_array_equal(np.asarray(state2.agg_count),
+                                  1 + (~ov).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# per-unit payload accounting (dispatched mask, not current)
+# ---------------------------------------------------------------------------
+
+
+def test_client_payload_bytes_per_unit_sums_to_total():
+    sizes = np.asarray([100.0, 200.0, 400.0])
+    mask = np.asarray([False, True, False])
+    cfg = _cfg(fedpaq_bits=8)
+    per_unit = client_payload_bytes_per_unit(sizes, mask, cfg)
+    assert per_unit.shape == (3,)
+    assert per_unit[1] == 0.0                   # recycled: never serialized
+    assert per_unit.sum() == client_payload_bytes(sizes, mask, cfg)
+    assert per_unit[0] == 100.0 * (8 / 32.0)
+
+
+def test_client_payload_bytes_per_unit_lbgm_scalar():
+    sizes = np.asarray([100.0, 200.0, 400.0])
+    mask = np.asarray([False, False, True])
+    sent = np.asarray([True, False, True])
+    cfg = _cfg(lbgm_threshold=0.5)
+    per_unit = client_payload_bytes_per_unit(sizes, mask, cfg, sent)
+    np.testing.assert_array_equal(per_unit, [100.0, 4.0, 0.0])
+    assert client_payload_bytes(sizes, mask, cfg, sent) == 104.0
+
+
+# ---------------------------------------------------------------------------
+# regression: PR-1 equivalence survives the ledger (no-staleness regime)
+# ---------------------------------------------------------------------------
+
+
+def test_fedbuff_one_round_matches_run_fl_bitwise(task):
+    """buffer=1, concurrency=1, uniform: the lone in-flight client always
+    sees the current version, so one fedbuff aggregation must replay one
+    run_fl round bit-for-bit (same RNG stream, same jitted client step,
+    identity merge, identical LUAR transition) with the ledger enabled."""
+    cfg = _cfg(luar=LuarConfig(delta=2), n_active=1, rounds=1)
+    ref = run_fl(task["loss_fn"], task["params"], task["data"], task["parts"],
+                 cfg, task["eval_fn"])
+    got = _run(task, cfg, SimConfig(scenario="uniform", mode="fedbuff",
+                                    buffer_size=1, concurrency=1))
+    assert _trees_equal(ref.params, got.params)
+    np.testing.assert_array_equal(np.asarray(ref.luar_state.mask),
+                                  np.asarray(got.luar_state.mask))
+    assert got.staleness_observed.max(initial=0) == 0
+    assert got.wasted_per_unit.sum() == 0.0
+
+
+@pytest.mark.slow
+def test_fedbuff_ledger_bitwise_inert_without_staleness(task):
+    """With buffer=1 and concurrency=1 no staleness can occur, so the
+    ledger machinery (validity merge + mask override + waste accounting)
+    must be bitwise invisible next to the PR-1 semantics."""
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=6)
+    base = dict(scenario="uniform", mode="fedbuff", buffer_size=1,
+                concurrency=1)
+    on = _run(task, cfg, SimConfig(mask_ledger=True, **base))
+    off = _run(task, cfg, SimConfig(mask_ledger=False, **base))
+    assert _trees_equal(on.params, off.params)
+    assert [h["acc"] for h in on.history] == [h["acc"] for h in off.history]
+    for r in (on, off):
+        assert r.staleness_observed.max(initial=0) == 0
+        assert r.wasted_per_unit.sum() == 0.0
+        assert r.wasted_upload_bytes == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the acceptance claim: the ledger eliminates wasted uplink end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fedbuff_ledger_zero_waste_under_heterogeneity(task):
+    """Heterogeneous fedbuff with real mask staleness: the ledger merge
+    uses every uploaded byte (per-unit waste exactly 0), whereas the
+    PR-1 merge demonstrably discards stale uploads."""
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    base = dict(scenario="bimodal", mode="fedbuff", buffer_size=4,
+                concurrency=8)
+    on = _run(task, cfg, SimConfig(mask_ledger=True, **base))
+    assert on.rounds_done == cfg.rounds
+    assert on.staleness_observed.max() > 0      # staleness actually occurred
+    assert on.ledger_misses == 0
+    np.testing.assert_array_equal(on.wasted_per_unit,
+                                  np.zeros_like(on.wasted_per_unit))
+    assert on.wasted_upload_bytes == 0.0
+    assert on.staleness_q is not None and on.staleness_q["max"] > 0
+
+    off = _run(task, cfg, SimConfig(mask_ledger=False, **base))
+    assert off.wasted_per_unit.sum() > 0        # PR-1 semantics waste bytes
+    assert off.wasted_upload_bytes == pytest.approx(off.wasted_per_unit.sum())
+    # the per-unit attribution only ever charges non-recycled uploads
+    assert np.all(off.wasted_per_unit >= 0)
+    assert on.history[-1]["acc"] > 0.5
+
+
+@pytest.mark.slow
+def test_fedbuff_ledger_eviction_counts_misses(task):
+    """capacity=1 forces every stale arrival's dispatch mask out of the
+    ring: those arrivals become ledger misses, are rejected outright
+    (excluded from the merge and from n_received), their full payload is
+    charged as waste per unit, and the run still completes."""
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    res = _run(task, cfg, SimConfig(scenario="bimodal", mode="fedbuff",
+                                    buffer_size=2, concurrency=8,
+                                    ledger_capacity=1))
+    assert res.rounds_done == cfg.rounds
+    assert res.ledger_misses > 0
+    assert res.wasted_upload_bytes > 0          # evicted payloads charged
+    assert res.wasted_per_unit.sum() == pytest.approx(res.wasted_upload_bytes)
+    # rejected arrivals are not accepted updates, but every accepted one
+    # still fed an aggregation of buffer_size updates
+    assert res.n_received >= cfg.rounds * 2
+    assert len(res.staleness_observed) == res.n_received
+
+
+@pytest.mark.slow
+def test_fedbuff_cutoff_charges_stranded_buffer(task):
+    """A truncated run (finite max_sim_time) can leave accepted uploads
+    in a partially filled buffer: they never reach a merge, so their
+    remaining payload must land on the waste ledger — the 'no uploaded
+    byte is silently dropped' invariant under truncation."""
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    base = dict(scenario="lognormal", mode="fedbuff", buffer_size=4,
+                concurrency=8)
+    full = _run(task, cfg, SimConfig(**base))
+    assert full.n_stranded_end == 0             # completed run: buffer empty
+    cut = _run(task, cfg, SimConfig(max_sim_time=0.6 * full.sim_time, **base))
+    assert cut.rounds_done < cfg.rounds
+    assert cut.sim_time <= 0.6 * full.sim_time + 1e-9   # exact cutoff
+    assert cut.n_stranded_end > 0
+    assert cut.wasted_upload_bytes > 0          # stranded payloads charged
+    assert cut.wasted_per_unit.sum() == pytest.approx(cut.wasted_upload_bytes)
+    assert cut.n_inflight_end > 0               # dispatches still in flight
+
+
+@pytest.mark.slow
+def test_fedbuff_staleness_penalty_end_to_end(task):
+    """The staleness-conditioned selection knob flows from LuarConfig
+    through the async engine: run completes and every unit keeps
+    aggregating (no unit starves under async lag)."""
+    cfg = _cfg(luar=LuarConfig(delta=2, staleness_penalty=0.5), rounds=10)
+    res = _run(task, cfg, SimConfig(scenario="bimodal", mode="fedbuff",
+                                    buffer_size=4, concurrency=8))
+    assert res.rounds_done == cfg.rounds
+    assert np.all(np.asarray(res.luar_state.agg_count) > 0)
+    assert res.history[-1]["acc"] > 0.5
+
+
+# ---------------------------------------------------------------------------
+# adaptive alpha (FedAsync, buffer_size=1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_adaptive_alpha_tracks_staleness_quantiles(task):
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=12)
+    res = _run(task, cfg, SimConfig(scenario="bimodal", mode="fedbuff",
+                                    buffer_size=1, concurrency=8,
+                                    staleness_alpha=0.5, adaptive_alpha=True))
+    assert res.rounds_done == cfg.rounds
+    assert res.staleness_q["q90"] > 0
+    assert len(set(res.alphas)) > 1             # the schedule actually moves
+    for a in res.alphas:                        # and stays in its clip band
+        assert 0.5 / 4 <= a <= 0.5 * 4
+
+
+def test_adaptive_alpha_without_staleness_is_base(task):
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=4)
+    res = _run(task, cfg, SimConfig(scenario="uniform", mode="fedbuff",
+                                    buffer_size=1, concurrency=1,
+                                    staleness_alpha=0.7, adaptive_alpha=True))
+    assert set(res.alphas) == {0.7}             # q90=0 -> alpha untouched
+
+
+@pytest.mark.slow
+def test_fedasync_alpha_scales_mixing_under_staleness(task):
+    """buffer_size=1 used to renormalize any discount away; with the
+    FedAsync mixing fix, alpha changes the trajectory exactly when
+    staleness occurs and is inert when it cannot."""
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=12)
+    stale = dict(scenario="bimodal", mode="fedbuff", buffer_size=1,
+                 concurrency=8)
+    a = _run(task, cfg, SimConfig(staleness_alpha=0.1, **stale))
+    b = _run(task, cfg, SimConfig(staleness_alpha=4.0, **stale))
+    assert a.staleness_observed.max() > 0
+    assert not _trees_equal(a.params, b.params)
+
+    calm_cfg = _cfg(luar=LuarConfig(delta=2), rounds=6)
+    calm = dict(scenario="uniform", mode="fedbuff", buffer_size=1,
+                concurrency=1)
+    c = _run(task, calm_cfg, SimConfig(staleness_alpha=0.1, **calm))
+    d = _run(task, calm_cfg, SimConfig(staleness_alpha=4.0, **calm))
+    assert _trees_equal(c.params, d.params)     # (1+0)^-alpha == 1 exactly
+
+
+# ---------------------------------------------------------------------------
+# LBGM: fenced under async, covered under sync (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_fedbuff_lbgm_raises_with_actionable_message(task):
+    cfg = _cfg(lbgm_threshold=0.5)
+    with pytest.raises(NotImplementedError) as exc:
+        _run(task, cfg, SimConfig(scenario="uniform", mode="fedbuff"))
+    msg = str(exc.value)
+    assert "lbgm_threshold=0" in msg            # knob 1: disable LBGM
+    assert "mode='sync'" in msg                 # knob 2: use the sync engine
+
+
+@pytest.mark.slow
+def test_sync_lbgm_sim_baseline_covered(task):
+    """The synchronous engine keeps full LBGM support: the run completes,
+    the dispatch ledger balances, and the comm accounting reflects the
+    4-byte scalar uploads of suppressed units."""
+    cfg = _cfg(lbgm_threshold=0.1, rounds=6)
+    res = _run(task, cfg, SimConfig(scenario="uniform"))
+    assert res.rounds_done == cfg.rounds
+    assert res.n_received == cfg.n_active * cfg.rounds
+    assert 0.0 < res.comm_ratio < 1.0           # some units went scalar
+    assert res.history[-1]["acc"] > 0.3

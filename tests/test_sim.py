@@ -155,6 +155,9 @@ def test_deadline_drops_stragglers(task):
     res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
                   cfg, fast, task["eval_fn"])
     assert res.n_stragglers > 0
+    # a straggler's uplink was spent and discarded: charged as waste
+    assert res.wasted_upload_bytes > 0
+    assert res.wasted_per_unit.sum() == pytest.approx(res.wasted_upload_bytes)
     assert res.sim_time <= 0.1 * cfg.rounds + 1e-9
     assert res.n_received + res.n_stragglers + res.n_dropped \
         == int(round(cfg.n_active * 1.5)) * cfg.rounds
