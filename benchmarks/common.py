@@ -11,12 +11,10 @@ prints the ``name,us_per_call,derived`` CSV contract.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import LuarConfig
 from repro.data.synthetic import gaussian_mixture, synthetic_images
@@ -61,8 +59,7 @@ def make_task(kind: str = "mixture", n_clients: int = 24, alpha: float = 0.1,
 
 def fl(task: Task, rounds: int = 30, *, luar: Optional[LuarConfig] = None,
        server: Optional[ServerConfig] = None, client: Optional[ClientConfig] = None,
-       fedpaq_bits: int = 0, lbgm_threshold: float = 0.0,
-       prune_keep: float = 0.0, dropout_rate: float = 0.0,
+       codecs: Tuple[str, ...] = (),
        n_active: int = 8, tau: int = 5, eval_every: int = 0) -> FLResult:
     cfg = FLConfig(
         n_clients=len(task.parts), n_active=n_active, tau=tau, batch_size=16,
@@ -70,8 +67,7 @@ def fl(task: Task, rounds: int = 30, *, luar: Optional[LuarConfig] = None,
         client=client or ClientConfig(lr=0.05),
         server=server or ServerConfig(),
         luar=luar or LuarConfig(),
-        fedpaq_bits=fedpaq_bits, lbgm_threshold=lbgm_threshold,
-        prune_keep=prune_keep, dropout_rate=dropout_rate,
+        codecs=tuple(codecs),
         eval_every=eval_every or rounds)
     return run_fl(task.loss_fn, task.params, task.data, task.parts, cfg,
                   task.eval_fn)

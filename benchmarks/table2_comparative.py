@@ -18,14 +18,21 @@ def rows(quick: bool = True):
 
     res, t = timed(lambda: fl(task, rounds))
     add("fedavg", res, t)
-    res, t = timed(lambda: fl(task, rounds, fedpaq_bits=8))
+    res, t = timed(lambda: fl(task, rounds, codecs=("fedpaq:8",)))
     add("fedpaq_8bit", res, t, comm=res.comm_ratio)
-    res, t = timed(lambda: fl(task, rounds, lbgm_threshold=0.9))
+    res, t = timed(lambda: fl(task, rounds, codecs=("lbgm:0.9",)))
     add("lbgm", res, t)
-    res, t = timed(lambda: fl(task, rounds, prune_keep=0.25))
+    res, t = timed(lambda: fl(task, rounds, codecs=("prune:0.25",)))
     add("prunefl_25pct", res, t, comm=res.comm_ratio)
-    res, t = timed(lambda: fl(task, rounds, dropout_rate=0.5))
+    res, t = timed(lambda: fl(task, rounds, codecs=("dropout:0.5",)))
     add("feddropoutavg", res, t, comm=res.comm_ratio)
+    # stages the legacy scalar flags could not express: global top-k with
+    # value+index pricing, and the quantize+sparsify stack wrapped in
+    # per-round error feedback
+    res, t = timed(lambda: fl(task, rounds, codecs=("topk:0.1",)))
+    add("topk_10pct", res, t, comm=res.comm_ratio)
+    res, t = timed(lambda: fl(task, rounds, codecs=("fedpaq:4", "topk:0.1", "ef")))
+    add("paq4_topk_ef", res, t, comm=res.comm_ratio)
     res, t = timed(lambda: fl(task, rounds,
                               luar=LuarConfig(delta=delta, mode="drop",
                                               granularity="leaf")))

@@ -14,7 +14,7 @@ def rows(quick: bool = True):
         "fedprox": dict(client=ClientConfig(lr=0.05, prox_mu=0.001)),
         "fedopt": dict(server=ServerConfig(kind="fedopt", lr=0.2)),
         "fedacg": dict(server=ServerConfig(kind="fedacg", acg_lambda=0.5)),
-        "fedpaq": dict(fedpaq_bits=8),
+        "fedpaq": dict(codecs=("fedpaq:8",)),
     }
     out = []
     for name, kw in variants.items():

@@ -12,9 +12,11 @@ same upload-dominated regime as the paper-scale workloads.
 """
 from __future__ import annotations
 
+import argparse
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from repro.compress import split_codec_specs
 from repro.configs.base import get_scenario
 from repro.core import LuarConfig
 from repro.core.units import build_units
@@ -22,7 +24,7 @@ from repro.fl.client import ClientConfig
 from repro.fl.rounds import FLConfig
 from repro.sim import SimConfig, run_sim, time_to_target
 
-from benchmarks.common import Task, make_task, timed
+from benchmarks.common import Task, emit, make_task, timed
 
 
 def scaled_scenario(name: str, model_bytes: float):
@@ -37,23 +39,29 @@ def scaled_scenario(name: str, model_bytes: float):
 ALGOS: List[Tuple[str, Dict]] = [
     ("fedavg", dict()),
     ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf"))),
-    ("fedpaq", dict(fedpaq_bits=8)),
+    ("fedpaq", dict(codecs=("fedpaq:8",))),
     ("fedluar_paq", dict(luar=LuarConfig(delta=2, granularity="leaf"),
-                         fedpaq_bits=8)),
+                         codecs=("fedpaq:8",))),
 ]
 
 
-def rows(quick: bool = True):
+def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
     task: Task = make_task("mixture" if quick else "femnist")
     rounds = 30 if quick else 60
     target = 0.9 if quick else 0.7
     um = build_units(task.params, "leaf")
     model_bytes = float(sum(um.unit_bytes))
 
+    algos = list(ALGOS)
+    if codec_specs:
+        # a user-declared codec stack (CLI --codecs), composed with LUAR
+        algos.append(("codec_" + "+".join(codec_specs),
+                      dict(luar=LuarConfig(delta=2, granularity="leaf"),
+                           codecs=tuple(codec_specs))))
     out = []
     for scen in ("uniform", "lognormal", "bimodal"):
         sc = scaled_scenario(scen, model_bytes)
-        for algo, kw in ALGOS:
+        for algo, kw in algos:
             cfg = FLConfig(n_clients=len(task.parts), n_active=8, tau=5,
                            batch_size=16, rounds=rounds,
                            client=ClientConfig(lr=0.05), eval_every=2, **kw)
@@ -93,3 +101,19 @@ def rows(quick: bool = True):
             "stal_q90": res.staleness_q["q90"] if res.staleness_q else 0.0,
         }))
     return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (synthetic FEMNIST + CNN)")
+    ap.add_argument("--codecs", default="",
+                    help="extra row: update-codec stack as '+'-separated "
+                         "spec strings, e.g. 'fedpaq:4+topk:0.1+ef'")
+    args = ap.parse_args(argv)
+    specs = split_codec_specs(args.codecs)
+    emit(rows(quick=not args.full, codec_specs=specs or None))
+
+
+if __name__ == "__main__":
+    main()

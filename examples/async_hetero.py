@@ -52,7 +52,7 @@ TARGET_LOSS = 0.35
 ALGOS = [
     ("fedavg", dict()),
     ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf"))),
-    ("fedpaq", dict(fedpaq_bits=8)),
+    ("fedpaq", dict(codecs=("fedpaq:8",))),
 ]
 
 
@@ -98,6 +98,10 @@ FEDBUFF_ROWS = [
     ("fedluar/pen", dict(luar=LuarConfig(delta=2, granularity="leaf",
                                          staleness_penalty=1.0)), True),
     ("fedluar/nl", dict(luar=LuarConfig(delta=2, granularity="leaf")), False),
+    # a full codec stack (4-bit quantize -> global top-10% -> per-client
+    # error feedback) composed with recycling, still zero wasted uplink
+    ("fedluar/stk", dict(luar=LuarConfig(delta=2, granularity="leaf"),
+                         codecs=("fedpaq:4", "topk:0.1", "ef")), True),
 ]
 for name, kw, ledger in FEDBUFF_ROWS:
     res = run_sim(loss_fn, params, {"x": x, "y": y}, parts, fl_cfg(**kw),

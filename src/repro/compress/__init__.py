@@ -1,0 +1,18 @@
+"""repro.compress — composable update-codec pipeline.
+
+One protocol (``UpdateCodec``), one composition rule (``CodecPipeline``),
+one declaration syntax (spec strings via the registry) for the whole
+client->server compressor stack:
+
+    from repro.compress import parse_codecs
+    pipe = parse_codecs(("fedpaq:4", "topk:0.1", "ef"))
+    state = pipe.init_state(params, um)
+    update, state, aux = pipe.encode(state, update, key)      # jit-safe
+    bytes_per_unit = pipe.price_per_unit(sizes, mask, aux)    # host f64
+"""
+from repro.compress.codec import CodecPipeline, UpdateCodec  # noqa: F401
+from repro.compress.codecs import (DropoutAvg, ErrorFeedback, FedPAQ,  # noqa: F401
+                                   LBGM, Prune, TopK)
+from repro.compress.registry import (CODECS, legacy_codec_specs,  # noqa: F401
+                                     parse_codec, parse_codecs,
+                                     register_codec, split_codec_specs)

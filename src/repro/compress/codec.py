@@ -1,0 +1,192 @@
+"""The update-codec protocol and the composable pipeline.
+
+An ``UpdateCodec`` is one stage of the client->server upload path: it
+transforms the update tree (jit-traceably), optionally threads per-round
+state (LBGM anchors, EF residuals), and prices its own wire format
+host-side.  A ``CodecPipeline`` chains stages so the whole compressor
+stack is declared as data — ``FLConfig.codecs = ("fedpaq:4", "topk:0.1",
+"ef")`` — instead of hard-coded flags re-implemented at every call site.
+
+Protocol (all device-side methods are jit-traceable):
+
+  init_state(params, um) -> state
+      Per-pipeline (sync engines: the cohort-mean "virtual client") or
+      per-client (fedbuff engine) codec state; None for stateless
+      stages.  Stages that need the unit map (LBGM, TopK) bind it here,
+      so a pipeline instance belongs to ONE model after init_state.
+  encode(state, update, key) -> (encoded, state, aux)
+      The lossy/lossless transform.  ``encoded`` is the value-domain
+      reconstruction the server works with (a real transport would
+      serialize the wire form; the simulator transmits the decoded
+      values and prices the wire bytes separately).  ``aux`` is the
+      per-round pricing evidence (LBGM's sent-full mask, TopK's
+      per-unit survivor counts) or None.
+  decode(state, encoded) -> update
+      Explicit inverse hook; identity for every stage here because
+      ``encode`` already returns decoded-domain values.
+  commit(state, injected, final) -> state
+      Post-pipeline hook (``needs_commit = True`` stages only): called
+      once per encode pass with the value the stage injected and the
+      final pipeline output, so error-feedback can measure exactly what
+      the downstream stages destroyed.
+  price_per_unit(per_unit, sizes, mask, aux) -> np.ndarray
+      HOST-side float64 pricing, composable: receives the running
+      per-unit byte array (already gated by the dispatched recycle mask
+      — composes with the dispatched-mask pricing of the async waste
+      ledger) and returns the refined one.  ``aux=None`` must price a
+      conservative nominal (used for dispatch-time wall-clock estimates
+      and rejected payloads whose encode never ran).
+
+Ordering: stages encode in listed order — wire order for the lossy
+stack — EXCEPT error-feedback stages, which the pipeline hoists to the
+front.  EF compensates the error of everything downstream of it, so
+``("fedpaq:4", "topk:0.1", "ef")`` reads naturally ("quantize, sparsify,
+with error feedback") and still puts the residual injection before the
+lossy stages, the only position where EF21-style compensation is
+well-defined.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.units import UnitMap
+
+Params = Any
+
+
+class UpdateCodec:
+    """Base stage: identity transform, dense pricing, no state."""
+
+    name: str = "identity"
+    stateful: bool = False          # True -> per-client state under async
+    needs_commit: bool = False      # True -> commit() sees the final output
+    requires_sync: bool = False     # True -> the stage's state is anchored
+                                    # to a synchronous server view; async
+                                    # engines must reject it (declared by
+                                    # the stage, not special-cased by name
+                                    # in the engines)
+
+    def init_state(self, params: Params, um: UnitMap):
+        return None
+
+    def encode(self, state, update: Params, key):
+        return update, state, None
+
+    def decode(self, state, encoded: Params) -> Params:
+        return encoded
+
+    def commit(self, state, injected: Params, final: Params):
+        return state
+
+    def price_per_unit(self, per_unit: np.ndarray, sizes: np.ndarray,
+                       mask: np.ndarray, aux=None) -> np.ndarray:
+        return per_unit
+
+    def spec(self) -> str:
+        """The spec string that reconstructs this stage (see registry)."""
+        return self.name
+
+    def __repr__(self) -> str:
+        return f"<codec {self.spec()}>"
+
+
+class CodecPipeline:
+    """An ordered stack of ``UpdateCodec`` stages.
+
+    State is threaded per stage as a tuple (position-aligned with
+    ``stages``), so the whole pipeline state is one jit-friendly pytree.
+    ``needs_commit`` stages are hoisted to the front at construction
+    (stable order otherwise) — see the module docstring.
+    """
+
+    def __init__(self, stages: Sequence[UpdateCodec]):
+        front = [s for s in stages if s.needs_commit]
+        rest = [s for s in stages if not s.needs_commit]
+        self.stages: Tuple[UpdateCodec, ...] = tuple(front + rest)
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def __bool__(self) -> bool:
+        return bool(self.stages)
+
+    @property
+    def stateful(self) -> bool:
+        return any(s.stateful for s in self.stages)
+
+    def has(self, name: str) -> bool:
+        return any(s.name == name for s in self.stages)
+
+    def sync_only_specs(self) -> Tuple[str, ...]:
+        """Specs of stages that cannot run under async engines."""
+        return tuple(s.spec() for s in self.stages if s.requires_sync)
+
+    def specs(self) -> Tuple[str, ...]:
+        return tuple(s.spec() for s in self.stages)
+
+    def __repr__(self) -> str:
+        return f"CodecPipeline{self.specs()}"
+
+    # -- device side --------------------------------------------------------
+
+    def init_state(self, params: Params, um: UnitMap) -> tuple:
+        return tuple(s.init_state(params, um) for s in self.stages)
+
+    def encode(self, states: tuple, update: Params, key):
+        """Run every stage in order; returns (encoded, states, auxes).
+
+        Each stage gets an independent key (``fold_in`` of the round key
+        by stage index).  ``needs_commit`` stages additionally observe
+        the final pipeline output so they can close their feedback loop.
+        """
+        new_states = list(states)
+        auxes = []
+        injected = {}
+        x = update
+        for i, (stage, st) in enumerate(zip(self.stages, states)):
+            x, st, aux = stage.encode(st, x, jax.random.fold_in(key, i))
+            new_states[i] = st
+            auxes.append(aux)
+            if stage.needs_commit:
+                injected[i] = x
+        for i, v in injected.items():
+            new_states[i] = self.stages[i].commit(new_states[i], v, x)
+        return x, tuple(new_states), tuple(auxes)
+
+    def decode(self, states: tuple, encoded: Params) -> Params:
+        """Inverse map, last stage first (identity for value-domain
+        stages — kept explicit so lossless round-trip properties are
+        statable)."""
+        x = encoded
+        for stage, st in zip(reversed(self.stages), reversed(states)):
+            x = stage.decode(st, x)
+        return x
+
+    # -- host side ----------------------------------------------------------
+
+    def price_per_unit(self, sizes: np.ndarray, mask: np.ndarray,
+                       auxes: Optional[tuple] = None) -> np.ndarray:
+        """ONE client's upload bytes PER UNIT (host-side float64).
+
+        ``mask`` is the recycle mask the client DOWNLOADED at dispatch
+        (units inside it are never serialized); ``auxes`` is the tuple
+        ``encode`` returned, or None for the conservative nominal price
+        (dispatch-time estimates, rejected payloads).
+        """
+        mask = np.asarray(mask, bool)
+        sizes = np.asarray(sizes, np.float64)
+        per_unit = np.where(mask, 0.0, sizes)
+        for i, stage in enumerate(self.stages):
+            aux = None if auxes is None else auxes[i]
+            aux = None if aux is None else np.asarray(aux)
+            per_unit = stage.price_per_unit(per_unit, sizes, mask, aux)
+        return per_unit
+
+    def price_bytes(self, sizes: np.ndarray, mask: np.ndarray,
+                    auxes: Optional[tuple] = None) -> float:
+        return float(self.price_per_unit(sizes, mask, auxes).sum())

@@ -1,0 +1,93 @@
+"""Codec registry and the spec-string grammar.
+
+Grammar (one stage per spec string):
+
+    spec   ::= name [":" arg ("," arg)*]
+    name   ::= registered codec name        (fedpaq | prune | dropout |
+                                             lbgm | topk | ef | ...)
+    arg    ::= int | float                  (positional, passed to the
+                                             codec constructor)
+
+Examples: ``"fedpaq:4"``, ``"topk:0.1"``, ``"ef"``,
+``("fedpaq:4", "topk:0.1", "ef")``.  A single string may also carry a
+whole stack separated by ``+`` (CLI-friendly): ``"fedpaq:4+topk:0.1+ef"``.
+
+``legacy_codec_specs`` is the deprecation shim: it maps the four retired
+``FLConfig`` scalar flags onto the equivalent spec tuple, in the exact
+order the old hard-coded stack applied them (fedpaq -> prune -> dropout
+-> lbgm), so legacy configs run bit-for-bit through the pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple, Type, Union
+
+from repro.compress.codec import CodecPipeline, UpdateCodec
+from repro.compress.codecs import (DropoutAvg, ErrorFeedback, FedPAQ, LBGM,
+                                   Prune, TopK)
+
+CODECS: Dict[str, Type[UpdateCodec]] = {}
+
+
+def register_codec(cls: Type[UpdateCodec]) -> Type[UpdateCodec]:
+    """Register a codec class under ``cls.name`` (usable as decorator)."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls!r} has no codec name")
+    CODECS[cls.name] = cls
+    return cls
+
+
+for _cls in (FedPAQ, Prune, DropoutAvg, LBGM, TopK, ErrorFeedback):
+    register_codec(_cls)
+
+
+def _parse_arg(tok: str) -> Union[int, float]:
+    tok = tok.strip()
+    try:
+        return int(tok)
+    except ValueError:
+        try:
+            return float(tok)
+        except ValueError:
+            raise ValueError(f"codec arg {tok!r} is not a number") from None
+
+
+def parse_codec(spec: str) -> UpdateCodec:
+    """One spec string -> one codec instance."""
+    name, _, argstr = spec.strip().partition(":")
+    name = name.strip()
+    if name not in CODECS:
+        raise ValueError(f"unknown codec {name!r} in spec {spec!r}; "
+                         f"registered: {sorted(CODECS)}")
+    args = [_parse_arg(a) for a in argstr.split(",") if a.strip()] if argstr else []
+    return CODECS[name](*args)
+
+
+def split_codec_specs(specs: Union[str, Sequence[str]]) -> Tuple[str, ...]:
+    """Normalize a codec-stack declaration to a tuple of spec strings.
+
+    Accepts either a sequence of per-stage specs or one '+'-joined
+    string (the CLI form) — the ONE place the '+' grammar lives."""
+    if isinstance(specs, str):
+        specs = specs.split("+")
+    return tuple(s.strip() for s in specs if s.strip())
+
+
+def parse_codecs(specs: Union[str, Sequence[str]]) -> CodecPipeline:
+    """Spec strings -> a ``CodecPipeline`` (empty specs -> identity)."""
+    return CodecPipeline([parse_codec(s) for s in split_codec_specs(specs)])
+
+
+def legacy_codec_specs(fedpaq_bits: int = 0, prune_keep: float = 0.0,
+                       dropout_rate: float = 0.0,
+                       lbgm_threshold: float = 0.0) -> Tuple[str, ...]:
+    """The retired FLConfig scalar flags as an equivalent spec tuple."""
+    out: List[str] = []
+    if fedpaq_bits:
+        out.append(f"fedpaq:{int(fedpaq_bits)}")
+    if prune_keep:
+        out.append(f"prune:{float(prune_keep):g}")
+    if dropout_rate:
+        out.append(f"dropout:{float(dropout_rate):g}")
+    if lbgm_threshold:
+        out.append(f"lbgm:{float(lbgm_threshold):g}")
+    return tuple(out)

@@ -8,8 +8,8 @@ family (<=2 layers, d_model<=512, <=4 experts).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -272,9 +272,14 @@ class SimScenario:
       bimodal   — "mobile vs datacenter": a ``fast_fraction`` of clients
                   gets ``fast_speedup``x compute and ``fast_bw_scale``x
                   bandwidth; the rest are the slow mobile mode
+      diurnal   — identical clients whose LINK bandwidth varies over
+                  VIRTUAL TIME on a sinusoidal day/night cycle
+                  (``bw_period`` seconds, ``bw_amplitude`` relative
+                  swing); the engines look the multiplier up per
+                  dispatch via ``repro.sim.profiles.bandwidth_multiplier``
     """
     name: str = "uniform"
-    kind: str = "uniform"            # uniform | lognormal | bimodal
+    kind: str = "uniform"            # uniform | lognormal | bimodal | diurnal
     step_time: float = 0.02          # mean seconds per local SGD step
     up_bw: float = 1.0e6             # mean uplink bytes/s (mobile-grade)
     down_bw: float = 8.0e6           # mean downlink bytes/s (asymmetric link)
@@ -283,6 +288,10 @@ class SimScenario:
     fast_speedup: float = 20.0       # bimodal: compute multiple
     fast_bw_scale: float = 50.0      # bimodal: bandwidth multiple
     dropout: float = 0.0             # per-dispatch client-vanish probability
+    # diurnal cycle (kind="diurnal"): bw(t) = mean * (1 + A sin(2pi t/P + phi))
+    bw_period: float = 600.0         # P, virtual seconds per cycle
+    bw_amplitude: float = 0.0        # A in [0, 1); 0 = constant bandwidth
+    bw_phase: float = 0.0            # phi, radians (0 = cycle starts at mean)
 
     def replace(self, **kw) -> "SimScenario":
         return dataclasses.replace(self, **kw)
@@ -296,6 +305,11 @@ SIM_SCENARIOS: Dict[str, SimScenario] = {
     # bimodal + flaky mobile devices (straggler/dropout stress)
     "bimodal_flaky": SimScenario("bimodal_flaky", "bimodal", step_time=0.04,
                                  up_bw=4.0e5, down_bw=6.0e6, dropout=0.1),
+    # day/night link-quality cycle: +-60% bandwidth swing every 600 virtual
+    # seconds (time-varying-bandwidth open item; the codec pipeline prices
+    # the payload, the cycle prices the seconds per byte)
+    "diurnal": SimScenario("diurnal", "diurnal", bw_period=600.0,
+                           bw_amplitude=0.6),
 }
 
 

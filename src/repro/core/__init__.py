@@ -8,9 +8,7 @@ from repro.core.comm import (  # noqa: F401
     compute_time,
     download_time,
     masked_upload_bytes,
-    payload_scale,
     round_trip_time,
-    round_upload_bytes,
     server_memory_bytes,
     upload_time,
 )

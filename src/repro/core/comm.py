@@ -6,8 +6,12 @@ clients.  All ratios are relative to FedAvg (delta=0) as in the paper.
 
 Cumulative byte accounting is HOST-side (Python float64/int): a float32
 device scalar silently loses integer precision past ~16M bytes, which a
-single transformer round exceeds.  ``round_upload_bytes`` stays a
-device-side helper for jitted code paths.
+single transformer round exceeds.  Compressor pricing is the codec
+pipeline's job (``repro.compress.CodecPipeline.price_per_unit``); the
+helpers here only gate raw unit bytes by the recycle mask, or accept
+already-priced payload bytes (the old device-side ``round_upload_bytes``
+and hand-maintained ``payload_scale`` duplicated that pricing and could
+diverge from the host ledger, so they are gone).
 
 The wall-clock model prices one client round trip as
 
@@ -18,10 +22,8 @@ systems-level payoff the event-driven simulator measures.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.units import UnitMap
@@ -36,32 +38,16 @@ def comm_init() -> CommStats:
     return CommStats(0.0, 0)
 
 
-def round_upload_bytes(um: UnitMap, mask: jax.Array, n_active: int) -> jax.Array:
-    """Bytes uploaded this round given recycle mask R_t (device-side)."""
-    sizes = jnp.asarray(um.unit_bytes, jnp.float32)
-    return jnp.sum(jnp.where(mask, 0.0, sizes)) * n_active
-
-
 def masked_upload_bytes(um: UnitMap, mask: Any, scale: float = 1.0) -> float:
     """Host-side payload bytes of ONE client upload under recycle mask R_t.
 
-    ``scale`` folds in orthogonal compressors (FedPAQ bits/32, pruning,
-    dropout) exactly as the round engine accounts them."""
+    ``scale`` is a plain multiplier for callers that already know their
+    compression ratio; exact compressor pricing routes through
+    ``CodecPipeline.price_per_unit`` instead (pass the result to the
+    ``payload_bytes`` override of ``upload_time``/``round_trip_time``)."""
     sizes = np.asarray(um.unit_bytes, np.float64)
     mask = np.asarray(mask, bool)
     return float(sizes[~mask].sum()) * scale
-
-
-def payload_scale(fedpaq_bits: int = 0, prune_keep: float = 0.0,
-                  dropout_rate: float = 0.0) -> float:
-    """Relative upload size of the compressor stack (1.0 = dense fp32)."""
-    scale = (fedpaq_bits / 32.0) if fedpaq_bits else 1.0
-    if prune_keep:
-        # sparse upload: values + indices ~= 2 * keep_fraction
-        scale *= min(2.0 * prune_keep, 1.0)
-    if dropout_rate:
-        scale *= (1.0 - dropout_rate)
-    return scale
 
 
 def comm_update(stats: CommStats, um: UnitMap, mask: Any,
@@ -121,13 +107,21 @@ def compute_time(tau: int, res: ClientResources) -> float:
 
 
 def upload_time(um: UnitMap, mask: Any, res: ClientResources,
-                scale: float = 1.0) -> float:
-    """Mask-aware: units in R_t are never serialized to the uplink."""
-    return masked_upload_bytes(um, mask, scale) / res.up_bw
+                scale: float = 1.0,
+                payload_bytes: Optional[float] = None) -> float:
+    """Mask-aware: units in R_t are never serialized to the uplink.
+
+    ``payload_bytes`` (codec-pipeline-priced) overrides the mask-gated
+    raw bytes, so the wall-clock model and the byte ledger price the
+    same stack."""
+    if payload_bytes is None:
+        payload_bytes = masked_upload_bytes(um, mask, scale)
+    return payload_bytes / res.up_bw
 
 
 def round_trip_time(um: UnitMap, mask: Any, res: ClientResources, tau: int,
-                    scale: float = 1.0) -> float:
+                    scale: float = 1.0,
+                    payload_bytes: Optional[float] = None) -> float:
     """Dispatch-to-arrival latency of one client round."""
     return (download_time(um, res) + compute_time(tau, res)
-            + upload_time(um, mask, res, scale))
+            + upload_time(um, mask, res, scale, payload_bytes))

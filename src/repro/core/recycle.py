@@ -16,7 +16,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.metric import s_metric, recycle_probs
+from repro.core.metric import s_metric
 from repro.core.selection import select_recycle_set
 from repro.core.units import UnitMap, build_units, n_units, select_per_leaf, unit_sq_norms
 

@@ -1,9 +1,18 @@
 """Algorithm 2 — the FedLUAR round engine (simulation form).
 
 One jitted ``round_step`` does: broadcast -> vmap'd client local training
-(tau SGD steps each) -> cohort mean -> LUAR (Alg. 1) -> server optimizer.
-The host loop only samples cohorts and minibatch indices (numpy RNG) and
-tracks communication bytes.
+(tau SGD steps each) -> cohort mean -> update-codec pipeline (the
+declared compressor stack, ``repro.compress``) -> LUAR (Alg. 1) ->
+server optimizer.  The host loop only samples cohorts and minibatch
+indices (numpy RNG) and tracks communication bytes via the pipeline's
+host-side pricing.
+
+The compressor stack is declared as ``FLConfig.codecs`` spec strings
+(e.g. ``("fedpaq:4", "topk:0.1", "ef")``); the retired scalar flags
+(``fedpaq_bits``/``lbgm_threshold``/``prune_keep``/``dropout_rate``)
+remain as a deprecation shim that builds the equivalent pipeline, so
+legacy configs keep working bit-for-bit.  LBGM is just a stateful codec
+stage now — there is no special-cased LBGM state in the round engine.
 
 At pod scale the same algorithm runs through launch/steps.py with the
 cohort mapped onto mesh axes; this module is the single-host simulator
@@ -11,19 +20,20 @@ used by tests, benchmarks and examples.
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from functools import lru_cache
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LuarConfig, luar_init, luar_round, payload_scale)
-from repro.fl import baselines
+from repro.compress import (CodecPipeline, legacy_codec_specs, parse_codecs,
+                            split_codec_specs)
+from repro.core import LuarConfig, luar_init, luar_round
 from repro.fl.client import ClientConfig, batched_local_updates
-from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point, mutate
+from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point
 
 Params = Any
 
@@ -39,11 +49,15 @@ class FLConfig:
     client: ClientConfig = field(default_factory=ClientConfig)
     server: ServerConfig = field(default_factory=ServerConfig)
     luar: LuarConfig = field(default_factory=LuarConfig)
-    # extra baselines composable with LUAR (Tables 2/3)
-    fedpaq_bits: int = 0            # 0 = off
-    lbgm_threshold: float = 0.0     # 0 = off
-    prune_keep: float = 0.0         # PruneFL-style magnitude keep-fraction
-    dropout_rate: float = 0.0       # FedDropoutAvg fdr
+    # the upload compressor stack (repro.compress): a tuple of codec spec
+    # strings, or one '+'-joined string ("fedpaq:4+topk:0.1+ef")
+    codecs: Tuple[str, ...] = ()
+    # DEPRECATED scalar flags (Tables 2/3 composition): shimmed onto the
+    # equivalent codec pipeline; mutually exclusive with ``codecs``
+    fedpaq_bits: int = 0            # 0 = off  -> "fedpaq:<bits>"
+    lbgm_threshold: float = 0.0     # 0 = off  -> "lbgm:<threshold>"
+    prune_keep: float = 0.0         # 0 = off  -> "prune:<keep>"
+    dropout_rate: float = 0.0       # 0 = off  -> "dropout:<rate>"
     eval_every: int = 5
 
 
@@ -55,6 +69,43 @@ class FLResult:
     unit_names: Optional[tuple] = None
     params: Any = None
     luar_state: Any = None
+
+
+def resolve_codec_specs(cfg: FLConfig) -> Tuple[str, ...]:
+    """The effective codec stack of a config.
+
+    ``cfg.codecs`` wins; the legacy scalar flags are shimmed onto the
+    equivalent spec tuple (with a DeprecationWarning) in the exact order
+    the old hard-coded stack applied them.  Mixing both is an error —
+    there would be no defined composition order."""
+    legacy = legacy_codec_specs(cfg.fedpaq_bits, cfg.prune_keep,
+                                cfg.dropout_rate, cfg.lbgm_threshold)
+    codecs = split_codec_specs(cfg.codecs)   # tuple of specs OR one
+    if codecs:                               # '+'-joined string, both fine
+        if legacy:
+            raise ValueError(
+                f"FLConfig mixes codecs={codecs} with legacy "
+                f"compressor flags (equivalent to {legacy}); declare the "
+                f"whole stack in `codecs`")
+        return codecs
+    if legacy:
+        warnings.warn(
+            f"FLConfig compressor flags are deprecated; use "
+            f"codecs={legacy}", DeprecationWarning, stacklevel=3)
+    return legacy
+
+
+def build_codec_pipeline(cfg: FLConfig) -> CodecPipeline:
+    """A fresh pipeline for this config (bind with ``init_state`` before
+    encoding; see repro.compress.codec)."""
+    return parse_codecs(resolve_codec_specs(cfg))
+
+
+@lru_cache(maxsize=128)
+def _pricing_pipeline(specs: Tuple[str, ...]) -> CodecPipeline:
+    """Cached pipelines for HOST-SIDE PRICING ONLY (never init_state'd
+    or encoded with, so sharing across models is safe)."""
+    return parse_codecs(specs)
 
 
 def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
@@ -69,70 +120,64 @@ def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
     return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
 
 
-def apply_compressors(update: Params, qkey, cfg: FLConfig) -> Params:
-    """The orthogonal upload-compressor stack (FedPAQ/PruneFL/DropoutAvg),
-    applied identically on the synchronous and buffered-async paths —
-    ``payload_scale`` prices exactly this sequence."""
-    if cfg.fedpaq_bits:
-        update = baselines.fedpaq_quantize(update, qkey, cfg.fedpaq_bits)
-    if cfg.prune_keep:
-        update = baselines.magnitude_prune(update, cfg.prune_keep)
-    if cfg.dropout_rate:
-        update = baselines.dropout_avg(update, qkey, cfg.dropout_rate)
-    return update
-
-
 def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
-                    cfg: FLConfig, um) -> Callable:
+                    cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None
+                    ) -> Callable:
     """Build the jitted synchronous round body (Alg. 2 lines 5-12).
 
     Shared by ``run_fl`` and by ``repro.sim``'s deadline engine so the
     event-driven simulator reproduces this trajectory bit-for-bit when
     heterogeneity is disabled: both paths run the SAME traced computation
-    on the same cohort batches."""
+    on the same cohort batches.
+
+    ``pipeline`` is the codec stack (built from ``cfg`` if omitted);
+    its state is threaded through ``round_step`` as one pytree, and the
+    returned ``aux`` tuple is the pricing evidence for
+    ``client_payload_bytes_per_unit``.  In this synchronous form the
+    pipeline encodes the cohort MEAN (one "virtual client" upload,
+    priced once per active client) — the per-client form lives in the
+    fedbuff engine."""
+    pipeline = build_codec_pipeline(cfg) if pipeline is None else pipeline
 
     @jax.jit
-    def round_step(params, luar_state, server_state, lbgm_state, batches, qkey):
+    def round_step(params, luar_state, server_state, codec_state, batches, qkey):
         start = broadcast_point(params, server_state, cfg.server)
         deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
         fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        fresh = apply_compressors(fresh, qkey, cfg)
-        lbgm_sent = None
-        if cfg.lbgm_threshold:
-            fresh, lbgm_state, lbgm_sent = baselines.lbgm_round(
-                lbgm_state, um, fresh, cfg.lbgm_threshold)
+        fresh, codec_state, aux = pipeline.encode(codec_state, fresh, qkey)
         applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
         params, server_state = apply_update(params, applied, server_state, cfg.server)
-        return params, luar_state, server_state, lbgm_state, lbgm_sent
+        return params, luar_state, server_state, codec_state, aux
 
     return round_step
 
 
 def client_payload_bytes_per_unit(sizes: np.ndarray, mask: np.ndarray,
                                   cfg: FLConfig,
-                                  lbgm_sent: Optional[np.ndarray] = None) -> np.ndarray:
+                                  aux: Optional[tuple] = None,
+                                  pipeline: Optional[CodecPipeline] = None
+                                  ) -> np.ndarray:
     """ONE client's upload bytes this round, PER UNIT (host-side float64).
 
     ``mask`` must be the recycle mask the client actually DOWNLOADED at
     dispatch — under buffered async that can be several versions older
     than the server's current mask, and pricing against the current one
     would misattribute bytes (the wasted-upload ledger in ``repro.sim``
-    is built on this distinction).  LBGM units that only ship a scalar
-    coefficient cost 4 bytes."""
-    up = ~np.asarray(mask, bool)
-    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
-    per_unit = np.where(up, np.asarray(sizes, np.float64) * scale, 0.0)
-    if lbgm_sent is not None:
-        sent = np.asarray(lbgm_sent, bool)
-        per_unit = np.where(up & ~sent, 4.0, per_unit)
-    return per_unit
+    is built on this distinction).  ``aux`` is the per-stage evidence
+    tuple an ``encode`` pass returned (LBGM sent masks, top-k survivor
+    counts); ``aux=None`` prices the conservative nominal."""
+    if pipeline is None:
+        pipeline = _pricing_pipeline(resolve_codec_specs(cfg))
+    return pipeline.price_per_unit(sizes, mask, aux)
 
 
 def client_payload_bytes(sizes: np.ndarray, mask: np.ndarray, cfg: FLConfig,
-                         lbgm_sent: Optional[np.ndarray] = None) -> float:
-    """ONE client's upload bytes this round: units outside R_t, shrunk by
-    the orthogonal compressor stack (host-side float64)."""
-    return float(client_payload_bytes_per_unit(sizes, mask, cfg, lbgm_sent).sum())
+                         aux: Optional[tuple] = None,
+                         pipeline: Optional[CodecPipeline] = None) -> float:
+    """ONE client's upload bytes this round: units outside R_t, priced by
+    the codec pipeline (host-side float64)."""
+    return float(client_payload_bytes_per_unit(sizes, mask, cfg, aux,
+                                               pipeline).sum())
 
 
 def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
@@ -148,8 +193,9 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     params = init_params
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
-    lbgm_state = baselines.lbgm_init(params, um) if cfg.lbgm_threshold else None
-    round_step = make_round_step(loss_fn, cfg, um)
+    pipeline = build_codec_pipeline(cfg)
+    codec_state = pipeline.init_state(params, um)
+    round_step = make_round_step(loss_fn, cfg, um, pipeline)
 
     result = FLResult()
     sizes = np.asarray(um.unit_bytes, np.float64)
@@ -164,10 +210,10 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
         key, qkey = jax.random.split(key)
         # upload accounting uses the CURRENT R_t (pre-round mask)
         mask_now = np.asarray(luar_state.mask)
-        params, luar_state, server_state, lbgm_state, lbgm_sent = round_step(
-            params, luar_state, server_state, lbgm_state, batches, qkey)
-        uploaded += client_payload_bytes(sizes, mask_now, cfg,
-                                         lbgm_sent) * cfg.n_active
+        params, luar_state, server_state, codec_state, aux = round_step(
+            params, luar_state, server_state, codec_state, batches, qkey)
+        uploaded += client_payload_bytes(sizes, mask_now, cfg, aux,
+                                         pipeline) * cfg.n_active
 
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1):
             metrics = dict(eval_fn(params))

@@ -8,7 +8,6 @@ written, and the two squared norms accumulate in SMEM across the grid.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,9 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compress import CodecPipeline
 from repro.core.recycle import LuarConfig, LuarState, luar_round
-from repro.core.units import UnitMap, build_units, select_per_leaf
+from repro.core.units import UnitMap, build_units
 from repro.models.registry import Model
 
 Params = Any
@@ -31,9 +32,12 @@ class TrainState(NamedTuple):
     params: Params
     momentum: Params
     luar: LuarState
+    codec: Any = None               # update-codec pipeline state (or None)
 
 
-def train_state_shapes(model: Model) -> Tuple[TrainState, UnitMap]:
+def train_state_shapes(model: Model,
+                       codec: Optional[CodecPipeline] = None
+                       ) -> Tuple[TrainState, UnitMap]:
     """abstract TrainState (ShapeDtypeStructs only, no allocation)."""
     params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     um = build_units(params, "leaf")
@@ -48,7 +52,10 @@ def train_state_shapes(model: Model) -> Tuple[TrainState, UnitMap]:
         round=sds((), jnp.int32),
         key=sds((2,), jnp.uint32),
     )
-    return TrainState(params=params, momentum=params, luar=luar), um
+    codec_sh = (jax.eval_shape(lambda p: codec.init_state(p, um), params)
+                if codec is not None else None)
+    return TrainState(params=params, momentum=params, luar=luar,
+                      codec=codec_sh), um
 
 
 def make_fedluar_train_step(
@@ -59,8 +66,18 @@ def make_fedluar_train_step(
     lr: float = 1e-3,
     momentum: float = 0.9,
     static_mask: Optional[Sequence[bool]] = None,
+    codec: Optional[CodecPipeline] = None,
 ) -> Callable:
-    """Returns step(state, batch) -> (state, loss)."""
+    """Returns step(state, batch) -> (state, loss).
+
+    ``codec`` (an update-codec pipeline, ``repro.compress``) encodes the
+    pre-aggregation update exactly where the cross-client all-reduce
+    sits at pod scale; its state rides in ``TrainState.codec``.  Only
+    the dynamic path supports it — the static path's whole point is
+    DCE-ing the collective, which a traced codec transform would defeat."""
+    if codec is not None and static_mask is not None:
+        raise ValueError("codec pipelines compose with the dynamic path "
+                         "only (static_mask bakes the collective away)")
 
     def step(state: TrainState, batch):
         loss, grads = jax.value_and_grad(model.train_loss)(state.params, batch)
@@ -70,10 +87,16 @@ def make_fedluar_train_step(
             new_m = jax.tree.map(lambda m, g: momentum * m + g,
                                  state.momentum, grads)
             update = jax.tree.map(lambda m: -lr * m, new_m)
+            codec_state = state.codec
+            if codec is not None:
+                update, codec_state, _ = codec.encode(
+                    codec_state, update,
+                    jax.random.fold_in(state.luar.key, 0x5EC))
             applied, luar = luar_round(state.luar, um, luar_cfg,
                                        update, state.params)
         else:
             # static schedule: recycled leaves never touch `grads`
+            codec_state = state.codec
             assert all(isinstance(u, int) for u in um.leaf_unit), \
                 "static scheduling requires leaf granularity (whole stacked " \
                 "tensors gate the collective; per-depth gating cannot DCE " \
@@ -102,7 +125,7 @@ def make_fedluar_train_step(
             )
 
         params = jax.tree.map(lambda p, d: p + d, state.params, applied)
-        return TrainState(params, new_m, luar), loss
+        return TrainState(params, new_m, luar, codec_state), loss
 
     return step
 

@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.configs import ARCH_IDS, get_config
@@ -102,7 +101,11 @@ def main(argv=None):
     ap.add_argument("--server", default="fedavg",
                     choices=["fedavg", "fedopt", "fedacg"])
     ap.add_argument("--prox-mu", type=float, default=0.0)
-    ap.add_argument("--fedpaq-bits", type=int, default=0)
+    ap.add_argument("--codecs", default="",
+                    help="update-codec stack as '+'-separated spec strings, "
+                         "e.g. 'fedpaq:4+topk:0.1+ef' (repro.compress)")
+    ap.add_argument("--fedpaq-bits", type=int, default=0,
+                    help="DEPRECATED: use --codecs fedpaq:<bits>")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
@@ -116,6 +119,7 @@ def main(argv=None):
         server=ServerConfig(kind=args.server),
         luar=LuarConfig(delta=args.delta, scheme=args.scheme, mode=args.mode,
                         granularity=gran),
+        codecs=args.codecs,
         fedpaq_bits=args.fedpaq_bits, eval_every=args.eval_every)
 
     t0 = time.time()

@@ -10,7 +10,6 @@ DESIGN.md §7).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict
 
 import jax

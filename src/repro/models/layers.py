@@ -9,7 +9,7 @@ matters for honest roofline numbers on mixtral / gemma3 / zamba2.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

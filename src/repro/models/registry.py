@@ -1,8 +1,7 @@
 """Family dispatch: build a functional Model bundle from a ModelConfig."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Callable, NamedTuple
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer

@@ -10,7 +10,7 @@ path — the scan runs per segment.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,14 @@ uploaded for a unit the CURRENT mask recycles.
 
 Both modes compose with the LUAR core: the recycle set R_t means clients
 skip those units on the uplink, which shrinks modeled upload time — the
-mechanism by which byte savings become wall-clock savings.
+mechanism by which byte savings become wall-clock savings.  The upload
+payload itself runs through the declared update-codec pipeline
+(``repro.compress``): encode happens on the cohort mean (sync) or per
+client delta (fedbuff, where stateful stages like EF error feedback keep
+PER-CLIENT state), wall-clock estimates use the pipeline's nominal
+pricing at dispatch, and the byte ledger uses the exact aux-refined
+pricing after encode.  Diurnal scenarios additionally scale each
+dispatch's link bandwidth by the virtual-time-of-day multiplier.
 
 Equivalence guarantee (tested): sync mode with the "uniform" scenario,
 ``deadline=inf``, no over-provisioning and no dropout replays the exact
@@ -59,18 +66,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_scenario
-from repro.core import (luar_init, luar_round, payload_scale,
-                        round_trip_time, staleness_discount,
-                        staleness_weighted_merge)
+from repro.core import (luar_init, luar_round, round_trip_time,
+                        staleness_discount, staleness_weighted_merge)
 from repro.core.comm import ClientResources, compute_time, download_time
-from repro.fl import baselines
 from repro.fl.client import local_update
 from repro.fl.rounds import (FLConfig, _stack_client_batches,
-                             apply_compressors, client_payload_bytes,
-                             client_payload_bytes_per_unit, make_round_step)
+                             build_codec_pipeline, make_round_step)
 from repro.fl.server import (apply_update, broadcast_point, server_init)
 from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, EventQueue
-from repro.sim.profiles import sample_resources
+from repro.sim.profiles import (bandwidth_multiplier, sample_resources,
+                                scale_bandwidth)
 
 Params = Any
 
@@ -236,10 +241,10 @@ def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
     resources = sample_resources(scenario, cfg.n_clients, sim.sys_seed)
     if sim.mode == "sync":
         return _run_sync(loss_fn, init_params, data, parts, cfg, sim,
-                         resources, eval_fn)
+                         scenario, resources, eval_fn)
     if sim.mode == "fedbuff":
         return _run_fedbuff(loss_fn, init_params, data, parts, cfg, sim,
-                            resources, eval_fn)
+                            scenario, resources, eval_fn)
     raise ValueError(f"unknown sim mode {sim.mode!r}")
 
 
@@ -249,7 +254,7 @@ def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
 
 
 def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
-              resources, eval_fn) -> SimResult:
+              scenario, resources, eval_fn) -> SimResult:
     # learning-side RNG: IDENTICAL stream structure to run_fl
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -259,11 +264,11 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     params = init_params
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
-    lbgm_state = baselines.lbgm_init(params, um) if cfg.lbgm_threshold else None
-    round_step = make_round_step(loss_fn, cfg, um)
+    pipeline = build_codec_pipeline(cfg)
+    codec_state = pipeline.init_state(params, um)
+    round_step = make_round_step(loss_fn, cfg, um, pipeline)
 
     cohort_size = max(1, int(round(cfg.n_active * sim.overprovision)))
-    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
     sizes = np.asarray(um.unit_bytes, np.float64)
     total_bytes = sizes.sum()
 
@@ -283,16 +288,23 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         mask_now = np.asarray(luar_state.mask)
 
         # -- dispatch the cohort; price each member's round trip ----------
+        # dispatch-time (nominal, aux-free) pricing: the conservative
+        # wall-clock estimate for stacks whose exact wire size is only
+        # known after encode (LBGM scalars, top-k survivor counts)
+        nominal_per_unit = pipeline.price_per_unit(sizes, mask_now)
+        nominal_bytes = float(nominal_per_unit.sum())
         t0 = queue.now
+        bw = bandwidth_multiplier(scenario, t0)     # diurnal link quality
         n_scheduled = 0
         for pos, c in enumerate(cohort):
-            r = resources[c]
+            r = scale_bandwidth(resources[c], bw)
             if r.dropout and sys_rng.random() < r.dropout:
                 # device vanishes after download+compute, before upload
                 queue.push(t0 + download_time(um, r) + compute_time(cfg.tau, r),
                            DROPOUT, int(c), {"pos": pos})
                 continue
-            queue.push(t0 + round_trip_time(um, mask_now, r, cfg.tau, scale),
+            queue.push(t0 + round_trip_time(um, mask_now, r, cfg.tau,
+                                            payload_bytes=nominal_bytes),
                        ARRIVAL, int(c), {"pos": pos})
             n_scheduled += 1
         if math.isfinite(sim.deadline):
@@ -316,13 +328,13 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         if n_strag:
             # a straggler's uplink was spent and discarded (deadline /
             # collect cutoff): charge it as wasted traffic, symmetric with
-            # the fedbuff engine's rejected-arrival accounting (LBGM
-            # scalar compression is unknowable for non-aggregated clients,
-            # so the dense mask-priced payload is the conservative charge)
-            strag_per_unit = client_payload_bytes_per_unit(sizes, mask_now, cfg)
-            uploaded += float(strag_per_unit.sum()) * n_strag
-            res.wasted_per_unit += strag_per_unit * n_strag
-            res.wasted_upload_bytes += float(strag_per_unit.sum()) * n_strag
+            # the fedbuff engine's rejected-arrival accounting (aux-bearing
+            # stages — LBGM scalars, top-k counts — are unknowable for
+            # non-aggregated clients, so the nominal price is the
+            # conservative charge)
+            uploaded += nominal_bytes * n_strag
+            res.wasted_per_unit += nominal_per_unit * n_strag
+            res.wasted_upload_bytes += nominal_bytes * n_strag
         # pending DROPOUT events (device vanished later than the round
         # closed) still count as dropped, not as stragglers — a dropout
         # vanishes before its upload starts, so it spends no uplink
@@ -345,9 +357,9 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # forfeit the bitwise-equality path with run_fl, so not now)
             idx = np.asarray(arrived_pos)
             sub = {k: v[idx] for k, v in batches.items()}
-        params, luar_state, server_state, lbgm_state, lbgm_sent = round_step(
-            params, luar_state, server_state, lbgm_state, sub, qkey)
-        per_client = client_payload_bytes(sizes, mask_now, cfg, lbgm_sent)
+        params, luar_state, server_state, codec_state, aux = round_step(
+            params, luar_state, server_state, codec_state, sub, qkey)
+        per_client = pipeline.price_bytes(sizes, mask_now, aux)
         uploaded += per_client * len(arrived_pos)
         res.n_received += len(arrived_pos)
         res.rounds_done += 1
@@ -372,14 +384,18 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
 
 
 def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
-                 sim: SimConfig, resources, eval_fn) -> SimResult:
-    if cfg.lbgm_threshold:
+                 sim: SimConfig, scenario, resources, eval_fn) -> SimResult:
+    pipeline = build_codec_pipeline(cfg)
+    sync_only = pipeline.sync_only_specs()
+    if sync_only:
         raise NotImplementedError(
-            "LBGM has no per-client anchor story under buffered async: each "
-            "client's basis coefficients are relative to a synchronous "
-            "anchor the fedbuff server never holds.  Either disable it "
-            "(FLConfig.lbgm_threshold=0) or run the synchronous engine "
-            "(SimConfig(mode='sync')), where LBGM is fully supported.")
+            f"codec stage(s) {list(sync_only)} are anchored to a "
+            "synchronous server view the fedbuff server never holds "
+            "(e.g. LBGM's basis coefficients are relative to a "
+            "synchronously shared anchor).  Either drop the stage "
+            "(FLConfig.codecs without it / legacy lbgm_threshold=0) or "
+            "run the synchronous engine (SimConfig(mode='sync')), where "
+            "it is fully supported.")
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     key, k1, k2 = jax.random.split(key, 3)
@@ -388,7 +404,6 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     params = init_params
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
-    scale = payload_scale(cfg.fedpaq_bits, cfg.prune_keep, cfg.dropout_rate)
     sizes = np.asarray(um.unit_bytes, np.float64)
     total_bytes = sizes.sum()
     n_units = len(um.names)
@@ -396,7 +411,21 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     fedasync = sim.buffer_size == 1      # FedAsync-style immediate apply
 
     client_fn = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.client))
-    compress_fn = jax.jit(lambda delta, qkey: apply_compressors(delta, qkey, cfg))
+    encode_fn = jax.jit(lambda st, delta, qkey: pipeline.encode(st, delta, qkey))
+
+    # codec state is PER CLIENT here (this is what makes EF-style error
+    # feedback real: each client's residual tracks what ITS lossy uploads
+    # destroyed).  Stateless pipelines share one empty state; stateful
+    # ones lazily allocate O(model) per participating client.
+    codec_template = pipeline.init_state(params, um)
+    codec_states: Dict[int, tuple] = {}
+
+    def codec_state_for(c: int) -> tuple:
+        if not pipeline.stateful:
+            return codec_template
+        if c not in codec_states:
+            codec_states[c] = pipeline.init_state(init_params, um)
+        return codec_states[c]
 
     @jax.jit
     def agg_fn(params, luar_state, server_state, stacked, staleness,
@@ -435,25 +464,30 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     buffer: List[tuple] = []            # (delta, staleness, validity row)
 
     def dispatch(c: int, now: float):
-        r = resources[c]
+        # link quality is sampled at dispatch time (diurnal scenarios)
+        r = scale_bandwidth(resources[c], bandwidth_multiplier(scenario, now))
         idx = parts[c]
         sel = rng.choice(idx, size=(cfg.tau, cfg.batch_size), replace=True)
         batches = {k: jnp.asarray(arr[sel]) for k, arr in data.items()}
         mask_now = np.asarray(luar_state.mask)
         ledger.record(version, mask_now)
-        per_unit = client_payload_bytes_per_unit(sizes, mask_now, cfg)
+        # nominal (aux-free) price: the wall-clock estimate, and the
+        # conservative charge for payloads whose encode never runs
+        per_unit = pipeline.price_per_unit(sizes, mask_now)
         jobs[c] = {
             "start": broadcast_point(params, server_state, cfg.server),
             "batches": batches,
             "version": version,         # the mask version this client saw
-            "per_unit": per_unit,       # uplink bytes by unit (dispatch mask)
+            "mask": mask_now,           # the dispatched recycle set itself
+            "per_unit": per_unit,       # nominal uplink bytes by unit
             "bytes": float(per_unit.sum()),
         }
         if r.dropout and sys_rng.random() < r.dropout:
             queue.push(now + download_time(um, r) + compute_time(cfg.tau, r),
                        DROPOUT, c)
         else:
-            queue.push(now + round_trip_time(um, mask_now, r, cfg.tau, scale),
+            queue.push(now + round_trip_time(um, mask_now, r, cfg.tau,
+                                             payload_bytes=jobs[c]["bytes"]),
                        ARRIVAL, c)
 
     def charge_waste(wasted: np.ndarray):
@@ -486,33 +520,43 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         job = jobs.pop(c)
         bisect.insort(idle, c)          # the slot's device is idle again
         if ev.kind == ARRIVAL:
-            uploaded += job["bytes"]    # the uplink was spent either way
             mask_v = ledger.get(job["version"])
             if mask_v is None:
                 res.ledger_misses += 1
             if sim.mask_ledger and mask_v is None:
                 # dispatch mask evicted: the server can no longer verify
                 # which recycle set the payload was built against — reject
-                # the update outright and charge every uploaded byte
+                # the update outright and charge every uploaded byte (at
+                # the nominal price; the rejected payload is never decoded
+                # so aux-exact pricing does not exist for it)
+                uploaded += job["bytes"]
                 charge_waste(job["per_unit"].copy())
                 dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
                 continue
             key, qkey = jax.random.split(key)
-            delta = compress_fn(client_fn(job["start"], job["batches"]), qkey)
+            cstate = codec_state_for(c)
+            delta, cstate, aux = encode_fn(
+                cstate, client_fn(job["start"], job["batches"]), qkey)
+            if pipeline.stateful:
+                codec_states[c] = cstate
+            # the uplink was spent either way; exact post-encode pricing
+            # against the DISPATCHED mask (aux: top-k survivor counts etc.)
+            per_unit = pipeline.price_per_unit(sizes, job["mask"], aux)
+            uploaded += float(per_unit.sum())
             stal = version - job["version"]
             observed.append(stal)
             if sim.mask_ledger:
                 valid = ~mask_v         # every uploaded unit is used
-                uncharged = job["per_unit"]
+                uncharged = per_unit
             else:
                 # PR-1 semantics: the server merges against the CURRENT
                 # mask, so bytes a stale client uploaded for a now-recycled
                 # unit are discarded — the waste the ledger eliminates
-                # (job["per_unit"] is zero on units the client skipped)
+                # (per_unit is zero on units the client skipped)
                 mask_now = np.asarray(luar_state.mask)
                 valid = ~mask_now
-                charge_waste(np.where(mask_now, job["per_unit"], 0.0))
-                uncharged = np.where(mask_now, 0.0, job["per_unit"])
+                charge_waste(np.where(mask_now, per_unit, 0.0))
+                uncharged = np.where(mask_now, 0.0, per_unit)
             # uncharged: payload bytes still unaccounted if this update
             # never reaches a merge (stranded in a partial buffer)
             buffer.append((delta, stal, valid, uncharged))

@@ -8,6 +8,7 @@ equivalence with ``fl/rounds.py``).
 """
 from __future__ import annotations
 
+import math
 from typing import List, Sequence
 
 import numpy as np
@@ -19,7 +20,9 @@ from repro.core.comm import ClientResources
 def sample_resources(scenario, n_clients: int, seed: int = 0) -> List[ClientResources]:
     sc: SimScenario = get_scenario(scenario)
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0x51D]))
-    if sc.kind == "uniform":
+    if sc.kind in ("uniform", "diurnal"):
+        # diurnal: identical clients; virtual TIME carries the variation
+        # (bandwidth_multiplier, looked up per dispatch by the engines)
         return [ClientResources(sc.step_time, sc.up_bw, sc.down_bw, sc.dropout)
                 for _ in range(n_clients)]
     if sc.kind == "lognormal":
@@ -44,6 +47,33 @@ def sample_resources(scenario, n_clients: int, seed: int = 0) -> List[ClientReso
                                            sc.down_bw, sc.dropout))
         return out
     raise ValueError(f"unknown scenario kind {sc.kind!r}")
+
+
+def bandwidth_multiplier(scenario, t: float) -> float:
+    """Link-quality multiplier at virtual time ``t`` (1.0 = the mean).
+
+    Only the "diurnal" kind varies:  m(t) = 1 + A sin(2 pi t / P + phi)
+    with A = ``bw_amplitude`` in [0, 1) so bandwidth never reaches zero.
+    The engines sample this once per DISPATCH and price the whole round
+    trip at that instant's bandwidth — a client's transfer is short next
+    to the cycle period, so the within-transfer variation is noise the
+    model deliberately ignores."""
+    sc: SimScenario = get_scenario(scenario)
+    if sc.kind != "diurnal" or sc.bw_amplitude == 0.0:
+        return 1.0
+    if not 0.0 <= sc.bw_amplitude < 1.0:
+        raise ValueError(f"bw_amplitude must be in [0, 1), got {sc.bw_amplitude}")
+    if sc.bw_period <= 0.0:
+        raise ValueError(f"bw_period must be positive, got {sc.bw_period}")
+    return 1.0 + sc.bw_amplitude * math.sin(
+        2.0 * math.pi * t / sc.bw_period + sc.bw_phase)
+
+
+def scale_bandwidth(res: ClientResources, m: float) -> ClientResources:
+    """The same device behind links scaled by ``m`` (compute untouched)."""
+    if m == 1.0:
+        return res
+    return res._replace(up_bw=res.up_bw * m, down_bw=res.down_bw * m)
 
 
 def describe(resources: Sequence[ClientResources]) -> dict:

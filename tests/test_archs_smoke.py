@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, cache_specs
+from repro.configs import ARCH_IDS, get_config
 from repro.models.registry import build
 
 B, S = 2, 32

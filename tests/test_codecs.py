@@ -1,0 +1,535 @@
+"""Update-codec pipeline (repro.compress): spec grammar + registry, the
+legacy-flag deprecation shim (bitwise equivalence of trajectories AND
+per-unit payload pricing), codec algebra properties (pricing monotone in
+the recycle mask, decode-encode fixed points, EF residual telescoping),
+the new topk/ef stages end-to-end, and the diurnal bandwidth scenario.
+"""
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compress import (CODECS, legacy_codec_specs, parse_codec,
+                            parse_codecs)
+from repro.configs.base import SIM_SCENARIOS, get_scenario
+from repro.core import LuarConfig
+from repro.core.units import build_units
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import (FLConfig, client_payload_bytes_per_unit,
+                             resolve_codec_specs, run_fl)
+from repro.models.cnn import mlp_init, mlp_apply, softmax_xent
+from repro.sim import SimConfig, run_sim, sample_resources
+from repro.sim.profiles import bandwidth_multiplier, scale_bandwidth
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y = gaussian_mixture(1200, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 16, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    def eval_fn(p):
+        return {"acc": float(jnp.mean(jnp.argmax(mlp_apply(p, xj), -1) == yj))}
+
+    return dict(loss_fn=loss_fn, params=params, data={"x": x, "y": y},
+                parts=parts, eval_fn=eval_fn)
+
+
+def _cfg(**kw):
+    kw.setdefault("client", ClientConfig(lr=0.05))
+    kw.setdefault("rounds", 5)
+    kw.setdefault("eval_every", 5)
+    return FLConfig(n_clients=16, n_active=6, tau=3, batch_size=8, **kw)
+
+
+def _run_fl(task, cfg):
+    return run_fl(task["loss_fn"], task["params"], task["data"],
+                  task["parts"], cfg, task["eval_fn"])
+
+
+def _run_sim(task, cfg, sim):
+    return run_sim(task["loss_fn"], task["params"], task["data"],
+                   task["parts"], cfg, sim, task["eval_fn"])
+
+
+def _trees_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# a tiny 3-unit template for unit-level codec algebra
+_TEMPLATE = {"w1": jnp.zeros((4, 3), jnp.float32),
+             "b1": jnp.zeros((6,), jnp.float32),
+             "w2": jnp.zeros((2, 2, 2), jnp.float32)}
+_UM = build_units(_TEMPLATE, "leaf")
+_SIZES = np.asarray(_UM.unit_bytes, np.float64)
+_NU = len(_UM.names)
+
+
+def _tree(rng):
+    return jax.tree.map(
+        lambda l: jnp.asarray(rng.standard_normal(l.shape), jnp.float32),
+        _TEMPLATE)
+
+
+def _bound(specs):
+    pipe = parse_codecs(specs)
+    state = pipe.init_state(_TEMPLATE, _UM)
+    return pipe, state
+
+
+# ---------------------------------------------------------------------------
+# registry + spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_stages():
+    assert {"fedpaq", "prune", "dropout", "lbgm", "topk", "ef"} <= set(CODECS)
+
+
+@pytest.mark.parametrize("spec", ["fedpaq:4", "prune:0.25", "dropout:0.5",
+                                  "lbgm:0.9", "topk:0.1", "ef"])
+def test_spec_round_trips(spec):
+    assert parse_codec(spec).spec() == spec
+
+
+def test_parse_codecs_plus_separated_string():
+    pipe = parse_codecs("fedpaq:4+topk:0.1")
+    assert pipe.specs() == ("fedpaq:4", "topk:0.1")
+
+
+def test_parse_rejects_unknown_and_bad_args():
+    with pytest.raises(ValueError, match="unknown codec"):
+        parse_codec("gzip:9")
+    with pytest.raises(ValueError, match="not a number"):
+        parse_codec("fedpaq:four")
+    with pytest.raises(ValueError):
+        parse_codec("fedpaq:0")        # out-of-range bits
+    with pytest.raises(ValueError):
+        parse_codec("topk:0")          # empty upload
+
+
+def test_ef_is_hoisted_to_front():
+    """Error feedback compensates the stages downstream of it, so the
+    pipeline normalizes it to the front regardless of list position."""
+    pipe = parse_codecs(("fedpaq:4", "topk:0.1", "ef"))
+    assert pipe.specs() == ("ef", "fedpaq:4", "topk:0.1")
+
+
+def test_legacy_specs_preserve_stack_order():
+    assert legacy_codec_specs(8, 0.25, 0.5, 0.9) == (
+        "fedpaq:8", "prune:0.25", "dropout:0.5", "lbgm:0.9")
+    assert legacy_codec_specs() == ()
+
+
+def test_resolve_rejects_mixed_flags_and_codecs():
+    with pytest.raises(ValueError, match="mixes codecs"):
+        resolve_codec_specs(_cfg(codecs=("topk:0.1",), fedpaq_bits=8))
+
+
+def test_legacy_flags_warn_deprecation():
+    with pytest.warns(DeprecationWarning):
+        assert resolve_codec_specs(_cfg(fedpaq_bits=8)) == ("fedpaq:8",)
+
+
+# ---------------------------------------------------------------------------
+# encode/decode algebra
+# ---------------------------------------------------------------------------
+
+
+def test_empty_pipeline_is_identity():
+    pipe, state = _bound(())
+    x = _tree(np.random.default_rng(0))
+    y, state, aux = pipe.encode(state, x, jax.random.PRNGKey(0))
+    assert _trees_equal(x, y) and aux == ()
+    mask = np.array([True, False, False])
+    np.testing.assert_array_equal(pipe.price_per_unit(_SIZES, mask),
+                                  np.where(mask, 0.0, _SIZES))
+
+
+def test_prune_roundtrip_is_fixed_point():
+    """decode(encode(.)) is idempotent for sparsifiers: re-encoding an
+    already-pruned tree with the same keep fraction changes nothing."""
+    pipe, state = _bound(("prune:0.5",))
+    x = _tree(np.random.default_rng(1))
+    once, state, _ = pipe.encode(state, x, jax.random.PRNGKey(0))
+    once = pipe.decode(state, once)
+    twice, state, _ = pipe.encode(state, once, jax.random.PRNGKey(1))
+    twice = pipe.decode(state, twice)
+    assert _trees_equal(once, twice)
+
+
+def test_topk_roundtrip_is_fixed_point():
+    pipe, state = _bound(("topk:0.2",))
+    x = _tree(np.random.default_rng(2))
+    once, state, _ = pipe.encode(state, x, jax.random.PRNGKey(0))
+    twice, state, aux = pipe.encode(state, pipe.decode(state, once),
+                                    jax.random.PRNGKey(1))
+    assert _trees_equal(once, pipe.decode(state, twice))
+    assert int(np.asarray(aux[0]).sum()) >= 1
+
+
+def test_fedpaq_fixes_grid_values():
+    """Stochastic quantization is exact on values already on its grid
+    (p = 0 -> the bernoulli never rounds), a decode-encode fixed point."""
+    bits = 3
+    levels = 2 ** bits - 1
+    rng = np.random.default_rng(3)
+    scale = 1.7
+
+    def gridify(l):
+        q = rng.integers(0, levels + 1, l.shape)
+        return jnp.asarray((q / levels * 2.0 - 1.0) * scale, jnp.float32)
+
+    x = jax.tree.map(gridify, _TEMPLATE)
+    # ensure the per-tensor max is exactly `scale` so the grid matches
+    x = jax.tree.map(lambda l: l.at[(0,) * l.ndim].set(scale), x)
+    pipe, state = _bound((f"fedpaq:{bits}",))
+    y, state, _ = pipe.encode(state, x, jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(pipe.decode(state, y))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_topk_is_global_across_units():
+    """Global selection: when one tensor dominates, the other units ship
+    (almost) nothing — per-tensor prune cannot express this."""
+    x = jax.tree.map(jnp.zeros_like, _TEMPLATE)
+    x = dict(x)
+    x["w1"] = jnp.asarray(np.arange(1, 13).reshape(4, 3), jnp.float32)
+    pipe, state = _bound(("topk:0.25",))
+    y, state, aux = pipe.encode(state, x, jax.random.PRNGKey(0))
+    counts = np.asarray(aux[0])
+    n_total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(_TEMPLATE))
+    k = max(1, round(0.25 * n_total))
+    assert counts[_UM.names.index("w1")] == k      # all survivors in w1
+    # zero-tensor ties at the threshold cannot occur here: everything else
+    # is strictly below, so total survivors == k exactly
+    assert counts.sum() == k
+
+
+def test_topk_never_counts_exact_zeros_as_survivors():
+    """When the k-th magnitude is 0 the >= threshold is vacuously true on
+    zero entries — but a sparse encoding never serializes zeros, so they
+    must not appear in the survivor counts (or the byte ledger)."""
+    x = jax.tree.map(jnp.zeros_like, _TEMPLATE)
+    x = dict(x)
+    x["b1"] = jnp.asarray([3.0, -2.0, 1.0, 0.0, 0.0, 0.0], jnp.float32)
+    pipe, state = _bound(("topk:0.5",))          # k = 11 of 22 >= 3 nonzeros
+    _, state, aux = pipe.encode(state, x, jax.random.PRNGKey(0))
+    assert int(np.asarray(aux[0]).sum()) == 3
+
+
+def test_lbgm_scalar_price_capped_at_upstream():
+    """A suppressed unit ships one 4-byte coefficient UNLESS upstream
+    compression already made the dense unit cheaper than the scalar."""
+    pipe = parse_codecs(("lbgm:0.9",))
+    sizes = np.asarray([2.0, 100.0])             # first unit cheaper than 4B
+    mask = np.zeros(2, bool)
+    sent = np.asarray([False, False])
+    got = pipe.price_per_unit(sizes, mask, ((sent),))
+    np.testing.assert_array_equal(got, [2.0, 4.0])
+    assert np.all(got <= sizes)                  # never above dense
+
+
+def test_flconfig_codecs_accepts_plus_joined_string():
+    assert resolve_codec_specs(_cfg(codecs="fedpaq:4+topk:0.1+ef")) == (
+        "fedpaq:4", "topk:0.1", "ef")
+
+
+def test_topk_pricing_uses_value_plus_index_bytes():
+    pipe = parse_codecs(("topk:0.1",))
+    mask = np.zeros(_NU, bool)
+    counts = np.asarray([5, 0, 2], np.float64)
+    got = pipe.price_per_unit(_SIZES, mask, (counts,))
+    n_entries = _SIZES / 4.0
+    want = np.minimum(_SIZES * (counts / n_entries) + counts * 4.0, _SIZES)
+    np.testing.assert_allclose(got, want)
+    # nominal (aux-free) pricing: expectation at the keep fraction
+    nominal = pipe.price_per_unit(_SIZES, mask)
+    want_nom = np.minimum(_SIZES * 0.1 + 0.1 * n_entries * 4.0, _SIZES)
+    np.testing.assert_allclose(nominal, want_nom)
+
+
+def test_ef_zero_residual_is_identity_and_commit_captures_error():
+    pipe, state = _bound(("ef", "prune:0.3"))
+    x = _tree(np.random.default_rng(4))
+    y, state, _ = pipe.encode(state, x, jax.random.PRNGKey(0))
+    # e_1 = (x + 0) - transmitted
+    want = jax.tree.map(lambda a, b: a - b, x, y)
+    assert _trees_equal(state[0], want)
+    # a lossless downstream leaves the residual at zero
+    pipe2, state2 = _bound(("ef",))
+    y2, state2, _ = pipe2.encode(state2, x, jax.random.PRNGKey(0))
+    assert _trees_equal(x, y2)
+    assert all(float(jnp.abs(l).max()) == 0.0 for l in jax.tree.leaves(state2[0]))
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_ef_residual_telescopes(rounds, seed):
+    """sum_t transmitted_t == sum_t update_t - e_T (e_0 = 0): error
+    feedback turns compression error into a bounded lag, never a bias."""
+    rng = np.random.default_rng(seed)
+    pipe, state = _bound(("ef", "topk:0.2"))
+    total_in = jax.tree.map(jnp.zeros_like, _TEMPLATE)
+    total_out = jax.tree.map(jnp.zeros_like, _TEMPLATE)
+    for t in range(rounds):
+        u = _tree(rng)
+        w, state, _ = pipe.encode(state, u, jax.random.PRNGKey(t))
+        total_in = jax.tree.map(lambda a, b: a + b, total_in, u)
+        total_out = jax.tree.map(lambda a, b: a + b, total_out, w)
+    residual = state[0]
+    for i, o, e in zip(jax.tree.leaves(total_in), jax.tree.leaves(total_out),
+                       jax.tree.leaves(residual)):
+        np.testing.assert_allclose(np.asarray(o) + np.asarray(e),
+                                   np.asarray(i), rtol=1e-4, atol=1e-5)
+
+
+def test_unbound_um_stage_raises_actionably():
+    pipe = parse_codecs(("topk:0.1",))
+    with pytest.raises(RuntimeError, match="init_state"):
+        pipe.encode((None,), _TEMPLATE, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# pricing properties
+# ---------------------------------------------------------------------------
+
+_PRICEABLE = [(), ("fedpaq:4",), ("prune:0.25",), ("dropout:0.5",),
+              ("topk:0.1",), ("fedpaq:4", "topk:0.1", "ef"),
+              ("fedpaq:8", "prune:0.5", "dropout:0.25")]
+
+
+@pytest.mark.slow
+@given(st.integers(min_value=0, max_value=len(_PRICEABLE) - 1),
+       st.integers(min_value=2, max_value=12),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(deadline=None, max_examples=40)
+def test_pricing_monotone_in_mask(pipe_idx, n, seed):
+    """Growing the recycle mask never increases any unit's price, masked
+    units always price zero, and prices stay within [0, dense]."""
+    rng = np.random.default_rng(seed)
+    pipe = parse_codecs(_PRICEABLE[pipe_idx])
+    sizes = rng.integers(4, 4096, n).astype(np.float64) * 4.0
+    small = rng.random(n) < 0.4
+    big = small | (rng.random(n) < 0.4)           # small  ⊆  big
+    p_small = pipe.price_per_unit(sizes, small)
+    p_big = pipe.price_per_unit(sizes, big)
+    assert np.all(p_big <= p_small + 1e-12)
+    assert np.all(p_small[small] == 0.0) and np.all(p_big[big] == 0.0)
+    assert np.all(p_small >= 0.0) and np.all(p_small <= sizes + 1e-9)
+
+
+def test_legacy_and_codec_pricing_identical():
+    mask = np.asarray([False, True, False])
+    sizes = np.asarray([100.0, 200.0, 400.0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = client_payload_bytes_per_unit(
+            sizes, mask, _cfg(fedpaq_bits=8, prune_keep=0.25, dropout_rate=0.5))
+    explicit = client_payload_bytes_per_unit(
+        sizes, mask, _cfg(codecs=("fedpaq:8", "prune:0.25", "dropout:0.5")))
+    np.testing.assert_array_equal(legacy, explicit)
+    np.testing.assert_allclose(
+        explicit, np.where(mask, 0.0, sizes) * (8 / 32) * 0.5 * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim: bitwise run_fl equivalence
+# ---------------------------------------------------------------------------
+
+_SHIM_PAIRS = [
+    (dict(fedpaq_bits=8), ("fedpaq:8",)),
+    (dict(prune_keep=0.25), ("prune:0.25",)),
+    (dict(dropout_rate=0.5), ("dropout:0.5",)),
+    (dict(lbgm_threshold=0.5), ("lbgm:0.5",)),
+    (dict(fedpaq_bits=4, prune_keep=0.5, dropout_rate=0.25,
+          lbgm_threshold=0.5),
+     ("fedpaq:4", "prune:0.5", "dropout:0.25", "lbgm:0.5")),
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("flags,specs", _SHIM_PAIRS,
+                         ids=["fedpaq", "prune", "dropout", "lbgm", "stack"])
+def test_shim_matches_explicit_pipeline_bitwise(task, flags, specs):
+    """Every legacy-flag config and its explicit codec equivalent produce
+    the same run_fl trajectory bit-for-bit AND the same payload bytes."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = _run_fl(task, _cfg(luar=LuarConfig(delta=2), **flags))
+    explicit = _run_fl(task, _cfg(luar=LuarConfig(delta=2), codecs=specs))
+    assert _trees_equal(legacy.params, explicit.params)
+    assert legacy.comm_ratio == explicit.comm_ratio
+    assert [h["acc"] for h in legacy.history] == \
+           [h["acc"] for h in explicit.history]
+
+
+def test_lbgm_codec_matches_legacy_in_sync_sim(task):
+    """The LBGM special case deleted from the round engine survives as a
+    codec stage: the sync simulator trajectory is unchanged."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = _run_sim(task, _cfg(lbgm_threshold=0.5),
+                          SimConfig(scenario="uniform"))
+    explicit = _run_sim(task, _cfg(codecs=("lbgm:0.5",)),
+                        SimConfig(scenario="uniform"))
+    assert _trees_equal(legacy.params, explicit.params)
+    assert legacy.comm_ratio == explicit.comm_ratio
+    assert 0.0 < explicit.comm_ratio < 1.0        # scalars actually priced
+
+
+# ---------------------------------------------------------------------------
+# the new stages end-to-end (acceptance: fedbuff + full stack, zero waste)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fedbuff_full_stack_zero_waste(task):
+    """("fedpaq:4", "topk:0.1", "ef") under the fedbuff engine: per-client
+    EF state threads through the async path, staleness occurs, and the
+    upload ledger still balances to exactly zero waste."""
+    cfg = _cfg(luar=LuarConfig(delta=2), codecs=("fedpaq:4", "topk:0.1", "ef"),
+               rounds=6)
+    res = _run_sim(task, cfg, SimConfig(scenario="bimodal", mode="fedbuff",
+                                        buffer_size=4, concurrency=8))
+    assert res.rounds_done == cfg.rounds
+    assert res.ledger_misses == 0
+    assert res.staleness_observed.max() > 0       # real version skew
+    np.testing.assert_array_equal(res.wasted_per_unit,
+                                  np.zeros_like(res.wasted_per_unit))
+    assert res.wasted_upload_bytes == 0.0
+    assert 0.0 < res.comm_ratio < 0.2             # the stack actually priced
+
+
+def test_fedbuff_lbgm_codec_spec_raises(task):
+    with pytest.raises(NotImplementedError, match="mode='sync'"):
+        _run_sim(task, _cfg(codecs=("lbgm:0.5",)),
+                 SimConfig(scenario="uniform", mode="fedbuff"))
+
+
+def test_run_fl_with_new_stack_converges(task):
+    cfg = _cfg(luar=LuarConfig(delta=2), codecs=("fedpaq:4", "topk:0.25", "ef"),
+               rounds=20, eval_every=20)
+    res = _run_fl(task, cfg)
+    assert res.history[-1]["acc"] > 0.6
+    assert res.comm_ratio < 0.25
+
+
+# ---------------------------------------------------------------------------
+# launch-path integration: codec state rides in TrainState
+# ---------------------------------------------------------------------------
+
+
+class _TinyModel:
+    """Just enough Model surface for the fedluar train step."""
+
+    def init(self, key):
+        return {"w": jnp.asarray(np.linspace(1.0, 2.0, 8), jnp.float32),
+                "b": jnp.asarray(np.linspace(-1.0, 1.0, 4), jnp.float32)}
+
+    def train_loss(self, p, batch):
+        return (jnp.sum(jnp.square(p["w"] - batch["x"]))
+                + jnp.sum(jnp.square(p["b"])))
+
+
+def test_fedluar_train_step_threads_codec_state():
+    from repro.launch.steps import (TrainState, make_fedluar_train_step,
+                                    train_state_shapes)
+    model = _TinyModel()
+    codec = parse_codecs(("ef", "topk:0.5"))
+    shapes, um = train_state_shapes(model, codec=codec)
+    assert shapes.codec is not None               # eval_shape'd codec state
+
+    params = model.init(jax.random.PRNGKey(0))
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    from repro.core import luar_init
+    luar_state, _ = luar_init(params, LuarConfig(delta=1), jax.random.PRNGKey(1))
+    state = TrainState(params, zeros, luar_state,
+                       codec.init_state(params, um))
+    step = jax.jit(make_fedluar_train_step(model, LuarConfig(delta=1), um,
+                                           lr=0.1, codec=codec))
+    batch = {"x": jnp.zeros(8, jnp.float32)}
+    l0 = None
+    for _ in range(3):
+        state, loss = step(state, batch)
+        l0 = l0 if l0 is not None else float(loss)
+    assert float(loss) < l0                       # still optimizes
+    # the EF residual accumulated what top-k dropped: nonzero state
+    residual = state.codec[0]
+    assert any(float(jnp.abs(l).max()) > 0 for l in jax.tree.leaves(residual))
+    # static path refuses codecs (it would defeat the DCE'd collective)
+    with pytest.raises(ValueError, match="dynamic path"):
+        make_fedluar_train_step(model, LuarConfig(delta=1), um,
+                                static_mask=[True, False], codec=codec)
+
+
+# ---------------------------------------------------------------------------
+# diurnal bandwidth scenario
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_multiplier_oscillates_and_validates():
+    sc = get_scenario("diurnal")
+    ts = np.linspace(0.0, sc.bw_period, 200, endpoint=False)
+    ms = np.array([bandwidth_multiplier(sc, t) for t in ts])
+    assert ms.max() > 1.0 + 0.9 * sc.bw_amplitude
+    assert ms.min() < 1.0 - 0.9 * sc.bw_amplitude
+    assert abs(ms.mean() - 1.0) < 1e-6            # zero-mean cycle
+    assert ms.min() > 0.0                         # bandwidth never dies
+    # one full period later: the same multiplier
+    assert bandwidth_multiplier(sc, 0.3 * sc.bw_period) == pytest.approx(
+        bandwidth_multiplier(sc, 1.3 * sc.bw_period))
+    # non-diurnal kinds are flat
+    assert bandwidth_multiplier("bimodal", 123.0) == 1.0
+    with pytest.raises(ValueError, match="bw_amplitude"):
+        bandwidth_multiplier(sc.replace(bw_amplitude=1.5), 0.0)
+
+
+def test_scale_bandwidth_touches_links_only():
+    r = sample_resources("diurnal", 2)[0]
+    r2 = scale_bandwidth(r, 0.5)
+    assert r2.up_bw == 0.5 * r.up_bw and r2.down_bw == 0.5 * r.down_bw
+    assert r2.step_time == r.step_time and r2.dropout == r.dropout
+    assert scale_bandwidth(r, 1.0) is r
+
+
+@pytest.mark.slow
+def test_diurnal_cycle_changes_round_times(task):
+    """The cycle is visible end-to-end: the same config runs slower when
+    dispatches land in the bandwidth trough (phase = -pi/2) than at the
+    peak (phase = +pi/2), and the flat-amplitude control matches uniform
+    timing exactly."""
+    base = get_scenario("diurnal").replace(bw_period=1e6)   # ~constant phase
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=4)
+    peak = _run_sim(task, cfg, SimConfig(scenario=base.replace(
+        bw_phase=math.pi / 2)))
+    trough = _run_sim(task, cfg, SimConfig(scenario=base.replace(
+        bw_phase=-math.pi / 2)))
+    assert trough.sim_time > peak.sim_time
+    flat = _run_sim(task, cfg, SimConfig(scenario=base.replace(
+        bw_amplitude=0.0)))
+    uniform = _run_sim(task, cfg, SimConfig(scenario=get_scenario(
+        "uniform").replace(step_time=base.step_time, up_bw=base.up_bw,
+                           down_bw=base.down_bw)))
+    assert flat.sim_time == pytest.approx(uniform.sim_time)
+    assert _trees_equal(trough.params, peak.params)   # timing-only knob
+
+
+def test_diurnal_registered_and_uniform_population():
+    assert "diurnal" in SIM_SCENARIOS
+    res = sample_resources("diurnal", 8, seed=0)
+    assert len(set(res)) == 1                     # time varies, clients don't

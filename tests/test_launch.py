@@ -1,6 +1,5 @@
 """Launch-layer tests: sharding rules (property-based), HLO analyzer
 (against a known toy program), step construction."""
-import re
 from collections import namedtuple
 
 import jax

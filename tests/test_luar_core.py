@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (LuarConfig, build_units, comm_init, comm_update,
                         comm_ratio, gumbel_topk_mask, luar_init, luar_round,
-                        recycle_probs, round_upload_bytes, s_metric,
+                        masked_upload_bytes, recycle_probs, s_metric,
                         select_recycle_set, server_memory_bytes,
                         unit_sq_norms)
 from repro.models.cnn import cnn_init, mlp_init
@@ -197,10 +197,10 @@ def test_staleness_and_agg_count_bookkeeping(cnn_params):
 def test_comm_monotone_in_delta(cnn_params):
     um = build_units(cnn_params, "module")
     sizes = np.asarray(um.unit_bytes, np.float64)
-    full = float(round_upload_bytes(um, jnp.zeros(4, bool), 32))
+    full = masked_upload_bytes(um, jnp.zeros(4, bool)) * 32
     assert full == sizes.sum() * 32
     mask = jnp.asarray([True, False, False, False])
-    assert float(round_upload_bytes(um, mask, 32)) == (sizes.sum() - sizes[0]) * 32
+    assert masked_upload_bytes(um, mask) * 32 == (sizes.sum() - sizes[0]) * 32
 
 
 def test_comm_ratio_accumulates(cnn_params):
@@ -386,8 +386,8 @@ def test_round_invariants_all_combos(cnn_params, granularity, scheme, mode):
         applied, state = luar_round(state, um, cfg, fresh, cnn_params)
     assert int(jnp.sum(state.mask)) == 2
     assert jax.tree.structure(applied) == jax.tree.structure(cnn_params)
-    full = float(round_upload_bytes(um, jnp.zeros(len(um.names), bool), 1))
-    up = float(round_upload_bytes(um, state.mask, 1))
+    full = masked_upload_bytes(um, jnp.zeros(len(um.names), bool))
+    up = masked_upload_bytes(um, state.mask)
     assert 0.0 <= up <= full
     assert bool(jnp.all(jnp.isfinite(state.s)))
 
@@ -400,7 +400,7 @@ def test_upload_bytes_linearity(n, k):
     sizes = tuple(int(x) for x in np.random.default_rng(n).integers(1, 1000, n))
     um = UnitMapStub(sizes)
     mask = jnp.zeros((n,), bool).at[:k].set(True)
-    got = float(round_upload_bytes(um, mask, 3))
+    got = masked_upload_bytes(um, mask) * 3
     want = (sum(sizes) - sum(sizes[:k])) * 3
     assert got == want
 

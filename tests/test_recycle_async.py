@@ -9,8 +9,6 @@ The load-bearing claims:
     client uploads for a unit the current mask recycles;
   * in the no-staleness regime the whole machinery is bitwise inert.
 """
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -399,10 +397,12 @@ def test_client_payload_bytes_per_unit_lbgm_scalar():
     sizes = np.asarray([100.0, 200.0, 400.0])
     mask = np.asarray([False, False, True])
     sent = np.asarray([True, False, True])
-    cfg = _cfg(lbgm_threshold=0.5)
-    per_unit = client_payload_bytes_per_unit(sizes, mask, cfg, sent)
+    cfg = _cfg(codecs=("lbgm:0.5",))
+    # aux is the per-stage evidence tuple an encode pass returns: the
+    # single lbgm stage's sent-full mask
+    per_unit = client_payload_bytes_per_unit(sizes, mask, cfg, (sent,))
     np.testing.assert_array_equal(per_unit, [100.0, 4.0, 0.0])
-    assert client_payload_bytes(sizes, mask, cfg, sent) == 104.0
+    assert client_payload_bytes(sizes, mask, cfg, (sent,)) == 104.0
 
 
 # ---------------------------------------------------------------------------
