@@ -14,7 +14,8 @@ def rows(quick: bool = True):
     def add(name, res, secs, comm=None):
         out.append((f"table2/{name}", secs / max(res.luar_state.round, 1) if res else secs, {
             "acc": round(res.history[-1]["acc"], 4),
-            "comm": round(comm if comm is not None else res.comm_ratio, 3)}))
+            "comm": round(comm if comm is not None else res.comm_ratio, 3),
+            "down": round(res.down_ratio, 3)}))
 
     res, t = timed(lambda: fl(task, rounds))
     add("fedavg", res, t)
@@ -40,6 +41,13 @@ def rows(quick: bool = True):
     res, t = timed(lambda: fl(task, rounds,
                               luar=LuarConfig(delta=delta, granularity="leaf")))
     add("fedluar", res, t)
+    # the versioned downlink: same recycling, but the broadcast is the
+    # delta chain against the cohort's previous version instead of a full
+    # snapshot — the "down" column finally moves below 1.0 (the paper's
+    # 17%-of-FedAvg number is uplink-only; this is the other half)
+    res, t = timed(lambda: fl(task, rounds, codecs=("down:delta",),
+                              luar=LuarConfig(delta=delta, granularity="leaf")))
+    add("fedluar_ddl", res, t)
     return out
 
 

@@ -9,6 +9,12 @@ FedLUAR's rounds close faster and time-to-accuracy drops.
 Bandwidths are rescaled to the benchmark model's size (a full mobile
 upload = ~2 simulated seconds) so the tiny CPU-scale models exercise the
 same upload-dominated regime as the paper-scale workloads.
+
+Ratios are BIDIRECTIONAL: ``comm`` is uplink bytes vs FedAvg over the
+same spent uploads, ``down`` is downlink bytes vs the full-model
+broadcast over the same dispatches, and the fedbuff downlink rows report
+raw up/down/total MB for the delta-encoded broadcast (``down:delta``)
+against the full-broadcast baseline.
 """
 from __future__ import annotations
 
@@ -74,6 +80,7 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
                 "sim_time_s": round(res.sim_time, 2),
                 "acc": round(res.history[-1]["acc"], 3),
                 "comm": round(res.comm_ratio, 3),
+                "down": round(res.down_ratio, 3),
             }))
 
     # buffered async under the bimodal population: the mask ledger vs the
@@ -99,6 +106,34 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
             "acc": round(res.history[-1]["acc"], 3),
             "wasted_mb": round(res.wasted_upload_bytes / 1e6, 3),
             "stal_q90": res.staleness_q["q90"] if res.staleness_q else 0.0,
+        }))
+
+    # the versioned downlink: the same fedbuff server with a delta-encoded
+    # broadcast (down:delta) vs the full-model broadcast, BIDIRECTIONAL
+    # byte totals.  Every client stays in flight and the buffer spans one
+    # rotation, so redispatch lag is ~1 version and the delta chain beats
+    # the snapshot on almost every download (the ledger prices the choice
+    # per dispatch; first contacts still pay the cache-seeding snapshot)
+    n_cl = len(task.parts)
+    for name, codecs in (("full_bcast", ()), ("down_delta", ("down:delta",))):
+        cfg = FLConfig(n_clients=n_cl, n_active=8, tau=5, batch_size=16,
+                       rounds=rounds, client=ClientConfig(lr=0.05),
+                       eval_every=2, codecs=codecs,
+                       luar=LuarConfig(delta=4, granularity="leaf"))
+        res, secs = timed(lambda: run_sim(
+            task.loss_fn, task.params, task.data, task.parts, cfg,
+            SimConfig(scenario=scaled_scenario("uniform", model_bytes),
+                      mode="fedbuff", buffer_size=n_cl, concurrency=n_cl),
+            task.eval_fn))
+        up_mb = res.comm_ratio * model_bytes * res.n_uplinks_spent / 1e6
+        out.append((f"tta_fedbuff_{name}", secs, {
+            "acc": round(res.history[-1]["acc"], 3),
+            "up_ratio": round(res.comm_ratio, 3),
+            "down_ratio": round(res.down_ratio, 3),
+            "up_mb": round(up_mb, 2),
+            "down_mb": round(res.downloaded / 1e6, 2),
+            "total_mb": round(up_mb + res.downloaded / 1e6, 2),
+            "delta_dls": f"{res.n_delta_downloads}/{res.n_dispatched}",
         }))
     return out
 

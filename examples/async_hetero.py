@@ -137,3 +137,32 @@ for tag, kw in (("alpha=0.5", dict(staleness_alpha=0.5)),
     print(f"{tag:<10} t_target={t_str:>8} sim s   acc={res.history[-1]['acc']:.3f} "
           f"stal_q={res.staleness_q}   alphas={alphas[:4]}"
           f"{'...' if len(alphas) > 4 else ''}")
+
+# 6. the versioned downlink: so far every dispatch downloaded the FULL
+#    model — half the round trip the uplink codecs never touched.  With
+#    codecs=("down:delta",) the fedbuff server keeps a DeltaLedger of
+#    per-version applied updates and each client downloads the delta
+#    chain against the version it last saw (full snapshot only on first
+#    contact, ledger eviction, or when a long lag makes the chain dearer
+#    — the server prices both and ships the cheaper).  Keeping every
+#    client in flight with the buffer spanning one rotation pins the
+#    redispatch lag to ~1 version, where the chain wins almost always.
+print("\nversioned downlink (fedbuff, buffer=concurrency=32): full broadcast "
+      "vs down:delta")
+print(f"{'broadcast':<12} {'up MB':>8} {'down MB':>9} {'total MB':>9} "
+      f"{'down ratio':>11} {'delta dls':>10} {'acc':>6}")
+for name, codecs in (("full", ()), ("down:delta", ("down:delta",))):
+    res = run_sim(loss_fn, params, {"x": x, "y": y}, parts,
+                  fl_cfg(luar=LuarConfig(delta=4, granularity="leaf"),
+                         codecs=codecs),
+                  SimConfig(scenario=scenario, mode="fedbuff",
+                            buffer_size=32, concurrency=32), eval_fn)
+    up_mb = res.comm_ratio * model_bytes * res.n_uplinks_spent / 1e6
+    print(f"{name:<12} {up_mb:>8.2f} {res.downloaded / 1e6:>9.2f} "
+          f"{up_mb + res.downloaded / 1e6:>9.2f} {res.down_ratio:>11.2f} "
+          f"{res.n_delta_downloads:>4}/{res.n_dispatched:<5} "
+          f"{res.history[-1]['acc']:>6.3f}")
+print("(first contacts still pay a cache-seeding snapshot; every later "
+      "download ships the delta\n chain — recycled units cost 4 bytes a "
+      "step, so the downlink finally shares the\n uplink's recycling "
+      "discount instead of re-broadcasting the whole model)")

@@ -10,9 +10,12 @@ client->server compressor stack:
     update, state, aux = pipe.encode(state, update, key)      # jit-safe
     bytes_per_unit = pipe.price_per_unit(sizes, mask, aux)    # host f64
 """
-from repro.compress.codec import CodecPipeline, UpdateCodec  # noqa: F401
-from repro.compress.codecs import (DropoutAvg, ErrorFeedback, FedPAQ,  # noqa: F401
-                                   LBGM, Prune, TopK)
+from repro.compress.codec import CodecPipeline, Direction, UpdateCodec  # noqa: F401
+from repro.compress.codecs import (DELTA_STEP_UNIT_BYTES, DeltaDownlink,  # noqa: F401
+                                   DropoutAvg, ErrorFeedback, FedPAQ,
+                                   LBGM, Prune, TopK, delta_step_price,
+                                   snapshot_price, versioned_download_price)
 from repro.compress.registry import (CODECS, legacy_codec_specs,  # noqa: F401
                                      parse_codec, parse_codecs,
+                                     partition_codec_specs,
                                      register_codec, split_codec_specs)

@@ -1,11 +1,19 @@
 """The update-codec protocol and the composable pipeline.
 
-An ``UpdateCodec`` is one stage of the client->server upload path: it
+An ``UpdateCodec`` is one stage of the client<->server transfer path: it
 transforms the update tree (jit-traceably), optionally threads per-round
 state (LBGM anchors, EF residuals), and prices its own wire format
 host-side.  A ``CodecPipeline`` chains stages so the whole compressor
 stack is declared as data — ``FLConfig.codecs = ("fedpaq:4", "topk:0.1",
 "ef")`` — instead of hard-coded flags re-implemented at every call site.
+
+Every stage has a ``Direction``: ``UP`` (client->server update upload,
+the default) or ``DOWN`` (server->client model broadcast, declared with
+the ``down:`` spec prefix — ``"down:delta"``, ``"down:fedpaq:8"``).  A
+pipeline is one direction; the engines build one pipeline per direction
+from the same ``FLConfig.codecs`` declaration
+(``registry.partition_codec_specs``), so the downlink rides the exact
+same encode/price machinery as the uplink.
 
 Protocol (all device-side methods are jit-traceable):
 
@@ -47,6 +55,7 @@ well-defined.
 """
 from __future__ import annotations
 
+import enum
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -57,10 +66,24 @@ from repro.core.units import UnitMap
 Params = Any
 
 
+class Direction(enum.Enum):
+    """Which link a codec stage compresses."""
+    UP = "up"                       # client -> server (update upload)
+    DOWN = "down"                   # server -> client (model broadcast)
+
+
 class UpdateCodec:
     """Base stage: identity transform, dense pricing, no state."""
 
     name: str = "identity"
+    direction: Direction = Direction.UP   # set per instance by the parser
+                                          # from the "down:" spec prefix
+    down_only: bool = False         # True -> only meaningful on the
+                                    # broadcast (the parser rejects the
+                                    # bare spec without "down:")
+    front: bool = False             # True -> hoisted to the pipeline head
+                                    # (delta transport must price before
+                                    # the lossy stages scale the bytes)
     stateful: bool = False          # True -> per-client state under async
     needs_commit: bool = False      # True -> commit() sees the final output
     requires_sync: bool = False     # True -> the stage's state is anchored
@@ -86,7 +109,14 @@ class UpdateCodec:
         return per_unit
 
     def spec(self) -> str:
-        """The spec string that reconstructs this stage (see registry)."""
+        """The spec string that reconstructs this stage (see registry),
+        including the ``down:`` direction prefix."""
+        body = self._spec()
+        return f"down:{body}" if self.direction is Direction.DOWN else body
+
+    def _spec(self) -> str:
+        """The direction-free spec body (subclasses override this, not
+        ``spec``, so the prefix logic lives in one place)."""
         return self.name
 
     def __repr__(self) -> str:
@@ -98,13 +128,25 @@ class CodecPipeline:
 
     State is threaded per stage as a tuple (position-aligned with
     ``stages``), so the whole pipeline state is one jit-friendly pytree.
-    ``needs_commit`` stages are hoisted to the front at construction
-    (stable order otherwise) — see the module docstring.
+    ``needs_commit`` and ``front`` stages are hoisted to the front at
+    construction (stable order otherwise) — see the module docstring.
+
+    A pipeline is ONE direction: mixing UP and DOWN stages is an error
+    (use ``registry.partition_codec_specs`` /
+    ``rounds.build_codec_pipeline(cfg, direction=...)`` to split a mixed
+    declaration into the per-link pipelines).
     """
 
     def __init__(self, stages: Sequence[UpdateCodec]):
-        front = [s for s in stages if s.needs_commit]
-        rest = [s for s in stages if not s.needs_commit]
+        dirs = {s.direction for s in stages}
+        if len(dirs) > 1:
+            raise ValueError(
+                f"a CodecPipeline is one direction, got mixed specs "
+                f"{[s.spec() for s in stages]}; partition with "
+                f"repro.compress.partition_codec_specs first")
+        self.direction: Direction = dirs.pop() if dirs else Direction.UP
+        front = [s for s in stages if s.needs_commit or s.front]
+        rest = [s for s in stages if not (s.needs_commit or s.front)]
         self.stages: Tuple[UpdateCodec, ...] = tuple(front + rest)
 
     # -- introspection ------------------------------------------------------
@@ -128,6 +170,13 @@ class CodecPipeline:
 
     def specs(self) -> Tuple[str, ...]:
         return tuple(s.spec() for s in self.stages)
+
+    def aux_for(self, name: str, value) -> tuple:
+        """An aux tuple carrying ``value`` at stage ``name`` (None at
+        every other position) — how an engine hands host-side pricing
+        evidence to one stage (the delta transport's chain price) without
+        running ``encode``."""
+        return tuple(value if s.name == name else None for s in self.stages)
 
     def __repr__(self) -> str:
         return f"CodecPipeline{self.specs()}"
@@ -174,9 +223,11 @@ class CodecPipeline:
         """ONE client's upload bytes PER UNIT (host-side float64).
 
         ``mask`` is the recycle mask the client DOWNLOADED at dispatch
-        (units inside it are never serialized); ``auxes`` is the tuple
-        ``encode`` returned, or None for the conservative nominal price
-        (dispatch-time estimates, rejected payloads).
+        (units inside it are never serialized); DOWN pipelines pass an
+        all-False mask — the broadcast carries every unit.  ``auxes`` is
+        the tuple ``encode`` returned (or ``aux_for`` built), or None for
+        the conservative nominal price (dispatch-time estimates, rejected
+        payloads).
         """
         mask = np.asarray(mask, bool)
         sizes = np.asarray(sizes, np.float64)

@@ -15,6 +15,22 @@ express:
          re-injected next round.  Stateful, which is what forces the
          pipeline's state threading to be real.
 
+plus the downlink-only stage of the versioned broadcast:
+
+  down:delta : delta-encoded model download — a client at server version
+         v receives the chain of per-version applied updates v->current
+         instead of a full snapshot whenever the chain is complete (the
+         server's DeltaLedger still holds every step) AND cheaper than
+         the snapshot.  Transport is LOSSLESS: the chain entries are the
+         exact addends the additive server applied, so replaying them
+         reproduces the broadcast bit-for-bit.  The per-step wire price
+         is fresh units at full bytes + recycled units at
+         DELTA_STEP_UNIT_BYTES (LUAR re-applies prev_update to recycled
+         units, which the chain follower already holds); the pricing
+         helpers live here (``delta_step_price`` / ``snapshot_price`` /
+         ``versioned_download_price``) so both sim engines and
+         ``fl/rounds.run_fl`` price the same protocol.
+
 The quantize/prune/dropout transforms delegate to ``repro.fl.baselines``
 so the paper-baseline math stays in one place.
 """
@@ -24,13 +40,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.codec import UpdateCodec
+from repro.compress.codec import Direction, UpdateCodec
 from repro.core.units import UnitMap
 from repro.fl import baselines
 
 _INDEX_BYTES = 4.0                  # int32 coordinate per surviving entry
 _F32_BYTES = 4.0                    # update entries are float32 in this repo
 _LBGM_SCALAR_BYTES = 4.0            # one projection coefficient
+DELTA_STEP_UNIT_BYTES = 4.0         # delta downlink: per recycled unit per
+                                    # step — its mask bit + the recycle
+                                    # coefficient (conservative: LUAR applies
+                                    # prev_update verbatim, but a real
+                                    # transport still frames the unit)
 
 
 def _require_um(codec) -> UnitMap:
@@ -59,7 +80,7 @@ class FedPAQ(UpdateCodec):
     def price_per_unit(self, per_unit, sizes, mask, aux=None):
         return per_unit * (self.bits / 32.0)
 
-    def spec(self):
+    def _spec(self):
         return f"fedpaq:{self.bits}"
 
 
@@ -83,7 +104,7 @@ class Prune(UpdateCodec):
     def price_per_unit(self, per_unit, sizes, mask, aux=None):
         return per_unit * min(2.0 * self.keep, 1.0)
 
-    def spec(self):
+    def _spec(self):
         return f"prune:{self.keep:g}"
 
 
@@ -104,7 +125,7 @@ class DropoutAvg(UpdateCodec):
     def price_per_unit(self, per_unit, sizes, mask, aux=None):
         return per_unit * (1.0 - self.rate)
 
-    def spec(self):
+    def _spec(self):
         return f"dropout:{self.rate:g}"
 
 
@@ -149,7 +170,7 @@ class LBGM(UpdateCodec):
         return np.where(up & ~sent,
                         np.minimum(_LBGM_SCALAR_BYTES, per_unit), per_unit)
 
-    def spec(self):
+    def _spec(self):
         return f"lbgm:{self.threshold:g}"
 
 
@@ -214,7 +235,7 @@ class TopK(UpdateCodec):
         up = ~np.asarray(mask, bool)
         return np.where(up, np.minimum(sparse, per_unit), 0.0)
 
-    def spec(self):
+    def _spec(self):
         return f"topk:{self.fraction:g}"
 
 
@@ -246,5 +267,88 @@ class ErrorFeedback(UpdateCodec):
     def commit(self, state, injected, final):
         return jax.tree.map(lambda v, w: v - w, injected, final)
 
-    def spec(self):
+    def _spec(self):
         return "ef"
+
+
+# ---------------------------------------------------------------------------
+# Versioned downlink: the delta transport stage + its host-side pricing
+# ---------------------------------------------------------------------------
+
+
+def delta_step_price(sizes: np.ndarray, step_mask: np.ndarray,
+                     additive: bool = True) -> np.ndarray:
+    """Per-unit wire bytes of ONE delta step (server version v -> v+1).
+
+    ``step_mask`` is the recycle set the aggregation at v actually
+    applied: fresh units ship their full update bytes; recycled units
+    ship only ``DELTA_STEP_UNIT_BYTES`` (mask bit + recycle coefficient —
+    the applied value is prev_update, which a chain follower already
+    holds).  ``additive=False`` (server optimizers whose broadcast is not
+    ``x + applied``: fedopt's Adam, fedacg's look-ahead) prices every
+    unit dense — the client cannot derive the recycled part, so delta
+    steps degenerate to full-model bytes and the snapshot always wins.
+    """
+    sizes = np.asarray(sizes, np.float64)
+    if not additive:
+        return sizes.copy()
+    return np.where(np.asarray(step_mask, bool), DELTA_STEP_UNIT_BYTES, sizes)
+
+
+def snapshot_price(sizes: np.ndarray, current_mask: np.ndarray,
+                   seed_cache: bool = True) -> np.ndarray:
+    """Per-unit wire bytes of a versioned FULL download at the current
+    version.
+
+    Besides the parameters themselves, a snapshot that starts a delta
+    chain must seed the recycled-update cache for every unit in the
+    CURRENT mask (the very next delta step re-applies prev_update to
+    exactly those units, and any unit recycled later is refreshed by the
+    chain first) — so those units cost double.  ``seed_cache=False``
+    (LUAR drop mode, where recycled units apply zeros; or no delta stage
+    declared at all) is the plain model-bytes broadcast."""
+    sizes = np.asarray(sizes, np.float64)
+    if not seed_cache:
+        return sizes.copy()
+    return sizes + np.where(np.asarray(current_mask, bool), sizes, 0.0)
+
+
+def versioned_download_price(sizes: np.ndarray, current_mask: np.ndarray,
+                             chain: "np.ndarray | None" = None, *,
+                             seed_cache: bool = True):
+    """Choose the cheaper downlink per unit: the delta chain (complete,
+    summed per-step prices) vs the cache-seeding full snapshot.
+
+    Returns ``(per_unit_bytes, used_chain)`` in host float64.  ``chain``
+    is the per-unit chain price (``DeltaLedger.chain_price``) or None on
+    a ledger miss / first contact — then the snapshot is forced."""
+    snap = snapshot_price(sizes, current_mask, seed_cache)
+    if chain is not None and float(chain.sum()) < float(snap.sum()):
+        return np.asarray(chain, np.float64), True
+    return snap, False
+
+
+class DeltaDownlink(UpdateCodec):
+    """The versioned-broadcast transport stage (``down:delta``).
+
+    ``encode`` is the identity: the chain entries are the exact addend
+    trees the additive server applied, so the transport is lossless and
+    the simulator's broadcast values are already the decoded form.  All
+    the protocol logic is host-side pricing: the engine computes the
+    chain-vs-snapshot decision (``versioned_download_price``, fed by the
+    server's ``DeltaLedger``) and hands the chosen per-unit price in as
+    this stage's aux (``pipeline.aux_for("delta", price)``).  aux=None —
+    no version history (first contact, nominal estimates) — prices the
+    plain full snapshot.  Hoisted to the pipeline front so downstream
+    lossy stages (``down:fedpaq:8``) scale whichever transport won.
+    """
+
+    name = "delta"
+    direction = Direction.DOWN
+    down_only = True
+    front = True
+
+    def price_per_unit(self, per_unit, sizes, mask, aux=None):
+        if aux is None:
+            return per_unit
+        return np.asarray(aux, np.float64)

@@ -2,15 +2,22 @@
 
 Grammar (one stage per spec string):
 
-    spec   ::= name [":" arg ("," arg)*]
+    spec   ::= ["down:"] name [":" arg ("," arg)*]
     name   ::= registered codec name        (fedpaq | prune | dropout |
-                                             lbgm | topk | ef | ...)
+                                             lbgm | topk | ef | delta | ...)
     arg    ::= int | float                  (positional, passed to the
                                              codec constructor)
 
 Examples: ``"fedpaq:4"``, ``"topk:0.1"``, ``"ef"``,
 ``("fedpaq:4", "topk:0.1", "ef")``.  A single string may also carry a
 whole stack separated by ``+`` (CLI-friendly): ``"fedpaq:4+topk:0.1+ef"``.
+
+The ``down:`` prefix declares a stage of the server->client broadcast
+instead of the update upload (``Direction.DOWN``): ``"down:delta"`` is
+the versioned delta-encoded model download, ``"down:fedpaq:8"``
+quantizes the broadcast.  One ``FLConfig.codecs`` tuple declares both
+links; ``partition_codec_specs`` splits it so each engine builds one
+pipeline per direction.
 
 ``legacy_codec_specs`` is the deprecation shim: it maps the four retired
 ``FLConfig`` scalar flags onto the equivalent spec tuple, in the exact
@@ -19,13 +26,15 @@ order the old hard-coded stack applied them (fedpaq -> prune -> dropout
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple, Type, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
-from repro.compress.codec import CodecPipeline, UpdateCodec
-from repro.compress.codecs import (DropoutAvg, ErrorFeedback, FedPAQ, LBGM,
-                                   Prune, TopK)
+from repro.compress.codec import CodecPipeline, Direction, UpdateCodec
+from repro.compress.codecs import (DeltaDownlink, DropoutAvg, ErrorFeedback,
+                                   FedPAQ, LBGM, Prune, TopK)
 
 CODECS: Dict[str, Type[UpdateCodec]] = {}
+
+_DOWN_PREFIX = "down:"
 
 
 def register_codec(cls: Type[UpdateCodec]) -> Type[UpdateCodec]:
@@ -36,7 +45,8 @@ def register_codec(cls: Type[UpdateCodec]) -> Type[UpdateCodec]:
     return cls
 
 
-for _cls in (FedPAQ, Prune, DropoutAvg, LBGM, TopK, ErrorFeedback):
+for _cls in (FedPAQ, Prune, DropoutAvg, LBGM, TopK, ErrorFeedback,
+             DeltaDownlink):
     register_codec(_cls)
 
 
@@ -52,14 +62,25 @@ def _parse_arg(tok: str) -> Union[int, float]:
 
 
 def parse_codec(spec: str) -> UpdateCodec:
-    """One spec string -> one codec instance."""
-    name, _, argstr = spec.strip().partition(":")
+    """One spec string -> one codec instance (direction set from the
+    ``down:`` prefix)."""
+    body = spec.strip()
+    direction = Direction.UP
+    if body.startswith(_DOWN_PREFIX):
+        direction = Direction.DOWN
+        body = body[len(_DOWN_PREFIX):].strip()
+    name, _, argstr = body.partition(":")
     name = name.strip()
     if name not in CODECS:
         raise ValueError(f"unknown codec {name!r} in spec {spec!r}; "
                          f"registered: {sorted(CODECS)}")
     args = [_parse_arg(a) for a in argstr.split(",") if a.strip()] if argstr else []
-    return CODECS[name](*args)
+    codec = CODECS[name](*args)
+    if codec.down_only and direction is not Direction.DOWN:
+        raise ValueError(f"codec {name!r} only exists on the broadcast; "
+                         f"spec it as {_DOWN_PREFIX}{body}")
+    codec.direction = direction
+    return codec
 
 
 def split_codec_specs(specs: Union[str, Sequence[str]]) -> Tuple[str, ...]:
@@ -72,8 +93,26 @@ def split_codec_specs(specs: Union[str, Sequence[str]]) -> Tuple[str, ...]:
     return tuple(s.strip() for s in specs if s.strip())
 
 
-def parse_codecs(specs: Union[str, Sequence[str]]) -> CodecPipeline:
-    """Spec strings -> a ``CodecPipeline`` (empty specs -> identity)."""
+def partition_codec_specs(specs: Union[str, Sequence[str]]
+                          ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """Split one mixed codec declaration into ``(up_specs, down_specs)``
+    by the ``down:`` direction prefix (each side keeps its listed order)."""
+    specs = split_codec_specs(specs)
+    up = tuple(s for s in specs if not s.startswith(_DOWN_PREFIX))
+    down = tuple(s for s in specs if s.startswith(_DOWN_PREFIX))
+    return up, down
+
+
+def parse_codecs(specs: Union[str, Sequence[str]],
+                 direction: Optional[Direction] = None) -> CodecPipeline:
+    """Spec strings -> a ``CodecPipeline`` (empty specs -> identity).
+
+    ``direction`` filters a mixed declaration to one link's stages;
+    without it the specs must already be single-direction (the pipeline
+    constructor rejects a mixed stack)."""
+    if direction is not None:
+        up, down = partition_codec_specs(specs)
+        specs = down if direction is Direction.DOWN else up
     return CodecPipeline([parse_codec(s) for s in split_codec_specs(specs)])
 
 

@@ -313,11 +313,29 @@ SIM_SCENARIOS: Dict[str, SimScenario] = {
 }
 
 
+def validate_scenario(sc: SimScenario) -> SimScenario:
+    """Reject malformed scenarios ONCE, at resolution time.
+
+    The diurnal parameters used to be checked inside the per-dispatch
+    ``bandwidth_multiplier`` hot path — and skipped entirely whenever
+    ``bw_amplitude == 0.0``, so a bad ``bw_period`` (or an amplitude a
+    later ``replace`` pushed out of range) only raised mid-run, if ever.
+    Every resolution goes through here instead; the hot path trusts it."""
+    if sc.kind == "diurnal":
+        if not 0.0 <= sc.bw_amplitude < 1.0:
+            raise ValueError(f"scenario {sc.name!r}: bw_amplitude must be "
+                             f"in [0, 1), got {sc.bw_amplitude}")
+        if sc.bw_period <= 0.0:
+            raise ValueError(f"scenario {sc.name!r}: bw_period must be "
+                             f"positive, got {sc.bw_period}")
+    return sc
+
+
 def get_scenario(name_or_spec) -> SimScenario:
     if isinstance(name_or_spec, SimScenario):
-        return name_or_spec
+        return validate_scenario(name_or_spec)
     try:
-        return SIM_SCENARIOS[name_or_spec]
+        return validate_scenario(SIM_SCENARIOS[name_or_spec])
     except KeyError:
         raise KeyError(f"unknown sim scenario {name_or_spec!r}; "
                        f"have {sorted(SIM_SCENARIOS)}") from None

@@ -15,10 +15,16 @@ diverge from the host ledger, so they are gone).
 
 The wall-clock model prices one client round trip as
 
-    download(model) + tau * step_time + upload(~R_t payload)
+    download(broadcast payload) + tau * step_time + upload(~R_t payload)
 
 so the LUAR recycle mask directly shrinks the modeled upload time — the
-systems-level payoff the event-driven simulator measures.
+systems-level payoff the event-driven simulator measures.  BOTH legs
+accept pipeline-priced ``payload_bytes`` overrides: the downlink is no
+longer hard-coded to the full model — under the versioned broadcast
+(``down:delta``) a client at server version v downloads the delta chain
+v->current whenever the server's ``DeltaLedger`` still holds it and it
+is cheaper than a snapshot, and downlink codecs (``down:fedpaq:8``)
+price the broadcast exactly like uplink codecs price the update.
 """
 from __future__ import annotations
 
@@ -95,11 +101,19 @@ class ClientResources(NamedTuple):
     dropout: float = 0.0
 
 
-def download_time(um: UnitMap, res: ClientResources) -> float:
-    """Broadcast is always the full model: recycled units still change on
-    the server (the recycled update is applied), so clients cannot skip
-    them on the way down."""
-    return float(sum(um.unit_bytes)) / res.down_bw
+def download_time(um: UnitMap, res: ClientResources,
+                  payload_bytes: Optional[float] = None) -> float:
+    """Broadcast leg of the round trip.
+
+    Default (``payload_bytes=None``) is the full model — recycled units
+    still change on the server (the recycled update is applied), so an
+    unversioned client cannot skip them on the way down.  A versioned
+    downlink (delta chain against the client's last version, or any
+    ``down:`` codec stack) passes its pipeline-priced ``payload_bytes``
+    so the wall-clock model and the byte ledger price the same wire."""
+    if payload_bytes is None:
+        payload_bytes = float(sum(um.unit_bytes))
+    return payload_bytes / res.down_bw
 
 
 def compute_time(tau: int, res: ClientResources) -> float:
@@ -121,7 +135,9 @@ def upload_time(um: UnitMap, mask: Any, res: ClientResources,
 
 def round_trip_time(um: UnitMap, mask: Any, res: ClientResources, tau: int,
                     scale: float = 1.0,
-                    payload_bytes: Optional[float] = None) -> float:
-    """Dispatch-to-arrival latency of one client round."""
-    return (download_time(um, res) + compute_time(tau, res)
+                    payload_bytes: Optional[float] = None,
+                    download_bytes: Optional[float] = None) -> float:
+    """Dispatch-to-arrival latency of one client round (both transfer
+    legs take pipeline-priced byte overrides)."""
+    return (download_time(um, res, download_bytes) + compute_time(tau, res)
             + upload_time(um, mask, res, scale, payload_bytes))

@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress import (CodecPipeline, legacy_codec_specs, parse_codecs,
-                            split_codec_specs)
+from repro.compress import (CodecPipeline, Direction, delta_step_price,
+                            legacy_codec_specs, parse_codecs,
+                            partition_codec_specs, snapshot_price,
+                            split_codec_specs, versioned_download_price)
 from repro.core import LuarConfig, luar_init, luar_round
 from repro.fl.client import ClientConfig, batched_local_updates
 from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point
@@ -64,7 +66,9 @@ class FLConfig:
 @dataclass
 class FLResult:
     history: List[Dict[str, float]] = field(default_factory=list)
-    comm_ratio: float = 1.0
+    comm_ratio: float = 1.0          # uplink bytes vs FedAvg (same rounds)
+    downloaded: float = 0.0          # cumulative server->client bytes (f64)
+    down_ratio: float = 1.0          # downlink bytes vs full-model broadcast
     agg_count: Optional[np.ndarray] = None
     unit_names: Optional[tuple] = None
     params: Any = None
@@ -95,17 +99,30 @@ def resolve_codec_specs(cfg: FLConfig) -> Tuple[str, ...]:
     return legacy
 
 
-def build_codec_pipeline(cfg: FLConfig) -> CodecPipeline:
-    """A fresh pipeline for this config (bind with ``init_state`` before
-    encoding; see repro.compress.codec)."""
-    return parse_codecs(resolve_codec_specs(cfg))
+def build_codec_pipeline(cfg: FLConfig,
+                         direction: Direction = Direction.UP) -> CodecPipeline:
+    """A fresh pipeline for ONE link of this config (bind with
+    ``init_state`` before encoding; see repro.compress.codec).  The
+    ``down:``-prefixed specs in ``cfg.codecs`` form the DOWN pipeline;
+    everything else is the UP pipeline."""
+    return parse_codecs(resolve_codec_specs(cfg), direction)
+
+
+def server_broadcast_additive(cfg: FLConfig) -> bool:
+    """True when the broadcast evolves as ``x <- x + applied`` (fedavg /
+    fedmut) — the regime where a delta-chain follower can derive recycled
+    units from its own history, so ``down:delta`` steps price recycled
+    units at scalar bytes.  Non-additive servers (fedopt's Adam state,
+    fedacg's look-ahead) price delta steps dense, which degrades the
+    versioned downlink gracefully to always-snapshot."""
+    return cfg.server.kind in ("fedavg", "fedmut")
 
 
 @lru_cache(maxsize=128)
 def _pricing_pipeline(specs: Tuple[str, ...]) -> CodecPipeline:
-    """Cached pipelines for HOST-SIDE PRICING ONLY (never init_state'd
-    or encoded with, so sharing across models is safe)."""
-    return parse_codecs(specs)
+    """Cached UPLINK pipelines for HOST-SIDE PRICING ONLY (never
+    init_state'd or encoded with, so sharing across models is safe)."""
+    return parse_codecs(partition_codec_specs(specs)[0])
 
 
 def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
@@ -120,8 +137,25 @@ def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
     return {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
 
 
+def init_codec_states(params, um, pipeline: CodecPipeline,
+                      down_pipeline: Optional[CodecPipeline] = None):
+    """The opaque codec state a ``make_round_step`` body threads: the UP
+    pipeline state alone, or an ``(up, down)`` pair when a non-empty DOWN
+    pipeline is declared (the pair shape is private to the closure — the
+    callers just thread whatever this returns)."""
+    state = pipeline.init_state(params, um)
+    if down_pipeline is not None and down_pipeline:
+        state = (state, down_pipeline.init_state(params, um))
+    return state
+
+
+_DOWN_KEY_TAG = 0x0D0               # fold_in tag for the broadcast encode
+                                    # (pure: never advances the round key)
+
+
 def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
-                    cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None
+                    cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None,
+                    down_pipeline: Optional[CodecPipeline] = None
                     ) -> Callable:
     """Build the jitted synchronous round body (Alg. 2 lines 5-12).
 
@@ -130,23 +164,42 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
     heterogeneity is disabled: both paths run the SAME traced computation
     on the same cohort batches.
 
-    ``pipeline`` is the codec stack (built from ``cfg`` if omitted);
-    its state is threaded through ``round_step`` as one pytree, and the
-    returned ``aux`` tuple is the pricing evidence for
+    ``pipeline`` is the UPLINK codec stack (built from ``cfg`` if
+    omitted); its state is threaded through ``round_step`` as one pytree,
+    and the returned ``aux`` tuple is the pricing evidence for
     ``client_payload_bytes_per_unit``.  In this synchronous form the
     pipeline encodes the cohort MEAN (one "virtual client" upload,
     priced once per active client) — the per-client form lives in the
-    fedbuff engine."""
+    fedbuff engine.
+
+    ``down_pipeline`` (non-empty) additionally runs the DOWNLINK stack on
+    the broadcast point before local training, so a lossy broadcast codec
+    (``down:fedpaq:8``) changes the numerics it prices; its server-side
+    state rides inside ``codec_state`` (build it with
+    ``init_codec_states``).  An empty/None down pipeline leaves the
+    traced body EXACTLY as before — the bit-for-bit regression path.
+    ``down:delta`` encodes as the identity (lossless transport), so it
+    perturbs nothing either."""
     pipeline = build_codec_pipeline(cfg) if pipeline is None else pipeline
+    down = down_pipeline if (down_pipeline is not None and down_pipeline) else None
 
     @jax.jit
     def round_step(params, luar_state, server_state, codec_state, batches, qkey):
+        if down is None:
+            up_state = codec_state
+        else:
+            up_state, down_state = codec_state
         start = broadcast_point(params, server_state, cfg.server)
+        if down is not None:
+            enc, down_state, _ = down.encode(
+                down_state, start, jax.random.fold_in(qkey, _DOWN_KEY_TAG))
+            start = down.decode(down_state, enc)
         deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
         fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        fresh, codec_state, aux = pipeline.encode(codec_state, fresh, qkey)
+        fresh, up_state, aux = pipeline.encode(up_state, fresh, qkey)
         applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
         params, server_state = apply_update(params, applied, server_state, cfg.server)
+        codec_state = up_state if down is None else (up_state, down_state)
         return params, luar_state, server_state, codec_state, aux
 
     return round_step
@@ -194,14 +247,31 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
     pipeline = build_codec_pipeline(cfg)
-    codec_state = pipeline.init_state(params, um)
-    round_step = make_round_step(loss_fn, cfg, um, pipeline)
+    down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
+    codec_state = init_codec_states(params, um, pipeline, down_pipe)
+    round_step = make_round_step(loss_fn, cfg, um, pipeline, down_pipe)
 
     result = FLResult()
     sizes = np.asarray(um.unit_bytes, np.float64)
+    n_units = len(um.names)
     total_bytes = sizes.sum()
     uploaded = 0.0
+    downloaded = 0.0
     full_per_round = total_bytes * cfg.n_active
+    # downlink versioning (down:delta): a cohort member that has been
+    # dispatched before is exactly ONE version behind (every round's
+    # broadcast reaches the subscribed population, so its cache stays
+    # warm) and pays the single delta step t-1 -> t against the mask
+    # that step applied; a FIRST CONTACT holds no base snapshot and pays
+    # the cache-seeding full download.  Non-additive servers cannot let
+    # clients derive recycled units, so versioning disables itself and
+    # every download is the plain (unseeded) snapshot.
+    additive = server_broadcast_additive(cfg)
+    has_delta = down_pipe.has("delta") and additive
+    seed_cache = has_delta and cfg.luar.mode == "recycle"
+    no_mask = np.zeros(n_units, bool)
+    prev_mask: Optional[np.ndarray] = None
+    seen: set = set()                # clients holding a base snapshot
 
     for t in range(cfg.rounds):
         cohort = rng.choice(cfg.n_clients, size=cfg.n_active, replace=False)
@@ -210,18 +280,41 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
         key, qkey = jax.random.split(key)
         # upload accounting uses the CURRENT R_t (pre-round mask)
         mask_now = np.asarray(luar_state.mask)
+        # downlink happens BEFORE local training: price this round's
+        # broadcast per member (first contact vs one-step chain)
+        if has_delta:
+            snap_pu = snapshot_price(sizes, mask_now, seed_cache)
+            snap_bytes = down_pipe.price_bytes(
+                sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
+            chain = (delta_step_price(sizes, prev_mask)
+                     if prev_mask is not None else None)
+            chain_pu, _ = versioned_download_price(sizes, mask_now, chain,
+                                                   seed_cache=seed_cache)
+            chain_bytes = down_pipe.price_bytes(
+                sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
+            n_new = sum(1 for c in cohort if int(c) not in seen)
+            downloaded += (snap_bytes * n_new
+                           + chain_bytes * (cfg.n_active - n_new))
+            seen.update(int(c) for c in cohort)
+        else:
+            downloaded += down_pipe.price_bytes(sizes, no_mask,
+                                                None) * cfg.n_active
         params, luar_state, server_state, codec_state, aux = round_step(
             params, luar_state, server_state, codec_state, batches, qkey)
         uploaded += client_payload_bytes(sizes, mask_now, cfg, aux,
                                          pipeline) * cfg.n_active
+        prev_mask = mask_now
 
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1):
             metrics = dict(eval_fn(params))
             metrics.update(round=t + 1,
-                           comm_ratio=uploaded / (full_per_round * (t + 1)))
+                           comm_ratio=uploaded / (full_per_round * (t + 1)),
+                           down_ratio=downloaded / (full_per_round * (t + 1)))
             result.history.append(metrics)
 
     result.comm_ratio = uploaded / (full_per_round * cfg.rounds)
+    result.downloaded = downloaded
+    result.down_ratio = downloaded / (full_per_round * cfg.rounds)
     result.agg_count = np.asarray(luar_state.agg_count)
     result.unit_names = um.names
     result.params = params

@@ -103,7 +103,9 @@ def main(argv=None):
     ap.add_argument("--prox-mu", type=float, default=0.0)
     ap.add_argument("--codecs", default="",
                     help="update-codec stack as '+'-separated spec strings, "
-                         "e.g. 'fedpaq:4+topk:0.1+ef' (repro.compress)")
+                         "e.g. 'fedpaq:4+topk:0.1+ef' (repro.compress); "
+                         "'down:'-prefixed stages compress the broadcast "
+                         "instead, e.g. 'fedpaq:4+down:delta'")
     ap.add_argument("--fedpaq-bits", type=int, default=0,
                     help="DEPRECATED: use --codecs fedpaq:<bits>")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -128,6 +130,8 @@ def main(argv=None):
         print(json.dumps(h))
     print(json.dumps({
         "comm_ratio": round(res.comm_ratio, 4),
+        "down_ratio": round(res.down_ratio, 4),
+        "downloaded_mb": round(res.downloaded / 1e6, 3),
         "agg_counts": {n: int(c) for n, c in zip(res.unit_names, res.agg_count)},
         "wall_s": round(time.time() - t0, 1)}))
     if args.ckpt:

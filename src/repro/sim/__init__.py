@@ -10,9 +10,11 @@ deadlines, dropout, and FedBuff-style buffered async aggregation.
                   SimConfig(scenario="bimodal", deadline=30.0), eval_fn)
     time_to_target(res, "acc", 0.9)     # simulated seconds to 90% acc
 """
-from repro.configs.base import SIM_SCENARIOS, SimScenario, get_scenario  # noqa: F401
-from repro.sim.engine import (MaskLedger, SimConfig, SimResult,  # noqa: F401
-                              run_sim, time_to_target)
+from repro.configs.base import (SIM_SCENARIOS, SimScenario,  # noqa: F401
+                                get_scenario, validate_scenario)
+from repro.sim.engine import (DeltaLedger, MaskLedger, SimConfig,  # noqa: F401
+                              SimResult, VersionLedger, run_sim,
+                              time_to_target)
 from repro.sim.events import (ARRIVAL, DEADLINE, DROPOUT, Event,  # noqa: F401
                               EventQueue)
 from repro.sim.profiles import describe, sample_resources  # noqa: F401

@@ -42,6 +42,24 @@ pricing at dispatch, and the byte ledger uses the exact aux-refined
 pricing after encode.  Diurnal scenarios additionally scale each
 dispatch's link bandwidth by the virtual-time-of-day multiplier.
 
+The cost model is BIDIRECTIONAL: every dispatch also prices its
+server->client broadcast through the DOWN pipeline (the ``down:``-
+prefixed stages of the same ``FLConfig.codecs``).  With ``down:delta``
+the fedbuff server keeps a ``DeltaLedger`` — the downlink sibling of the
+``MaskLedger``, same ring-buffer eviction — recording each aggregation's
+per-unit delta-step price, and a dispatch to a client last served at
+version v ships the delta chain v->current when it is still
+ledger-resident and cheaper than a cache-seeding full snapshot (priced
+host-side in float64, per dispatch).  The sync engine exercises the same
+pricing path with the population pinned one version behind the barrier.
+``SimResult`` carries the download ledger (``downloaded``/``down_ratio``
+vs the full-broadcast baseline, full-vs-delta download counts) next to
+the upload one, and downlink bytes whose round trip produced nothing the
+server used (dropouts, stragglers, rejected misses, stranded buffers,
+in-flight at cutoff) are charged to ``wasted_download_bytes`` — the
+broadcast leg was unpriced and uncompressible before, which also hid
+that the headline "comm ratio" ignored half of every round trip.
+
 Equivalence guarantee (tested): sync mode with the "uniform" scenario,
 ``deadline=inf``, no over-provisioning and no dropout replays the exact
 RNG streams of ``fl/rounds.run_fl`` and runs the same jitted round body
@@ -65,13 +83,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import (Direction, delta_step_price, snapshot_price,
+                            versioned_download_price)
 from repro.configs.base import get_scenario
 from repro.core import (luar_init, luar_round, round_trip_time,
                         staleness_discount, staleness_weighted_merge)
 from repro.core.comm import ClientResources, compute_time, download_time
 from repro.fl.client import local_update
 from repro.fl.rounds import (FLConfig, _stack_client_batches,
-                             build_codec_pipeline, make_round_step)
+                             build_codec_pipeline, init_codec_states,
+                             make_round_step, server_broadcast_additive)
 from repro.fl.server import (apply_update, broadcast_point, server_init)
 from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, EventQueue
 from repro.sim.profiles import (bandwidth_multiplier, sample_resources,
@@ -80,47 +101,117 @@ from repro.sim.profiles import (bandwidth_multiplier, sample_resources,
 Params = Any
 
 
-class MaskLedger:
-    """Ring buffer of dispatched recycle sets R_v keyed by server version.
-
-    The fedbuff server records R_v when the first client at version v is
-    dispatched (idempotent: the mask only changes when an aggregation
-    advances the version); an arrival looks up the version it downloaded
-    to reconstruct exactly which units it uploaded.  Bounded capacity:
-    when full, the oldest version is evicted and any still-in-flight
-    client of that version becomes a *ledger miss* on arrival — its
-    update is rejected outright (excluded from the merge, not counted as
-    received) and its payload charged as wasted, the conservative choice
-    since the server can no longer verify which recycle set the payload
-    was built against.  Size the capacity above the worst-case
-    version lag (a slow client in flight across > capacity aggregations)
-    to make misses impossible.
-    """
+class VersionLedger:
+    """Bounded ring buffer keyed by (monotonically growing) server
+    version — the shared storage/eviction policy of the per-version
+    server ledgers (``MaskLedger`` for the uplink, ``DeltaLedger`` for
+    the downlink).  ``record`` is idempotent per version; when capacity
+    overflows the OLDEST version is evicted (and counted), so a lookup
+    miss means "this version's record aged out while the client was in
+    flight".  Size the capacity above the worst-case version lag to make
+    misses impossible."""
 
     def __init__(self, capacity: int = 64):
         if capacity < 1:
             raise ValueError(f"ledger capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._masks: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._entries: "OrderedDict[int, Any]" = OrderedDict()
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._masks)
+        return len(self._entries)
 
     def __contains__(self, version: int) -> bool:
-        return version in self._masks
+        return version in self._entries
 
-    def record(self, version: int, mask: np.ndarray) -> None:
-        if version in self._masks:
+    def record(self, version: int, value: Any) -> None:
+        if version in self._entries:
             return
-        self._masks[version] = np.array(mask, bool, copy=True)
-        while len(self._masks) > self.capacity:
-            self._masks.popitem(last=False)
+        self._entries[version] = value
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
             self.evictions += 1
 
-    def get(self, version: int) -> Optional[np.ndarray]:
-        """The mask dispatched at ``version``, or None if evicted."""
-        return self._masks.get(version)
+    def get(self, version: int) -> Optional[Any]:
+        """The record at ``version``, or None if evicted/never seen."""
+        return self._entries.get(version)
+
+
+class MaskLedger(VersionLedger):
+    """Ring buffer of dispatched recycle sets R_v keyed by server version.
+
+    The fedbuff server records R_v when the first client at version v is
+    dispatched (idempotent: the mask only changes when an aggregation
+    advances the version); an arrival looks up the version it downloaded
+    to reconstruct exactly which units it uploaded.  On a miss (version
+    evicted mid-flight) the update is rejected outright — excluded from
+    the merge, not counted as received — and its payload charged as
+    wasted, the conservative choice since the server can no longer verify
+    which recycle set the payload was built against.
+    """
+
+    def record(self, version: int, mask: np.ndarray) -> None:
+        super().record(version, np.array(mask, bool, copy=True))
+
+
+class DeltaLedger(VersionLedger):
+    """Ring buffer of per-version applied-update records for the
+    versioned downlink (``down:delta``) — the downlink sibling of
+    ``MaskLedger``, same eviction policy.
+
+    The fedbuff server records one entry per aggregation: the per-unit
+    wire price of the delta step v -> v+1 (``compress.delta_step_price``
+    of the recycle set that aggregation actually applied) and, when
+    ``store_trees`` is on, the applied-update tree itself.  A dispatch to
+    a client last served at version v asks for ``chain_price(v, V)``; any
+    evicted step forces the full snapshot instead — mirroring the
+    MaskLedger's reject-on-miss conservatism on the other link.
+
+    ``store_trees`` keeps O(model) host memory per entry and exists for
+    the losslessness guarantee: ``reconstruct`` replays the chain with
+    the exact tree additions the additive server performed, so the result
+    is bit-for-bit the server's later broadcast (tested).  The engines
+    run with prices only.
+    """
+
+    def __init__(self, capacity: int = 64, store_trees: bool = False):
+        super().__init__(capacity)
+        self.store_trees = store_trees
+
+    def record_step(self, version: int, step_price: np.ndarray,
+                    applied: Any = None) -> None:
+        tree = None
+        if self.store_trees:
+            tree = jax.tree.map(lambda a: np.array(a, copy=True), applied)
+        self.record(version, (np.asarray(step_price, np.float64), tree))
+
+    def chain_price(self, v_from: int, v_to: int,
+                    n_units: int) -> Optional[np.ndarray]:
+        """Summed per-unit wire bytes of the delta chain
+        ``v_from -> v_to``, or None if any step was evicted.  An empty
+        chain (client already current) is priced at exactly zero."""
+        total = np.zeros(n_units, np.float64)
+        for v in range(v_from, v_to):
+            entry = self.get(v)
+            if entry is None:
+                return None
+            total = total + entry[0]
+        return total
+
+    def reconstruct(self, params: Any, v_from: int, v_to: int) -> Any:
+        """Replay the stored applied-update chain onto ``params`` (the
+        broadcast at ``v_from``) — the client-side decode of the delta
+        download.  Requires ``store_trees``; raises on a missing step."""
+        if not self.store_trees:
+            raise RuntimeError("reconstruct needs DeltaLedger(store_trees=True)")
+        out = params
+        for v in range(v_from, v_to):
+            entry = self.get(v)
+            if entry is None:
+                raise KeyError(f"delta step {v} evicted; chain {v_from}->{v_to} "
+                               f"is not reconstructible")
+            out = jax.tree.map(lambda p, d: p + d, out, entry[1])
+        return out
 
 
 @dataclass
@@ -153,10 +244,26 @@ class SimConfig:
 @dataclass
 class SimResult:
     history: List[Dict[str, float]] = field(default_factory=list)
-    comm_ratio: float = 1.0
+    comm_ratio: float = 1.0          # uplink bytes / (full model x every
+                                     # SPENT uplink) — the FedAvg baseline
+                                     # would have paid for the same straggler
+                                     # and rejected uploads, so they appear
+                                     # in BOTH numerator and denominator
+    downloaded: float = 0.0          # cumulative server->client bytes (f64)
+    down_ratio: float = 1.0          # downlink bytes / (full model x every
+                                     # dispatch) — the full-broadcast baseline
     sim_time: float = 0.0            # virtual seconds at finish
     rounds_done: int = 0             # aggregations applied (server versions)
     n_received: int = 0              # client updates accepted by the server
+    n_uplinks_spent: int = 0         # uploads that actually crossed the wire
+                                     # (accepted + stragglers + rejected
+                                     # misses; the comm_ratio denominator)
+    n_dispatched: int = 0            # downloads served (every dispatch,
+                                     # including later dropouts)
+    n_full_downloads: int = 0        # snapshot downlinks (versioning off,
+                                     # first contact, miss, or chain lost
+                                     # the price comparison)
+    n_delta_downloads: int = 0       # delta-chain downlinks (down:delta)
     n_stragglers: int = 0            # arrived-too-late / past-deadline drops
     n_dropped: int = 0               # device-vanished dispatches
     n_inflight_end: int = 0          # dispatches still in flight at finish
@@ -166,6 +273,11 @@ class SimResult:
     #     mask ledger enabled and no ledger misses (every uploaded unit
     #     is used by the merge)
     wasted_upload_bytes: float = 0.0   # total (== wasted_per_unit.sum())
+    wasted_download_bytes: float = 0.0  # downlink bytes whose round trip
+                                     # produced nothing the server used:
+                                     # dropouts (vanish after download),
+                                     # stragglers, rejected misses, stranded
+                                     # buffer entries, in-flight at cutoff
     ledger_misses: int = 0           # arrivals whose dispatch-mask version
                                      # was already evicted; with the ledger
                                      # enabled these are rejected outright
@@ -187,6 +299,11 @@ def time_to_target(result: SimResult, metric: str, target: float,
                    mode: str = "max") -> float:
     """First virtual time at which ``metric`` crosses ``target`` (inf if
     never).  mode="max" for accuracy-like, "min" for loss-like metrics."""
+    if mode not in ("max", "min"):
+        # a typo'd mode used to fall through every comparison and return
+        # inf — indistinguishable from "never reached the target"
+        raise ValueError(f"time_to_target mode must be 'max' or 'min', "
+                         f"got {mode!r}")
     for h in result.history:
         v = h.get(metric)
         if v is None:
@@ -265,20 +382,38 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     luar_state, um = luar_init(params, cfg.luar, k1)
     server_state = server_init(params, cfg.server, k2)
     pipeline = build_codec_pipeline(cfg)
-    codec_state = pipeline.init_state(params, um)
-    round_step = make_round_step(loss_fn, cfg, um, pipeline)
+    down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
+    codec_state = init_codec_states(params, um, pipeline, down_pipe)
+    round_step = make_round_step(loss_fn, cfg, um, pipeline, down_pipe)
 
     cohort_size = max(1, int(round(cfg.n_active * sim.overprovision)))
     sizes = np.asarray(um.unit_bytes, np.float64)
+    n_units = len(um.names)
     total_bytes = sizes.sum()
+    # downlink versioning (down:delta): under the synchronous barrier the
+    # subscribed population receives every broadcast, so an already-seeded
+    # member is at most ONE aggregation behind — ``pending_chain`` holds
+    # the per-unit price of the model change since the last broadcast
+    # (zero when no round aggregated, one delta step otherwise) — while a
+    # FIRST CONTACT holds no base snapshot and pays the cache-seeding
+    # full download.  Non-additive servers (fedopt/fedacg) cannot let
+    # clients derive recycled units: versioning disables itself and every
+    # dispatch is the plain snapshot.
+    additive = server_broadcast_additive(cfg)
+    has_delta = down_pipe.has("delta") and additive
+    seed_cache = has_delta and cfg.luar.mode == "recycle"
+    no_mask = np.zeros(n_units, bool)
+    pending_chain: Optional[np.ndarray] = None
+    seen: set = set()                # clients holding a base snapshot
 
     queue = EventQueue()
     res = SimResult(resources=resources,
-                    wasted_per_unit=np.zeros(len(um.names), np.float64))
+                    wasted_per_unit=np.zeros(n_units, np.float64))
     # synchronous rounds cannot see mask staleness: every cohort member
     # downloads the current R_t and the merge applies that same R_t
     res.staleness_observed = np.zeros(0, np.int32)
     uploaded = 0.0
+    downloaded = 0.0
 
     for t in range(cfg.rounds):
         cohort = rng.choice(cfg.n_clients, size=cohort_size, replace=False)
@@ -293,32 +428,67 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         # known after encode (LBGM scalars, top-k survivor counts)
         nominal_per_unit = pipeline.price_per_unit(sizes, mask_now)
         nominal_bytes = float(nominal_per_unit.sum())
+        # downlink: price this round's broadcast per member — an
+        # already-seeded member ships the pending chain step vs snapshot
+        # (whichever is cheaper, host f64), a first contact ships the
+        # cache-seeding snapshot — the full pricing path of the async
+        # engine with the seeded lag pinned to one
+        if has_delta:
+            snap_pu = snapshot_price(sizes, mask_now, seed_cache)
+            snap_bytes = down_pipe.price_bytes(
+                sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
+            chain_pu, used_chain = versioned_download_price(
+                sizes, mask_now, pending_chain, seed_cache=seed_cache)
+            chain_bytes = down_pipe.price_bytes(
+                sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
+            pending_chain = np.zeros(n_units, np.float64)  # population current
+        else:
+            snap_bytes = chain_bytes = down_pipe.price_bytes(sizes, no_mask,
+                                                             None)
+            used_chain = False
         t0 = queue.now
         bw = bandwidth_multiplier(scenario, t0)     # diurnal link quality
         n_scheduled = 0
+        down_by_pos: Dict[int, float] = {}
+        sched_pos: set = set()
         for pos, c in enumerate(cohort):
+            first = has_delta and int(c) not in seen
+            seen.add(int(c))
+            down_bytes = snap_bytes if first else chain_bytes
+            down_by_pos[pos] = down_bytes
+            downloaded += down_bytes
+            res.n_dispatched += 1
+            if used_chain and not first:
+                res.n_delta_downloads += 1
+            else:
+                res.n_full_downloads += 1
             r = scale_bandwidth(resources[c], bw)
             if r.dropout and sys_rng.random() < r.dropout:
                 # device vanishes after download+compute, before upload
-                queue.push(t0 + download_time(um, r) + compute_time(cfg.tau, r),
+                queue.push(t0 + download_time(um, r, down_bytes)
+                           + compute_time(cfg.tau, r),
                            DROPOUT, int(c), {"pos": pos})
                 continue
             queue.push(t0 + round_trip_time(um, mask_now, r, cfg.tau,
-                                            payload_bytes=nominal_bytes),
+                                            payload_bytes=nominal_bytes,
+                                            download_bytes=down_bytes),
                        ARRIVAL, int(c), {"pos": pos})
             n_scheduled += 1
+            sched_pos.add(pos)
         if math.isfinite(sim.deadline):
             queue.push(t0 + sim.deadline, DEADLINE)
         target = min(sim.collect, n_scheduled) if sim.collect else n_scheduled
 
         # -- drain events until the round closes --------------------------
         arrived_pos: List[int] = []
+        n_drop_round = 0
         while queue:
             ev = queue.pop()
             if ev.kind == DEADLINE:
                 break
             if ev.kind == DROPOUT:
-                res.n_dropped += 1
+                n_drop_round += 1
+                res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
                 continue
             arrived_pos.append(ev.payload["pos"])
             if len(arrived_pos) >= target:
@@ -333,13 +503,22 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # non-aggregated clients, so the nominal price is the
             # conservative charge)
             uploaded += nominal_bytes * n_strag
+            res.n_uplinks_spent += n_strag
             res.wasted_per_unit += nominal_per_unit * n_strag
             res.wasted_upload_bytes += nominal_bytes * n_strag
         # pending DROPOUT events (device vanished later than the round
         # closed) still count as dropped, not as stragglers — a dropout
-        # vanishes before its upload starts, so it spends no uplink
-        res.n_dropped += sum(1 for ev in queue.clear_pending()
-                             if ev.kind == DROPOUT)
+        # vanishes before its upload starts, so it spends no uplink.
+        # Downlink waste: a dropout downloaded the broadcast then
+        # vanished; a straggler's whole round trip was discarded — either
+        # way the server paid that member's (priced) downlink for nothing
+        for ev in queue.clear_pending():
+            if ev.kind == DROPOUT:
+                n_drop_round += 1
+                res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
+        res.n_dropped += n_drop_round
+        res.wasted_download_bytes += sum(
+            down_by_pos[p] for p in sched_pos - set(arrived_pos))
 
         if not arrived_pos:
             continue                      # nobody made it; model unchanged
@@ -362,17 +541,31 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         per_client = pipeline.price_bytes(sizes, mask_now, aux)
         uploaded += per_client * len(arrived_pos)
         res.n_received += len(arrived_pos)
+        res.n_uplinks_spent += len(arrived_pos)
         res.rounds_done += 1
+        if has_delta:
+            # this aggregation is the model change the NEXT broadcast must
+            # carry: one delta step against the mask it applied
+            pending_chain = pending_chain + delta_step_price(sizes, mask_now)
 
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
                                     or t == cfg.rounds - 1):
             metrics = dict(eval_fn(params))
             metrics.update(round=t + 1, t_sim=queue.now,
-                           comm_ratio=uploaded / max(total_bytes * res.n_received, 1.0))
+                           comm_ratio=uploaded / max(
+                               total_bytes * res.n_uplinks_spent, 1.0),
+                           down_ratio=downloaded / max(
+                               total_bytes * res.n_dispatched, 1.0))
             res.history.append(metrics)
 
     res.sim_time = queue.now
-    res.comm_ratio = uploaded / max(total_bytes * res.n_received, 1.0)
+    # ratio vs a FedAvg baseline paying for the SAME spent uplinks: the
+    # straggler/rejected waste in the numerator is matched by the baseline
+    # bytes those same uploads would have cost (denominating over accepted
+    # uploads only overstated cost — an uncompressed run could exceed 1)
+    res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
+    res.downloaded = downloaded
+    res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
     res.params = params
     res.luar_state = luar_state
     return res
@@ -386,7 +579,8 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
 def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                  sim: SimConfig, scenario, resources, eval_fn) -> SimResult:
     pipeline = build_codec_pipeline(cfg)
-    sync_only = pipeline.sync_only_specs()
+    down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
+    sync_only = pipeline.sync_only_specs() + down_pipe.sync_only_specs()
     if sync_only:
         raise NotImplementedError(
             f"codec stage(s) {list(sync_only)} are anchored to a "
@@ -412,6 +606,38 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
 
     client_fn = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.client))
     encode_fn = jax.jit(lambda st, delta, qkey: pipeline.encode(st, delta, qkey))
+
+    # -- versioned downlink (the DOWN pipeline) ---------------------------
+    # the broadcast a dispatch hands its client runs through the downlink
+    # codec stack (lossy stages change the numerics they price; the delta
+    # transport is the identity), and the DeltaLedger prices each client's
+    # actual version lag: chain of per-version applied-update steps when
+    # still ledger-resident and cheaper, cache-seeding full snapshot
+    # otherwise.  Downlink codec state is SERVER-side (one broadcast
+    # encoder), unlike the per-client uplink state above; its RNG is a
+    # dedicated stream so declaring a downlink stack never perturbs the
+    # learning RNG.  Non-additive servers (fedopt/fedacg) cannot let a
+    # chain follower derive recycled units, so versioning disables itself
+    # and every dispatch prices the plain snapshot.
+    additive = server_broadcast_additive(cfg)
+    has_delta = down_pipe.has("delta") and additive
+    seed_cache = has_delta and cfg.luar.mode == "recycle"
+    no_mask = np.zeros(n_units, bool)
+    delta_ledger = DeltaLedger(sim.ledger_capacity) if has_delta else None
+    last_dl: Dict[int, int] = {}        # client -> last downloaded version
+    down_state = down_pipe.init_state(params, um) if down_pipe else None
+    down_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xD0FF))
+    down_encode_fn = jax.jit(
+        lambda st, tree, k: down_pipe.encode(st, tree, k))
+
+    def broadcast_for_dispatch():
+        nonlocal down_state, down_key
+        start = broadcast_point(params, server_state, cfg.server)
+        if not down_pipe:
+            return start
+        down_key, sub = jax.random.split(down_key)
+        enc, down_state, _ = down_encode_fn(down_state, start, sub)
+        return down_pipe.decode(down_state, enc)
 
     # codec state is PER CLIENT here (this is what makes EF-style error
     # feedback real: each client's residual tracks what ITS lossy uploads
@@ -458,12 +684,14 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     res = SimResult(resources=resources,
                     wasted_per_unit=np.zeros(n_units, np.float64))
     uploaded = 0.0
+    downloaded = 0.0
     version = 0
     observed: List[int] = []            # staleness of every accepted arrival
     jobs: Dict[int, dict] = {}
     buffer: List[tuple] = []            # (delta, staleness, validity row)
 
     def dispatch(c: int, now: float):
+        nonlocal downloaded
         # link quality is sampled at dispatch time (diurnal scenarios)
         r = scale_bandwidth(resources[c], bandwidth_multiplier(scenario, now))
         idx = parts[c]
@@ -474,20 +702,43 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         # nominal (aux-free) price: the wall-clock estimate, and the
         # conservative charge for payloads whose encode never runs
         per_unit = pipeline.price_per_unit(sizes, mask_now)
+        # downlink: price this client's ACTUAL version lag — delta chain
+        # from its last downloaded version when the DeltaLedger still
+        # holds every step and the chain is cheaper, else full snapshot
+        # (first contact, eviction, or a lag so long dense wins)
+        if has_delta:
+            chain = (delta_ledger.chain_price(last_dl[c], version, n_units)
+                     if c in last_dl else None)
+            down_pu, used_chain = versioned_download_price(
+                sizes, mask_now, chain, seed_cache=seed_cache)
+            down_aux = down_pipe.aux_for("delta", down_pu)
+        else:
+            down_aux, used_chain = None, False
+        down_bytes = down_pipe.price_bytes(sizes, no_mask, down_aux)
+        downloaded += down_bytes
+        res.n_dispatched += 1
+        if used_chain:
+            res.n_delta_downloads += 1
+        else:
+            res.n_full_downloads += 1
+        last_dl[c] = version
         jobs[c] = {
-            "start": broadcast_point(params, server_state, cfg.server),
+            "start": broadcast_for_dispatch(),
             "batches": batches,
             "version": version,         # the mask version this client saw
             "mask": mask_now,           # the dispatched recycle set itself
             "per_unit": per_unit,       # nominal uplink bytes by unit
             "bytes": float(per_unit.sum()),
+            "down_bytes": down_bytes,   # the broadcast leg, pipeline-priced
         }
         if r.dropout and sys_rng.random() < r.dropout:
-            queue.push(now + download_time(um, r) + compute_time(cfg.tau, r),
+            queue.push(now + download_time(um, r, down_bytes)
+                       + compute_time(cfg.tau, r),
                        DROPOUT, c)
         else:
             queue.push(now + round_trip_time(um, mask_now, r, cfg.tau,
-                                             payload_bytes=jobs[c]["bytes"]),
+                                             payload_bytes=jobs[c]["bytes"],
+                                             download_bytes=down_bytes),
                        ARRIVAL, c)
 
     def charge_waste(wasted: np.ndarray):
@@ -528,9 +779,12 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                 # which recycle set the payload was built against — reject
                 # the update outright and charge every uploaded byte (at
                 # the nominal price; the rejected payload is never decoded
-                # so aux-exact pricing does not exist for it)
+                # so aux-exact pricing does not exist for it).  The whole
+                # round trip produced nothing: its downlink is waste too.
                 uploaded += job["bytes"]
+                res.n_uplinks_spent += 1
                 charge_waste(job["per_unit"].copy())
+                res.wasted_download_bytes += job["down_bytes"]
                 dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
                 continue
             key, qkey = jax.random.split(key)
@@ -543,6 +797,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             # against the DISPATCHED mask (aux: top-k survivor counts etc.)
             per_unit = pipeline.price_per_unit(sizes, job["mask"], aux)
             uploaded += float(per_unit.sum())
+            res.n_uplinks_spent += 1
             stal = version - job["version"]
             observed.append(stal)
             if sim.mask_ledger:
@@ -558,20 +813,39 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                 charge_waste(np.where(mask_now, per_unit, 0.0))
                 uncharged = np.where(mask_now, 0.0, per_unit)
             # uncharged: payload bytes still unaccounted if this update
-            # never reaches a merge (stranded in a partial buffer)
-            buffer.append((delta, stal, valid, uncharged))
+            # never reaches a merge (stranded in a partial buffer);
+            # down_bytes rides along so a stranded round trip can charge
+            # its broadcast leg too
+            buffer.append((delta, stal, valid, uncharged, job["down_bytes"]))
             res.n_received += 1
             if len(buffer) >= sim.buffer_size:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                       *[d for d, _, _, _ in buffer])
-                stal_arr = jnp.asarray([s for _, s, _, _ in buffer], jnp.int32)
-                valid_arr = jnp.asarray(np.stack([v for _, _, v, _ in buffer]))
+                                       *[d for d, _, _, _, _ in buffer])
+                stal_arr = jnp.asarray([s for _, s, _, _, _ in buffer], jnp.int32)
+                valid_np = np.stack([v for _, _, v, _, _ in buffer])
+                valid_arr = jnp.asarray(valid_np)
                 alpha_t = (_schedule_alpha(alpha, observed, sim.staleness_window)
                            if sim.adaptive_alpha else alpha)
                 res.alphas.append(alpha_t)
+                cur_mask = np.asarray(luar_state.mask)   # pre-agg R_v
                 params, luar_state, server_state = agg_fn(
                     params, luar_state, server_state, stacked, stal_arr,
                     valid_arr, jnp.float32(alpha_t))
+                if has_delta:
+                    # the downlink sibling of ledger.record: price the
+                    # delta step this aggregation just created.  Scalar
+                    # (derivable) pricing only for units the aggregation
+                    # EFFECTIVELY recycled (no valid client uploaded —
+                    # the host-side mirror of agg_fn's eff_mask) that are
+                    # ALSO in the current mask R_v: snapshots at v seed
+                    # exactly R_v, and every fresh or dense-priced unit
+                    # in a later step refreshes the follower's cache, so
+                    # eff-but-not-current units (possible when the whole
+                    # buffer is stale) must ship dense — a unit a
+                    # just-seeded client could not otherwise derive
+                    eff_mask = ~np.any(valid_np, axis=0)
+                    delta_ledger.record_step(
+                        version, delta_step_price(sizes, eff_mask & cur_mask))
                 buffer.clear()
                 version += 1
                 res.rounds_done = version
@@ -580,22 +854,35 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                     metrics = dict(eval_fn(params))
                     metrics.update(round=version, t_sim=queue.now,
                                    comm_ratio=uploaded / max(
-                                       total_bytes * res.n_received, 1.0))
+                                       total_bytes * res.n_uplinks_spent, 1.0),
+                                   down_ratio=downloaded / max(
+                                       total_bytes * res.n_dispatched, 1.0))
                     res.history.append(metrics)
         else:
+            # the device downloaded the broadcast, computed, and vanished
+            # before its upload started: zero uplink spent, but the served
+            # downlink is pure waste
             res.n_dropped += 1
+            res.wasted_download_bytes += job["down_bytes"]
         # the slot is free again: hand the next idle client a fresh model
         dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
 
     # a truncated run (max_sim_time / event cap) can strand accepted
     # uploads in a partially filled buffer: they never reach a merge, so
-    # their remaining payload is wasted traffic
+    # their remaining payload — and the broadcast leg that produced it —
+    # is wasted traffic
     res.n_stranded_end = len(buffer)
-    for _, _, _, uncharged in buffer:
+    for _, _, _, uncharged, down_bytes in buffer:
         charge_waste(uncharged)
+        res.wasted_download_bytes += down_bytes
     res.n_inflight_end = len(jobs)      # incl. pending DROPOUT dispatches
+    # in-flight downloads were served but their round trips never finished
+    for job in jobs.values():
+        res.wasted_download_bytes += job["down_bytes"]
     res.sim_time = queue.now
-    res.comm_ratio = uploaded / max(total_bytes * res.n_received, 1.0)
+    res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
+    res.downloaded = downloaded
+    res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
     res.staleness_observed = np.asarray(observed, np.int32)
     res.staleness_q = _staleness_quantiles(observed)
     res.params = params

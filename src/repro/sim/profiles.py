@@ -57,14 +57,12 @@ def bandwidth_multiplier(scenario, t: float) -> float:
     The engines sample this once per DISPATCH and price the whole round
     trip at that instant's bandwidth — a client's transfer is short next
     to the cycle period, so the within-transfer variation is noise the
-    model deliberately ignores."""
+    model deliberately ignores.  Parameter validation happens once at
+    scenario resolution (``configs.base.validate_scenario``), not here in
+    the per-dispatch hot path."""
     sc: SimScenario = get_scenario(scenario)
     if sc.kind != "diurnal" or sc.bw_amplitude == 0.0:
         return 1.0
-    if not 0.0 <= sc.bw_amplitude < 1.0:
-        raise ValueError(f"bw_amplitude must be in [0, 1), got {sc.bw_amplitude}")
-    if sc.bw_period <= 0.0:
-        raise ValueError(f"bw_period must be positive, got {sc.bw_period}")
     return 1.0 + sc.bw_amplitude * math.sin(
         2.0 * math.pi * t / sc.bw_period + sc.bw_phase)
 

@@ -1,0 +1,332 @@
+"""Versioned downlink: delta-encoded model broadcast + bidirectional
+byte accounting.
+
+Covers the four load-bearing properties of the download path:
+  * delta-chain reconstruction is LOSSLESS — replaying the ledger's
+    applied-update trees reproduces the later snapshot bit-for-bit
+    (additive servers apply the exact same additions);
+  * chain-vs-snapshot pricing picks the cheaper transport per dispatch;
+  * DeltaLedger eviction forces a full download (the downlink mirror of
+    the MaskLedger's reject-on-miss);
+  * a no-versioning config reproduces the PR-3 upload byte ledger
+    exactly — declaring a lossless downlink must not perturb anything
+    the uplink accounting or the learning trajectory already pinned.
+
+The end-to-end simulator checks are slow-marked into the nightly CI
+``full`` tier alongside the other async-path soak tests.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import (DELTA_STEP_UNIT_BYTES, Direction, delta_step_price,
+                            parse_codec, parse_codecs, partition_codec_specs,
+                            snapshot_price, versioned_download_price)
+from repro.core import LuarConfig
+from repro.core.units import build_units
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import FLConfig, run_fl
+from repro.models.cnn import mlp_init, mlp_apply, softmax_xent
+from repro.sim import DeltaLedger, SimConfig, run_sim
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y = gaussian_mixture(1200, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 12, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    def eval_fn(p):
+        return {"acc": float(jnp.mean(jnp.argmax(mlp_apply(p, xj), -1) == yj))}
+
+    return dict(loss_fn=loss_fn, params=params, data={"x": x, "y": y},
+                parts=parts, eval_fn=eval_fn)
+
+
+def _cfg(**kw):
+    kw.setdefault("client", ClientConfig(lr=0.05))
+    kw.setdefault("rounds", 8)
+    kw.setdefault("eval_every", 4)
+    return FLConfig(n_clients=12, n_active=6, tau=3, batch_size=8, **kw)
+
+
+def _trees_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# grammar + direction
+# ---------------------------------------------------------------------------
+
+
+def test_down_prefix_round_trips_and_partitions():
+    c = parse_codec("down:fedpaq:8")
+    assert c.direction is Direction.DOWN and c.spec() == "down:fedpaq:8"
+    d = parse_codec("down:delta")
+    assert d.direction is Direction.DOWN and d.spec() == "down:delta"
+    up, down = partition_codec_specs("fedpaq:4+down:delta+ef+down:fedpaq:8")
+    assert up == ("fedpaq:4", "ef")
+    assert down == ("down:delta", "down:fedpaq:8")
+
+
+def test_delta_is_down_only_and_pipelines_are_one_direction():
+    with pytest.raises(ValueError, match="only exists on the broadcast"):
+        parse_codec("delta")
+    with pytest.raises(ValueError, match="one direction"):
+        parse_codecs(("fedpaq:4", "down:delta"))
+    # direction filter splits the mixed declaration instead
+    up = parse_codecs(("fedpaq:4", "down:delta"), Direction.UP)
+    down = parse_codecs(("fedpaq:4", "down:delta"), Direction.DOWN)
+    assert up.specs() == ("fedpaq:4",)
+    assert down.specs() == ("down:delta",)
+
+
+def test_delta_hoisted_before_lossy_down_stages():
+    """The transport decision (chain vs snapshot) must price before a
+    lossy broadcast codec scales the bytes, whatever the listed order."""
+    pipe = parse_codecs(("down:fedpaq:8", "down:delta"))
+    assert pipe.specs() == ("down:delta", "down:fedpaq:8")
+    sizes = np.array([100.0, 200.0, 400.0])
+    chain = np.array([4.0, 200.0, 400.0])
+    priced = pipe.price_per_unit(sizes, np.zeros(3, bool),
+                                 pipe.aux_for("delta", chain))
+    np.testing.assert_allclose(priced, chain * 0.25)   # 8/32 on the chain
+    nominal = pipe.price_per_unit(sizes, np.zeros(3, bool))
+    np.testing.assert_allclose(nominal, sizes * 0.25)  # snapshot fallback
+
+
+# ---------------------------------------------------------------------------
+# pricing algebra: chain vs snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_delta_step_and_snapshot_prices():
+    sizes = np.array([100.0, 200.0, 400.0])
+    mask = np.array([True, False, True])
+    step = delta_step_price(sizes, mask)
+    np.testing.assert_array_equal(
+        step, [DELTA_STEP_UNIT_BYTES, 200.0, DELTA_STEP_UNIT_BYTES])
+    # non-additive servers cannot let clients derive recycled units:
+    # delta steps degenerate to dense and the snapshot always wins
+    np.testing.assert_array_equal(delta_step_price(sizes, mask, additive=False),
+                                  sizes)
+    # the snapshot seeds the recycled-update cache for masked units
+    np.testing.assert_array_equal(snapshot_price(sizes, mask),
+                                  [200.0, 200.0, 800.0])
+    np.testing.assert_array_equal(snapshot_price(sizes, mask, seed_cache=False),
+                                  sizes)
+
+
+def test_versioned_download_price_picks_cheaper():
+    sizes = np.array([100.0, 200.0, 400.0])
+    mask = np.zeros(3, bool)
+    short = np.array([4.0, 4.0, 400.0])
+    pu, used = versioned_download_price(sizes, mask, short)
+    assert used and np.array_equal(pu, short)
+    long_chain = short * 10
+    pu, used = versioned_download_price(sizes, mask, long_chain)
+    assert not used and np.array_equal(pu, sizes)      # snapshot wins
+    pu, used = versioned_download_price(sizes, mask, None)
+    assert not used and np.array_equal(pu, sizes)      # miss forces snapshot
+    # a client already at the current version downloads nothing
+    pu, used = versioned_download_price(sizes, mask, np.zeros(3))
+    assert used and pu.sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# DeltaLedger: bitwise chain reconstruction + eviction
+# ---------------------------------------------------------------------------
+
+
+def test_delta_chain_reconstruction_is_bitwise():
+    """Replaying the ledger's applied trees IS the additive server's own
+    computation, so the reconstructed model equals the later snapshot
+    bit-for-bit — the losslessness claim of the delta transport."""
+    rng = np.random.default_rng(0)
+    tmpl = {"w": (5, 3), "b": (4,)}
+    tree = lambda: {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+                    for k, s in tmpl.items()}
+    ledger = DeltaLedger(capacity=8, store_trees=True)
+    params = tree()
+    snapshots = [params]
+    for v in range(5):
+        applied = tree()
+        ledger.record_step(v, np.ones(2), applied)
+        params = jax.tree.map(lambda p, d: p + d, params, applied)
+        snapshots.append(params)
+    # from the start and from any midpoint
+    assert _trees_equal(ledger.reconstruct(snapshots[0], 0, 5), snapshots[5])
+    assert _trees_equal(ledger.reconstruct(snapshots[2], 2, 4), snapshots[4])
+    # empty chain is the identity
+    assert _trees_equal(ledger.reconstruct(snapshots[3], 3, 3), snapshots[3])
+
+
+def test_delta_ledger_eviction_and_tree_policy():
+    ledger = DeltaLedger(capacity=2)
+    for v in range(4):
+        ledger.record_step(v, np.full(3, float(v + 1)))
+    assert ledger.evictions == 2
+    # steps 0/1 evicted: any chain touching them is gone
+    assert ledger.chain_price(1, 4, 3) is None
+    np.testing.assert_array_equal(ledger.chain_price(2, 4, 3), np.full(3, 7.0))
+    np.testing.assert_array_equal(ledger.chain_price(3, 3, 3), np.zeros(3))
+    with pytest.raises(RuntimeError, match="store_trees"):
+        ledger.reconstruct({}, 2, 4)
+    trees = DeltaLedger(capacity=2, store_trees=True)
+    trees.record_step(0, np.ones(1), {"w": jnp.ones(2)})
+    trees.record_step(1, np.ones(1), {"w": jnp.ones(2)})
+    trees.record_step(2, np.ones(1), {"w": jnp.ones(2)})
+    with pytest.raises(KeyError, match="evicted"):
+        trees.reconstruct({"w": jnp.zeros(2)}, 0, 3)
+
+
+# ---------------------------------------------------------------------------
+# run_fl + sync engine: lossless transport, honest ledger
+# ---------------------------------------------------------------------------
+
+
+def test_run_fl_down_delta_is_bitwise_and_cheaper(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    plain = run_fl(task["loss_fn"], task["params"], task["data"], task["parts"],
+                   cfg, task["eval_fn"])
+    delta = run_fl(task["loss_fn"], task["params"], task["data"], task["parts"],
+                   _cfg(luar=LuarConfig(delta=2), codecs=("down:delta",)),
+                   task["eval_fn"])
+    # the transport is lossless: identical trajectory, identical uplink
+    assert _trees_equal(plain.params, delta.params)
+    assert plain.comm_ratio == delta.comm_ratio
+    # no-versioning reproduces the PR-3 ledger exactly: full broadcast
+    assert plain.down_ratio == 1.0
+    # versioned downlink strictly cheaper than the full broadcast
+    assert 0.0 < delta.down_ratio < 1.0
+    assert delta.downloaded < plain.downloaded
+
+
+@pytest.mark.slow
+def test_sync_sim_down_delta_bitwise_and_counts(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    plain = run_sim(task["loss_fn"], task["params"], task["data"],
+                    task["parts"], cfg, SimConfig(scenario="uniform"),
+                    task["eval_fn"])
+    delta = run_sim(task["loss_fn"], task["params"], task["data"],
+                    task["parts"],
+                    _cfg(luar=LuarConfig(delta=2), codecs=("down:delta",)),
+                    SimConfig(scenario="uniform"), task["eval_fn"])
+    assert _trees_equal(plain.params, delta.params)
+    assert plain.comm_ratio == delta.comm_ratio
+    assert plain.down_ratio == 1.0 and plain.n_delta_downloads == 0
+    assert plain.n_dispatched == cfg.n_active * cfg.rounds
+    # every client's FIRST dispatch is the cache-seeding snapshot; each
+    # re-dispatch ships the one-step chain (uniform scenario: nobody
+    # misses, the subscribed population stays one version behind)
+    assert cfg.n_active <= delta.n_full_downloads <= cfg.n_clients
+    assert delta.n_delta_downloads == delta.n_dispatched - delta.n_full_downloads
+    assert delta.n_delta_downloads > 0
+    assert delta.down_ratio < 1.0
+    # bidirectional history: both ratios reported every eval
+    assert all("down_ratio" in h and "comm_ratio" in h for h in delta.history)
+
+
+def test_non_additive_server_degrades_to_plain_snapshots(task):
+    """fedopt's broadcast is not ``x + applied``: a chain follower cannot
+    derive recycled units, so down:delta must disable itself — every
+    download is the plain (unseeded) full snapshot."""
+    from repro.fl.server import ServerConfig
+    cfg = _cfg(rounds=4, luar=LuarConfig(delta=2),
+               server=ServerConfig(kind="fedopt", lr=0.1),
+               codecs=("down:delta",))
+    res = run_sim(task["loss_fn"], task["params"], task["data"],
+                  task["parts"], cfg, SimConfig(scenario="uniform"),
+                  task["eval_fn"])
+    assert res.n_delta_downloads == 0
+    assert res.n_full_downloads == res.n_dispatched
+    assert res.down_ratio == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# fedbuff: the tentpole end-to-end claims
+# ---------------------------------------------------------------------------
+
+
+def _fedbuff(task, sim_kw, **cfg_kw):
+    cfg = _cfg(rounds=20, eval_every=5, **cfg_kw)
+    return cfg, run_sim(task["loss_fn"], task["params"], task["data"],
+                        task["parts"], cfg, SimConfig(mode="fedbuff", **sim_kw),
+                        task["eval_fn"])
+
+
+@pytest.mark.slow
+def test_fedbuff_down_delta_total_bytes_below_full_broadcast(task):
+    """The acceptance claim: with the delta-encoded broadcast, TOTAL
+    (up + down) bytes drop strictly below the full-broadcast baseline at
+    equal accuracy.  Every client stays in flight and the buffer spans
+    one rotation, so the redispatch lag is ~1 version and the chain wins
+    nearly every pricing comparison."""
+    um = build_units(task["params"], "leaf")
+    total = float(sum(um.unit_bytes))
+    sim_kw = dict(scenario="uniform", buffer_size=12, concurrency=12)
+    luar = LuarConfig(delta=4, granularity="leaf")
+    _, base = _fedbuff(task, sim_kw, luar=luar)
+    _, delt = _fedbuff(task, sim_kw, luar=luar, codecs=("down:delta",))
+    up_base = base.comm_ratio * total * base.n_uplinks_spent
+    up_delt = delt.comm_ratio * total * delt.n_uplinks_spent
+    assert base.down_ratio == 1.0
+    assert delt.down_ratio < 1.0
+    assert delt.n_delta_downloads > delt.n_full_downloads
+    # total bytes strictly below the full-broadcast baseline...
+    assert up_delt + delt.downloaded < up_base + base.downloaded
+    # ...at equal accuracy (the lossless transport trains the same model;
+    # async arrival order shifts with the faster downlink, so "equal" is
+    # statistical, not bitwise)
+    assert abs(base.history[-1]["acc"] - delt.history[-1]["acc"]) < 0.05
+
+
+@pytest.mark.slow
+def test_fedbuff_delta_ledger_eviction_forces_full_download(task):
+    """With the DeltaLedger too small for the population's version lag,
+    every chain lookup misses and the engine falls back to snapshots —
+    eviction degrades cost, never correctness."""
+    luar = LuarConfig(delta=5, scheme="random", granularity="leaf")
+    # idle-pool rotation: lag ~4 versions between a client's downloads
+    sim_kw = dict(scenario="uniform", buffer_size=2, concurrency=4,
+                  mask_ledger=False)
+    _, roomy = _fedbuff(task, dict(sim_kw, ledger_capacity=64),
+                        luar=luar, codecs=("down:delta",))
+    _, tiny = _fedbuff(task, dict(sim_kw, ledger_capacity=2),
+                       luar=luar, codecs=("down:delta",))
+    assert roomy.n_delta_downloads > 0          # chains do win when resident
+    assert tiny.n_delta_downloads < roomy.n_delta_downloads
+    assert tiny.n_full_downloads > roomy.n_full_downloads
+    # forced snapshots cost more downlink than resident chains
+    assert tiny.downloaded > roomy.downloaded
+
+
+@pytest.mark.slow
+def test_fedbuff_no_versioning_reproduces_pr3_ledger(task):
+    """A config with no down: stages must reproduce the PR-3 byte ledger
+    exactly: full-model broadcast per dispatch, upload accounting only
+    over spent uplinks (== received when nothing is rejected)."""
+    um = build_units(task["params"], "leaf")
+    total = float(sum(um.unit_bytes))
+    _, res = _fedbuff(task, dict(scenario="bimodal", buffer_size=4,
+                                 concurrency=8),
+                      luar=LuarConfig(delta=2, granularity="leaf"))
+    assert res.down_ratio == 1.0
+    assert res.downloaded == total * res.n_dispatched
+    assert res.n_full_downloads == res.n_dispatched
+    assert res.n_delta_downloads == 0
+    assert res.ledger_misses == 0
+    assert res.n_uplinks_spent == res.n_received
+    # the upload ledger: zero waste with the mask ledger on (PR-2/PR-3
+    # invariant), so comm_ratio is exactly the old accepted-only formula
+    assert res.wasted_upload_bytes == 0.0
+    assert res.comm_ratio <= 1.0

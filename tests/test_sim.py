@@ -279,3 +279,72 @@ def test_time_to_target_helper(task):
     t = time_to_target(res, "acc", 0.8)
     assert math.isfinite(t) and t <= res.sim_time
     assert time_to_target(res, "acc", 2.0) == math.inf
+
+
+def test_time_to_target_rejects_bad_mode(task):
+    """A typo'd mode used to silently return inf — indistinguishable
+    from 'never reached the target'."""
+    cfg = _cfg(rounds=4, eval_every=2)
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario="uniform"), task["eval_fn"])
+    with pytest.raises(ValueError, match="'max' or 'min'"):
+        time_to_target(res, "acc", 0.5, mode="mx")
+
+
+# ---------------------------------------------------------------------------
+# bidirectional byte accounting (the comm-ratio bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def test_comm_ratio_at_most_one_for_uncompressed_straggler_run(task):
+    """The denominator bug: straggler waste was in the numerator but the
+    denominator only counted accepted uploads, so an UNCOMPRESSED run
+    could report a ratio above 1 — i.e. worse than the FedAvg baseline
+    that would have paid for the very same dispatches.  Denominated over
+    dispatched-and-spent uplinks, no compression means exactly 1."""
+    cfg = _cfg()          # no codecs, delta=0: every upload is full-size
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario="bimodal", deadline=0.1,
+                                 overprovision=2.0), task["eval_fn"])
+    assert res.n_stragglers > 0                   # the regime that broke
+    assert res.n_uplinks_spent == res.n_received + res.n_stragglers
+    assert res.comm_ratio == pytest.approx(1.0)
+    assert all(h["comm_ratio"] <= 1.0 + 1e-9 for h in res.history)
+
+
+def test_dropout_and_straggler_downloads_charged_to_waste(task):
+    """A sync-mode dropout vanishes after download+compute: its (priced)
+    downlink is spent and must land in the waste ledger — as must a
+    straggler's, whose whole round trip was discarded."""
+    cfg = _cfg()
+    sc = get_scenario("bimodal_flaky")
+    res = run_sim(task["loss_fn"], task["params"], task["data"], task["parts"],
+                  cfg, SimConfig(scenario=sc, deadline=0.1, sys_seed=1),
+                  task["eval_fn"])
+    assert res.n_dropped > 0 and res.n_stragglers > 0
+    # no downlink codecs: every download is the full model, so the waste
+    # is exactly (dropouts + stragglers) x model bytes
+    um = build_units(task["params"], "leaf")
+    um_bytes = float(sum(um.unit_bytes))
+    assert res.wasted_download_bytes == pytest.approx(
+        um_bytes * (res.n_dropped + res.n_stragglers))
+    assert res.downloaded == pytest.approx(um_bytes * res.n_dispatched)
+    assert res.down_ratio == pytest.approx(1.0)
+
+
+def test_diurnal_validation_fires_at_resolution():
+    """Bad diurnal parameters raise when the scenario is RESOLVED, even
+    with the amplitude at 0 (the old per-call check skipped validation
+    entirely then and only raised mid-run otherwise)."""
+    from repro.sim import get_scenario as resolve, validate_scenario
+    bad_period = SIM_SCENARIOS["diurnal"].replace(bw_amplitude=0.0,
+                                                  bw_period=-5.0)
+    with pytest.raises(ValueError, match="bw_period"):
+        resolve(bad_period)
+    bad_amp = SIM_SCENARIOS["diurnal"].replace(bw_amplitude=1.5)
+    with pytest.raises(ValueError, match="bw_amplitude"):
+        validate_scenario(bad_amp)
+    # the hot path trusts resolution: a valid quiet cycle just returns 1
+    from repro.sim.profiles import bandwidth_multiplier
+    quiet = SIM_SCENARIOS["diurnal"].replace(bw_amplitude=0.0)
+    assert bandwidth_multiplier(quiet, 123.4) == 1.0
