@@ -108,6 +108,34 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
             "stal_q90": res.staleness_q["q90"] if res.staleness_q else 0.0,
         }))
 
+    # participation policies under the mobile (bimodal) population:
+    # uniform vs diurnal availability vs power-of-choice, with
+    # comm-to-target and the per-client fairness spread side by side —
+    # biased cohorts are only acceptable if both stay visible
+    sc = scaled_scenario("bimodal", model_bytes)
+    for part in ("uniform", "avail:diurnal", "powd:8"):
+        cfg = FLConfig(n_clients=len(task.parts), n_active=8, tau=5,
+                       batch_size=16, rounds=rounds,
+                       client=ClientConfig(lr=0.05), eval_every=2,
+                       luar=LuarConfig(delta=2, granularity="leaf"),
+                       participation=part)
+        res, secs = timed(lambda: run_sim(
+            task.loss_fn, task.params, task.data, task.parts, cfg,
+            SimConfig(scenario=sc), task.eval_fn))
+        t_hit = time_to_target(res, "acc", target)
+        # uplink MB spent by the FIRST eval that cleared the target (the
+        # history carries the cumulative ledger), inf if never reached
+        comm_hit = next((h["up_mb"] for h in res.history
+                         if h["acc"] >= target), math.inf)
+        out.append((f"tta_part_{part.replace(':', '')}", secs, {
+            "t_target_s": round(t_hit, 2) if math.isfinite(t_hit) else "inf",
+            "comm_to_target_mb": (round(comm_hit, 2)
+                                  if math.isfinite(comm_hit) else "inf"),
+            "acc": round(res.history[-1]["acc"], 3),
+            "fairness": {k: round(v, 1) for k, v in res.fairness.items()},
+            "dropped": int(res.dropout_count.sum()),
+        }))
+
     # the versioned downlink: the same fedbuff server with a delta-encoded
     # broadcast (down:delta) vs the full-model broadcast, BIDIRECTIONAL
     # byte totals.  Every client stays in flight and the buffer spans one

@@ -140,13 +140,24 @@ def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
                              alpha: float = 0.5, *,
                              validity: Optional[jax.Array] = None,
                              um: Optional[UnitMap] = None,
-                             fallback: Any = None) -> Any:
+                             fallback: Any = None,
+                             ht: Optional[jax.Array] = None) -> Any:
     """Merge a buffer of K client updates into one pseudo-update.
 
     stacked_updates: pytree whose leaves have leading axis K (one slice per
     buffered client delta); staleness: (K,) int server-version lags.
     Returns the discount-weighted mean — the ``u_t`` fed to ``luar_round``
     when the server aggregates a buffer instead of a synchronous cohort.
+
+    ht: optional (K,) Horvitz–Thompson inverse-inclusion-probability
+    weights from the participation policy that selected these clients
+    (``repro.participate.ht_weights``).  They multiply the staleness
+    discounts BEFORE any normalization, so a client a biased cohort
+    policy was likely to pick counts for proportionally less — every
+    branch below self-normalizes over the combined weights, which keeps
+    the merged update an (asymptotically) unbiased estimate of the
+    population mean under biased selection.  ``ht=None`` is bitwise the
+    pre-participation behaviour.
 
     validity: optional (K, n_units) bool — True where buffered client k
     actually uploaded unit u (i.e. u was NOT in the recycle mask that
@@ -176,6 +187,8 @@ def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
     path whenever every client saw the current mask.
     """
     w = staleness_discount(staleness, alpha)
+    if ht is not None:
+        w = w * ht
     if validity is None:
         w = w / jnp.sum(w)
 

@@ -36,6 +36,8 @@ from repro.compress import (CodecPipeline, Direction, delta_step_price,
 from repro.core import LuarConfig, luar_init, luar_round
 from repro.fl.client import ClientConfig, batched_local_updates
 from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point
+from repro.participate import (HT_CLIP, RoundContext, fairness_summary,
+                               ht_weights, make_policy)
 
 Params = Any
 
@@ -54,6 +56,11 @@ class FLConfig:
     # the upload compressor stack (repro.compress): a tuple of codec spec
     # strings, or one '+'-joined string ("fedpaq:4+topk:0.1+ef")
     codecs: Tuple[str, ...] = ()
+    # who trains each round (repro.participate): one policy spec string —
+    # "uniform" (the legacy sampler, bit-for-bit), "powd:8",
+    # "importance:norm", "avail:diurnal", "avail:bernoulli:0.1",
+    # "energy:20" — biased policies are HT-reweighted in aggregation
+    participation: str = "uniform"
     # DEPRECATED scalar flags (Tables 2/3 composition): shimmed onto the
     # equivalent codec pipeline; mutually exclusive with ``codecs``
     fedpaq_bits: int = 0            # 0 = off  -> "fedpaq:<bits>"
@@ -67,8 +74,16 @@ class FLConfig:
 class FLResult:
     history: List[Dict[str, float]] = field(default_factory=list)
     comm_ratio: float = 1.0          # uplink bytes vs FedAvg (same rounds)
+    uploaded: float = 0.0            # cumulative client->server bytes (f64)
+    n_uplinks_spent: int = 0         # uploads that crossed the wire (the
+                                     # comm_ratio denominator; SimResult
+                                     # parity — run_fl has no stragglers,
+                                     # so every cohort member spends one)
     downloaded: float = 0.0          # cumulative server->client bytes (f64)
     down_ratio: float = 1.0          # downlink bytes vs full-model broadcast
+    participation_count: Optional[np.ndarray] = None   # per-client rounds
+                                     # trained (biased-policy telemetry)
+    fairness: Optional[Dict[str, float]] = None        # min/median/max of it
     agg_count: Optional[np.ndarray] = None
     unit_names: Optional[tuple] = None
     params: Any = None
@@ -155,8 +170,9 @@ _DOWN_KEY_TAG = 0x0D0               # fold_in tag for the broadcast encode
 
 def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
                     cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None,
-                    down_pipeline: Optional[CodecPipeline] = None
-                    ) -> Callable:
+                    down_pipeline: Optional[CodecPipeline] = None,
+                    weighted: bool = False, want_loss: bool = True,
+                    want_norm: bool = True) -> Callable:
     """Build the jitted synchronous round body (Alg. 2 lines 5-12).
 
     Shared by ``run_fl`` and by ``repro.sim``'s deadline engine so the
@@ -179,12 +195,49 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
     ``init_codec_states``).  An empty/None down pipeline leaves the
     traced body EXACTLY as before — the bit-for-bit regression path.
     ``down:delta`` encodes as the identity (lossless transport), so it
-    perturbs nothing either."""
+    perturbs nothing either.
+
+    ``weighted=True`` builds the HT-reweighted variant for biased
+    participation policies (``repro.participate``): the body takes an
+    extra per-client ``weights`` array (inverse inclusion probabilities,
+    self-normalized inside the trace) replacing the plain cohort mean,
+    and additionally returns ``obs = (losses, norms)`` — each client's
+    loss at the broadcast point on its first local minibatch and its
+    update's global norm, the host-side signals loss-tracking
+    (``powd``) and norm-proportional (``importance``) policies feed on.
+    ``want_loss``/``want_norm`` (the policy's ``wants_*`` flags) gate
+    each signal: an unwanted one is ``None`` in ``obs`` and its
+    computation never enters the trace.  The default ``weighted=False``
+    trace is UNTOUCHED — the bit-for-bit replay path for
+    ``participation="uniform"``."""
     pipeline = build_codec_pipeline(cfg) if pipeline is None else pipeline
     down = down_pipeline if (down_pipeline is not None and down_pipeline) else None
 
+    if not weighted:
+        @jax.jit
+        def round_step(params, luar_state, server_state, codec_state, batches, qkey):
+            if down is None:
+                up_state = codec_state
+            else:
+                up_state, down_state = codec_state
+            start = broadcast_point(params, server_state, cfg.server)
+            if down is not None:
+                enc, down_state, _ = down.encode(
+                    down_state, start, jax.random.fold_in(qkey, _DOWN_KEY_TAG))
+                start = down.decode(down_state, enc)
+            deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
+            fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+            fresh, up_state, aux = pipeline.encode(up_state, fresh, qkey)
+            applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+            params, server_state = apply_update(params, applied, server_state, cfg.server)
+            codec_state = up_state if down is None else (up_state, down_state)
+            return params, luar_state, server_state, codec_state, aux
+
+        return round_step
+
     @jax.jit
-    def round_step(params, luar_state, server_state, codec_state, batches, qkey):
+    def round_step_w(params, luar_state, server_state, codec_state, batches,
+                     weights, qkey):
         if down is None:
             up_state = codec_state
         else:
@@ -195,14 +248,25 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
                 down_state, start, jax.random.fold_in(qkey, _DOWN_KEY_TAG))
             start = down.decode(down_state, enc)
         deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
-        fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        # Hajek self-normalized HT estimate of the population-mean update
+        wb = weights / jnp.sum(weights)
+        fresh = jax.tree.map(
+            lambda d: jnp.sum(d * wb.reshape((-1,) + (1,) * (d.ndim - 1)),
+                              axis=0), deltas)
+        # per-client policy signals: loss at the broadcast point on each
+        # client's FIRST local minibatch, and the update's global norm
+        losses = (jax.vmap(lambda b: loss_fn(start, b))(
+            {k: v[:, 0] for k, v in batches.items()}) if want_loss else None)
+        norms = (jnp.sqrt(sum(
+            jnp.sum(jnp.square(d).reshape(d.shape[0], -1), axis=1)
+            for d in jax.tree.leaves(deltas))) if want_norm else None)
         fresh, up_state, aux = pipeline.encode(up_state, fresh, qkey)
         applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
         params, server_state = apply_update(params, applied, server_state, cfg.server)
         codec_state = up_state if down is None else (up_state, down_state)
-        return params, luar_state, server_state, codec_state, aux
+        return params, luar_state, server_state, codec_state, aux, (losses, norms)
 
-    return round_step
+    return round_step_w
 
 
 def client_payload_bytes_per_unit(sizes: np.ndarray, mask: np.ndarray,
@@ -250,6 +314,14 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
     codec_state = init_codec_states(params, um, pipeline, down_pipe)
     round_step = make_round_step(loss_fn, cfg, um, pipeline, down_pipe)
+    step_w = None                    # HT-weighted variant, built on demand
+
+    # who trains each round is a policy decision (repro.participate); the
+    # uniform policy consumes the learning rng exactly like the retired
+    # hard-coded rng.choice, so the default replays bit-for-bit
+    policy = make_policy(cfg.participation, cfg.n_clients, cfg.seed)
+    all_ids = np.arange(cfg.n_clients)
+    part_count = np.zeros(cfg.n_clients, np.int64)
 
     result = FLResult()
     sizes = np.asarray(um.unit_bytes, np.float64)
@@ -257,7 +329,19 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     total_bytes = sizes.sum()
     uploaded = 0.0
     downloaded = 0.0
-    full_per_round = total_bytes * cfg.n_active
+    n_uplinks = 0                    # uploads spent (== downloads served:
+    n_downloads = 0                  # run_fl has no stragglers/dropouts)
+
+    def emit_eval(t: int) -> None:
+        """One eval-cadence history row (shared by trained AND empty
+        rounds, so the schema can never drift between them)."""
+        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
+                                    or t == cfg.rounds - 1):
+            metrics = dict(eval_fn(params))
+            metrics.update(round=t + 1, up_mb=uploaded / 1e6,
+                           comm_ratio=uploaded / max(total_bytes * n_uplinks, 1.0),
+                           down_ratio=downloaded / max(total_bytes * n_downloads, 1.0))
+            result.history.append(metrics)
     # downlink versioning (down:delta): a cohort member that has been
     # dispatched before is exactly ONE version behind (every round's
     # broadcast reaches the subscribed population, so its cache stays
@@ -274,7 +358,24 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     seen: set = set()                # clients holding a base snapshot
 
     for t in range(cfg.rounds):
-        cohort = rng.choice(cfg.n_clients, size=cfg.n_active, replace=False)
+        sel = policy.select(RoundContext(
+            rng=rng, n_clients=cfg.n_clients, cohort_size=cfg.n_active,
+            candidates=all_ids, population=True, round=t, now=float(t),
+            # run_fl has no clock: "now" is the round index, so the
+            # diurnal phase lock defaults to ONE full cycle per run
+            # (availability actually rotates) instead of the 600-virtual-
+            # second scenario period that would freeze it here
+            bw_period=float(max(cfg.rounds, 1))))
+        cohort = np.asarray(sel.cohort, np.int64)
+        np.add.at(part_count, cohort, 1)   # duplicates are separate draws
+        for c in cohort:                   # energy depletion (unit cost:
+            policy.observe_dispatch(int(c), now=float(t))  # no clock here)
+        if len(cohort) == 0:
+            # the policy found nobody eligible (e.g. the population's
+            # batteries are flat): the model is unchanged this round, but
+            # the eval cadence still reports
+            emit_eval(t)
+            continue
         batches = _stack_client_batches(data, parts, cohort, cfg.tau,
                                         cfg.batch_size, rng)
         key, qkey = jax.random.split(key)
@@ -292,29 +393,50 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
                                                    seed_cache=seed_cache)
             chain_bytes = down_pipe.price_bytes(
                 sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
-            n_new = sum(1 for c in cohort if int(c) not in seen)
+            n_new = 0
+            for c in cohort:
+                if int(c) not in seen:
+                    n_new += 1
+                    seen.add(int(c))
             downloaded += (snap_bytes * n_new
-                           + chain_bytes * (cfg.n_active - n_new))
-            seen.update(int(c) for c in cohort)
+                           + chain_bytes * (len(cohort) - n_new))
         else:
             downloaded += down_pipe.price_bytes(sizes, no_mask,
-                                                None) * cfg.n_active
-        params, luar_state, server_state, codec_state, aux = round_step(
-            params, luar_state, server_state, codec_state, batches, qkey)
+                                                None) * len(cohort)
+        n_downloads += len(cohort)
+        if sel.uniform:
+            # equal weights: the exact (unweighted-mean) legacy trace
+            params, luar_state, server_state, codec_state, aux = round_step(
+                params, luar_state, server_state, codec_state, batches, qkey)
+            obs = None
+        else:
+            if step_w is None:
+                step_w = make_round_step(loss_fn, cfg, um, pipeline,
+                                         down_pipe, weighted=True,
+                                         want_loss=policy.wants_loss,
+                                         want_norm=policy.wants_update_norm)
+            w = jnp.asarray(ht_weights(sel, clip=HT_CLIP), jnp.float32)
+            (params, luar_state, server_state, codec_state, aux,
+             obs) = step_w(params, luar_state, server_state, codec_state,
+                           batches, w, qkey)
         uploaded += client_payload_bytes(sizes, mask_now, cfg, aux,
-                                         pipeline) * cfg.n_active
+                                         pipeline) * len(cohort)
+        n_uplinks += len(cohort)
         prev_mask = mask_now
+        if obs is not None:
+            losses, norms = (None if o is None else np.asarray(o, np.float64)
+                             for o in obs)
+            policy.observe_round(cohort, losses, norms, now=float(t))
 
-        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1):
-            metrics = dict(eval_fn(params))
-            metrics.update(round=t + 1,
-                           comm_ratio=uploaded / (full_per_round * (t + 1)),
-                           down_ratio=downloaded / (full_per_round * (t + 1)))
-            result.history.append(metrics)
+        emit_eval(t)
 
-    result.comm_ratio = uploaded / (full_per_round * cfg.rounds)
+    result.comm_ratio = uploaded / max(total_bytes * n_uplinks, 1.0)
+    result.uploaded = uploaded
+    result.n_uplinks_spent = n_uplinks
     result.downloaded = downloaded
-    result.down_ratio = downloaded / (full_per_round * cfg.rounds)
+    result.down_ratio = downloaded / max(total_bytes * n_downloads, 1.0)
+    result.participation_count = part_count
+    result.fairness = fairness_summary(part_count)
     result.agg_count = np.asarray(luar_state.agg_count)
     result.unit_names = um.names
     result.params = params

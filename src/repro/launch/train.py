@@ -106,6 +106,12 @@ def main(argv=None):
                          "e.g. 'fedpaq:4+topk:0.1+ef' (repro.compress); "
                          "'down:'-prefixed stages compress the broadcast "
                          "instead, e.g. 'fedpaq:4+down:delta'")
+    ap.add_argument("--participation", default="uniform",
+                    help="client-participation policy spec "
+                         "(repro.participate): 'uniform', 'powd:8', "
+                         "'importance:norm', 'avail:diurnal', "
+                         "'avail:bernoulli:0.1', 'energy:20'; biased "
+                         "policies are HT-reweighted in aggregation")
     ap.add_argument("--fedpaq-bits", type=int, default=0,
                     help="DEPRECATED: use --codecs fedpaq:<bits>")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -121,7 +127,7 @@ def main(argv=None):
         server=ServerConfig(kind=args.server),
         luar=LuarConfig(delta=args.delta, scheme=args.scheme, mode=args.mode,
                         granularity=gran),
-        codecs=args.codecs,
+        codecs=args.codecs, participation=args.participation,
         fedpaq_bits=args.fedpaq_bits, eval_every=args.eval_every)
 
     t0 = time.time()
@@ -130,8 +136,12 @@ def main(argv=None):
         print(json.dumps(h))
     print(json.dumps({
         "comm_ratio": round(res.comm_ratio, 4),
+        "uploaded_mb": round(res.uploaded / 1e6, 3),
+        "n_uplinks_spent": res.n_uplinks_spent,
         "down_ratio": round(res.down_ratio, 4),
         "downloaded_mb": round(res.downloaded / 1e6, 3),
+        "participation": args.participation,
+        "fairness": res.fairness,
         "agg_counts": {n: int(c) for n, c in zip(res.unit_names, res.agg_count)},
         "wall_s": round(time.time() - t0, 1)}))
     if args.ckpt:

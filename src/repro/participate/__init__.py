@@ -1,0 +1,23 @@
+"""repro.participate — composable client-participation policies.
+
+One protocol (``ParticipationPolicy``), one declaration syntax (spec
+strings via the registry, mirroring ``repro.compress``) for the whole
+who-trains-this-round axis: cohort selection, availability traces,
+energy budgets, and the Horvitz–Thompson inclusion-probability weights
+that keep aggregation unbiased under biased selection.
+
+    from repro.fl.rounds import FLConfig
+    cfg = FLConfig(participation="powd:8")        # loss-biased cohorts,
+    # HT-debiased merge; "avail:diurnal", "energy:20", "importance:norm",
+    # "avail:bernoulli:0.1" (the retired SimScenario.dropout scalar) ...
+"""
+from repro.participate.policies import (AvailBernoulli, AvailDiurnal,  # noqa: F401
+                                        EnergyBudget, ImportanceNorm,
+                                        PowerOfChoice, UniformPolicy)
+from repro.participate.policy import (HT_CLIP, ParticipationPolicy,  # noqa: F401
+                                      RoundContext, Selection,
+                                      fairness_summary, ht_weights,
+                                      uniform_selection)
+from repro.participate.registry import (POLICIES, make_policy,  # noqa: F401
+                                        parse_policy, register_policy,
+                                        resolve_policy)

@@ -1,0 +1,366 @@
+"""The built-in cohort policies.
+
+  uniform          — the legacy sampler, verbatim (bit-for-bit replay)
+  powd:d           — power-of-choice: sample d candidates uniformly, keep
+                     the cohort with the highest tracked client loss;
+                     inclusion probabilities are EXACT (hypergeometric
+                     over the loss ranking), so HT reweighting debiases
+                     the loss-hungry cohorts
+  importance:norm  — update-norm-proportional sampling (with
+                     replacement; Hansen–Hurwitz weights 1/(k p_i))
+  avail:bernoulli:p— every dispatch independently fails with probability
+                     p: the participation-layer form of the retired
+                     ``SimScenario.dropout`` scalar (bit-for-bit shim
+                     under the engines; selection-time filtering in
+                     ``run_fl``, which has no mid-round failure model)
+  avail:diurnal[:f[:P]] — per-client availability curves phase-locked to
+                     the diurnal bandwidth cycle: client i is available
+                     while sin(2 pi t / P + 2 pi i / N) clears the
+                     threshold that makes its duty cycle f (default 0.5);
+                     P defaults to the scenario's ``bw_period``
+  energy:J[:r[:w]] — per-client battery of J joules, depleted at w J/s
+                     (default 1) for the cost model's busy seconds of
+                     every dispatch and recharged at r J/s (default
+                     0.02*J) while idle; dead clients are unselectable
+                     until they recharge above zero
+
+Selection randomness draws from the LEARNING rng in the round context
+(the stream the legacy samplers consumed); policy-internal randomness
+(run_fl-side Bernoulli availability) uses the policy's own bound stream.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.participate.policy import (ParticipationPolicy, RoundContext,
+                                      Selection, uniform_selection)
+
+
+class UniformPolicy(ParticipationPolicy):
+    """The pre-policy behaviour, exactly: uniform without replacement
+    from the population (sync cohorts, the fedbuff first wave) and a
+    uniform pick from the idle set (fedbuff redispatch)."""
+
+    name = "uniform"
+
+    def select(self, ctx: RoundContext) -> Selection:
+        return uniform_selection(ctx)
+
+
+# ---------------------------------------------------------------------------
+# power-of-choice (loss-biased) with exact inclusion probabilities
+# ---------------------------------------------------------------------------
+
+
+def _hypergeom_cdf(k: int, pop: int, successes: int, draws: int) -> float:
+    """P(X <= k) for X ~ Hypergeometric(pop, successes, draws), via
+    log-binomials (no scipy in the dependency set)."""
+    if k < 0:
+        return 0.0
+    if draws <= 0 or successes <= 0:
+        return 1.0
+
+    def lchoose(n: int, j: int) -> float:
+        if j < 0 or j > n:
+            return -math.inf
+        return (math.lgamma(n + 1) - math.lgamma(j + 1)
+                - math.lgamma(n - j + 1))
+
+    denom = lchoose(pop, draws)
+    total = 0.0
+    for j in range(max(0, draws - (pop - successes)),
+                   min(k, successes, draws) + 1):
+        total += math.exp(lchoose(successes, j)
+                          + lchoose(pop - successes, draws - j) - denom)
+    return min(total, 1.0)
+
+
+class PowerOfChoice(ParticipationPolicy):
+    """powd:d[:eps] — Cho et al.'s power-of-choice under the policy
+    protocol, with an epsilon-greedy floor.
+
+    With probability 1-eps: sample ``d`` candidates uniformly without
+    replacement from the eligible pool, keep the ``cohort_size`` with
+    the highest tracked loss (never-observed clients rank highest, so
+    the population is explored before exploitation starts; ties break by
+    client id, and the SAME total order prices the inclusion
+    probabilities, so they are exact).  With probability eps (default
+    0.1): a plain uniform cohort.  The exploration floor is what keeps
+    every inclusion probability POSITIVE — pure power-of-choice gives a
+    client ranked below M-d+k a probability of exactly zero, where the
+    HT estimator is undefined and the selection bias uncorrectable.  For
+    a client ranked with ``r`` pool members strictly ahead of it,
+
+        pi = (1-eps) * (d/M) * P[Hypergeom(M-1, r, d-1) <= k-1]
+             + eps * k/M
+
+    — in the d-sample with fewer than k sampled rivals outranking it,
+    mixed with the uniform floor."""
+
+    name = "powd"
+    weighted = True
+    wants_loss = True
+
+    def __init__(self, d: int = 8, eps: float = 0.1):
+        super().__init__(int(d), float(eps))
+        self.d = int(d)
+        self.eps = float(eps)
+        if self.d < 1:
+            raise ValueError(f"powd candidate-set size must be >= 1, got {d}")
+        if not 0.0 < self.eps <= 1.0:
+            raise ValueError(f"powd exploration eps must be in (0, 1], "
+                             f"got {eps}")
+
+    def _bind_state(self) -> None:
+        self.client_loss = np.full(self.n_clients, math.inf, np.float64)
+
+    def _ranked(self, pool: np.ndarray) -> np.ndarray:
+        """Pool ids ordered by (loss desc, id asc) — the selection AND
+        pricing order."""
+        pool = np.asarray(pool, np.int64)
+        order = np.lexsort((pool, -self.client_loss[pool]))
+        return pool[order]
+
+    def _inclusion(self, pool: np.ndarray, cohort: np.ndarray, k: int,
+                   d: int) -> np.ndarray:
+        M = len(pool)
+        rank = {int(c): r for r, c in enumerate(self._ranked(pool))}
+        return np.asarray(
+            [(1.0 - self.eps) * (d / M)
+             * _hypergeom_cdf(k - 1, M - 1, rank[int(c)], d - 1)
+             + self.eps * k / M for c in cohort], np.float64)
+
+    def select(self, ctx: RoundContext) -> Selection:
+        pool = np.asarray(ctx.candidates, np.int64)
+        M = len(pool)
+        k = min(ctx.cohort_size, M)
+        d = min(max(self.d, k), M)
+        if ctx.rng.random() < self.eps:         # exploration floor
+            cohort = ctx.rng.choice(pool, size=k, replace=False)
+        else:
+            sample = ctx.rng.choice(pool, size=d, replace=False)
+            cohort = self._ranked(sample)[:k]
+        return Selection(np.asarray(cohort, np.int64),
+                         self._inclusion(pool, cohort, k, d),
+                         with_replacement=False, uniform=False)
+
+    def observe_round(self, cohort, losses=None, update_norms=None,
+                      now: float = 0.0) -> None:
+        if losses is None:
+            return
+        for c, l in zip(cohort, np.asarray(losses, np.float64)):
+            self.client_loss[int(c)] = float(l)
+
+
+# ---------------------------------------------------------------------------
+# importance (update-norm-proportional) sampling
+# ---------------------------------------------------------------------------
+
+
+class ImportanceNorm(ParticipationPolicy):
+    """importance:norm — draw probabilities proportional to each client's
+    last observed update norm (smoothed so every probability stays
+    positive and HT weights exist; unseen clients score at the running
+    maximum, so they are explored before the norms take over).
+
+    Sampling is WITH replacement (k i.i.d. draws, exact Hansen–Hurwitz
+    weights 1/(k p_i)); under ``distinct`` contexts (fedbuff: one
+    in-flight job per client) it degrades to numpy's sequential
+    without-replacement draw with the same per-draw probabilities — the
+    weights are then the standard importance approximation."""
+
+    name = "importance"
+    weighted = True
+    wants_update_norm = True
+    _SMOOTH = 0.05                      # floor, as a fraction of the mean score
+
+    def _bind_state(self) -> None:
+        self.norm = np.full(self.n_clients, np.nan, np.float64)
+
+    def _probs(self, pool: np.ndarray) -> np.ndarray:
+        s = self.norm[pool]
+        seen = ~np.isnan(s)
+        fill = float(np.nanmax(self.norm)) if seen.any() else 1.0
+        s = np.where(seen, s, max(fill, 1e-30))
+        s = s + self._SMOOTH * float(s.mean()) + 1e-30
+        return s / s.sum()
+
+    def select(self, ctx: RoundContext) -> Selection:
+        pool = np.asarray(ctx.candidates, np.int64)
+        k = min(ctx.cohort_size, len(pool))
+        p = self._probs(pool)
+        cohort = ctx.rng.choice(pool, size=k, replace=not ctx.distinct, p=p)
+        by_id = {int(c): p[i] for i, c in enumerate(pool)}
+        probs = np.asarray([by_id[int(c)] for c in cohort], np.float64)
+        return Selection(np.asarray(cohort, np.int64), probs,
+                         with_replacement=True, uniform=False)
+
+    def observe_round(self, cohort, losses=None, update_norms=None,
+                      now: float = 0.0) -> None:
+        if update_norms is None:
+            return
+        for c, n in zip(cohort, np.asarray(update_norms, np.float64)):
+            self.norm[int(c)] = float(n)
+
+
+# ---------------------------------------------------------------------------
+# availability policies
+# ---------------------------------------------------------------------------
+
+
+class AvailBernoulli(ParticipationPolicy):
+    """avail:bernoulli:p — the participation-layer home of the retired
+    ``SimScenario.dropout`` scalar.
+
+    Under the event engines this is mid-round failure, exactly as the
+    scalar was: selection stays uniform (bit-for-bit the legacy calls)
+    and every dispatch draws ONE systems-stream Bernoulli in
+    ``dispatch_survives`` — the same draw, at the same sequence point,
+    the engines used to hard-code, so ``SimScenario(dropout=p)`` and
+    ``participation="avail:bernoulli:p"`` produce identical
+    trajectories.  ``run_fl`` has no mid-round failure model, so there
+    the rate filters availability at selection time instead (from the
+    policy's own stream — the learning rng is untouched)."""
+
+    name = "avail"
+
+    def __init__(self, rate: float = 0.0):
+        super().__init__("bernoulli", float(rate))
+        self.rate = float(rate)
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"avail:bernoulli rate must be in [0, 1), "
+                             f"got {rate}")
+
+    def select(self, ctx: RoundContext) -> Selection:
+        if ctx.sim or self.rate == 0.0:
+            return uniform_selection(ctx)
+        cand = np.asarray(ctx.candidates, np.int64)
+        avail = cand[self._rng.random(len(cand)) >= self.rate]
+        if len(avail) == 0:
+            return Selection(np.zeros(0, np.int64), np.zeros(0), False, True)
+        return uniform_selection(ctx, avail)
+
+    def dispatch_survives(self, c, res, sys_rng) -> bool:
+        # the policy's population rate never LOWERS a device's own
+        # (bimodal per-mode) failure rate: the effective rate is the
+        # worse of the two — and exactly ``res.dropout`` under the
+        # scenario-scalar shim (where both are the same number), so the
+        # legacy draw sequence is preserved bit-for-bit
+        p = max(self.rate, res.dropout)
+        return not (p and sys_rng.random() < p)
+
+
+class AvailDiurnal(ParticipationPolicy):
+    """avail:diurnal[:frac[:period]] — deterministic per-client duty
+    cycles phase-locked to the diurnal bandwidth cycle.
+
+    Client i is available while sin(2 pi t / P + phi_i) >= cos(pi*frac),
+    with phases phi_i = 2 pi i / N spread evenly over the population —
+    at any instant about ``frac`` of the population is reachable, and
+    WHICH clients those are rotates with the (virtual) time of day, the
+    biased-availability regime of the practicality surveys.  ``period``
+    defaults to the round context's ``bw_period`` so the availability
+    trough lines up with the bandwidth trough of the "diurnal" scenario.
+    Selection is uniform over the available candidates (equal weights);
+    when fewer than the requested cohort are available the cohort
+    SHRINKS to the available set rather than conscripting offline
+    clients — ``n_forced`` counts the redispatches where nobody at all
+    was available and the policy had to fall back to the full pool.
+    Under ``run_fl`` (no clock) ``now`` is the round index and the
+    context's period defaults to one full cycle per run, so the duty
+    rotation survives outside the event engines too; pass an explicit
+    ``period`` (in rounds there, virtual seconds in the sims) to pin
+    it."""
+
+    name = "avail"
+
+    def __init__(self, frac: float = 0.5, period: float = 0.0):
+        super().__init__("diurnal", float(frac), float(period))
+        self.frac = float(frac)
+        self.period = float(period)          # 0 -> ctx.bw_period
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"avail:diurnal duty fraction must be in "
+                             f"(0, 1], got {frac}")
+        self.n_forced = 0
+
+    def available(self, ids: np.ndarray, now: float,
+                  bw_period: float = 600.0) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        P = self.period or bw_period
+        phase = 2.0 * math.pi * ids / max(self.n_clients, 1)
+        lvl = np.sin(2.0 * math.pi * now / P + phase)
+        return ids[lvl >= math.cos(math.pi * self.frac)]
+
+    def select(self, ctx: RoundContext) -> Selection:
+        avail = self.available(ctx.candidates, ctx.now, ctx.bw_period)
+        if len(avail) == 0:
+            if ctx.population:
+                return Selection(np.zeros(0, np.int64), np.zeros(0),
+                                 False, True)
+            self.n_forced += 1           # a slot must be fed: fall back
+            return uniform_selection(ctx)
+        return uniform_selection(ctx, avail)
+
+
+# ---------------------------------------------------------------------------
+# energy budgets
+# ---------------------------------------------------------------------------
+
+
+class EnergyBudget(ParticipationPolicy):
+    """energy:J[:recharge[:power]] — per-client battery accounting.
+
+    Every dispatch depletes the client's battery by ``power`` J/s times
+    the cost model's busy seconds for that round trip (download +
+    compute + upload; ``run_fl`` has no clock, so a round costs one
+    nominal busy-second there).  Idle seconds recharge at ``recharge``
+    J/s (default: 2% of capacity per second) up to the capacity cap.  A
+    client whose battery is at zero is DEAD — unselectable until idle
+    recharge lifts it above zero — so the selectable population, and
+    with it the fairness telemetry, breathes with the energy budget.
+    When nobody eligible is alive the cohort is empty (the engines skip
+    the round / leave the slot idle) rather than conscripting a dead
+    device."""
+
+    name = "energy"
+
+    def __init__(self, capacity: float = 20.0, recharge: float = -1.0,
+                 power: float = 1.0):
+        if capacity <= 0:
+            raise ValueError(f"energy capacity must be positive, got {capacity}")
+        self.capacity = float(capacity)
+        # negative = unset -> default 2%/s; an explicit 0 means NO recharge
+        self.recharge = (0.02 * self.capacity if recharge < 0
+                         else float(recharge))
+        self.power = float(power)
+        super().__init__(self.capacity, self.recharge, self.power)
+
+    def _bind_state(self) -> None:
+        self.battery = np.full(self.n_clients, self.capacity, np.float64)
+        self._busy_until = np.zeros(self.n_clients, np.float64)
+        self._last_acc = np.zeros(self.n_clients, np.float64)
+
+    def _accrue(self, now: float) -> None:
+        """Credit idle recharge up to ``now`` (lazy, all clients)."""
+        idle_from = np.maximum(self._last_acc, self._busy_until)
+        gain = self.recharge * np.maximum(0.0, now - idle_from)
+        self.battery = np.minimum(self.capacity, self.battery + gain)
+        self._last_acc = np.maximum(self._last_acc, now)
+
+    def select(self, ctx: RoundContext) -> Selection:
+        self._accrue(ctx.now)
+        cand = np.asarray(ctx.candidates, np.int64)
+        alive = cand[self.battery[cand] > 0.0]
+        if len(alive) == 0:
+            return Selection(np.zeros(0, np.int64), np.zeros(0), False, True)
+        return uniform_selection(ctx, alive)
+
+    def observe_dispatch(self, c: int, now: float = 0.0,
+                         cost_s: Optional[float] = None) -> None:
+        self._accrue(now)
+        cost = 1.0 if cost_s is None else float(cost_s)
+        self.battery[c] = max(0.0, self.battery[c] - self.power * cost)
+        self._busy_until[c] = now + cost

@@ -1,0 +1,232 @@
+"""The client-participation protocol (host side).
+
+Who trains this round used to be three hard-coded
+``rng.choice(n_clients, n_active, replace=False)`` sites scattered over
+``fl/rounds.py`` and both ``sim/engine.py`` server paths — the same
+copy-pasted-flags shape the codec registry removed from the compressor
+stack.  This module is the participation analogue of
+``repro.compress.codec``: one protocol (``ParticipationPolicy``), one
+host-side context object (``RoundContext``), one selection result
+(``Selection``) carrying the inclusion probabilities that make biased
+cohorts correctable, and the Horvitz–Thompson weight helper the engines
+thread into aggregation.
+
+Estimator contract
+------------------
+
+A policy returns the cohort it selected AND the probability each member
+had of being selected (``Selection.probs``).  The engines turn those
+into inverse-probability weights (``ht_weights``) and aggregate
+
+    u_t = sum_i w_i * delta_i / sum_i w_i        (self-normalized HT)
+
+so the merged update estimates the population mean over the policy's
+support even when selection is biased toward hot clients.  The pure
+(un-normalized) Horvitz–Thompson estimator ``(1/N) sum_i delta_i / pi_i``
+is exactly unbiased and is what the property tests pin; the engines use
+the self-normalized form because its magnitude does not fluctuate with
+the realized sum of weights (the ratio bias is O(1/cohort)).  A policy
+whose realized probabilities are all equal sets ``Selection.uniform`` —
+the engines then keep the exact unweighted-mean code path, which is what
+makes ``participation="uniform"`` replay the pre-policy trajectories
+bit-for-bit.
+
+Two sampling designs are distinguished because their weights differ:
+
+  without replacement  (``with_replacement=False``): ``probs`` are the
+      inclusion probabilities pi_i; HT weight 1/pi_i.
+  with replacement     (``with_replacement=True``): ``probs`` are the
+      per-draw probabilities p_i of a ``k``-draw design; Hansen–Hurwitz
+      weight 1/(k p_i).  Duplicates in the cohort are separate draws.
+
+Availability/energy state is PER POLICY INSTANCE: bind a fresh policy to
+each run (``make_policy``), exactly like codec pipeline state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class RoundContext:
+    """Everything a policy may look at when selecting.
+
+    ``rng`` is the LEARNING RNG stream (the one cohort sampling always
+    consumed): a policy draws its selection randomness from it so the
+    uniform policy reproduces the legacy call sequence exactly.
+    ``population`` distinguishes the two legacy call shapes: a fresh
+    cohort drawn from the whole population (sync rounds, the fedbuff
+    initial wave — ``rng.choice(n, size, replace=False)``) versus a
+    single redispatch from the currently idle set (fedbuff steady state
+    — ``rng.integers(len(idle))``).  ``distinct`` forbids duplicate
+    cohort members (fedbuff: one in-flight job per client).  ``sim`` is
+    True under the event engines, where mid-round failures exist and
+    availability is priced by the dispatch-survival hook instead of at
+    selection time.  ``now`` is virtual seconds under the engines and
+    the round index in ``run_fl`` (which has no clock)."""
+    rng: np.random.Generator
+    n_clients: int
+    cohort_size: int
+    candidates: np.ndarray                 # eligible client ids
+    population: bool = True
+    distinct: bool = False
+    sim: bool = False
+    round: int = 0
+    now: float = 0.0
+    bw_period: float = 600.0               # diurnal cycle period (phase lock)
+
+
+class Selection(NamedTuple):
+    """One policy decision: who, and how probable each pick was."""
+    cohort: np.ndarray                     # selected client ids (len k)
+    probs: np.ndarray                      # per-member pi_i (or draw p_i)
+    with_replacement: bool = False
+    uniform: bool = True                   # all members equally weighted ->
+                                           # engines keep the exact
+                                           # unweighted-mean path
+
+
+class ParticipationPolicy:
+    """Base class every cohort policy extends.
+
+    Subclasses override ``select`` (required) and any of the state hooks.
+    ``weighted`` declares that selections may be non-uniform, so the
+    engines build the HT-weighted aggregation variant (and collect the
+    per-client observation signals the policy asks for via
+    ``wants_loss``/``wants_update_norm``).  Policies with
+    ``weighted=False`` are guaranteed to return ``uniform=True``
+    selections and ride the exact legacy aggregation path."""
+
+    name: str = ""
+    weighted: bool = False                 # may return non-uniform probs
+    wants_loss: bool = False               # feed per-client losses
+    wants_update_norm: bool = False        # feed per-client update norms
+
+    def __init__(self, *args: Any):
+        self.args = args
+        self.n_clients = 0
+        self._rng: Optional[np.random.Generator] = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def bind(self, n_clients: int, seed: int = 0) -> "ParticipationPolicy":
+        """Allocate per-client state for one run.  The policy's OWN rng
+        stream is derived from (seed, name) so policy-internal randomness
+        (e.g. run_fl-side availability draws) never perturbs the learning
+        or systems streams."""
+        self.n_clients = int(n_clients)
+        self._rng = np.random.default_rng(
+            np.random.SeedSequence([int(seed) & 0xFFFFFFFF, 0x9A7,
+                                    sum(ord(c) for c in self.name)]))
+        self._bind_state()
+        return self
+
+    def _bind_state(self) -> None:        # per-client arrays live here
+        pass
+
+    # -- the decision ------------------------------------------------------
+    def select(self, ctx: RoundContext) -> Selection:
+        raise NotImplementedError
+
+    # -- state hooks (all optional no-ops) ---------------------------------
+    def observe_round(self, cohort: Sequence[int],
+                      losses: Optional[np.ndarray] = None,
+                      update_norms: Optional[np.ndarray] = None,
+                      now: float = 0.0) -> None:
+        """Per-client signals after the cohort's updates were computed."""
+
+    def observe_dispatch(self, c: int, now: float = 0.0,
+                         cost_s: Optional[float] = None) -> None:
+        """One client was dispatched at ``now``; ``cost_s`` is the cost
+        model's estimate of its busy seconds (None in ``run_fl``, which
+        has no clock — policies fall back to unit cost per round)."""
+
+    def dispatch_survives(self, c: int, res: Any,
+                          sys_rng: np.random.Generator) -> bool:
+        """Does this dispatch survive to upload?  Default replicates the
+        legacy per-resource dropout draw BIT-FOR-BIT: a single systems-
+        stream draw, made only when the device's dropout rate is
+        nonzero."""
+        return not (res.dropout and sys_rng.random() < res.dropout)
+
+    # -- misc --------------------------------------------------------------
+    def spec(self) -> str:
+        if not self.args:
+            return self.name
+        return self.name + ":" + ",".join(f"{a:g}" if isinstance(a, float)
+                                          else str(a) for a in self.args)
+
+    def __repr__(self) -> str:           # pragma: no cover - debugging aid
+        return f"<policy {self.spec()}>"
+
+
+def uniform_selection(ctx: RoundContext,
+                      candidates: Optional[np.ndarray] = None) -> Selection:
+    """The legacy sampling calls, verbatim — shared by every policy that
+    falls back to uniform choice over some candidate pool.
+
+    population=True  ->  rng.choice(n, size=k, replace=False)
+    population=False ->  candidates[rng.integers(len(candidates))]
+
+    With ``candidates`` defaulting to ``ctx.candidates`` and covering the
+    full population, these are byte-for-byte the calls the engines
+    hard-coded before the policy API existed."""
+    cand = ctx.candidates if candidates is None else candidates
+    if ctx.population and len(cand) == ctx.n_clients:
+        k = min(ctx.cohort_size, ctx.n_clients)
+        cohort = ctx.rng.choice(ctx.n_clients, size=k, replace=False)
+    elif ctx.population:
+        k = min(ctx.cohort_size, len(cand))
+        cohort = ctx.rng.choice(cand, size=k, replace=False)
+    else:
+        cohort = np.asarray([cand[int(ctx.rng.integers(len(cand)))]])
+    pool = max(len(cand), 1)
+    probs = np.full(len(cohort), len(cohort) / pool, np.float64)
+    return Selection(np.asarray(cohort, np.int64), probs,
+                     with_replacement=False, uniform=True)
+
+
+HT_CLIP = 8.0        # engine default for ``ht_weights(clip=...)``: truncated
+                     # IPS — an unlikely pick can outweigh the likeliest
+                     # cohort member by at most this factor.  Unclipped HT is
+                     # exactly unbiased but its variance is 1/min(pi): one
+                     # epsilon-exploration pick with pi ~ 1e-3 would dominate
+                     # an entire merge and (empirically) diverge non-IID
+                     # training; the clip trades a bounded reweighting bias
+                     # for bounded variance, the standard IPS truncation.
+
+
+def ht_weights(sel: Selection, clip: Optional[float] = None) -> np.ndarray:
+    """Inverse-probability aggregation weights for one selection.
+
+    Without replacement the weight is the Horvitz–Thompson 1/pi_i; with
+    replacement it is the Hansen–Hurwitz 1/(k p_i).  The engines feed
+    these to a SELF-NORMALIZING merge (weights are divided by their sum,
+    or folded into the staleness-discount normalization under fedbuff),
+    so any common scale factor — including the 1/N of the textbook
+    population-mean estimator — cancels and is omitted here.
+
+    ``clip`` (the engines pass ``HT_CLIP``) caps each weight at ``clip``
+    times the selection's smallest weight; ``None`` is the pure,
+    exactly-unbiased estimator the property tests pin."""
+    probs = np.asarray(sel.probs, np.float64)
+    if np.any(probs <= 0.0):
+        raise ValueError(f"selection carries non-positive inclusion "
+                         f"probabilities: {probs}; HT weights undefined")
+    w = 1.0 / probs
+    if sel.with_replacement:
+        w = w / max(len(sel.cohort), 1)
+    if clip is not None and len(w):
+        w = np.minimum(w, clip * w.min())
+    return w
+
+
+def fairness_summary(participation_count: np.ndarray) -> dict:
+    """min/median/max participation across the population — the
+    one-glance biased-cohort telemetry on every result object."""
+    c = np.asarray(participation_count, np.float64)
+    return {"min": float(c.min()) if c.size else 0.0,
+            "median": float(np.median(c)) if c.size else 0.0,
+            "max": float(c.max()) if c.size else 0.0}

@@ -1,0 +1,129 @@
+"""Participation-policy registry and spec-string grammar.
+
+Mirrors ``repro.compress.registry``:
+
+    spec   ::= name [":" arg (sep arg)*]      sep ::= ":" | ","
+    name   ::= registered policy name          (uniform | powd |
+                                                importance | avail | energy)
+    arg    ::= int | float | identifier
+
+Examples: ``"uniform"``, ``"powd:8"``, ``"importance:norm"``,
+``"avail:bernoulli:0.1"``, ``"avail:diurnal:0.4"``, ``"energy:20:0.5"``.
+Unlike codec stacks there is exactly ONE policy per run (who trains is a
+single decision), so specs don't compose with ``+``.
+
+``resolve_policy`` is the engines' entry point: it parses + binds the
+declared policy and subsumes the retired ``SimScenario.dropout`` scalar
+— a population-wide scalar dropout on a uniform/diurnal scenario is
+shimmed onto ``avail:bernoulli:<rate>`` (DeprecationWarning), which
+replays the legacy engine behaviour bit-for-bit (same uniform selection
+calls, same single systems-stream draw per dispatch).  Per-mode dropout
+(the bimodal presets, where the rate is a RESOURCE property of the
+mobile mode, not a population scalar) stays on the resources and is
+honoured by every policy's default ``dispatch_survives``.
+"""
+from __future__ import annotations
+
+import re
+import warnings
+from typing import Callable, Dict, Optional, Union
+
+from repro.participate.policies import (AvailBernoulli, AvailDiurnal,
+                                        EnergyBudget, ImportanceNorm,
+                                        PowerOfChoice, UniformPolicy)
+from repro.participate.policy import ParticipationPolicy
+
+Arg = Union[int, float, str]
+
+POLICIES: Dict[str, Callable[..., ParticipationPolicy]] = {}
+
+
+def register_policy(name: str):
+    """Register a policy factory under ``name`` (usable as decorator)."""
+    def deco(factory):
+        POLICIES[name] = factory
+        return factory
+    return deco
+
+
+def _make_avail(kind: Arg = "bernoulli", *args: Arg) -> ParticipationPolicy:
+    if kind == "bernoulli":
+        return AvailBernoulli(*args)
+    if kind == "diurnal":
+        return AvailDiurnal(*args)
+    raise ValueError(f"unknown availability kind {kind!r}; "
+                     f"have: bernoulli, diurnal")
+
+
+def _make_importance(kind: Arg = "norm") -> ParticipationPolicy:
+    if kind != "norm":
+        raise ValueError(f"unknown importance signal {kind!r}; have: norm")
+    return ImportanceNorm()
+
+
+register_policy("uniform")(UniformPolicy)
+register_policy("powd")(PowerOfChoice)
+register_policy("importance")(_make_importance)
+register_policy("avail")(_make_avail)
+register_policy("energy")(EnergyBudget)
+
+
+def _parse_arg(tok: str) -> Arg:
+    tok = tok.strip()
+    try:
+        return int(tok)
+    except ValueError:
+        try:
+            return float(tok)
+        except ValueError:
+            return tok                  # identifier args ("norm", "diurnal")
+
+
+def parse_policy(spec: Union[str, ParticipationPolicy, None]
+                 ) -> ParticipationPolicy:
+    """One spec string -> one (unbound) policy instance.  An
+    already-constructed policy passes through; empty/None means
+    uniform."""
+    if isinstance(spec, ParticipationPolicy):
+        return spec
+    body = (spec or "uniform").strip()
+    name, _, argstr = body.partition(":")
+    name = name.strip()
+    if name not in POLICIES:
+        raise ValueError(f"unknown participation policy {name!r} in spec "
+                         f"{spec!r}; registered: {sorted(POLICIES)}")
+    args = [_parse_arg(a) for a in re.split("[,:]", argstr) if a.strip()] \
+        if argstr else []
+    return POLICIES[name](*args)
+
+
+def make_policy(spec: Union[str, ParticipationPolicy, None], n_clients: int,
+                seed: int = 0) -> ParticipationPolicy:
+    """Parse + bind: the fresh per-run policy instance the engines use."""
+    return parse_policy(spec).bind(n_clients, seed)
+
+
+def resolve_policy(spec: Union[str, ParticipationPolicy, None],
+                   n_clients: int, seed: int = 0,
+                   scenario: Optional[object] = None) -> ParticipationPolicy:
+    """``make_policy`` plus the ``SimScenario.dropout`` deprecation shim.
+
+    A population-wide scalar dropout (uniform/diurnal scenario kinds,
+    where ``sample_resources`` stamps the same rate on every client)
+    under the default uniform policy IS ``avail:bernoulli:<rate>`` — the
+    shim constructs exactly that policy, bit-for-bit: uniform selection
+    consumes the learning rng identically and the survival hook makes
+    the same single systems-stream draw per dispatch the engines used to
+    hard-code.  Any explicitly declared non-uniform policy wins over the
+    scalar (its own availability/survival semantics apply)."""
+    policy = parse_policy(spec)
+    sc_dropout = float(getattr(scenario, "dropout", 0.0) or 0.0)
+    if (sc_dropout > 0.0 and getattr(scenario, "kind", "") in
+            ("uniform", "diurnal") and isinstance(policy, UniformPolicy)):
+        warnings.warn(
+            f"SimScenario.dropout={sc_dropout:g} as a population scalar is "
+            f"deprecated; declare participation="
+            f"'avail:bernoulli:{sc_dropout:g}' instead (bit-for-bit)",
+            DeprecationWarning, stacklevel=3)
+        policy = AvailBernoulli(sc_dropout)
+    return policy.bind(n_clients, seed)

@@ -94,7 +94,9 @@ from repro.fl.rounds import (FLConfig, _stack_client_batches,
                              build_codec_pipeline, init_codec_states,
                              make_round_step, server_broadcast_additive)
 from repro.fl.server import (apply_update, broadcast_point, server_init)
-from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, EventQueue
+from repro.participate import (HT_CLIP, RoundContext, fairness_summary,
+                               ht_weights, resolve_policy)
+from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, WAKE, EventQueue
 from repro.sim.profiles import (bandwidth_multiplier, sample_resources,
                                 scale_bandwidth)
 
@@ -287,6 +289,13 @@ class SimResult:
                                      # (max_sim_time / event cap) stopped;
                                      # their unmerged payload is charged to
                                      # the waste ledger
+    # participation telemetry (repro.participate): biased cohort policies
+    # are only trustworthy if their bias is observable
+    participation_count: Optional[np.ndarray] = None  # dispatches per client
+    dropout_count: Optional[np.ndarray] = None        # mid-round deaths per
+                                                      # client
+    fairness: Optional[Dict[str, float]] = None       # min/median/max of
+                                                      # participation_count
     staleness_observed: Optional[np.ndarray] = None   # per accepted arrival
     staleness_q: Optional[Dict[str, float]] = None    # q50/q90/max summary
     alphas: List[float] = field(default_factory=list)  # alpha per aggregation
@@ -385,6 +394,15 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
     codec_state = init_codec_states(params, um, pipeline, down_pipe)
     round_step = make_round_step(loss_fn, cfg, um, pipeline, down_pipe)
+    step_w = None                    # HT-weighted variant, built on demand
+
+    # cohort selection is a policy decision (repro.participate); the
+    # scenario's scalar dropout is subsumed as an avail:bernoulli shim
+    policy = resolve_policy(cfg.participation, cfg.n_clients, cfg.seed,
+                            scenario)
+    all_ids = np.arange(cfg.n_clients)
+    part_count = np.zeros(cfg.n_clients, np.int64)
+    drop_count = np.zeros(cfg.n_clients, np.int64)
 
     cohort_size = max(1, int(round(cfg.n_active * sim.overprovision)))
     sizes = np.asarray(um.unit_bytes, np.float64)
@@ -415,8 +433,44 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     uploaded = 0.0
     downloaded = 0.0
 
+    def emit_eval(t: int) -> None:
+        """One eval-cadence history row (shared by aggregated AND empty
+        rounds, so the schema can never drift between them)."""
+        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
+                                    or t == cfg.rounds - 1):
+            metrics = dict(eval_fn(params))
+            metrics.update(round=t + 1, t_sim=queue.now,
+                           up_mb=uploaded / 1e6,
+                           comm_ratio=uploaded / max(
+                               total_bytes * res.n_uplinks_spent, 1.0),
+                           down_ratio=downloaded / max(
+                               total_bytes * res.n_dispatched, 1.0))
+            res.history.append(metrics)
+
     for t in range(cfg.rounds):
-        cohort = rng.choice(cfg.n_clients, size=cohort_size, replace=False)
+        sel = policy.select(RoundContext(
+            rng=rng, n_clients=cfg.n_clients, cohort_size=cohort_size,
+            candidates=all_ids, population=True, sim=True, round=t,
+            now=queue.now, bw_period=scenario.bw_period))
+        cohort = np.asarray(sel.cohort, np.int64)
+        np.add.at(part_count, cohort, 1)
+        if len(cohort) == 0:
+            # nobody eligible (e.g. all batteries flat): the round never
+            # opens, but virtual time still passes — the server idles one
+            # deadline (or one population-mean round trip when unbounded)
+            # so that recharge-with-time policies can ever revive; a
+            # frozen clock would silently skip every remaining round.
+            # The eval cadence still reports (matching run_fl), so a run
+            # whose population dies keeps an honest final history row
+            idle_wait = (sim.deadline if math.isfinite(sim.deadline) else
+                         float(np.mean([round_trip_time(
+                             um, np.asarray(luar_state.mask), r, cfg.tau)
+                             for r in resources])))
+            queue.push(queue.now + idle_wait, DEADLINE)
+            queue.pop()
+            emit_eval(t)
+            continue
+        weights = None if sel.uniform else ht_weights(sel, clip=HT_CLIP)
         batches = _stack_client_batches(data, parts, cohort, cfg.tau,
                                         cfg.batch_size, rng)
         key, qkey = jax.random.split(key)
@@ -463,16 +517,18 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             else:
                 res.n_full_downloads += 1
             r = scale_bandwidth(resources[c], bw)
-            if r.dropout and sys_rng.random() < r.dropout:
+            if not policy.dispatch_survives(int(c), r, sys_rng):
                 # device vanishes after download+compute, before upload
-                queue.push(t0 + download_time(um, r, down_bytes)
-                           + compute_time(cfg.tau, r),
-                           DROPOUT, int(c), {"pos": pos})
+                t_busy = (download_time(um, r, down_bytes)
+                          + compute_time(cfg.tau, r))
+                queue.push(t0 + t_busy, DROPOUT, int(c), {"pos": pos})
+                policy.observe_dispatch(int(c), now=t0, cost_s=t_busy)
                 continue
-            queue.push(t0 + round_trip_time(um, mask_now, r, cfg.tau,
-                                            payload_bytes=nominal_bytes,
-                                            download_bytes=down_bytes),
-                       ARRIVAL, int(c), {"pos": pos})
+            t_busy = round_trip_time(um, mask_now, r, cfg.tau,
+                                     payload_bytes=nominal_bytes,
+                                     download_bytes=down_bytes)
+            queue.push(t0 + t_busy, ARRIVAL, int(c), {"pos": pos})
+            policy.observe_dispatch(int(c), now=t0, cost_s=t_busy)
             n_scheduled += 1
             sched_pos.add(pos)
         if math.isfinite(sim.deadline):
@@ -488,6 +544,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
                 break
             if ev.kind == DROPOUT:
                 n_drop_round += 1
+                drop_count[ev.client] += 1
                 res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
                 continue
             arrived_pos.append(ev.payload["pos"])
@@ -515,6 +572,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         for ev in queue.clear_pending():
             if ev.kind == DROPOUT:
                 n_drop_round += 1
+                drop_count[ev.client] += 1
                 res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
         res.n_dropped += n_drop_round
         res.wasted_download_bytes += sum(
@@ -526,7 +584,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         # -- aggregate the survivors (cohort order, not arrival order, so
         #    the homogeneous all-arrive case is bitwise run_fl) -----------
         arrived_pos.sort()
-        if len(arrived_pos) == cohort_size:
+        if len(arrived_pos) == len(cohort):
             sub = batches
         else:
             # each distinct survivor count is a new leading dim and costs
@@ -536,8 +594,24 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # forfeit the bitwise-equality path with run_fl, so not now)
             idx = np.asarray(arrived_pos)
             sub = {k: v[idx] for k, v in batches.items()}
-        params, luar_state, server_state, codec_state, aux = round_step(
-            params, luar_state, server_state, codec_state, sub, qkey)
+        if weights is None:
+            # equal weights: the exact (unweighted-mean) legacy trace
+            params, luar_state, server_state, codec_state, aux = round_step(
+                params, luar_state, server_state, codec_state, sub, qkey)
+        else:
+            if step_w is None:
+                step_w = make_round_step(loss_fn, cfg, um, pipeline,
+                                         down_pipe, weighted=True,
+                                         want_loss=policy.wants_loss,
+                                         want_norm=policy.wants_update_norm)
+            w_sub = jnp.asarray(weights[np.asarray(arrived_pos)], jnp.float32)
+            (params, luar_state, server_state, codec_state, aux,
+             obs) = step_w(params, luar_state, server_state, codec_state,
+                           sub, w_sub, qkey)
+            losses, norms = (None if o is None else np.asarray(o, np.float64)
+                             for o in obs)
+            policy.observe_round(cohort[np.asarray(arrived_pos)], losses,
+                                 norms, now=queue.now)
         per_client = pipeline.price_bytes(sizes, mask_now, aux)
         uploaded += per_client * len(arrived_pos)
         res.n_received += len(arrived_pos)
@@ -548,15 +622,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # carry: one delta step against the mask it applied
             pending_chain = pending_chain + delta_step_price(sizes, mask_now)
 
-        if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
-                                    or t == cfg.rounds - 1):
-            metrics = dict(eval_fn(params))
-            metrics.update(round=t + 1, t_sim=queue.now,
-                           comm_ratio=uploaded / max(
-                               total_bytes * res.n_uplinks_spent, 1.0),
-                           down_ratio=downloaded / max(
-                               total_bytes * res.n_dispatched, 1.0))
-            res.history.append(metrics)
+        emit_eval(t)
 
     res.sim_time = queue.now
     # ratio vs a FedAvg baseline paying for the SAME spent uplinks: the
@@ -566,6 +632,9 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
     res.downloaded = downloaded
     res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
+    res.participation_count = part_count
+    res.dropout_count = drop_count
+    res.fairness = fairness_summary(part_count)
     res.params = params
     res.luar_state = luar_state
     return res
@@ -604,8 +673,21 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     alpha = sim.staleness_alpha
     fedasync = sim.buffer_size == 1      # FedAsync-style immediate apply
 
+    # which idle client a free slot feeds is a policy decision
+    # (repro.participate); the scenario's scalar dropout is subsumed as
+    # an avail:bernoulli shim
+    policy = resolve_policy(cfg.participation, cfg.n_clients, cfg.seed,
+                            scenario)
+    part_count = np.zeros(cfg.n_clients, np.int64)
+    drop_count = np.zeros(cfg.n_clients, np.int64)
+
     client_fn = jax.jit(lambda p, b: local_update(loss_fn, p, b, cfg.client))
     encode_fn = jax.jit(lambda st, delta, qkey: pipeline.encode(st, delta, qkey))
+    # per-client policy signals (loss at dispatch point, raw update norm),
+    # compiled only when the bound policy feeds on them
+    loss1_fn = jax.jit(lambda p, b: loss_fn(p, b))
+    norm_fn = jax.jit(lambda tr: jnp.sqrt(sum(
+        jnp.sum(jnp.square(l)) for l in jax.tree.leaves(tr))))
 
     # -- versioned downlink (the DOWN pipeline) ---------------------------
     # the broadcast a dispatch hands its client runs through the downlink
@@ -655,15 +737,20 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
 
     @jax.jit
     def agg_fn(params, luar_state, server_state, stacked, staleness,
-               validity, alpha_t):
+               validity, alpha_t, ht=None):
         # per-unit validity merge: a unit is averaged only over the clients
         # whose dispatched mask says they uploaded it; the weight mass of
         # clients that skipped a unit goes to the recycled direction
         # (fallback), which keeps small stale subsets from being blown up
-        # to full magnitude under non-IID data
+        # to full magnitude under non-IID data.  ``ht`` (biased policies
+        # only; None leaves the trace bit-for-bit) folds the policy's
+        # inverse-inclusion-probability weights into the same
+        # normalization, so selection bias and staleness discounting are
+        # corrected by ONE self-normalizing merge
         fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
                                          validity=validity, um=um,
-                                         fallback=luar_state.prev_update)
+                                         fallback=luar_state.prev_update,
+                                         ht=ht)
         if fedasync:
             # a K=1 buffer renormalizes any discount back to 1, so the
             # staleness weight must scale the server mixing rate instead:
@@ -688,10 +775,12 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     version = 0
     observed: List[int] = []            # staleness of every accepted arrival
     jobs: Dict[int, dict] = {}
-    buffer: List[tuple] = []            # (delta, staleness, validity row)
+    buffer: List[tuple] = []            # (delta, staleness, validity row,
+                                        #  uncharged bytes, down bytes, ht)
 
-    def dispatch(c: int, now: float):
+    def dispatch(c: int, now: float, ht: float = 1.0):
         nonlocal downloaded
+        part_count[c] += 1
         # link quality is sampled at dispatch time (diurnal scenarios)
         r = scale_bandwidth(resources[c], bandwidth_multiplier(scenario, now))
         idx = parts[c]
@@ -730,28 +819,102 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             "per_unit": per_unit,       # nominal uplink bytes by unit
             "bytes": float(per_unit.sum()),
             "down_bytes": down_bytes,   # the broadcast leg, pipeline-priced
+            "ht": ht,                   # the policy's HT weight (1.0 under
+                                        # uniform selection)
         }
-        if r.dropout and sys_rng.random() < r.dropout:
-            queue.push(now + download_time(um, r, down_bytes)
-                       + compute_time(cfg.tau, r),
-                       DROPOUT, c)
+        if not policy.dispatch_survives(c, r, sys_rng):
+            t_busy = download_time(um, r, down_bytes) + compute_time(cfg.tau, r)
+            queue.push(now + t_busy, DROPOUT, c)
         else:
-            queue.push(now + round_trip_time(um, mask_now, r, cfg.tau,
-                                             payload_bytes=jobs[c]["bytes"],
-                                             download_bytes=down_bytes),
-                       ARRIVAL, c)
+            t_busy = round_trip_time(um, mask_now, r, cfg.tau,
+                                     payload_bytes=jobs[c]["bytes"],
+                                     download_bytes=down_bytes)
+            queue.push(now + t_busy, ARRIVAL, c)
+        policy.observe_dispatch(c, now=now, cost_s=t_busy)
 
     def charge_waste(wasted: np.ndarray):
         res.wasted_per_unit += wasted
         res.wasted_upload_bytes += float(wasted.sum())
 
     concurrency = min(sim.concurrency or cfg.n_active, cfg.n_clients)
-    first = rng.choice(cfg.n_clients, size=concurrency, replace=False)
+    first_sel = policy.select(RoundContext(
+        rng=rng, n_clients=cfg.n_clients, cohort_size=concurrency,
+        candidates=np.arange(cfg.n_clients), population=True, distinct=True,
+        sim=True, round=0, now=0.0, bw_period=scenario.bw_period))
+    first = np.asarray(first_sel.cohort, np.int64)
+    if first_sel.uniform:
+        first_ht = np.ones(len(first))
+    else:
+        first_ht = ht_weights(first_sel)
+        if first_sel.with_replacement:
+            # Hansen-Hurwitz divides by the k of a k-draw design, but a
+            # fedbuff buffer mixes these wave members with SINGLETON
+            # redispatch selections (k=1): every dispatch entering the
+            # async merge must be on the same per-dispatch 1/p scale, or
+            # wave members are underweighted ~concurrency-fold
+            first_ht = first_ht * len(first)
     # sorted list of idle client ids, maintained incrementally (O(log n)
     # insert + O(n) pop, vs rebuilding a sorted set per event)
     idle = sorted(set(range(cfg.n_clients)) - set(int(c) for c in first))
-    for c in first:
-        dispatch(int(c), 0.0)
+    for c, ht in zip(first, first_ht):
+        dispatch(int(c), 0.0, float(ht))
+
+    starved = 0          # freed slots the policy could not feed yet
+    # a starved retry with NOTHING else in flight needs a clock advance of
+    # its own (identical resources make the whole wave arrive at one
+    # instant — zero idle time has elapsed, so recharge cannot have
+    # happened yet): WAKE events idle the server one population-mean round
+    # trip, with exponential backoff so a long availability trough is
+    # eventually crossed and a permanently dark population is bounded by
+    # the event cap instead of spinning
+    wake_wait = float(np.mean([round_trip_time(um, no_mask, r, cfg.tau)
+                               for r in resources]))
+    wake_backoff = 1.0
+
+    def feed_starved(now: float):
+        """Try to feed every starved slot from the idle pool.  An empty
+        selection (every idle client dead/unavailable) leaves the slots
+        starved — retried on every later event once the virtual clock has
+        moved and batteries/availability may have recovered; if no other
+        event exists to move it, a WAKE is scheduled."""
+        nonlocal starved, wake_backoff
+        while starved and idle:
+            sel = policy.select(RoundContext(
+                rng=rng, n_clients=cfg.n_clients, cohort_size=1,
+                candidates=np.asarray(idle, np.int64), population=False,
+                distinct=True, sim=True, round=version, now=now,
+                bw_period=scenario.bw_period))
+            if len(sel.cohort) == 0:
+                # "nothing else will move the clock" must ignore the
+                # permanent max_sim_time DEADLINE sentinel — else a
+                # finite cutoff suppresses the WAKE and a momentary
+                # trough fast-forwards straight to the end of the run
+                if queue.pending_count() == queue.pending_count(DEADLINE):
+                    queue.push(now + wake_wait * wake_backoff, WAKE)
+                    wake_backoff = min(wake_backoff * 2.0, 2.0 ** 20)
+                return
+            c = int(sel.cohort[0])
+            idle.remove(c)
+            dispatch(c, now,
+                     1.0 if sel.uniform else float(ht_weights(sel)[0]))
+            starved -= 1
+            wake_backoff = 1.0
+
+    def next_dispatch(now: float):
+        """Feed the just-freed slot (the uniform policy replays the
+        legacy ``idle.pop(rng.integers(len(idle)))`` draw exactly), plus
+        any slots starved earlier."""
+        nonlocal starved
+        starved += 1
+        feed_starved(now)
+
+    if len(first) < concurrency:
+        # the policy could not fill the whole first wave (e.g. everyone
+        # dead or in the diurnal trough at t=0): the missing slots start
+        # starved, and with no dispatch in flight the WAKE path is what
+        # moves the clock until somebody becomes eligible
+        starved = concurrency - len(first)
+        feed_starved(0.0)
     if math.isfinite(sim.max_sim_time):
         # exact cutoff: events scheduled past this never execute
         queue.push(sim.max_sim_time, DEADLINE)
@@ -767,6 +930,10 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         ev = queue.pop()
         if ev.kind == DEADLINE:
             break
+        if ev.kind == WAKE:
+            # the clock advanced for its own sake: retry starved slots
+            feed_starved(queue.now)
+            continue
         c = ev.client
         job = jobs.pop(c)
         bisect.insort(idle, c)          # the slot's device is idle again
@@ -785,14 +952,24 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                 res.n_uplinks_spent += 1
                 charge_waste(job["per_unit"].copy())
                 res.wasted_download_bytes += job["down_bytes"]
-                dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
+                next_dispatch(queue.now)
                 continue
             key, qkey = jax.random.split(key)
             cstate = codec_state_for(c)
-            delta, cstate, aux = encode_fn(
-                cstate, client_fn(job["start"], job["batches"]), qkey)
+            raw = client_fn(job["start"], job["batches"])
+            delta, cstate, aux = encode_fn(cstate, raw, qkey)
             if pipeline.stateful:
                 codec_states[c] = cstate
+            if policy.wants_loss or policy.wants_update_norm:
+                # policy signals, priced off this arrival: the client's
+                # loss at its dispatch point and its raw update norm
+                lo = (np.asarray([float(loss1_fn(
+                    job["start"], {k: v[0] for k, v in
+                                   job["batches"].items()}))])
+                    if policy.wants_loss else None)
+                no = (np.asarray([float(norm_fn(raw))])
+                      if policy.wants_update_norm else None)
+                policy.observe_round([c], lo, no, now=queue.now)
             # the uplink was spent either way; exact post-encode pricing
             # against the DISPATCHED mask (aux: top-k survivor counts etc.)
             per_unit = pipeline.price_per_unit(sizes, job["mask"], aux)
@@ -815,22 +992,37 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             # uncharged: payload bytes still unaccounted if this update
             # never reaches a merge (stranded in a partial buffer);
             # down_bytes rides along so a stranded round trip can charge
-            # its broadcast leg too
-            buffer.append((delta, stal, valid, uncharged, job["down_bytes"]))
+            # its broadcast leg too; ht is the dispatch-time policy weight
+            buffer.append((delta, stal, valid, uncharged, job["down_bytes"],
+                           job["ht"]))
             res.n_received += 1
             if len(buffer) >= sim.buffer_size:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                       *[d for d, _, _, _, _ in buffer])
-                stal_arr = jnp.asarray([s for _, s, _, _, _ in buffer], jnp.int32)
-                valid_np = np.stack([v for _, _, v, _, _ in buffer])
+                                       *[b[0] for b in buffer])
+                stal_arr = jnp.asarray([b[1] for b in buffer], jnp.int32)
+                valid_np = np.stack([b[2] for b in buffer])
                 valid_arr = jnp.asarray(valid_np)
                 alpha_t = (_schedule_alpha(alpha, observed, sim.staleness_window)
                            if sim.adaptive_alpha else alpha)
                 res.alphas.append(alpha_t)
                 cur_mask = np.asarray(luar_state.mask)   # pre-agg R_v
-                params, luar_state, server_state = agg_fn(
-                    params, luar_state, server_state, stacked, stal_arr,
-                    valid_arr, jnp.float32(alpha_t))
+                if policy.weighted:
+                    # fold the policy's inverse-inclusion weights into the
+                    # staleness merge (self-normalizing); truncated-IPS
+                    # clip RELATIVE TO THIS BUFFER (each dispatch is a
+                    # singleton selection, so the cap only exists at merge
+                    # time).  The unweighted call below keeps the uniform
+                    # trace bit-for-bit
+                    hts = np.asarray([b[5] for b in buffer], np.float64)
+                    hts = np.minimum(hts, HT_CLIP * hts.min())
+                    params, luar_state, server_state = agg_fn(
+                        params, luar_state, server_state, stacked, stal_arr,
+                        valid_arr, jnp.float32(alpha_t),
+                        jnp.asarray(hts, jnp.float32))
+                else:
+                    params, luar_state, server_state = agg_fn(
+                        params, luar_state, server_state, stacked, stal_arr,
+                        valid_arr, jnp.float32(alpha_t))
                 if has_delta:
                     # the downlink sibling of ledger.record: price the
                     # delta step this aggregation just created.  Scalar
@@ -853,6 +1045,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                                             or version == cfg.rounds):
                     metrics = dict(eval_fn(params))
                     metrics.update(round=version, t_sim=queue.now,
+                                   up_mb=uploaded / 1e6,
                                    comm_ratio=uploaded / max(
                                        total_bytes * res.n_uplinks_spent, 1.0),
                                    down_ratio=downloaded / max(
@@ -863,16 +1056,17 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             # before its upload started: zero uplink spent, but the served
             # downlink is pure waste
             res.n_dropped += 1
+            drop_count[c] += 1
             res.wasted_download_bytes += job["down_bytes"]
         # the slot is free again: hand the next idle client a fresh model
-        dispatch(idle.pop(int(rng.integers(len(idle)))), queue.now)
+        next_dispatch(queue.now)
 
     # a truncated run (max_sim_time / event cap) can strand accepted
     # uploads in a partially filled buffer: they never reach a merge, so
     # their remaining payload — and the broadcast leg that produced it —
     # is wasted traffic
     res.n_stranded_end = len(buffer)
-    for _, _, _, uncharged, down_bytes in buffer:
+    for _, _, _, uncharged, down_bytes, _ in buffer:
         charge_waste(uncharged)
         res.wasted_download_bytes += down_bytes
     res.n_inflight_end = len(jobs)      # incl. pending DROPOUT dispatches
@@ -883,6 +1077,9 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
     res.downloaded = downloaded
     res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
+    res.participation_count = part_count
+    res.dropout_count = drop_count
+    res.fairness = fairness_summary(part_count)
     res.staleness_observed = np.asarray(observed, np.int32)
     res.staleness_q = _staleness_quantiles(observed)
     res.params = params

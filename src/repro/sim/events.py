@@ -15,6 +15,9 @@ from typing import Any, Dict, NamedTuple, Optional
 ARRIVAL = "arrival"        # a client finished download+compute+upload
 DEADLINE = "deadline"      # the synchronous round deadline fired
 DROPOUT = "dropout"        # a dispatched client vanished (never uploads)
+WAKE = "wake"              # clock-advance retry for starved fedbuff slots
+                           # (participation policy found nobody eligible and
+                           # no other event would ever move the clock)
 
 
 class Event(NamedTuple):
