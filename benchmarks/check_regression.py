@@ -1,0 +1,145 @@
+"""Perf-trajectory regression gate over ``BENCH_*.json`` snapshots.
+
+Two modes:
+
+  * no arguments — validate every committed ``BENCH_*.json`` at the
+    repo root (schema version, non-empty rows, finite timings, footer
+    present).  This is the cheap tier-1 sanity pass: the committed
+    trajectory must always be loadable by the comparator.
+
+      PYTHONPATH=src python -m benchmarks.check_regression
+
+  * ``--baseline`` + ``--fresh`` — compare a freshly recorded snapshot
+    against the committed baseline.  A row regresses when its
+    ``us_per_call`` exceeds baseline by more than ``--tolerance``
+    (a RATIO, default 3.0: CI runners are noisy shared VMs, so the gate
+    only catches step-function blowups — an accidentally interpreted
+    kernel, a jit cache miss in the hot loop — not percent-level drift).
+    Rows missing from fresh count as coverage regressions; new rows are
+    fine.  ``--soft`` demotes failure to a GitHub ``::warning::``
+    annotation and exit 0 (tier-1 stays green on a noisy runner; the
+    nightly full run uploads fresh artifacts for human eyes).
+
+      python -m benchmarks.run --record --only kernels --out-dir /tmp/b
+      python -m benchmarks.check_regression \\
+          --baseline BENCH_kernels.json --fresh /tmp/b/BENCH_kernels.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import sys
+from typing import Dict, List
+
+from benchmarks.common import BENCH_SCHEMA
+
+REQUIRED_FOOTER = ("total_wall_s", "git_sha", "jax_version")
+
+
+def load_snapshot(path: str) -> Dict:
+    """Load + validate one BENCH_*.json snapshot; raise ValueError with
+    the reason on any malformation."""
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ValueError(f"{path}: unreadable ({e})") from e
+    if doc.get("schema") != BENCH_SCHEMA:
+        raise ValueError(f"{path}: schema {doc.get('schema')!r} != "
+                         f"{BENCH_SCHEMA}")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError(f"{path}: no rows")
+    for r in rows:
+        if not isinstance(r.get("name"), str):
+            raise ValueError(f"{path}: row without a name: {r!r}")
+        us = r.get("us_per_call")
+        if not isinstance(us, (int, float)) or not math.isfinite(us) or us < 0:
+            raise ValueError(f"{path}: row {r['name']!r} has bad "
+                             f"us_per_call {us!r}")
+    footer = doc.get("footer")
+    if not isinstance(footer, dict):
+        raise ValueError(f"{path}: missing footer")
+    missing = [k for k in REQUIRED_FOOTER if k not in footer]
+    if missing:
+        raise ValueError(f"{path}: footer missing {missing}")
+    return doc
+
+
+def compare(baseline: Dict, fresh: Dict, tolerance: float) -> List[str]:
+    """Regression messages (empty = pass)."""
+    problems: List[str] = []
+    base_rows = {r["name"]: r for r in baseline["rows"]}
+    fresh_rows = {r["name"]: r for r in fresh["rows"]}
+    for name, b in base_rows.items():
+        f = fresh_rows.get(name)
+        if f is None:
+            problems.append(f"{name}: present in baseline, missing from "
+                            "fresh run (coverage regression)")
+            continue
+        if b["us_per_call"] <= 0:
+            continue                    # degenerate baseline: nothing to gate
+        ratio = f["us_per_call"] / b["us_per_call"]
+        if ratio > tolerance:
+            problems.append(
+                f"{name}: {b['us_per_call']:.1f}us -> "
+                f"{f['us_per_call']:.1f}us ({ratio:.2f}x > "
+                f"{tolerance:.2f}x tolerance)")
+    return problems
+
+
+def validate_committed(root: str = ".") -> int:
+    paths = sorted(glob.glob(f"{root}/BENCH_*.json"))
+    if not paths:
+        print(f"no BENCH_*.json snapshots under {root!r}", file=sys.stderr)
+        return 2
+    for p in paths:
+        doc = load_snapshot(p)
+        print(f"{p}: ok — {len(doc['rows'])} rows, "
+              f"sha {doc['footer']['git_sha']}, "
+              f"jax {doc['footer']['jax_version']}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="",
+                    help="committed BENCH_*.json to compare against")
+    ap.add_argument("--fresh", default="",
+                    help="freshly recorded BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="max fresh/baseline us_per_call ratio "
+                         "(default 3.0)")
+    ap.add_argument("--soft", action="store_true",
+                    help="on regression print ::warning:: and exit 0")
+    ap.add_argument("--root", default=".",
+                    help="where no-arg mode looks for BENCH_*.json")
+    args = ap.parse_args(argv)
+
+    if bool(args.baseline) != bool(args.fresh):
+        ap.error("--baseline and --fresh must be given together")
+    if not args.baseline:
+        return validate_committed(args.root)
+
+    try:
+        base = load_snapshot(args.baseline)
+        fresh = load_snapshot(args.fresh)
+    except ValueError as e:
+        print(f"::warning::{e}" if args.soft else str(e), file=sys.stderr)
+        return 0 if args.soft else 2
+    problems = compare(base, fresh, args.tolerance)
+    if not problems:
+        print(f"perf gate ok: {len(fresh['rows'])} rows within "
+              f"{args.tolerance:.2f}x of {args.baseline} "
+              f"(sha {base['footer']['git_sha']})")
+        return 0
+    for msg in problems:
+        print(f"::warning::perf regression — {msg}" if args.soft
+              else f"perf regression — {msg}")
+    return 0 if args.soft else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

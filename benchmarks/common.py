@@ -6,10 +6,16 @@ Two workloads mirror the paper's regimes at laptop scale:
   * "mixture" — Gaussian mixture + MLP (fast; used by run.py quick mode).
 
 Every benchmark returns rows of (name, seconds, metrics-dict) and run.py
-prints the ``name,us_per_call,derived`` CSV contract.
+prints the ``name,us_per_call,derived`` CSV contract.  ``--record``
+additionally persists each module's rows as a ``BENCH_<module>.json``
+perf-trajectory snapshot (schema below) that
+``benchmarks/check_regression.py`` gates CI against.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -83,3 +89,47 @@ def emit(rows: List[Tuple[str, float, Dict]]):
     for name, secs, derived in rows:
         d = ";".join(f"{k}={v}" for k, v in derived.items())
         print(f"{name},{secs * 1e6:.0f},{d}")
+
+
+# -- perf-trajectory snapshots (BENCH_*.json) -------------------------------
+
+BENCH_SCHEMA = 1
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_record(suite: str, rows: List[Tuple[str, float, Dict]],
+                 wall_s: float, quick: bool, out_dir: str = ".") -> str:
+    """Persist one suite's rows as ``BENCH_<suite>.json``.
+
+    The machine-readable footer (total wall time, git SHA, jax version)
+    makes every snapshot self-describing, so a regression report can say
+    WHICH commit and runtime produced the numbers it compares."""
+    import jax
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "suite": suite,
+        "quick": bool(quick),
+        "rows": [{"name": name, "us_per_call": round(secs * 1e6, 1),
+                  "derived": {k: v for k, v in derived.items()}}
+                 for name, secs, derived in rows],
+        "footer": {
+            "total_wall_s": round(wall_s, 2),
+            "git_sha": git_sha(),
+            "jax_version": jax.__version__,
+        },
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+    return path

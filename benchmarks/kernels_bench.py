@@ -12,12 +12,21 @@ from repro.models.cnn import cnn_init
 
 
 def _time(fn, reps=5):
-    fn()  # compile
-    t0 = time.time()
+    """Per-rep wall times with the async dispatch fence INSIDE the loop.
+
+    The old version blocked once after the whole loop, so each lap
+    clocked only dispatch (~us) while the device was still chewing — and
+    the mean hid the compile-adjacent first-rep jitter.  Blocking every
+    rep times actual execution; ``min`` is the steady-state number the
+    regression gate tracks, ``mean`` rides along in ``derived``.
+    """
+    jax.block_until_ready(fn())     # compile + warm caches
+    laps = []
     for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.time() - t0) / reps
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        laps.append(time.perf_counter() - t0)
+    return min(laps), sum(laps) / len(laps)
 
 
 def rows(quick: bool = True):
@@ -27,8 +36,10 @@ def rows(quick: bool = True):
     state, um = luar_init(params, cfg, jax.random.PRNGKey(1))
     upd = jax.tree.map(jnp.ones_like, params)
     step = jax.jit(lambda s, u: luar_round(s, um, cfg, u, params))
-    t = _time(lambda: step(state, upd)[1].s)
-    out.append(("bench/luar_round_cnn", t, {"units": len(um.names)}))
+    t_min, t_mean = _time(lambda: step(state, upd)[1].s)
+    out.append(("bench/luar_round_cnn", t_min,
+                {"units": len(um.names),
+                 "mean_us": round(t_mean * 1e6, 1)}))
 
     if not quick:
         S = 1024
@@ -36,8 +47,11 @@ def rows(quick: bool = True):
         q = jax.random.normal(ks[0], (1, 8, S, 64), jnp.float32)
         k = jax.random.normal(ks[1], (1, 8, S, 64), jnp.float32)
         v = jax.random.normal(ks[2], (1, 8, S, 64), jnp.float32)
-        t = _time(lambda: ops.flash_attention(q, k, v, interpret=True), reps=2)
-        out.append(("bench/flash_attention_interp_1k", t, {"note": "interpret-mode"}))
+        t_min, t_mean = _time(
+            lambda: ops.flash_attention(q, k, v, interpret=True), reps=2)
+        out.append(("bench/flash_attention_interp_1k", t_min,
+                    {"note": "interpret-mode",
+                     "mean_us": round(t_mean * 1e6, 1)}))
     return out
 
 

@@ -4,7 +4,14 @@ Prints ``name,us_per_call,derived`` CSV.  Default is the quick profile
 (synthetic mixture task, short rounds); pass ``--full`` for the
 paper-scale settings (synthetic FEMNIST + CNN, long rounds).
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,kernels]
+
+``--record`` persists each module's rows as ``BENCH_<module>.json``
+(schema + machine-readable footer: total wall time, git SHA, jax
+version) — the perf-trajectory snapshots ``check_regression.py`` gates
+CI against.  ``--only`` takes a comma-separated module list and raises
+``ValueError`` on an unknown key so a typo'd CI job fails loudly
+instead of silently benchmarking nothing.
 """
 from __future__ import annotations
 
@@ -18,7 +25,7 @@ from benchmarks import (fig1_motivation, fig3_layer_counts, fig4_curves,
                         table4_selection, table5_drop_vs_recycle,
                         table9_delta_sensitivity, table13_alpha,
                         table15_clients, time_to_accuracy)
-from benchmarks.common import emit
+from benchmarks.common import bench_record, emit
 
 MODULES = {
     "table1": table1_memory,
@@ -38,20 +45,49 @@ MODULES = {
 }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
-    args = ap.parse_args()
+def resolve_only(only: str) -> list:
+    """Comma-separated ``--only`` values -> module keys, loudly."""
+    names = [n.strip() for n in only.split(",") if n.strip()]
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        raise ValueError(
+            f"unknown benchmark module(s) {unknown}; "
+            f"valid keys: {', '.join(MODULES)}")
+    return names
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (synthetic FEMNIST + CNN)")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick profile (the default; mutually "
+                         "exclusive with --full)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of modules to run")
+    ap.add_argument("--record", action="store_true",
+                    help="write BENCH_<module>.json perf snapshots")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for --record snapshots (default: cwd)")
+    args = ap.parse_args(argv)
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
     quick = not args.full
-    names = [args.only] if args.only else list(MODULES)
+    names = resolve_only(args.only) if args.only else list(MODULES)
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in names:
+        t_mod = time.time()
         try:
-            emit(MODULES[name].rows(quick))
+            rows = MODULES[name].rows(quick)
         except Exception as e:  # keep the harness running
             print(f"{name},0,ERROR={type(e).__name__}:{e}", file=sys.stdout)
+            continue
+        emit(rows)
+        if args.record:
+            path = bench_record(name, rows, time.time() - t_mod, quick,
+                                args.out_dir)
+            print(f"# recorded {path}", file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 
 

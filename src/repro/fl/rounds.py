@@ -36,6 +36,10 @@ from repro.compress import (CodecPipeline, Direction, delta_step_price,
 from repro.core import LuarConfig, luar_init, luar_round
 from repro.fl.client import ClientConfig, batched_local_updates
 from repro.fl.server import ServerConfig, server_init, apply_update, broadcast_point
+from repro.obs import (AGGREGATE, DISPATCH, M_COMM_RATIO, M_DISPATCHES,
+                       M_DOWN_RATIO, M_DOWNLOAD_BYTES, M_FAIRNESS, M_UPLINKS,
+                       M_UPLOAD_BYTES, RUN_END, RUN_START, Telemetry, UPLOAD,
+                       fairness_from_metrics)
 from repro.participate import (HT_CLIP, RoundContext, fairness_summary,
                                ht_weights, make_policy)
 
@@ -302,7 +306,8 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
            data: Dict[str, np.ndarray],
            parts: List[np.ndarray],
            cfg: FLConfig,
-           eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None) -> FLResult:
+           eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
+           telemetry: Optional[Telemetry] = None) -> FLResult:
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     key, k1, k2 = jax.random.split(key, 3)
@@ -316,6 +321,19 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     round_step = make_round_step(loss_fn, cfg, um, pipeline, down_pipe)
     step_w = None                    # HT-weighted variant, built on demand
 
+    # telemetry (repro.obs): the byte ledgers LIVE in the registry now
+    # (a Counter.add is the same host-f64 ``+=`` the retired inline
+    # accumulators performed, so every derived field is bit-for-bit);
+    # trace/profile channels are optional and gated
+    tele = telemetry if telemetry is not None else Telemetry()
+    m, tr = tele.metrics, tele.trace
+    c_up = m.counter(M_UPLOAD_BYTES, "client->server wire bytes",
+                     "bytes").labels()
+    c_down = m.counter(M_DOWNLOAD_BYTES, "server->client wire bytes",
+                       "bytes").labels()
+    c_uplinks = m.counter(M_UPLINKS, "uploads that crossed the wire").labels()
+    c_dispatches = m.counter(M_DISPATCHES, "downloads served").labels()
+
     # who trains each round is a policy decision (repro.participate); the
     # uniform policy consumes the learning rng exactly like the retired
     # hard-coded rng.choice, so the default replays bit-for-bit
@@ -327,20 +345,24 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     sizes = np.asarray(um.unit_bytes, np.float64)
     n_units = len(um.names)
     total_bytes = sizes.sum()
-    uploaded = 0.0
-    downloaded = 0.0
-    n_uplinks = 0                    # uploads spent (== downloads served:
-    n_downloads = 0                  # run_fl has no stragglers/dropouts)
+    # uplinks spent == downloads served here: run_fl has no stragglers
+    # or dropouts — both ledgers are registry counters now
+    if tr:
+        tr.emit(RUN_START, 0.0, engine="run_fl", n_clients=cfg.n_clients,
+                rounds=cfg.rounds, n_units=n_units, units=list(um.names))
 
     def emit_eval(t: int) -> None:
         """One eval-cadence history row (shared by trained AND empty
         rounds, so the schema can never drift between them)."""
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
                                     or t == cfg.rounds - 1):
-            metrics = dict(eval_fn(params))
-            metrics.update(round=t + 1, up_mb=uploaded / 1e6,
-                           comm_ratio=uploaded / max(total_bytes * n_uplinks, 1.0),
-                           down_ratio=downloaded / max(total_bytes * n_downloads, 1.0))
+            with tele.span("eval"):
+                metrics = dict(eval_fn(params))
+            metrics.update(round=t + 1, up_mb=c_up.value / 1e6,
+                           comm_ratio=c_up.value / max(
+                               total_bytes * c_uplinks.value, 1.0),
+                           down_ratio=c_down.value / max(
+                               total_bytes * c_dispatches.value, 1.0))
             result.history.append(metrics)
     # downlink versioning (down:delta): a cohort member that has been
     # dispatched before is exactly ONE version behind (every round's
@@ -383,45 +405,61 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
         mask_now = np.asarray(luar_state.mask)
         # downlink happens BEFORE local training: price this round's
         # broadcast per member (first contact vs one-step chain)
-        if has_delta:
-            snap_pu = snapshot_price(sizes, mask_now, seed_cache)
-            snap_bytes = down_pipe.price_bytes(
-                sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
-            chain = (delta_step_price(sizes, prev_mask)
-                     if prev_mask is not None else None)
-            chain_pu, _ = versioned_download_price(sizes, mask_now, chain,
-                                                   seed_cache=seed_cache)
-            chain_bytes = down_pipe.price_bytes(
-                sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
-            n_new = 0
-            for c in cohort:
-                if int(c) not in seen:
-                    n_new += 1
-                    seen.add(int(c))
-            downloaded += (snap_bytes * n_new
-                           + chain_bytes * (len(cohort) - n_new))
-        else:
-            downloaded += down_pipe.price_bytes(sizes, no_mask,
-                                                None) * len(cohort)
-        n_downloads += len(cohort)
-        if sel.uniform:
-            # equal weights: the exact (unweighted-mean) legacy trace
-            params, luar_state, server_state, codec_state, aux = round_step(
-                params, luar_state, server_state, codec_state, batches, qkey)
-            obs = None
-        else:
-            if step_w is None:
-                step_w = make_round_step(loss_fn, cfg, um, pipeline,
-                                         down_pipe, weighted=True,
-                                         want_loss=policy.wants_loss,
-                                         want_norm=policy.wants_update_norm)
-            w = jnp.asarray(ht_weights(sel, clip=HT_CLIP), jnp.float32)
-            (params, luar_state, server_state, codec_state, aux,
-             obs) = step_w(params, luar_state, server_state, codec_state,
-                           batches, w, qkey)
-        uploaded += client_payload_bytes(sizes, mask_now, cfg, aux,
-                                         pipeline) * len(cohort)
-        n_uplinks += len(cohort)
+        with tele.span("pricing"):
+            if has_delta:
+                snap_pu = snapshot_price(sizes, mask_now, seed_cache)
+                snap_bytes = down_pipe.price_bytes(
+                    sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
+                chain = (delta_step_price(sizes, prev_mask)
+                         if prev_mask is not None else None)
+                chain_pu, _ = versioned_download_price(sizes, mask_now, chain,
+                                                       seed_cache=seed_cache)
+                chain_bytes = down_pipe.price_bytes(
+                    sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
+                n_new = 0
+                for c in cohort:
+                    if int(c) not in seen:
+                        n_new += 1
+                        seen.add(int(c))
+                down_round = (snap_bytes * n_new
+                              + chain_bytes * (len(cohort) - n_new))
+            else:
+                n_new = 0
+                down_round = down_pipe.price_bytes(sizes, no_mask,
+                                                   None) * len(cohort)
+        c_down.add(down_round)
+        c_dispatches.add(len(cohort))
+        if tr:
+            tr.emit(DISPATCH, float(t), round=t, version=t,
+                    cohort=[int(c) for c in cohort],
+                    down_bytes=down_round, first_contacts=n_new)
+        with tele.span("round_step", jitted=True):
+            if sel.uniform:
+                # equal weights: the exact (unweighted-mean) legacy trace
+                params, luar_state, server_state, codec_state, aux = round_step(
+                    params, luar_state, server_state, codec_state, batches, qkey)
+                obs = None
+            else:
+                if step_w is None:
+                    step_w = make_round_step(loss_fn, cfg, um, pipeline,
+                                             down_pipe, weighted=True,
+                                             want_loss=policy.wants_loss,
+                                             want_norm=policy.wants_update_norm)
+                w = jnp.asarray(ht_weights(sel, clip=HT_CLIP), jnp.float32)
+                (params, luar_state, server_state, codec_state, aux,
+                 obs) = step_w(params, luar_state, server_state, codec_state,
+                               batches, w, qkey)
+        with tele.span("pricing"):
+            up_client = client_payload_bytes(sizes, mask_now, cfg, aux,
+                                             pipeline)
+        c_up.add(up_client * len(cohort))
+        c_uplinks.add(len(cohort))
+        if tr:
+            tr.emit(UPLOAD, float(t), round=t, n=len(cohort),
+                    bytes_per_client=up_client, lag=0, status="accepted")
+            tr.emit(AGGREGATE, float(t), round=t, version=t + 1,
+                    n=len(cohort),
+                    recycled=[int(i) for i in np.flatnonzero(mask_now)])
         prev_mask = mask_now
         if obs is not None:
             losses, norms = (None if o is None else np.asarray(o, np.float64)
@@ -430,15 +468,30 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
 
         emit_eval(t)
 
-    result.comm_ratio = uploaded / max(total_bytes * n_uplinks, 1.0)
-    result.uploaded = uploaded
-    result.n_uplinks_spent = n_uplinks
-    result.downloaded = downloaded
-    result.down_ratio = downloaded / max(total_bytes * n_downloads, 1.0)
+    # result fields derive FROM the registry (same f64 accumulation order
+    # as the retired inline ledgers — bit-for-bit, tested)
+    m.gauge(M_COMM_RATIO, "uplink bytes vs FedAvg same-uplinks").set(
+        c_up.value / max(total_bytes * c_uplinks.value, 1.0))
+    m.gauge(M_DOWN_RATIO, "downlink bytes vs full-model broadcast").set(
+        c_down.value / max(total_bytes * c_dispatches.value, 1.0))
+    fair = fairness_summary(part_count)
+    g_fair = m.gauge(M_FAIRNESS, "participation spread across clients")
+    for stat, v in fair.items():
+        g_fair.labels(stat=stat).set(v)
+    result.comm_ratio = m.value(M_COMM_RATIO)
+    result.uploaded = c_up.value
+    result.n_uplinks_spent = int(c_uplinks.value)
+    result.downloaded = c_down.value
+    result.down_ratio = m.value(M_DOWN_RATIO)
     result.participation_count = part_count
-    result.fairness = fairness_summary(part_count)
+    result.fairness = fairness_from_metrics(m)
     result.agg_count = np.asarray(luar_state.agg_count)
     result.unit_names = um.names
     result.params = params
     result.luar_state = luar_state
+    if tr:
+        tr.emit(RUN_END, float(cfg.rounds), uploaded=c_up.value,
+                downloaded=c_down.value, comm_ratio=result.comm_ratio,
+                down_ratio=result.down_ratio,
+                n_uplinks=int(c_uplinks.value))
     return result

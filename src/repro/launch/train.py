@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.checkpoint import ckpt
 from repro.configs import ARCH_IDS, get_config
 from repro.core import LuarConfig
+from repro.obs import Telemetry, run_summary
 from repro.data.synthetic import gaussian_mixture, lm_batch, synthetic_images, synthetic_tokens
 from repro.fl.client import ClientConfig
 from repro.fl.partition import dirichlet_partition
@@ -117,6 +118,12 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--trace-out", default="",
+                    help="write the structured JSONL round trace "
+                         "(repro.obs schema v1) to this path")
+    ap.add_argument("--profile", action="store_true",
+                    help="time jit-compile vs steady-state spans and "
+                         "print the profile table at exit")
     args = ap.parse_args(argv)
 
     loss_fn, eval_fn, params, data, parts, gran = build_workload(args)
@@ -130,20 +137,26 @@ def main(argv=None):
         codecs=args.codecs, participation=args.participation,
         fedpaq_bits=args.fedpaq_bits, eval_every=args.eval_every)
 
+    tele = Telemetry.create(trace_path=args.trace_out or None,
+                            profile=args.profile)
     t0 = time.time()
-    res = run_fl(loss_fn, params, data, parts, cfg, eval_fn)
+    res = run_fl(loss_fn, params, data, parts, cfg, eval_fn, telemetry=tele)
     for h in res.history:
         print(json.dumps(h))
-    print(json.dumps({
-        "comm_ratio": round(res.comm_ratio, 4),
-        "uploaded_mb": round(res.uploaded / 1e6, 3),
-        "n_uplinks_spent": res.n_uplinks_spent,
-        "down_ratio": round(res.down_ratio, 4),
-        "downloaded_mb": round(res.downloaded / 1e6, 3),
-        "participation": args.participation,
-        "fairness": res.fairness,
-        "agg_counts": {n: int(c) for n, c in zip(res.unit_names, res.agg_count)},
-        "wall_s": round(time.time() - t0, 1)}))
+    # the summary derives from the metrics registry — ONE formatting path
+    # shared with the Prometheus exposition (same instruments, same
+    # numbers the result dataclass re-derives)
+    print(json.dumps(run_summary(
+        tele.metrics,
+        participation=args.participation,
+        fairness=res.fairness,
+        agg_counts={n: int(c) for n, c in zip(res.unit_names, res.agg_count)},
+        wall_s=round(time.time() - t0, 1))))
+    if tele.profiler is not None:
+        print(tele.profiler.render())
+    tele.close()
+    if args.trace_out:
+        print(f"# trace -> {args.trace_out}")
     if args.ckpt:
         ckpt.save(args.ckpt, res.params, step=args.rounds,
                   extra={"comm_ratio": res.comm_ratio})

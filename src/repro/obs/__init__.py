@@ -1,0 +1,35 @@
+"""repro.obs — unified telemetry: metrics, round traces, profiling.
+
+The observability spine of the repo (ISSUE 6): a metrics registry with
+Prometheus exposition (``repro.obs.prom``), a versioned JSONL round-
+trace sink, and wall-time profiling spans, bundled as one ``Telemetry``
+object the engines thread:
+
+    from repro.obs import Telemetry, TraceSink
+    tele = Telemetry.create(trace_path="trace.jsonl", profile=True)
+    res = run_fl(..., telemetry=tele)
+    print(prom.exposition(tele.metrics))
+
+Passing no telemetry costs nothing: the engines build a private
+metrics-only bundle (their byte/waste/staleness ledgers live in the
+registry now and the result dataclasses derive from it bit-for-bit),
+and every trace/profile hook is gated on a cheap ``if``.
+"""
+from repro.obs.metrics import (DEFAULT_BUCKETS, STALENESS_BUCKETS,  # noqa: F401
+                               Counter, Family, Gauge, Histogram,
+                               MetricsRegistry, MetricsSink, NullSink,
+                               format_metrics,
+                               M_ACCEPTED, M_COMM_RATIO, M_DISPATCHES,
+                               M_DOWN_RATIO, M_DOWNLOAD_BYTES,
+                               M_DOWNLOADS_DELTA, M_DOWNLOADS_FULL,
+                               M_DROPOUTS, M_FAIRNESS, M_INFLIGHT_END,
+                               M_LEDGER_EVICTIONS, M_LEDGER_MISSES,
+                               M_ROUNDS, M_SIM_TIME, M_STALENESS,
+                               M_STRAGGLERS, M_STRANDED_END, M_UPLINKS,
+                               M_UPLOAD_BYTES, M_WASTED_DOWN, M_WASTED_UP)
+from repro.obs.profile import SPAN_METRIC, Profiler  # noqa: F401
+from repro.obs.report import fairness_from_metrics, run_summary  # noqa: F401
+from repro.obs.telemetry import Telemetry  # noqa: F401
+from repro.obs.trace import (AGGREGATE, DISPATCH, EVICT, EVENT_KINDS,  # noqa: F401
+                             RUN_END, RUN_START, TRACE_SCHEMA, TraceSink,
+                             UPLOAD, WAKE, read_trace)

@@ -1,0 +1,324 @@
+"""Metrics registry — counters, gauges and histograms with labels.
+
+One host-side registry per run absorbs every ad-hoc ledger the engines
+used to keep as loose locals and result-dataclass fields (uploaded /
+downloaded bytes, waste, ledger misses, staleness observations,
+participation / fairness counts).  The result dataclasses are now
+RE-DERIVED from the registry at end of run — bit-for-bit, because a
+``Counter.add`` is exactly the ``x += v`` float64 accumulation the
+engines performed inline before.
+
+Design constraints, in order:
+
+  * bit-for-bit — instruments store plain Python floats (f64) and the
+    engines add in the same order as the retired inline accumulators;
+  * zero overhead when disabled — the ``NullSink`` hands out singleton
+    no-op instruments, and every trace/profile hook in the engines is
+    gated on a cheap ``if``;
+  * scrapeable — ``repro.obs.prom`` renders any ``MetricsRegistry`` in
+    Prometheus text exposition format (the ROADMAP round server's
+    future /metrics endpoint).
+
+Metric naming follows Prometheus conventions: ``fl_*_total`` counters,
+``fl_*`` gauges, histograms with explicit unit suffixes.  The catalogue
+the engines emit is documented in README ("Observability").
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+LabelKV = Tuple[Tuple[str, str], ...]
+
+
+def _label_kv(labels: Optional[Dict[str, str]]) -> LabelKV:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    """Monotone float64 accumulator (one labelset of a family)."""
+
+    __slots__ = ("labels", "value")
+
+    def __init__(self, labels: LabelKV = ()):
+        self.labels = labels
+        self.value = 0.0
+
+    def add(self, v: float) -> None:
+        if v < 0:
+            raise ValueError(f"counter add must be >= 0, got {v}")
+        self.value += v
+
+    def inc(self) -> None:
+        self.value += 1.0
+
+
+class Gauge:
+    """Last-write-wins float64 value (one labelset of a family)."""
+
+    __slots__ = ("labels", "value")
+
+    def __init__(self, labels: LabelKV = ()):
+        self.labels = labels
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def add(self, v: float) -> None:
+        self.value += v
+
+
+# default span/staleness buckets: exponential, seconds-friendly
+DEFAULT_BUCKETS = (1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+                   60.0, 300.0)
+
+
+class Histogram:
+    """Bucketed distribution that ALSO retains raw samples.
+
+    The buckets feed Prometheus exposition; the raw samples feed the
+    exact quantiles the result dataclasses always reported
+    (``np.quantile`` over every observation — same values, same dtype,
+    so ``SimResult.staleness_q`` derives bit-for-bit).
+    """
+
+    __slots__ = ("labels", "buckets", "counts", "sum", "samples")
+
+    def __init__(self, labels: LabelKV = (),
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self.labels = labels
+        self.buckets = tuple(buckets)
+        self.counts = [0] * (len(self.buckets) + 1)   # +Inf bucket last
+        self.sum = 0.0
+        self.samples: List[float] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.samples.append(v)
+        self.sum += v
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    def quantile(self, q: float) -> float:
+        if not self.samples:
+            return math.nan
+        return float(np.quantile(np.asarray(self.samples, np.float64), q))
+
+    def mean(self) -> float:
+        return self.sum / len(self.samples) if self.samples else math.nan
+
+
+class Family:
+    """One named metric (counter/gauge/histogram) over its labelsets."""
+
+    def __init__(self, name: str, kind: str, help: str = "", unit: str = "",
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self.unit = unit
+        self._buckets = tuple(buckets)
+        self._children: "Dict[LabelKV, object]" = {}
+
+    def labels(self, **labels):
+        kv = _label_kv(labels)
+        child = self._children.get(kv)
+        if child is None:
+            if self.kind == "counter":
+                child = Counter(kv)
+            elif self.kind == "gauge":
+                child = Gauge(kv)
+            else:
+                child = Histogram(kv, self._buckets)
+            self._children[kv] = child
+        return child
+
+    # scalar convenience: the no-label child
+    def add(self, v: float) -> None:
+        self.labels().add(v)
+
+    def inc(self) -> None:
+        self.labels().inc()
+
+    def set(self, v: float) -> None:
+        self.labels().set(v)
+
+    def observe(self, v: float) -> None:
+        self.labels().observe(v)
+
+    @property
+    def value(self) -> float:
+        return self.labels().value
+
+    def children(self) -> Iterable:
+        return self._children.values()
+
+
+class MetricsSink(Protocol):
+    """What the engines need from a telemetry backend: named instrument
+    families.  ``MetricsRegistry`` is the real one; ``NullSink`` is the
+    zero-overhead disabled path (every instrument a shared no-op)."""
+
+    def counter(self, name: str, help: str = "", unit: str = "") -> Family:
+        ...
+
+    def gauge(self, name: str, help: str = "", unit: str = "") -> Family:
+        ...
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Family:
+        ...
+
+
+class MetricsRegistry:
+    """The real sink: an ordered catalogue of metric families."""
+
+    def __init__(self):
+        self._families: "Dict[str, Family]" = {}
+
+    def _get(self, name: str, kind: str, help: str, unit: str,
+             buckets: Sequence[float] = DEFAULT_BUCKETS) -> Family:
+        fam = self._families.get(name)
+        if fam is None:
+            fam = Family(name, kind, help, unit, buckets)
+            self._families[name] = fam
+        elif fam.kind != kind:
+            raise ValueError(f"metric {name!r} already registered as "
+                             f"{fam.kind}, requested {kind}")
+        return fam
+
+    def counter(self, name: str, help: str = "", unit: str = "") -> Family:
+        return self._get(name, "counter", help, unit)
+
+    def gauge(self, name: str, help: str = "", unit: str = "") -> Family:
+        return self._get(name, "gauge", help, unit)
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Family:
+        return self._get(name, "histogram", help, unit, buckets)
+
+    def families(self) -> Iterable[Family]:
+        return self._families.values()
+
+    def get(self, name: str) -> Optional[Family]:
+        return self._families.get(name)
+
+    def value(self, name: str, default: float = 0.0, **labels) -> float:
+        """The scalar value of one counter/gauge labelset (0 if absent —
+        a run that never exercised a path never created its family)."""
+        fam = self._families.get(name)
+        if fam is None:
+            return default
+        kv = _label_kv(labels)
+        child = fam._children.get(kv)
+        return default if child is None else child.value
+
+
+class _NullInstrument:
+    """Shared do-nothing counter/gauge/histogram AND family."""
+
+    __slots__ = ()
+    labels_kv: LabelKV = ()
+    value = 0.0
+    sum = 0.0
+    count = 0
+
+    def labels(self, **labels):
+        return self
+
+    def add(self, v: float) -> None:
+        pass
+
+    def inc(self) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def quantile(self, q: float) -> float:
+        return math.nan
+
+    def children(self):
+        return ()
+
+
+_NULL_INSTRUMENT = _NullInstrument()
+
+
+class NullSink:
+    """MetricsSink that drops everything — the disabled path."""
+
+    def counter(self, name: str, help: str = "", unit: str = ""):
+        return _NULL_INSTRUMENT
+
+    def gauge(self, name: str, help: str = "", unit: str = ""):
+        return _NULL_INSTRUMENT
+
+    def histogram(self, name: str, help: str = "", unit: str = "",
+                  buckets: Sequence[float] = DEFAULT_BUCKETS):
+        return _NULL_INSTRUMENT
+
+
+# ---------------------------------------------------------------------------
+# the engine metric catalogue (README "Observability" documents each):
+# counters are cumulative over one run; gauges are end-of-run (or
+# latest) values; fl_staleness_rounds is a histogram over accepted
+# arrivals.  Engines and the CLI report both import THESE names so the
+# catalogue cannot drift between emission and rendering.
+# ---------------------------------------------------------------------------
+
+M_UPLOAD_BYTES = "fl_upload_bytes_total"            # client->server wire bytes
+M_DOWNLOAD_BYTES = "fl_download_bytes_total"        # server->client wire bytes
+M_UPLINKS = "fl_uplinks_total"                      # uploads spent
+M_DISPATCHES = "fl_dispatches_total"                # downloads served
+M_ACCEPTED = "fl_updates_accepted_total"            # merged client updates
+M_ROUNDS = "fl_rounds_total"                        # aggregations applied
+M_STRAGGLERS = "fl_stragglers_total"
+M_DROPOUTS = "fl_dropouts_total"
+M_LEDGER_MISSES = "fl_ledger_misses_total"          # rejected stale arrivals
+M_LEDGER_EVICTIONS = "fl_ledger_evictions_total"    # labels: ledger=mask|delta
+M_WASTED_UP = "fl_wasted_upload_bytes_total"
+M_WASTED_DOWN = "fl_wasted_download_bytes_total"
+M_DOWNLOADS_FULL = "fl_downloads_full_total"        # snapshot downlinks
+M_DOWNLOADS_DELTA = "fl_downloads_delta_total"      # delta-chain downlinks
+M_COMM_RATIO = "fl_comm_ratio"                      # gauge, uplink vs FedAvg
+M_DOWN_RATIO = "fl_down_ratio"                      # gauge, vs full broadcast
+M_SIM_TIME = "fl_sim_time_seconds"                  # gauge, virtual clock
+M_FAIRNESS = "fl_participation_fairness"            # gauge, stat=min|median|max
+M_INFLIGHT_END = "fl_inflight_end"                  # gauge
+M_STRANDED_END = "fl_stranded_end"                  # gauge
+M_STALENESS = "fl_staleness_rounds"                 # histogram, version lag
+
+STALENESS_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+
+
+def format_metrics(reg: MetricsRegistry) -> str:
+    """Human-readable one-line-per-series render (the CLI summary's
+    sibling; Prometheus exposition lives in ``repro.obs.prom``)."""
+    lines = []
+    for fam in reg.families():
+        for child in fam.children():
+            label = ",".join(f"{k}={v}" for k, v in child.labels)
+            suffix = f"{{{label}}}" if label else ""
+            if isinstance(child, Histogram):
+                lines.append(
+                    f"{fam.name}{suffix} count={child.count} "
+                    f"sum={child.sum:.6g} mean={child.mean():.6g}")
+            else:
+                lines.append(f"{fam.name}{suffix} {child.value:.6g}")
+    return "\n".join(lines)

@@ -1,0 +1,76 @@
+"""Profiling timers — wall-time spans recorded as histogram metrics.
+
+The engines wrap their hot-path stages in ``telemetry.span(name)``:
+the first execution of a jitted callable is its XLA compile (labelled
+``phase="compile"``), later ones are steady state (``phase="steady"``),
+so compile overhead and steady-state throughput are separable in the
+recorded distribution — the split every "measurably faster" claim needs.
+
+Spans observed so far (per engine):
+
+  run_fl / sync sim:  round_step (compile/steady), pricing, eval
+  fedbuff sim:        client_step (local train + codec encode),
+                      aggregate (compile/steady), pricing, eval
+
+``Profiler.table()`` renders count/total/mean/min per (span, phase) for
+the ``--profile`` CLI flag; the same data is scrapeable through the
+registry as ``obs_span_seconds`` histograms.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, List, Tuple
+
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+SPAN_METRIC = "obs_span_seconds"
+
+
+class Profiler:
+    """Wall-time span recorder bound to a metrics registry."""
+
+    def __init__(self, metrics: MetricsRegistry):
+        self._fam = metrics.histogram(
+            SPAN_METRIC, help="wall-time spans around engine hot paths",
+            unit="seconds")
+        self._seen: set = set()          # span names that already ran once
+
+    def phase_of(self, name: str) -> str:
+        """compile on a span's first execution, steady after — callers
+        that wrap a jitted fn get the compile/steady split for free."""
+        if name in self._seen:
+            return "steady"
+        self._seen.add(name)
+        return "compile"
+
+    @contextmanager
+    def span(self, name: str, jitted: bool = False):
+        phase = self.phase_of(name) if jitted else "steady"
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._fam.labels(span=name, phase=phase).observe(
+                time.perf_counter() - t0)
+
+    def table(self) -> List[Tuple[str, str, int, float, float, float]]:
+        """(span, phase, count, total_s, mean_s, min_s) rows, insertion
+        order — the ``--profile`` render."""
+        rows = []
+        for child in self._fam.children():
+            labels: Dict[str, str] = dict(child.labels)
+            if not isinstance(child, Histogram) or not child.samples:
+                continue
+            rows.append((labels.get("span", "?"), labels.get("phase", "?"),
+                         child.count, child.sum, child.mean(),
+                         min(child.samples)))
+        return rows
+
+    def render(self) -> str:
+        lines = [f"{'span':<24}{'phase':<9}{'count':>7}{'total_s':>10}"
+                 f"{'mean_ms':>10}{'min_ms':>10}"]
+        for span, phase, n, total, mean, mn in self.table():
+            lines.append(f"{span:<24}{phase:<9}{n:>7}{total:>10.3f}"
+                         f"{mean * 1e3:>10.3f}{mn * 1e3:>10.3f}")
+        return "\n".join(lines)

@@ -1,0 +1,73 @@
+"""Prometheus text exposition for a ``MetricsRegistry``.
+
+Renders the text format (version 0.0.4) a Prometheus scraper expects —
+the ROADMAP round server mounts this on its /metrics endpoint:
+
+    from repro.obs import MetricsRegistry, prom
+    body = prom.exposition(reg)          # -> "# HELP ...\n# TYPE ...\n..."
+
+Counters/gauges render one sample per labelset; histograms render the
+cumulative ``_bucket{le=...}`` series plus ``_sum``/``_count``.  Names
+and label values are escaped per the exposition spec.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+
+def _escape_help(s: str) -> str:
+    return s.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _escape_label(s: str) -> str:
+    return s.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(v: float) -> str:
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if math.isnan(v):
+        return "NaN"
+    if float(v).is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def _labels_str(kv, extra=()) -> str:
+    parts = [f'{k}="{_escape_label(str(v))}"' for k, v in (*kv, *extra)]
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def exposition(reg: MetricsRegistry) -> str:
+    """The whole registry in Prometheus text exposition format."""
+    lines: List[str] = []
+    for fam in reg.families():
+        kind = {"counter": "counter", "gauge": "gauge",
+                "histogram": "histogram"}[fam.kind]
+        if fam.help:
+            lines.append(f"# HELP {fam.name} {_escape_help(fam.help)}")
+        lines.append(f"# TYPE {fam.name} {kind}")
+        for child in fam.children():
+            if isinstance(child, Histogram):
+                cum = 0
+                for b, c in zip(child.buckets, child.counts):
+                    cum += c
+                    lines.append(
+                        f"{fam.name}_bucket"
+                        f"{_labels_str(child.labels, (('le', _fmt(b)),))}"
+                        f" {cum}")
+                cum += child.counts[-1]
+                lines.append(
+                    f"{fam.name}_bucket"
+                    f"{_labels_str(child.labels, (('le', '+Inf'),))} {cum}")
+                lines.append(f"{fam.name}_sum{_labels_str(child.labels)}"
+                             f" {_fmt(child.sum)}")
+                lines.append(f"{fam.name}_count{_labels_str(child.labels)}"
+                             f" {child.count}")
+            else:
+                lines.append(f"{fam.name}{_labels_str(child.labels)}"
+                             f" {_fmt(child.value)}")
+    return "\n".join(lines) + "\n"

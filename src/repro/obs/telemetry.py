@@ -1,0 +1,57 @@
+"""The ``Telemetry`` bundle the engines thread.
+
+One object carries the three observability channels:
+
+  * ``metrics``  — always a real ``MetricsRegistry``: the engines'
+    byte/waste/staleness/participation ledgers LIVE here now, and the
+    result dataclasses are derived from it at end of run (a counter add
+    is the same f64 ``+=`` the old inline accumulators did, so the
+    derivation is bit-for-bit);
+  * ``trace``    — optional ``TraceSink`` (JSONL round events);
+  * ``profiler`` — optional ``Profiler`` (wall-time span histograms).
+
+``run_fl``/``run_sim`` take ``telemetry=None`` and build a private
+bundle (metrics only) when the caller doesn't care — the disabled trace
+and profiler paths are gated ``if`` checks, so default runs pay nothing
+beyond the counter adds that replaced the old inline ``+=``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import Profiler
+from repro.obs.trace import TraceSink
+
+
+@contextmanager
+def _null_span() -> Iterator[None]:
+    yield
+
+
+@dataclass
+class Telemetry:
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+    trace: Optional[TraceSink] = None
+    profiler: Optional[Profiler] = None
+
+    @classmethod
+    def create(cls, trace_path: Optional[str] = None,
+               profile: bool = False) -> "Telemetry":
+        """The CLI constructor: file-backed trace and/or profiler."""
+        metrics = MetricsRegistry()
+        return cls(metrics=metrics,
+                   trace=TraceSink(trace_path) if trace_path else None,
+                   profiler=Profiler(metrics) if profile else None)
+
+    def span(self, name: str, jitted: bool = False):
+        """A profiling span ctx (no-op when profiling is off)."""
+        if self.profiler is None:
+            return _null_span()
+        return self.profiler.span(name, jitted=jitted)
+
+    def close(self) -> None:
+        if self.trace is not None:
+            self.trace.close()

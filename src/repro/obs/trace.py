@@ -1,0 +1,145 @@
+"""Structured round traces — versioned JSONL event stream.
+
+One line per event, schema version pinned in every line, insertion
+key-order stable (``v``, ``event``, ``t_sim``, ``t_wall``, then the
+event's own fields in emission order) so goldens can pin the exact
+bytes.  The stream is consumable by ``benchmarks/`` and by the future
+round server's live feed.
+
+Event kinds the engines emit (see README "Observability" for the full
+field tables):
+
+  RUN_START   engine/mode, n_clients, rounds, unit names — the header
+  DISPATCH    server hands a client (or a sync cohort) the model:
+              cohort/client, model version, downlink bytes, delta-vs-full
+  UPLOAD      a client update reaches the server: bytes, version lag,
+              accepted / rejected / straggler / dropout status
+  AGGREGATE   the server applies a merge: new version, cohort size,
+              staleness alpha, per-unit recycle decisions (indices)
+  EVICT       a version ledger evicted a record (mask or delta step)
+  WAKE        the fedbuff scheduler advanced the clock to retry starved
+              slots
+  RUN_END     terminal summary ledger snapshot
+
+``t_sim`` is the engine's virtual clock (the round index in ``run_fl``,
+virtual seconds in ``repro.sim``); ``t_wall`` is host wall-clock seconds
+since the sink was opened (injectable ``clock`` for deterministic
+goldens).
+"""
+from __future__ import annotations
+
+import io
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+TRACE_SCHEMA = 1
+
+# the canonical event kinds (engines may only emit these)
+RUN_START = "RUN_START"
+DISPATCH = "DISPATCH"
+UPLOAD = "UPLOAD"
+AGGREGATE = "AGGREGATE"
+EVICT = "EVICT"
+WAKE = "WAKE"
+RUN_END = "RUN_END"
+
+EVENT_KINDS = (RUN_START, DISPATCH, UPLOAD, AGGREGATE, EVICT, WAKE, RUN_END)
+
+
+def _jsonify(v: Any) -> Any:
+    """numpy scalars/arrays -> plain JSON types (stable repr)."""
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return [_jsonify(x) for x in v.tolist()]
+    if isinstance(v, (list, tuple)):
+        return [_jsonify(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonify(x) for k, x in v.items()}
+    return v
+
+
+class TraceSink:
+    """JSONL round-trace writer (file path, file-like, or in-memory).
+
+    ``clock`` defaults to wall time relative to sink creation; tests
+    inject a fake clock so golden traces are byte-stable.  ``emit`` is
+    cheap (one dict + one json.dumps) but the engines still gate every
+    call on ``if trace:`` so the disabled path costs nothing.
+    """
+
+    def __init__(self, path: Union[str, io.IOBase, None] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self._own = False
+        if path is None:
+            self._fh = None
+        elif isinstance(path, (str,)):
+            self._fh = open(path, "w")
+            self._own = True
+        else:
+            self._fh = path
+        self.events: List[Dict[str, Any]] = []    # in-memory mode only
+        self._t0 = time.time() if clock is None else None
+        self._clock = clock
+        self.n_emitted = 0
+
+    def _now_wall(self) -> float:
+        if self._clock is not None:
+            return float(self._clock())
+        return time.time() - self._t0
+
+    def emit(self, event: str, t_sim: float, **fields: Any) -> None:
+        if event not in EVENT_KINDS:
+            raise ValueError(f"unknown trace event kind {event!r}; "
+                             f"schema v{TRACE_SCHEMA} kinds: {EVENT_KINDS}")
+        rec: Dict[str, Any] = {"v": TRACE_SCHEMA, "event": event,
+                               "t_sim": float(t_sim),
+                               "t_wall": round(self._now_wall(), 6)}
+        for k, val in fields.items():
+            rec[k] = _jsonify(val)
+        self.n_emitted += 1
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+        else:
+            self.events.append(rec)
+
+    def lines(self) -> List[str]:
+        """The emitted stream as JSONL lines (in-memory mode only)."""
+        if self._fh is not None:
+            raise RuntimeError("lines() is for in-memory sinks; the "
+                               "file-backed sink already wrote to disk")
+        return [json.dumps(rec) for rec in self.events]
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            if self._own:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "TraceSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_trace(path: str) -> List[Dict[str, Any]]:
+    """Parse a JSONL trace file back into event dicts (schema-checked)."""
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("v") != TRACE_SCHEMA:
+                raise ValueError(f"trace schema v{rec.get('v')} != "
+                                 f"supported v{TRACE_SCHEMA}")
+            out.append(rec)
+    return out

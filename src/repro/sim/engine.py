@@ -94,6 +94,15 @@ from repro.fl.rounds import (FLConfig, _stack_client_batches,
                              build_codec_pipeline, init_codec_states,
                              make_round_step, server_broadcast_additive)
 from repro.fl.server import (apply_update, broadcast_point, server_init)
+from repro.obs import (AGGREGATE, DISPATCH, EVICT, M_ACCEPTED, M_COMM_RATIO,
+                       M_DISPATCHES, M_DOWN_RATIO, M_DOWNLOAD_BYTES,
+                       M_DOWNLOADS_DELTA, M_DOWNLOADS_FULL, M_DROPOUTS,
+                       M_FAIRNESS, M_INFLIGHT_END, M_LEDGER_EVICTIONS,
+                       M_LEDGER_MISSES, M_ROUNDS, M_SIM_TIME, M_STALENESS,
+                       M_STRAGGLERS, M_STRANDED_END, M_UPLINKS,
+                       M_UPLOAD_BYTES, M_WASTED_DOWN, M_WASTED_UP,
+                       RUN_END, RUN_START, STALENESS_BUCKETS, Telemetry,
+                       UPLOAD, WAKE as TRACE_WAKE, fairness_from_metrics)
 from repro.participate import (HT_CLIP, RoundContext, fairness_summary,
                                ht_weights, resolve_policy)
 from repro.sim.events import ARRIVAL, DEADLINE, DROPOUT, WAKE, EventQueue
@@ -113,12 +122,15 @@ class VersionLedger:
     flight".  Size the capacity above the worst-case version lag to make
     misses impossible."""
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64,
+                 on_evict: Optional[Callable[[int], None]] = None):
         if capacity < 1:
             raise ValueError(f"ledger capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._entries: "OrderedDict[int, Any]" = OrderedDict()
         self.evictions = 0
+        self.on_evict = on_evict        # telemetry hook: called with the
+                                        # evicted version (repro.obs EVICT)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -131,8 +143,10 @@ class VersionLedger:
             return
         self._entries[version] = value
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            old_v, _ = self._entries.popitem(last=False)
             self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old_v)
 
     def get(self, version: int) -> Optional[Any]:
         """The record at ``version``, or None if evicted/never seen."""
@@ -176,8 +190,9 @@ class DeltaLedger(VersionLedger):
     run with prices only.
     """
 
-    def __init__(self, capacity: int = 64, store_trees: bool = False):
-        super().__init__(capacity)
+    def __init__(self, capacity: int = 64, store_trees: bool = False,
+                 on_evict: Optional[Callable[[int], None]] = None):
+        super().__init__(capacity, on_evict)
         self.store_trees = store_trees
 
     def record_step(self, version: int, step_price: np.ndarray,
@@ -362,16 +377,92 @@ def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
             parts: List[np.ndarray],
             cfg: FLConfig,
             sim: SimConfig,
-            eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None) -> SimResult:
+            eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
+            telemetry: Optional[Telemetry] = None) -> SimResult:
     scenario = get_scenario(sim.scenario)
     resources = sample_resources(scenario, cfg.n_clients, sim.sys_seed)
+    tele = telemetry if telemetry is not None else Telemetry()
     if sim.mode == "sync":
         return _run_sync(loss_fn, init_params, data, parts, cfg, sim,
-                         scenario, resources, eval_fn)
+                         scenario, resources, eval_fn, tele)
     if sim.mode == "fedbuff":
         return _run_fedbuff(loss_fn, init_params, data, parts, cfg, sim,
-                            scenario, resources, eval_fn)
+                            scenario, resources, eval_fn, tele)
     raise ValueError(f"unknown sim mode {sim.mode!r}")
+
+
+class _Instruments:
+    """The engine-side metric handles (one labelset each, grabbed once so
+    the hot loops skip the family lookup).  Every ledger the engines used
+    to accumulate inline lives behind these now; ``_finalize`` derives
+    the SimResult fields from them bit-for-bit."""
+
+    def __init__(self, tele: Telemetry):
+        m = tele.metrics
+        self.up = m.counter(M_UPLOAD_BYTES, "client->server wire bytes",
+                            "bytes").labels()
+        self.down = m.counter(M_DOWNLOAD_BYTES, "server->client wire bytes",
+                              "bytes").labels()
+        self.uplinks = m.counter(M_UPLINKS,
+                                 "uploads that crossed the wire").labels()
+        self.dispatches = m.counter(M_DISPATCHES, "downloads served").labels()
+        self.accepted = m.counter(M_ACCEPTED,
+                                  "client updates the server merged").labels()
+        self.rounds = m.counter(M_ROUNDS, "aggregations applied").labels()
+        self.stragglers = m.counter(M_STRAGGLERS,
+                                    "arrived-too-late drops").labels()
+        self.dropouts = m.counter(M_DROPOUTS,
+                                  "device-vanished dispatches").labels()
+        self.misses = m.counter(M_LEDGER_MISSES,
+                                "arrivals whose dispatch mask version was "
+                                "evicted").labels()
+        self.evictions = m.counter(M_LEDGER_EVICTIONS,
+                                   "version-ledger evictions")
+        self.wasted_up = m.counter(M_WASTED_UP,
+                                   "uploaded-then-discarded bytes",
+                                   "bytes").labels()
+        self.wasted_down = m.counter(M_WASTED_DOWN,
+                                     "downlink bytes of fruitless round "
+                                     "trips", "bytes").labels()
+        self.full_dl = m.counter(M_DOWNLOADS_FULL,
+                                 "snapshot downlinks").labels()
+        self.delta_dl = m.counter(M_DOWNLOADS_DELTA,
+                                  "delta-chain downlinks").labels()
+        self.staleness = m.histogram(M_STALENESS,
+                                     "version lag per accepted arrival",
+                                     "rounds", STALENESS_BUCKETS).labels()
+
+    def finalize(self, m, res: SimResult, total_bytes: float,
+                 sim_time: float, part_count, drop_count) -> None:
+        """Derive the counter-backed SimResult fields + summary gauges."""
+        res.comm_ratio = float(self.up.value
+                               / max(total_bytes * self.uplinks.value, 1.0))
+        res.downloaded = self.down.value
+        res.down_ratio = float(self.down.value
+                               / max(total_bytes * self.dispatches.value, 1.0))
+        res.n_received = int(self.accepted.value)
+        res.n_uplinks_spent = int(self.uplinks.value)
+        res.n_dispatched = int(self.dispatches.value)
+        res.n_full_downloads = int(self.full_dl.value)
+        res.n_delta_downloads = int(self.delta_dl.value)
+        res.n_stragglers = int(self.stragglers.value)
+        res.n_dropped = int(self.dropouts.value)
+        res.rounds_done = int(self.rounds.value)
+        res.ledger_misses = int(self.misses.value)
+        res.wasted_upload_bytes = self.wasted_up.value
+        res.wasted_download_bytes = self.wasted_down.value
+        res.sim_time = sim_time
+        m.gauge(M_SIM_TIME, "virtual seconds at finish").set(sim_time)
+        m.gauge(M_COMM_RATIO, "uplink bytes vs FedAvg same-uplinks").set(
+            res.comm_ratio)
+        m.gauge(M_DOWN_RATIO, "downlink bytes vs full-model broadcast").set(
+            res.down_ratio)
+        g_fair = m.gauge(M_FAIRNESS, "participation spread across clients")
+        for stat, v in fairness_summary(part_count).items():
+            g_fair.labels(stat=stat).set(v)
+        res.participation_count = part_count
+        res.dropout_count = drop_count
+        res.fairness = fairness_from_metrics(m)
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +471,7 @@ def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
 
 
 def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
-              scenario, resources, eval_fn) -> SimResult:
+              scenario, resources, eval_fn, tele: Telemetry) -> SimResult:
     # learning-side RNG: IDENTICAL stream structure to run_fl
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
@@ -430,21 +521,26 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     # synchronous rounds cannot see mask staleness: every cohort member
     # downloads the current R_t and the merge applies that same R_t
     res.staleness_observed = np.zeros(0, np.int32)
-    uploaded = 0.0
-    downloaded = 0.0
+    ins = _Instruments(tele)
+    tr = tele.trace
+    if tr:
+        tr.emit(RUN_START, 0.0, engine="sim", mode="sync",
+                n_clients=cfg.n_clients, rounds=cfg.rounds,
+                n_units=n_units, units=list(um.names))
 
     def emit_eval(t: int) -> None:
         """One eval-cadence history row (shared by aggregated AND empty
         rounds, so the schema can never drift between them)."""
         if eval_fn is not None and ((t + 1) % cfg.eval_every == 0
                                     or t == cfg.rounds - 1):
-            metrics = dict(eval_fn(params))
+            with tele.span("eval"):
+                metrics = dict(eval_fn(params))
             metrics.update(round=t + 1, t_sim=queue.now,
-                           up_mb=uploaded / 1e6,
-                           comm_ratio=uploaded / max(
-                               total_bytes * res.n_uplinks_spent, 1.0),
-                           down_ratio=downloaded / max(
-                               total_bytes * res.n_dispatched, 1.0))
+                           up_mb=ins.up.value / 1e6,
+                           comm_ratio=ins.up.value / max(
+                               total_bytes * ins.uplinks.value, 1.0),
+                           down_ratio=ins.down.value / max(
+                               total_bytes * ins.dispatches.value, 1.0))
             res.history.append(metrics)
 
     for t in range(cfg.rounds):
@@ -480,26 +576,28 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         # dispatch-time (nominal, aux-free) pricing: the conservative
         # wall-clock estimate for stacks whose exact wire size is only
         # known after encode (LBGM scalars, top-k survivor counts)
-        nominal_per_unit = pipeline.price_per_unit(sizes, mask_now)
-        nominal_bytes = float(nominal_per_unit.sum())
-        # downlink: price this round's broadcast per member — an
-        # already-seeded member ships the pending chain step vs snapshot
-        # (whichever is cheaper, host f64), a first contact ships the
-        # cache-seeding snapshot — the full pricing path of the async
-        # engine with the seeded lag pinned to one
-        if has_delta:
-            snap_pu = snapshot_price(sizes, mask_now, seed_cache)
-            snap_bytes = down_pipe.price_bytes(
-                sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
-            chain_pu, used_chain = versioned_download_price(
-                sizes, mask_now, pending_chain, seed_cache=seed_cache)
-            chain_bytes = down_pipe.price_bytes(
-                sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
-            pending_chain = np.zeros(n_units, np.float64)  # population current
-        else:
-            snap_bytes = chain_bytes = down_pipe.price_bytes(sizes, no_mask,
-                                                             None)
-            used_chain = False
+        with tele.span("pricing"):
+            nominal_per_unit = pipeline.price_per_unit(sizes, mask_now)
+            nominal_bytes = float(nominal_per_unit.sum())
+            # downlink: price this round's broadcast per member — an
+            # already-seeded member ships the pending chain step vs snapshot
+            # (whichever is cheaper, host f64), a first contact ships the
+            # cache-seeding snapshot — the full pricing path of the async
+            # engine with the seeded lag pinned to one
+            if has_delta:
+                snap_pu = snapshot_price(sizes, mask_now, seed_cache)
+                snap_bytes = down_pipe.price_bytes(
+                    sizes, no_mask, down_pipe.aux_for("delta", snap_pu))
+                chain_pu, used_chain = versioned_download_price(
+                    sizes, mask_now, pending_chain, seed_cache=seed_cache)
+                chain_bytes = down_pipe.price_bytes(
+                    sizes, no_mask, down_pipe.aux_for("delta", chain_pu))
+                pending_chain = np.zeros(n_units, np.float64)  # population
+                                                               # current
+            else:
+                snap_bytes = chain_bytes = down_pipe.price_bytes(
+                    sizes, no_mask, None)
+                used_chain = False
         t0 = queue.now
         bw = bandwidth_multiplier(scenario, t0)     # diurnal link quality
         n_scheduled = 0
@@ -510,12 +608,17 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             seen.add(int(c))
             down_bytes = snap_bytes if first else chain_bytes
             down_by_pos[pos] = down_bytes
-            downloaded += down_bytes
-            res.n_dispatched += 1
+            ins.down.add(down_bytes)
+            ins.dispatches.inc()
             if used_chain and not first:
-                res.n_delta_downloads += 1
+                ins.delta_dl.inc()
             else:
-                res.n_full_downloads += 1
+                ins.full_dl.inc()
+            if tr:
+                tr.emit(DISPATCH, t0, round=t, client=int(c),
+                        version=int(ins.rounds.value),
+                        down_bytes=down_bytes,
+                        delta=bool(used_chain and not first), first=first)
             r = scale_bandwidth(resources[c], bw)
             if not policy.dispatch_survives(int(c), r, sys_rng):
                 # device vanishes after download+compute, before upload
@@ -545,13 +648,19 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             if ev.kind == DROPOUT:
                 n_drop_round += 1
                 drop_count[ev.client] += 1
-                res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
+                ins.wasted_down.add(down_by_pos[ev.payload["pos"]])
+                if tr:
+                    tr.emit(UPLOAD, ev.time, round=t, client=ev.client,
+                            status="dropout", bytes=0.0)
                 continue
             arrived_pos.append(ev.payload["pos"])
+            if tr:
+                tr.emit(UPLOAD, ev.time, round=t, client=ev.client,
+                        status="accepted", lag=0)
             if len(arrived_pos) >= target:
                 break
         n_strag = n_scheduled - len(arrived_pos)
-        res.n_stragglers += n_strag
+        ins.stragglers.add(n_strag)
         if n_strag:
             # a straggler's uplink was spent and discarded (deadline /
             # collect cutoff): charge it as wasted traffic, symmetric with
@@ -559,10 +668,13 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # stages — LBGM scalars, top-k counts — are unknowable for
             # non-aggregated clients, so the nominal price is the
             # conservative charge)
-            uploaded += nominal_bytes * n_strag
-            res.n_uplinks_spent += n_strag
+            ins.up.add(nominal_bytes * n_strag)
+            ins.uplinks.add(n_strag)
             res.wasted_per_unit += nominal_per_unit * n_strag
-            res.wasted_upload_bytes += nominal_bytes * n_strag
+            ins.wasted_up.add(nominal_bytes * n_strag)
+            if tr:
+                tr.emit(UPLOAD, queue.now, round=t, status="straggler",
+                        n=n_strag, bytes_per_client=nominal_bytes)
         # pending DROPOUT events (device vanished later than the round
         # closed) still count as dropped, not as stragglers — a dropout
         # vanishes before its upload starts, so it spends no uplink.
@@ -573,10 +685,13 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             if ev.kind == DROPOUT:
                 n_drop_round += 1
                 drop_count[ev.client] += 1
-                res.wasted_download_bytes += down_by_pos[ev.payload["pos"]]
-        res.n_dropped += n_drop_round
-        res.wasted_download_bytes += sum(
-            down_by_pos[p] for p in sched_pos - set(arrived_pos))
+                ins.wasted_down.add(down_by_pos[ev.payload["pos"]])
+                if tr:
+                    tr.emit(UPLOAD, queue.now, round=t, client=ev.client,
+                            status="dropout", bytes=0.0)
+        ins.dropouts.add(n_drop_round)
+        ins.wasted_down.add(sum(
+            down_by_pos[p] for p in sched_pos - set(arrived_pos)))
 
         if not arrived_pos:
             continue                      # nobody made it; model unchanged
@@ -594,29 +709,37 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
             # forfeit the bitwise-equality path with run_fl, so not now)
             idx = np.asarray(arrived_pos)
             sub = {k: v[idx] for k, v in batches.items()}
-        if weights is None:
-            # equal weights: the exact (unweighted-mean) legacy trace
-            params, luar_state, server_state, codec_state, aux = round_step(
-                params, luar_state, server_state, codec_state, sub, qkey)
-        else:
-            if step_w is None:
-                step_w = make_round_step(loss_fn, cfg, um, pipeline,
-                                         down_pipe, weighted=True,
-                                         want_loss=policy.wants_loss,
-                                         want_norm=policy.wants_update_norm)
-            w_sub = jnp.asarray(weights[np.asarray(arrived_pos)], jnp.float32)
-            (params, luar_state, server_state, codec_state, aux,
-             obs) = step_w(params, luar_state, server_state, codec_state,
-                           sub, w_sub, qkey)
-            losses, norms = (None if o is None else np.asarray(o, np.float64)
-                             for o in obs)
-            policy.observe_round(cohort[np.asarray(arrived_pos)], losses,
-                                 norms, now=queue.now)
-        per_client = pipeline.price_bytes(sizes, mask_now, aux)
-        uploaded += per_client * len(arrived_pos)
-        res.n_received += len(arrived_pos)
-        res.n_uplinks_spent += len(arrived_pos)
-        res.rounds_done += 1
+        with tele.span("round_step", jitted=True):
+            if weights is None:
+                # equal weights: the exact (unweighted-mean) legacy trace
+                params, luar_state, server_state, codec_state, aux = round_step(
+                    params, luar_state, server_state, codec_state, sub, qkey)
+            else:
+                if step_w is None:
+                    step_w = make_round_step(loss_fn, cfg, um, pipeline,
+                                             down_pipe, weighted=True,
+                                             want_loss=policy.wants_loss,
+                                             want_norm=policy.wants_update_norm)
+                w_sub = jnp.asarray(weights[np.asarray(arrived_pos)],
+                                    jnp.float32)
+                (params, luar_state, server_state, codec_state, aux,
+                 obs) = step_w(params, luar_state, server_state, codec_state,
+                               sub, w_sub, qkey)
+                losses, norms = (None if o is None else
+                                 np.asarray(o, np.float64) for o in obs)
+                policy.observe_round(cohort[np.asarray(arrived_pos)], losses,
+                                     norms, now=queue.now)
+        with tele.span("pricing"):
+            per_client = pipeline.price_bytes(sizes, mask_now, aux)
+        ins.up.add(per_client * len(arrived_pos))
+        ins.accepted.add(len(arrived_pos))
+        ins.uplinks.add(len(arrived_pos))
+        ins.rounds.inc()
+        if tr:
+            tr.emit(AGGREGATE, queue.now, round=t,
+                    version=int(ins.rounds.value), n=len(arrived_pos),
+                    bytes_per_client=per_client,
+                    recycled=[int(i) for i in np.flatnonzero(mask_now)])
         if has_delta:
             # this aggregation is the model change the NEXT broadcast must
             # carry: one delta step against the mask it applied
@@ -624,19 +747,19 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
 
         emit_eval(t)
 
-    res.sim_time = queue.now
     # ratio vs a FedAvg baseline paying for the SAME spent uplinks: the
     # straggler/rejected waste in the numerator is matched by the baseline
     # bytes those same uploads would have cost (denominating over accepted
-    # uploads only overstated cost — an uncompressed run could exceed 1)
-    res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
-    res.downloaded = downloaded
-    res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
-    res.participation_count = part_count
-    res.dropout_count = drop_count
-    res.fairness = fairness_summary(part_count)
+    # uploads only overstated cost — an uncompressed run could exceed 1);
+    # every counter-backed field derives from the registry here
+    ins.finalize(tele.metrics, res, total_bytes, queue.now, part_count,
+                 drop_count)
     res.params = params
     res.luar_state = luar_state
+    if tr:
+        tr.emit(RUN_END, queue.now, uploaded=ins.up.value,
+                downloaded=ins.down.value, comm_ratio=res.comm_ratio,
+                down_ratio=res.down_ratio, rounds_done=res.rounds_done)
     return res
 
 
@@ -646,7 +769,8 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
 
 
 def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
-                 sim: SimConfig, scenario, resources, eval_fn) -> SimResult:
+                 sim: SimConfig, scenario, resources, eval_fn,
+                 tele: Telemetry) -> SimResult:
     pipeline = build_codec_pipeline(cfg)
     down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
     sync_only = pipeline.sync_only_specs() + down_pipe.sync_only_specs()
@@ -705,7 +829,21 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     has_delta = down_pipe.has("delta") and additive
     seed_cache = has_delta and cfg.luar.mode == "recycle"
     no_mask = np.zeros(n_units, bool)
-    delta_ledger = DeltaLedger(sim.ledger_capacity) if has_delta else None
+    ins = _Instruments(tele)
+    tr = tele.trace
+
+    def _evict_hook(which: str):
+        child = ins.evictions.labels(ledger=which)
+
+        def hook(version: int) -> None:
+            child.inc()
+            if tr:
+                tr.emit(EVICT, queue.now, ledger=which, version=version)
+        return hook
+
+    delta_ledger = (DeltaLedger(sim.ledger_capacity,
+                                on_evict=_evict_hook("delta"))
+                    if has_delta else None)
     last_dl: Dict[int, int] = {}        # client -> last downloaded version
     down_state = down_pipe.init_state(params, um) if down_pipe else None
     down_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xD0FF))
@@ -767,19 +905,25 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         return params, luar_state, server_state
 
     queue = EventQueue()
-    ledger = MaskLedger(sim.ledger_capacity)
+    ledger = MaskLedger(sim.ledger_capacity, on_evict=_evict_hook("mask"))
     res = SimResult(resources=resources,
                     wasted_per_unit=np.zeros(n_units, np.float64))
-    uploaded = 0.0
-    downloaded = 0.0
     version = 0
-    observed: List[int] = []            # staleness of every accepted arrival
+    # staleness of every accepted arrival: the histogram's retained raw
+    # samples ARE the observation list (floats; int version lags are
+    # exact in f64, so the adaptive-alpha schedule and the quantile
+    # summary are bit-for-bit what the old list produced)
+    observed: List[float] = ins.staleness.samples
     jobs: Dict[int, dict] = {}
+    if tr:
+        tr.emit(RUN_START, 0.0, engine="sim", mode="fedbuff",
+                n_clients=cfg.n_clients, rounds=cfg.rounds,
+                buffer_size=sim.buffer_size, n_units=n_units,
+                units=list(um.names))
     buffer: List[tuple] = []            # (delta, staleness, validity row,
                                         #  uncharged bytes, down bytes, ht)
 
     def dispatch(c: int, now: float, ht: float = 1.0):
-        nonlocal downloaded
         part_count[c] += 1
         # link quality is sampled at dispatch time (diurnal scenarios)
         r = scale_bandwidth(resources[c], bandwidth_multiplier(scenario, now))
@@ -788,28 +932,35 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         batches = {k: jnp.asarray(arr[sel]) for k, arr in data.items()}
         mask_now = np.asarray(luar_state.mask)
         ledger.record(version, mask_now)
-        # nominal (aux-free) price: the wall-clock estimate, and the
-        # conservative charge for payloads whose encode never runs
-        per_unit = pipeline.price_per_unit(sizes, mask_now)
-        # downlink: price this client's ACTUAL version lag — delta chain
-        # from its last downloaded version when the DeltaLedger still
-        # holds every step and the chain is cheaper, else full snapshot
-        # (first contact, eviction, or a lag so long dense wins)
-        if has_delta:
-            chain = (delta_ledger.chain_price(last_dl[c], version, n_units)
-                     if c in last_dl else None)
-            down_pu, used_chain = versioned_download_price(
-                sizes, mask_now, chain, seed_cache=seed_cache)
-            down_aux = down_pipe.aux_for("delta", down_pu)
-        else:
-            down_aux, used_chain = None, False
-        down_bytes = down_pipe.price_bytes(sizes, no_mask, down_aux)
-        downloaded += down_bytes
-        res.n_dispatched += 1
+        with tele.span("pricing"):
+            # nominal (aux-free) price: the wall-clock estimate, and the
+            # conservative charge for payloads whose encode never runs
+            per_unit = pipeline.price_per_unit(sizes, mask_now)
+            # downlink: price this client's ACTUAL version lag — delta
+            # chain from its last downloaded version when the DeltaLedger
+            # still holds every step and the chain is cheaper, else full
+            # snapshot (first contact, eviction, or a lag so long dense
+            # wins)
+            if has_delta:
+                chain = (delta_ledger.chain_price(last_dl[c], version,
+                                                  n_units)
+                         if c in last_dl else None)
+                down_pu, used_chain = versioned_download_price(
+                    sizes, mask_now, chain, seed_cache=seed_cache)
+                down_aux = down_pipe.aux_for("delta", down_pu)
+            else:
+                down_aux, used_chain = None, False
+            down_bytes = down_pipe.price_bytes(sizes, no_mask, down_aux)
+        ins.down.add(down_bytes)
+        ins.dispatches.inc()
         if used_chain:
-            res.n_delta_downloads += 1
+            ins.delta_dl.inc()
         else:
-            res.n_full_downloads += 1
+            ins.full_dl.inc()
+        if tr:
+            tr.emit(DISPATCH, now, client=int(c), version=version,
+                    down_bytes=down_bytes, delta=bool(used_chain),
+                    first=c not in last_dl)
         last_dl[c] = version
         jobs[c] = {
             "start": broadcast_for_dispatch(),
@@ -834,7 +985,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
 
     def charge_waste(wasted: np.ndarray):
         res.wasted_per_unit += wasted
-        res.wasted_upload_bytes += float(wasted.sum())
+        ins.wasted_up.add(float(wasted.sum()))
 
     concurrency = min(sim.concurrency or cfg.n_active, cfg.n_clients)
     first_sel = policy.select(RoundContext(
@@ -932,6 +1083,8 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             break
         if ev.kind == WAKE:
             # the clock advanced for its own sake: retry starved slots
+            if tr:
+                tr.emit(TRACE_WAKE, queue.now)
             feed_starved(queue.now)
             continue
         c = ev.client
@@ -940,7 +1093,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         if ev.kind == ARRIVAL:
             mask_v = ledger.get(job["version"])
             if mask_v is None:
-                res.ledger_misses += 1
+                ins.misses.inc()
             if sim.mask_ledger and mask_v is None:
                 # dispatch mask evicted: the server can no longer verify
                 # which recycle set the payload was built against — reject
@@ -948,16 +1101,22 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                 # the nominal price; the rejected payload is never decoded
                 # so aux-exact pricing does not exist for it).  The whole
                 # round trip produced nothing: its downlink is waste too.
-                uploaded += job["bytes"]
-                res.n_uplinks_spent += 1
+                ins.up.add(job["bytes"])
+                ins.uplinks.inc()
                 charge_waste(job["per_unit"].copy())
-                res.wasted_download_bytes += job["down_bytes"]
+                ins.wasted_down.add(job["down_bytes"])
+                if tr:
+                    tr.emit(UPLOAD, queue.now, client=int(c),
+                            version=job["version"],
+                            lag=version - job["version"],
+                            bytes=job["bytes"], status="rejected")
                 next_dispatch(queue.now)
                 continue
             key, qkey = jax.random.split(key)
             cstate = codec_state_for(c)
-            raw = client_fn(job["start"], job["batches"])
-            delta, cstate, aux = encode_fn(cstate, raw, qkey)
+            with tele.span("client_step", jitted=True):
+                raw = client_fn(job["start"], job["batches"])
+                delta, cstate, aux = encode_fn(cstate, raw, qkey)
             if pipeline.stateful:
                 codec_states[c] = cstate
             if policy.wants_loss or policy.wants_update_norm:
@@ -972,11 +1131,16 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                 policy.observe_round([c], lo, no, now=queue.now)
             # the uplink was spent either way; exact post-encode pricing
             # against the DISPATCHED mask (aux: top-k survivor counts etc.)
-            per_unit = pipeline.price_per_unit(sizes, job["mask"], aux)
-            uploaded += float(per_unit.sum())
-            res.n_uplinks_spent += 1
+            with tele.span("pricing"):
+                per_unit = pipeline.price_per_unit(sizes, job["mask"], aux)
+            ins.up.add(float(per_unit.sum()))
+            ins.uplinks.inc()
             stal = version - job["version"]
-            observed.append(stal)
+            ins.staleness.observe(stal)
+            if tr:
+                tr.emit(UPLOAD, queue.now, client=int(c),
+                        version=job["version"], lag=int(stal),
+                        bytes=float(per_unit.sum()), status="accepted")
             if sim.mask_ledger:
                 valid = ~mask_v         # every uploaded unit is used
                 uncharged = per_unit
@@ -995,7 +1159,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             # its broadcast leg too; ht is the dispatch-time policy weight
             buffer.append((delta, stal, valid, uncharged, job["down_bytes"],
                            job["ht"]))
-            res.n_received += 1
+            ins.accepted.inc()
             if len(buffer) >= sim.buffer_size:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                        *[b[0] for b in buffer])
@@ -1006,23 +1170,24 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                            if sim.adaptive_alpha else alpha)
                 res.alphas.append(alpha_t)
                 cur_mask = np.asarray(luar_state.mask)   # pre-agg R_v
-                if policy.weighted:
-                    # fold the policy's inverse-inclusion weights into the
-                    # staleness merge (self-normalizing); truncated-IPS
-                    # clip RELATIVE TO THIS BUFFER (each dispatch is a
-                    # singleton selection, so the cap only exists at merge
-                    # time).  The unweighted call below keeps the uniform
-                    # trace bit-for-bit
-                    hts = np.asarray([b[5] for b in buffer], np.float64)
-                    hts = np.minimum(hts, HT_CLIP * hts.min())
-                    params, luar_state, server_state = agg_fn(
-                        params, luar_state, server_state, stacked, stal_arr,
-                        valid_arr, jnp.float32(alpha_t),
-                        jnp.asarray(hts, jnp.float32))
-                else:
-                    params, luar_state, server_state = agg_fn(
-                        params, luar_state, server_state, stacked, stal_arr,
-                        valid_arr, jnp.float32(alpha_t))
+                with tele.span("aggregate", jitted=True):
+                    if policy.weighted:
+                        # fold the policy's inverse-inclusion weights into
+                        # the staleness merge (self-normalizing);
+                        # truncated-IPS clip RELATIVE TO THIS BUFFER (each
+                        # dispatch is a singleton selection, so the cap
+                        # only exists at merge time).  The unweighted call
+                        # below keeps the uniform trace bit-for-bit
+                        hts = np.asarray([b[5] for b in buffer], np.float64)
+                        hts = np.minimum(hts, HT_CLIP * hts.min())
+                        params, luar_state, server_state = agg_fn(
+                            params, luar_state, server_state, stacked,
+                            stal_arr, valid_arr, jnp.float32(alpha_t),
+                            jnp.asarray(hts, jnp.float32))
+                    else:
+                        params, luar_state, server_state = agg_fn(
+                            params, luar_state, server_state, stacked,
+                            stal_arr, valid_arr, jnp.float32(alpha_t))
                 if has_delta:
                     # the downlink sibling of ledger.record: price the
                     # delta step this aggregation just created.  Scalar
@@ -1038,26 +1203,40 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
                     eff_mask = ~np.any(valid_np, axis=0)
                     delta_ledger.record_step(
                         version, delta_step_price(sizes, eff_mask & cur_mask))
+                n_merged = len(buffer)
                 buffer.clear()
                 version += 1
-                res.rounds_done = version
+                ins.rounds.inc()
+                if tr:
+                    tr.emit(AGGREGATE, queue.now, version=version,
+                            n=n_merged, alpha=float(alpha_t),
+                            recycled=[int(i) for i in
+                                      np.flatnonzero(~np.any(valid_np,
+                                                             axis=0))])
                 if eval_fn is not None and (version % cfg.eval_every == 0
                                             or version == cfg.rounds):
-                    metrics = dict(eval_fn(params))
+                    with tele.span("eval"):
+                        metrics = dict(eval_fn(params))
                     metrics.update(round=version, t_sim=queue.now,
-                                   up_mb=uploaded / 1e6,
-                                   comm_ratio=uploaded / max(
-                                       total_bytes * res.n_uplinks_spent, 1.0),
-                                   down_ratio=downloaded / max(
-                                       total_bytes * res.n_dispatched, 1.0))
+                                   up_mb=ins.up.value / 1e6,
+                                   comm_ratio=ins.up.value / max(
+                                       total_bytes * ins.uplinks.value, 1.0),
+                                   down_ratio=ins.down.value / max(
+                                       total_bytes * ins.dispatches.value,
+                                       1.0))
                     res.history.append(metrics)
         else:
             # the device downloaded the broadcast, computed, and vanished
             # before its upload started: zero uplink spent, but the served
             # downlink is pure waste
-            res.n_dropped += 1
+            ins.dropouts.inc()
             drop_count[c] += 1
-            res.wasted_download_bytes += job["down_bytes"]
+            ins.wasted_down.add(job["down_bytes"])
+            if tr:
+                tr.emit(UPLOAD, queue.now, client=int(c),
+                        version=job["version"],
+                        lag=version - job["version"], bytes=0.0,
+                        status="dropout")
         # the slot is free again: hand the next idle client a fresh model
         next_dispatch(queue.now)
 
@@ -1068,20 +1247,23 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     res.n_stranded_end = len(buffer)
     for _, _, _, uncharged, down_bytes, _ in buffer:
         charge_waste(uncharged)
-        res.wasted_download_bytes += down_bytes
+        ins.wasted_down.add(down_bytes)
     res.n_inflight_end = len(jobs)      # incl. pending DROPOUT dispatches
     # in-flight downloads were served but their round trips never finished
     for job in jobs.values():
-        res.wasted_download_bytes += job["down_bytes"]
-    res.sim_time = queue.now
-    res.comm_ratio = uploaded / max(total_bytes * res.n_uplinks_spent, 1.0)
-    res.downloaded = downloaded
-    res.down_ratio = downloaded / max(total_bytes * res.n_dispatched, 1.0)
-    res.participation_count = part_count
-    res.dropout_count = drop_count
-    res.fairness = fairness_summary(part_count)
+        ins.wasted_down.add(job["down_bytes"])
+    m = tele.metrics
+    m.gauge(M_STRANDED_END, "accepted uploads stranded in a partial "
+            "buffer at finish").set(res.n_stranded_end)
+    m.gauge(M_INFLIGHT_END, "dispatches still in flight at finish").set(
+        res.n_inflight_end)
+    ins.finalize(m, res, total_bytes, queue.now, part_count, drop_count)
     res.staleness_observed = np.asarray(observed, np.int32)
     res.staleness_q = _staleness_quantiles(observed)
     res.params = params
     res.luar_state = luar_state
+    if tr:
+        tr.emit(RUN_END, queue.now, version=version,
+                uploaded=ins.up.value, downloaded=ins.down.value,
+                comm_ratio=res.comm_ratio, n_events=n_events)
     return res

@@ -1,0 +1,476 @@
+"""repro.obs — unified telemetry (metrics, traces, profiling, perf gate).
+
+Load-bearing checks:
+
+1. GOLDEN TRACE: a 2-round ``run_fl`` with an injected zero clock emits
+   EXACTLY the pinned JSONL bytes — schema version, event kinds, field
+   key order.  Any change to the stream is a schema change and must bump
+   ``TRACE_SCHEMA`` + this golden together.
+2. TELEMETRY IS FREE: with a trace sink and profiler attached, ``run_fl``
+   and BOTH sim engines reproduce the PR-5 fingerprint trajectories
+   bit-for-bit, and every counter-derived result field equals the plain
+   run's exactly.
+3. The perf-trajectory harness: BENCH snapshot schema, the regression
+   comparator's pass/regress/coverage verdicts, soft mode, and the
+   committed repo-root ``BENCH_*.json`` baselines validating.
+"""
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import run as bench_run
+from benchmarks.check_regression import compare, load_snapshot
+from benchmarks.check_regression import main as check_main
+from benchmarks.common import BENCH_SCHEMA, bench_record
+from benchmarks.kernels_bench import _time
+from repro.core import LuarConfig
+from repro.data.synthetic import gaussian_mixture
+from repro.fl.client import ClientConfig
+from repro.fl.partition import dirichlet_partition
+from repro.fl.rounds import FLConfig, run_fl
+from repro.models.cnn import mlp_init, mlp_apply, softmax_xent
+from repro.obs import (AGGREGATE, DISPATCH, EVENT_KINDS, M_COMM_RATIO,
+                       M_DOWNLOAD_BYTES, M_ROUNDS, M_STALENESS, M_UPLINKS,
+                       M_UPLOAD_BYTES, MetricsRegistry, Profiler,
+                       Telemetry, TRACE_SCHEMA, TraceSink,
+                       format_metrics, read_trace, run_summary)
+from repro.obs import prom
+from repro.sim import SimConfig, run_sim
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def task():
+    x, y = gaussian_mixture(1200, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 16, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    return dict(loss_fn=loss_fn, params=params, data={"x": x, "y": y},
+                parts=parts)
+
+
+def _cfg(**kw):
+    kw.setdefault("client", ClientConfig(lr=0.05))
+    kw.setdefault("rounds", 8)
+    kw.setdefault("eval_every", 4)
+    return FLConfig(n_clients=16, n_active=6, tau=3, batch_size=8, **kw)
+
+
+def _fp(params) -> str:
+    buf = np.concatenate([np.asarray(l, np.float64).ravel()
+                          for l in jax.tree.leaves(params)])
+    return hashlib.sha256(buf.tobytes()).hexdigest()[:16]
+
+
+# same-platform fingerprints as tests/test_participation.py — telemetry
+# must not move them
+_GOLD_RUN_FL = "13d3711a8b5d456c"
+_GOLD_FEDBUFF = "d7da0364cb957567"
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "help").labels()
+    c.add(2.5)
+    c.inc()
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="counter add"):
+        c.add(-1.0)
+    g = reg.gauge("t_gauge").labels()
+    g.set(7)
+    assert g.value == 7.0
+    h = reg.histogram("t_hist", buckets=(1.0, 10.0)).labels()
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 3 and h.counts == [1, 1, 1]
+    assert h.sum == 55.5
+    assert h.quantile(0.5) == 5.0
+    assert h.mean() == pytest.approx(18.5)
+
+
+def test_registry_labels_and_kind_conflict():
+    reg = MetricsRegistry()
+    fam = reg.counter("evictions_total")
+    fam.labels(ledger="mask").inc()
+    fam.labels(ledger="mask").inc()
+    fam.labels(ledger="delta").inc()
+    assert reg.value("evictions_total", ledger="mask") == 2.0
+    assert reg.value("evictions_total", ledger="delta") == 1.0
+    assert reg.value("evictions_total", ledger="nope") == 0.0
+    assert reg.value("never_registered", default=-1.0) == -1.0
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("evictions_total")
+    # scalar convenience forwards to the no-label child
+    reg.counter("plain_total").add(4.0)
+    assert reg.value("plain_total") == 4.0
+
+
+def test_format_metrics_renders_every_series():
+    reg = MetricsRegistry()
+    reg.counter("a_total").add(1.0)
+    reg.histogram("h").observe(0.25)
+    text = format_metrics(reg)
+    assert "a_total 1" in text
+    assert "h count=1" in text
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+
+def test_prom_exposition_counters_and_gauges():
+    reg = MetricsRegistry()
+    reg.counter("fl_upload_bytes_total", "client bytes").add(1234.0)
+    reg.gauge("fl_comm_ratio").set(0.25)
+    fam = reg.counter("fl_evictions_total")
+    fam.labels(ledger="mask").inc()
+    body = prom.exposition(reg)
+    assert "# HELP fl_upload_bytes_total client bytes" in body
+    assert "# TYPE fl_upload_bytes_total counter" in body
+    assert "\nfl_upload_bytes_total 1234\n" in body
+    assert "fl_comm_ratio 0.25" in body
+    assert 'fl_evictions_total{ledger="mask"} 1' in body
+    assert body.endswith("\n")
+
+
+def test_prom_exposition_histogram_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", buckets=(1.0, 2.0))
+    for v in (0.5, 1.5, 9.0):
+        h.observe(v)
+    body = prom.exposition(reg)
+    assert 'lat_seconds_bucket{le="1"} 1' in body
+    assert 'lat_seconds_bucket{le="2"} 2' in body
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in body
+    assert "lat_seconds_sum 11" in body
+    assert "lat_seconds_count 3" in body
+
+
+def test_prom_escapes_label_values():
+    reg = MetricsRegistry()
+    reg.gauge("g").labels(path='a"b\\c').set(1.0)
+    assert 'g{path="a\\"b\\\\c"} 1' in prom.exposition(reg)
+
+
+# ---------------------------------------------------------------------------
+# trace sink
+# ---------------------------------------------------------------------------
+
+
+def test_trace_rejects_unknown_kind():
+    sink = TraceSink(clock=lambda: 0.0)
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        sink.emit("REBOOT", 0.0)
+    assert sink.n_emitted == 0
+
+
+def test_trace_key_order_and_file_roundtrip(tmp_path):
+    p = str(tmp_path / "t.jsonl")
+    with TraceSink(p, clock=lambda: 1.5) as sink:
+        sink.emit(DISPATCH, 3.0, client=4, version=2, down_bytes=10.0)
+    [rec] = read_trace(p)
+    assert list(rec) == ["v", "event", "t_sim", "t_wall", "client",
+                         "version", "down_bytes"]
+    assert rec == {"v": TRACE_SCHEMA, "event": "DISPATCH", "t_sim": 3.0,
+                   "t_wall": 1.5, "client": 4, "version": 2,
+                   "down_bytes": 10.0}
+
+
+def test_read_trace_rejects_other_schema(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"v": 999, "event": "RUN_START"}\n')
+    with pytest.raises(ValueError, match="schema"):
+        read_trace(str(p))
+
+
+def test_trace_jsonifies_numpy():
+    sink = TraceSink(clock=lambda: 0.0)
+    sink.emit(AGGREGATE, 0.0, n=np.int64(3),
+              recycled=np.array([1, 2]), alpha=np.float64(0.5))
+    [line] = sink.lines()
+    assert '"n": 3' in line and '"recycled": [1, 2]' in line
+    assert '"alpha": 0.5' in line
+
+
+# ---------------------------------------------------------------------------
+# profiler
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_compile_steady_split():
+    reg = MetricsRegistry()
+    prof = Profiler(reg)
+    for _ in range(3):
+        with prof.span("round_step", jitted=True):
+            pass
+    with prof.span("pricing"):
+        pass
+    phases = {(s, ph): n for s, ph, n, *_ in prof.table()}
+    assert phases[("round_step", "compile")] == 1
+    assert phases[("round_step", "steady")] == 2
+    assert phases[("pricing", "steady")] == 1
+    assert "round_step" in prof.render()
+
+
+def test_telemetry_span_noop_without_profiler():
+    tele = Telemetry()
+    with tele.span("anything", jitted=True):
+        pass                           # must not raise nor record
+    assert tele.metrics.get("obs_span_seconds") is None
+
+
+# ---------------------------------------------------------------------------
+# golden trace: 2-round run_fl, byte-pinned
+# ---------------------------------------------------------------------------
+
+_GOLD_TRACE = [
+    '{"v": 1, "event": "RUN_START", "t_sim": 0.0, "t_wall": 0.0, "engine": "run_fl", "n_clients": 16, "rounds": 2, "n_units": 6, "units": ["fc1.b", "fc1.w", "fc2.b", "fc2.w", "fc3.b", "fc3.w"]}',  # noqa: E501
+    '{"v": 1, "event": "DISPATCH", "t_sim": 0.0, "t_wall": 0.0, "round": 0, "version": 0, "cohort": [3, 7, 6, 4, 0, 9], "down_bytes": 166128.0, "first_contacts": 0}',  # noqa: E501
+    '{"v": 1, "event": "UPLOAD", "t_sim": 0.0, "t_wall": 0.0, "round": 0, "n": 6, "bytes_per_client": 27688.0, "lag": 0, "status": "accepted"}',  # noqa: E501
+    '{"v": 1, "event": "AGGREGATE", "t_sim": 0.0, "t_wall": 0.0, "round": 0, "version": 1, "n": 6, "recycled": []}',  # noqa: E501
+    '{"v": 1, "event": "DISPATCH", "t_sim": 1.0, "t_wall": 0.0, "round": 1, "version": 1, "cohort": [10, 13, 0, 7, 12, 6], "down_bytes": 166128.0, "first_contacts": 0}',  # noqa: E501
+    '{"v": 1, "event": "UPLOAD", "t_sim": 1.0, "t_wall": 0.0, "round": 1, "n": 6, "bytes_per_client": 3112.0, "lag": 0, "status": "accepted"}',  # noqa: E501
+    '{"v": 1, "event": "AGGREGATE", "t_sim": 1.0, "t_wall": 0.0, "round": 1, "version": 2, "n": 6, "recycled": [1, 3]}',  # noqa: E501
+    '{"v": 1, "event": "RUN_END", "t_sim": 2.0, "t_wall": 0.0, "uploaded": 184800.0, "downloaded": 332256.0, "comm_ratio": 0.5561976307425599, "down_ratio": 1.0, "n_uplinks": 12}',  # noqa: E501
+]
+
+
+def test_golden_run_fl_trace(task):
+    """Schema-versioned golden: exact JSONL bytes of a 2-round run with
+    an injected zero clock.  A diff here is a trace schema change —
+    bump TRACE_SCHEMA and this golden deliberately, never silently."""
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=2)
+    tele = Telemetry(trace=TraceSink(clock=lambda: 0.0))
+    run_fl(task["loss_fn"], task["params"], task["data"], task["parts"],
+           cfg, None, telemetry=tele)
+    assert tele.trace.lines() == _GOLD_TRACE
+    assert all(json.loads(ln)["event"] in EVENT_KINDS for ln in _GOLD_TRACE)
+
+
+# ---------------------------------------------------------------------------
+# telemetry leaves every trajectory bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_run_fl_bitwise_with_telemetry(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    plain = run_fl(task["loss_fn"], task["params"], task["data"],
+                   task["parts"], cfg, None)
+    tele = Telemetry(trace=TraceSink(clock=lambda: 0.0))
+    tele.profiler = Profiler(tele.metrics)
+    res = run_fl(task["loss_fn"], task["params"], task["data"],
+                 task["parts"], cfg, None, telemetry=tele)
+    assert _fp(res.params) == _GOLD_RUN_FL == _fp(plain.params)
+    # counter-derived fields are EXACTLY the plain run's
+    assert res.comm_ratio == plain.comm_ratio
+    assert res.uploaded == plain.uploaded
+    assert res.downloaded == plain.downloaded
+    assert res.n_uplinks_spent == plain.n_uplinks_spent
+    assert res.fairness == plain.fairness
+    # and the registry agrees with the result dataclass
+    m = tele.metrics
+    assert m.value(M_UPLOAD_BYTES) == res.uploaded
+    assert m.value(M_DOWNLOAD_BYTES) == res.downloaded
+    assert m.value(M_COMM_RATIO) == res.comm_ratio
+    assert int(m.value(M_UPLINKS)) == res.n_uplinks_spent
+
+
+def test_sync_sim_bitwise_with_telemetry(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    sim = dict(scenario="bimodal", deadline=60.0, sys_seed=3)
+    plain = run_sim(task["loss_fn"], task["params"], task["data"],
+                    task["parts"], cfg, SimConfig(**sim), None)
+    tele = Telemetry.create(profile=True)
+    tele.trace = TraceSink(clock=lambda: 0.0)
+    res = run_sim(task["loss_fn"], task["params"], task["data"],
+                  task["parts"], cfg, SimConfig(**sim), None,
+                  telemetry=tele)
+    assert _fp(res.params) == _GOLD_RUN_FL == _fp(plain.params)
+    assert res.sim_time == plain.sim_time
+    assert res.comm_ratio == plain.comm_ratio
+    assert res.wasted_upload_bytes == plain.wasted_upload_bytes
+    assert (res.n_uplinks_spent, res.n_dispatched) == \
+        (plain.n_uplinks_spent, plain.n_dispatched)
+    assert tele.trace.n_emitted > 0
+    assert int(tele.metrics.value(M_ROUNDS)) == res.rounds_done
+
+
+def test_fedbuff_bitwise_with_telemetry(task):
+    cfg = _cfg(luar=LuarConfig(delta=2))
+    sim = dict(scenario="bimodal", mode="fedbuff", buffer_size=4,
+               concurrency=8, sys_seed=3)
+    plain = run_sim(task["loss_fn"], task["params"], task["data"],
+                    task["parts"], cfg, SimConfig(**sim), None)
+    tele = Telemetry.create(profile=True)
+    tele.trace = TraceSink(clock=lambda: 0.0)
+    res = run_sim(task["loss_fn"], task["params"], task["data"],
+                  task["parts"], cfg, SimConfig(**sim), None,
+                  telemetry=tele)
+    assert _fp(res.params) == _GOLD_FEDBUFF == _fp(plain.params)
+    assert res.sim_time == plain.sim_time
+    assert res.comm_ratio == plain.comm_ratio
+    assert res.staleness_q == plain.staleness_q
+    assert np.array_equal(res.staleness_observed, plain.staleness_observed)
+    assert (res.n_received, res.n_dispatched, res.ledger_misses) == \
+        (plain.n_received, plain.n_dispatched, plain.ledger_misses)
+    # the staleness histogram's raw samples ARE the observation list
+    h = tele.metrics.get(M_STALENESS).labels()
+    assert h.count == len(res.staleness_observed)
+    events = {e["event"] for e in tele.trace.events}
+    assert {"RUN_START", "DISPATCH", "UPLOAD", "AGGREGATE",
+            "RUN_END"} <= events
+
+
+def test_run_summary_matches_result(task):
+    cfg = _cfg(luar=LuarConfig(delta=2), rounds=2)
+    tele = Telemetry()
+    res = run_fl(task["loss_fn"], task["params"], task["data"],
+                 task["parts"], cfg, None, telemetry=tele)
+    s = run_summary(tele.metrics, wall_s=1.0)
+    assert s["comm_ratio"] == round(res.comm_ratio, 4)
+    assert s["uploaded_mb"] == round(res.uploaded / 1e6, 3)
+    assert s["n_uplinks_spent"] == res.n_uplinks_spent
+    assert s["downloaded_mb"] == round(res.downloaded / 1e6, 3)
+    assert list(s)[-1] == "wall_s"
+
+
+# ---------------------------------------------------------------------------
+# perf-trajectory harness (BENCH_*.json + regression gate)
+# ---------------------------------------------------------------------------
+
+
+def _rows():
+    return [("bench/a", 100e-6, {"units": 4}), ("bench/b", 5e-6, {})]
+
+
+def test_bench_record_schema_and_footer(tmp_path):
+    path = bench_record("kern", _rows(), wall_s=1.25, quick=True,
+                        out_dir=str(tmp_path))
+    assert path.endswith("BENCH_kern.json")
+    doc = load_snapshot(path)           # validates or raises
+    assert doc["schema"] == BENCH_SCHEMA and doc["quick"] is True
+    assert [r["name"] for r in doc["rows"]] == ["bench/a", "bench/b"]
+    assert doc["rows"][0]["us_per_call"] == 100.0
+    f = doc["footer"]
+    assert f["total_wall_s"] == 1.25
+    assert isinstance(f["git_sha"], str) and f["git_sha"]
+    assert f["jax_version"] == jax.__version__
+
+
+def test_load_snapshot_rejects_malformed(tmp_path):
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text("{not json")
+    with pytest.raises(ValueError, match="unreadable"):
+        load_snapshot(str(p))
+    p.write_text(json.dumps({"schema": 99, "rows": [], "footer": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        load_snapshot(str(p))
+    p.write_text(json.dumps({"schema": 1, "rows": [], "footer": {}}))
+    with pytest.raises(ValueError, match="no rows"):
+        load_snapshot(str(p))
+    p.write_text(json.dumps({
+        "schema": 1, "rows": [{"name": "x", "us_per_call": None}],
+        "footer": {}}))
+    with pytest.raises(ValueError, match="us_per_call"):
+        load_snapshot(str(p))
+    p.write_text(json.dumps({
+        "schema": 1, "rows": [{"name": "x", "us_per_call": 1.0}],
+        "footer": {"total_wall_s": 1.0}}))
+    with pytest.raises(ValueError, match="footer missing"):
+        load_snapshot(str(p))
+
+
+def test_compare_verdicts(tmp_path):
+    base = bench_record("b", _rows(), 1.0, True, str(tmp_path / "base"))
+    fresh_ok = bench_record(
+        "b", [("bench/a", 250e-6, {}), ("bench/b", 5e-6, {}),
+              ("bench/new", 1e-6, {})], 1.0, True, str(tmp_path / "ok"))
+    fresh_bad = bench_record(
+        "b", [("bench/a", 500e-6, {})], 1.0, True, str(tmp_path / "bad"))
+    b, ok, bad = (load_snapshot(p) for p in (base, fresh_ok, fresh_bad))
+    assert compare(b, ok, tolerance=3.0) == []      # 2.5x + new row: fine
+    problems = compare(b, bad, tolerance=3.0)
+    assert any("5.00x" in p for p in problems)      # bench/a blew up
+    assert any("missing from fresh" in p for p in problems)  # bench/b gone
+
+
+def test_check_regression_cli_modes(tmp_path, capsys):
+    base = bench_record("m", _rows(), 1.0, True, str(tmp_path))
+    worse = bench_record(
+        "m", [(n, s * 10, d) for n, s, d in _rows()], 1.0, True,
+        str(tmp_path / "w"))
+    assert check_main(["--baseline", base, "--fresh", base]) == 0
+    assert check_main(["--baseline", base, "--fresh", worse]) == 1
+    assert check_main(["--baseline", base, "--fresh", worse,
+                       "--soft"]) == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out
+    assert check_main(["--baseline", base, "--fresh", worse,
+                       "--tolerance", "20"]) == 0
+
+
+def test_committed_bench_baselines_validate():
+    """The acceptance gate: BENCH_kernels.json and BENCH_tta.json exist
+    at the repo root and pass the no-arg validator."""
+    for suite in ("kernels", "tta"):
+        path = os.path.join(REPO_ROOT, f"BENCH_{suite}.json")
+        assert os.path.exists(path), f"missing committed {path}"
+        load_snapshot(path)
+    assert check_main(["--root", REPO_ROOT]) == 0
+
+
+def test_run_only_rejects_unknown_module():
+    with pytest.raises(ValueError, match="valid keys"):
+        bench_run.resolve_only("kernels,tta,definitely_not_a_table")
+    assert bench_run.resolve_only("kernels, tta") == ["kernels", "tta"]
+
+
+def test_kernels_time_blocks_per_rep():
+    t_min, t_mean = _time(lambda: jnp.sum(jnp.ones((64, 64))), reps=3)
+    assert 0 < t_min <= t_mean
+
+
+@pytest.mark.slow
+def test_run_record_writes_snapshot(tmp_path, capsys):
+    bench_run.main(["--only", "kernels", "--record",
+                    "--out-dir", str(tmp_path)])
+    doc = load_snapshot(str(tmp_path / "BENCH_kernels.json"))
+    assert doc["rows"][0]["name"] == "bench/luar_round_cnn"
+    assert "mean_us" in doc["rows"][0]["derived"]
+    assert "name,us_per_call,derived" in capsys.readouterr().out
+
+
+def test_launch_train_trace_and_summary(tmp_path, capsys):
+    """--trace-out writes a readable v1 trace and the summary line is the
+    registry render (same keys the old hand-rolled block printed)."""
+    from repro.launch.train import main as train_main
+    trace_path = str(tmp_path / "tr.jsonl")
+    train_main(["--workload", "mlp", "--rounds", "2", "--clients", "8",
+                "--active", "4", "--eval-every", "4", "--seed", "0",
+                "--trace-out", trace_path, "--profile"])
+    events = read_trace(trace_path)
+    assert events[0]["event"] == "RUN_START"
+    assert events[-1]["event"] == "RUN_END"
+    out = capsys.readouterr().out
+    summary = next(json.loads(ln) for ln in out.splitlines()
+                   if ln.startswith("{") and "comm_ratio" in ln
+                   and "wall_s" in ln)
+    assert list(summary)[:5] == ["comm_ratio", "uploaded_mb",
+                                 "n_uplinks_spent", "down_ratio",
+                                 "downloaded_mb"]
+    assert "round_step" in out          # the --profile table
