@@ -36,6 +36,21 @@ from typing import Dict, List
 from benchmarks.common import BENCH_SCHEMA
 
 REQUIRED_FOOTER = ("total_wall_s", "git_sha", "jax_version")
+# "dirty" is OPTIONAL footer (schema 1 back-compat: snapshots recorded
+# before the flag existed still load); when present and true the snapshot
+# was recorded from an uncommitted tree, so its stamped SHA alone cannot
+# reproduce the numbers — every consumer warns below.
+
+
+def dirty_warning(doc: Dict, path: str) -> str:
+    """Non-empty message when a snapshot's footer says the tree was dirty
+    at record time (or the flag is absent AND the snapshot claims an
+    unknown sha)."""
+    footer = doc.get("footer", {})
+    if footer.get("dirty"):
+        return (f"{path}: recorded from a DIRTY working tree — sha "
+                f"{footer.get('git_sha')} does not reproduce these numbers")
+    return ""
 
 
 def load_snapshot(path: str) -> Dict:
@@ -100,6 +115,9 @@ def validate_committed(root: str = ".") -> int:
         print(f"{p}: ok — {len(doc['rows'])} rows, "
               f"sha {doc['footer']['git_sha']}, "
               f"jax {doc['footer']['jax_version']}")
+        warn = dirty_warning(doc, p)
+        if warn:
+            print(f"::warning::{warn}", file=sys.stderr)
     return 0
 
 
@@ -129,6 +147,12 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"::warning::{e}" if args.soft else str(e), file=sys.stderr)
         return 0 if args.soft else 2
+    warn = dirty_warning(base, args.baseline)
+    if warn:
+        # never fatal: a dirty BASELINE is a provenance problem, not a
+        # perf regression — flag it for human eyes in both modes
+        print(f"::warning::comparing against a dirty baseline — {warn}",
+              file=sys.stderr)
     problems = compare(base, fresh, args.tolerance)
     if not problems:
         print(f"perf gate ok: {len(fresh['rows'])} rows within "

@@ -105,6 +105,20 @@ def git_sha() -> str:
         return "unknown"
 
 
+def git_dirty() -> bool:
+    """True when the working tree differs from HEAD — a snapshot recorded
+    then does NOT reproduce from the stamped SHA alone.  Unknown (not a
+    repo, git missing) counts as dirty: an unverifiable claim is treated
+    like a false one."""
+    try:
+        out = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True).stdout
+        return bool(out.strip())
+    except Exception:
+        return True
+
+
 def bench_record(suite: str, rows: List[Tuple[str, float, Dict]],
                  wall_s: float, quick: bool, out_dir: str = ".") -> str:
     """Persist one suite's rows as ``BENCH_<suite>.json``.
@@ -126,6 +140,10 @@ def bench_record(suite: str, rows: List[Tuple[str, float, Dict]],
         "footer": {
             "total_wall_s": round(wall_s, 2),
             "git_sha": git_sha(),
+            # an honest SHA claim: dirty=True flags that the tree had
+            # uncommitted changes, so the SHA alone doesn't reproduce
+            # these numbers (check_regression warns on such baselines)
+            "dirty": git_dirty(),
             "jax_version": jax.__version__,
         },
     }

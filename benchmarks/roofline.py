@@ -1,8 +1,23 @@
-"""Roofline report: reads the dry-run JSONs (experiments/dryrun/) and
-prints, per (arch x shape x mesh): the three time terms, the dominant
-bottleneck, MODEL_FLOPS/HLO_FLOPS, and what would move the dominant term.
+"""Roofline report.
 
-Run the sweep first:  PYTHONPATH=src python -m repro.launch.sweep
+Two row families:
+
+  * ``roofline/<arch>/...`` — reads the dry-run JSONs
+    (experiments/dryrun/) and prints, per (arch x shape x mesh): the
+    three time terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS,
+    and what would move the dominant term.  Needs the sweep first:
+    ``PYTHONPATH=src python -m repro.launch.sweep`` (rows skip silently
+    without it — CI runs none of the sweep).
+
+  * ``roofline/server_agg/...`` — the fused-vs-reference server
+    aggregation roofline, computed from first principles (no dryruns):
+    the LUAR round is pure streaming (O(1) flops per loaded byte), so
+    its TPU time floor is bytes-moved / HBM bandwidth.  The rows price
+    the per-leaf reference's separate merge/select/metric/norm passes
+    against the batched kernel's single sweep and report the projected
+    round time at a v4-class 1.2 TB/s — the artifact the nightly job
+    uploads so the HBM-pass claim in BENCH_kernels.json has its
+    derivation on disk.
 """
 from __future__ import annotations
 
@@ -18,9 +33,50 @@ ADVICE = {
     "collective_s": "static LUAR schedule drops gated all-reduces",
 }
 
+HBM_GBPS = 1200.0               # v4-class reference bandwidth
+
+
+def server_agg_rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+    """Bandwidth-bound roofline of the server aggregation round.
+
+    Element traffic per full round, in model-sized f32 passes:
+      reference — merge reads K deltas + fallback and writes the merged
+      update (K+2), the recycle select reads merged + prev and writes
+      applied (3), the s-metric reads applied + params (2) and the
+      grad-norm pass reads applied again (1): K+8 total;
+      fused — one sweep reads K deltas + prev + params and writes
+      applied: K+3.
+    The projected times are those traffic totals at ``HBM_GBPS``; the
+    measured interpret-mode walls live in BENCH_kernels.json.
+    """
+    import jax
+
+    from benchmarks.kernels_bench import model_mb
+    from repro.models.cnn import cnn_init
+
+    out: List[Tuple[str, float, Dict]] = []
+    params = cnn_init(jax.random.PRNGKey(0))
+    mb = model_mb(params)
+    for K in (1, 4) if quick else (1, 4, 16, 64):
+        ref_mb = (K + 8) * mb
+        fused_mb = (K + 3) * mb
+        ref_s = ref_mb / 1e3 / HBM_GBPS
+        fused_s = fused_mb / 1e3 / HBM_GBPS
+        out.append((f"roofline/server_agg/cnn/K{K}", fused_s, {
+            "model_mb": round(mb, 2),
+            "ref_hbm_mb": round(ref_mb, 1),
+            "fused_hbm_mb": round(fused_mb, 1),
+            "ref_s_at_1.2TBps": round(ref_s, 9),
+            "fused_s_at_1.2TBps": round(fused_s, 9),
+            "traffic_reduction": round(ref_mb / fused_mb, 2),
+            "tree_passes_ref": 4,
+            "tree_passes_fused": 1,
+        }))
+    return out
+
 
 def rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
-    out = []
+    out = server_agg_rows(quick)
     meshes = (False,) if quick else (False, True)
     for arch in ARCHS:
         for shape in SHAPES:

@@ -12,10 +12,11 @@ from repro.core.comm import (  # noqa: F401
     server_memory_bytes,
     upload_time,
 )
-from repro.core.metric import recycle_probs, s_metric  # noqa: F401
+from repro.core.metric import recycle_probs, s_from_sq, s_metric  # noqa: F401
 from repro.core.recycle import (  # noqa: F401
     LuarConfig,
     LuarState,
+    fused_buffer_round,
     luar_init,
     luar_round,
     staleness_discount,

@@ -8,13 +8,36 @@ import jax.numpy as jnp
 from repro.core.units import UnitMap, unit_sq_norms
 
 _EPS = 1e-12
+_S_MAX = 1e18       # cap for a diverged (overflowed-norm) unit: huge but
+                    # finite, so every OTHER unit's Eq. (2) probability
+                    # stays well-defined (1/s underflows to ~0 for it)
+
+
+def s_from_sq(d2: jax.Array, x2: jax.Array) -> jax.Array:
+    """Eq. (1) from per-unit squared norms, with the pathological cases
+    pinned to finite values:
+
+      * zero/zero (zero-init bias, fully-pruned layer with zero params):
+        the shared eps makes this EXACTLY 1.0 — a neutral "no signal"
+        score, neither hot nor cold under Eq. (2);
+      * zero denominator, nonzero numerator: eps-clamped to the large
+        finite ||Delta||/1e-6;
+      * inf numerator (f32 overflow on a diverged unit): capped at
+        ``_S_MAX`` instead of inf, so 1/s underflows to ~0 for that unit
+        but the normalizing sum over units stays finite;
+      * NaN (inf/inf, or a NaN update): mapped to the neutral 1.0, so
+        one poisoned unit cannot turn EVERY unit's probability NaN
+        through the Eq. (2) normalizer.
+
+    For finite s the guard is the identity (bitwise), which keeps all
+    fingerprint-pinned trajectories intact."""
+    s = jnp.sqrt(d2 + _EPS) / jnp.sqrt(x2 + _EPS)
+    return jnp.nan_to_num(s, nan=1.0, posinf=_S_MAX)
 
 
 def s_metric(um: UnitMap, update, params) -> jax.Array:
     """s_{t,l} = ||Delta_{t,l}|| / ||x_{t,l}||  per unit, (n_units,) f32."""
-    d2 = unit_sq_norms(um, update)
-    x2 = unit_sq_norms(um, params)
-    return jnp.sqrt(d2 + _EPS) / jnp.sqrt(x2 + _EPS)
+    return s_from_sq(unit_sq_norms(um, update), unit_sq_norms(um, params))
 
 
 def recycle_probs(s: jax.Array, staleness: jax.Array = None,

@@ -16,7 +16,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.metric import s_metric
+from repro.core.metric import s_from_sq, s_metric
 from repro.core.selection import select_recycle_set
 from repro.core.units import UnitMap, build_units, n_units, select_per_leaf, unit_sq_norms
 
@@ -40,6 +40,13 @@ class LuarConfig(NamedTuple):
                                     # long-recycled units re-enter aggregation
                                     # with boosted probability (async path;
                                     # 0 = off, bitwise the paper's sampling).
+    fused_agg: bool = False         # route the server round through the
+                                    # batched multi-unit Pallas kernel
+                                    # (kernels/luar_agg.luar_agg_batched):
+                                    # merge + select + Eq. (1) norms in one
+                                    # VMEM-resident sweep.  Off by default —
+                                    # the per-leaf reference path is the
+                                    # fingerprint-pinned trajectory.
 
 
 class LuarState(NamedTuple):
@@ -88,21 +95,39 @@ def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
     Returns (applied_update \\hat{Delta}_t, new_state).
     """
     mask = state.mask if mask_override is None else mask_override
-    if cfg.mode == "recycle":
-        recycled_src = state.prev_update
-    elif cfg.mode == "drop":
-        recycled_src = jax.tree.map(jnp.zeros_like, state.prev_update)
-    else:
+    if cfg.mode not in ("recycle", "drop"):
         raise ValueError(f"unknown mode {cfg.mode!r}")
 
-    applied = select_per_leaf(um, mask, recycled_src, fresh_update)
+    if cfg.fused_agg:
+        # K=1 degenerate merge: wn == 1 makes the kernel's weighted
+        # reduction the identity on the fresh update, so the fused call
+        # is exactly select + Eq. (1) norms in one pass
+        rec = 1.0 if cfg.mode == "recycle" else 0.0
+        a_prev = jnp.where(mask, rec, 0.0).astype(jnp.float32)
+        a_fresh = jnp.where(mask, 0.0, 1.0).astype(jnp.float32)
+        wn = jnp.ones((1, n_units(um)), jnp.float32)
+        applied, s, grad_sq = _fused_apply(
+            um, [l[None] for l in jax.tree_util.tree_leaves(fresh_update)],
+            params, state.prev_update, wn, a_prev, a_fresh)
+    else:
+        if cfg.mode == "recycle":
+            recycled_src = state.prev_update
+        else:
+            recycled_src = jax.tree.map(jnp.zeros_like, state.prev_update)
+        applied = select_per_leaf(um, mask, recycled_src, fresh_update)
+        # Eq. (1) on what the server actually has (recycled units keep a
+        # stale numerator until they are re-aggregated — the stochastic
+        # selection guarantees they eventually are).
+        s = s_metric(um, applied, params)
+        grad_sq = unit_sq_norms(um, applied)
 
-    # Eq. (1) on what the server actually has (recycled units keep a stale
-    # numerator until they are re-aggregated — the stochastic selection
-    # guarantees they eventually are).
-    s = s_metric(um, applied, params)
-    grad_sq = unit_sq_norms(um, applied)
+    return applied, _advance_state(state, cfg, applied, s, grad_sq, mask)
 
+
+def _advance_state(state: LuarState, cfg: LuarConfig, applied, s, grad_sq,
+                   mask) -> LuarState:
+    """Shared tail of every round variant: sample R_{t+1}, advance the
+    staleness/agg-count bookkeeping against the EFFECTIVE mask."""
     key, sub = jax.random.split(state.key)
     new_staleness = jnp.where(mask, state.staleness + 1, 0)
     next_mask = select_recycle_set(sub, cfg.scheme, cfg.delta, s=s,
@@ -113,7 +138,7 @@ def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
         # forced back into the aggregation set next round
         next_mask = next_mask & (new_staleness < cfg.max_staleness)
 
-    new_state = LuarState(
+    return LuarState(
         prev_update=applied,
         mask=next_mask,
         s=s,
@@ -122,7 +147,24 @@ def luar_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
         round=state.round + 1,
         key=key,
     )
-    return applied, new_state
+
+
+def _fused_apply(um: UnitMap, delta_leaves, params, prev_update,
+                 wn, a_prev, a_fresh):
+    """One batched-kernel sweep -> (applied tree, s, grad_sq).
+
+    The kernel's per-unit ||applied||^2 IS Eq. (1)'s numerator AND the
+    grad_norm selection signal, and ||x||^2 its denominator — nothing
+    else in the round needs another pass over the model."""
+    from repro.kernels import luar_agg as _la
+    from repro.kernels.ops import _default_interpret
+    applied_leaves, d2, x2 = _la.luar_agg_batched(
+        delta_leaves, jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(prev_update), um.leaf_unit,
+        wn=wn, a_prev=a_prev, a_fresh=a_fresh,
+        interpret=_default_interpret())
+    applied = jax.tree_util.tree_unflatten(um.treedef, applied_leaves)
+    return applied, s_from_sq(d2, x2), d2
 
 
 # ---------------------------------------------------------------------------
@@ -233,3 +275,61 @@ def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
                 merged = jnp.where(z[u] > 0.0, merged, f)
         out.append(merged)              # miss path: all-invalid -> exactly f
     return jax.tree_util.tree_unflatten(um.treedef, out)
+
+
+def fused_buffer_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
+                       stacked_updates: Any, staleness: jax.Array,
+                       alpha: float, params: Any, *,
+                       validity: jax.Array,
+                       ht: Optional[jax.Array] = None,
+                       fedasync: bool = False):
+    """The fedbuff server round in ONE batched-kernel sweep.
+
+    Mathematically identical (to f32 accumulation order) to
+
+        fresh = staleness_weighted_merge(stacked, staleness, alpha,
+                                         validity=validity, um=um,
+                                         fallback=state.prev_update, ht=ht)
+        [fresh *= eta  if fedasync]
+        luar_round(state, um, cfg, fresh, params,
+                   mask_override=~any(validity, axis=0))
+
+    but instead of four tree-wide passes (merge, select, s-metric,
+    grad-norms) the whole thing collapses into per-unit coefficients of
+
+        applied_u = a_prev[u] * prev_u + a_fresh[u] * sum_k wn[k,u] d_ku
+
+    with  a_prev = rec            on units no valid client uploaded
+                 = eta * miss_u   elsewhere (the fallback mass of the
+                                  clients whose dispatched mask skipped u)
+          a_fresh = 0 / eta       respectively,
+
+    which the batched Pallas kernel evaluates alongside the Eq. (1)
+    norms in a single VMEM-resident pass.  Weight algebra is O(K x
+    n_units) scalars on the host side of the trace.
+
+    Returns (applied_update, new_state) — a drop-in for the unfused
+    merge+round pair in the fedbuff ``agg_fn``.
+    """
+    w = staleness_discount(staleness, alpha)
+    if ht is not None:
+        w = w * ht
+    wv = w[:, None] * validity.astype(w.dtype)          # (K, n_units)
+    z = jnp.sum(wv, axis=0)
+    wtot = jnp.sum(w)
+    wn = wv / wtot
+    miss = (wtot - z) / wtot
+    eff_mask = ~jnp.any(validity, axis=0)
+    rec = 1.0 if cfg.mode == "recycle" else 0.0
+    if cfg.mode not in ("recycle", "drop"):
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+    # a K=1 buffer renormalizes any discount back to 1, so FedAsync
+    # scales the server mixing rate instead: x <- x + eta * delta
+    eta = (staleness_discount(staleness[0], alpha) if fedasync
+           else jnp.float32(1.0))
+    a_prev = jnp.where(eff_mask, rec, eta * miss).astype(jnp.float32)
+    a_fresh = jnp.where(eff_mask, 0.0, eta).astype(jnp.float32)
+    applied, s, grad_sq = _fused_apply(
+        um, jax.tree_util.tree_leaves(stacked_updates), params,
+        state.prev_update, wn, a_prev, a_fresh)
+    return applied, _advance_state(state, cfg, applied, s, grad_sq, eff_mask)

@@ -176,7 +176,8 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
                     cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None,
                     down_pipeline: Optional[CodecPipeline] = None,
                     weighted: bool = False, want_loss: bool = True,
-                    want_norm: bool = True) -> Callable:
+                    want_norm: bool = True,
+                    fused_agg: Optional[bool] = None) -> Callable:
     """Build the jitted synchronous round body (Alg. 2 lines 5-12).
 
     Shared by ``run_fl`` and by ``repro.sim``'s deadline engine so the
@@ -213,9 +214,17 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
     each signal: an unwanted one is ``None`` in ``obs`` and its
     computation never enters the trace.  The default ``weighted=False``
     trace is UNTOUCHED — the bit-for-bit replay path for
-    ``participation="uniform"``."""
+    ``participation="uniform"``.
+
+    ``fused_agg`` (None = follow ``cfg.luar.fused_agg``) overrides the
+    server-aggregation path: True routes ``luar_round`` through the
+    batched multi-unit Pallas kernel, False forces the per-leaf
+    reference.  The flag changes only HOW the round is computed, not
+    what (fused vs reference agree to f32 accumulation order)."""
     pipeline = build_codec_pipeline(cfg) if pipeline is None else pipeline
     down = down_pipeline if (down_pipeline is not None and down_pipeline) else None
+    lcfg = (cfg.luar if fused_agg is None
+            else cfg.luar._replace(fused_agg=fused_agg))
 
     if not weighted:
         @jax.jit
@@ -232,7 +241,7 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
             deltas = batched_local_updates(loss_fn, start, batches, cfg.client)
             fresh = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
             fresh, up_state, aux = pipeline.encode(up_state, fresh, qkey)
-            applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+            applied, luar_state = luar_round(luar_state, um, lcfg, fresh, params)
             params, server_state = apply_update(params, applied, server_state, cfg.server)
             codec_state = up_state if down is None else (up_state, down_state)
             return params, luar_state, server_state, codec_state, aux
@@ -265,7 +274,7 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
             jnp.sum(jnp.square(d).reshape(d.shape[0], -1), axis=1)
             for d in jax.tree.leaves(deltas))) if want_norm else None)
         fresh, up_state, aux = pipeline.encode(up_state, fresh, qkey)
-        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh, params)
+        applied, luar_state = luar_round(luar_state, um, lcfg, fresh, params)
         params, server_state = apply_update(params, applied, server_state, cfg.server)
         codec_state = up_state if down is None else (up_state, down_state)
         return params, luar_state, server_state, codec_state, aux, (losses, norms)

@@ -1,16 +1,50 @@
-"""Fused LUAR server-side aggregation kernel (the paper's hot spot).
+"""Fused LUAR server-side aggregation kernels (the paper's hot spot).
 
-Per layer and per round the server needs three HBM sweeps over the
-layer's update: (a) select recycled-vs-fresh update, (b) ||applied||^2
-and (c) ||x||^2 for the Eq. (1) metric s_{t,l}.  This kernel fuses them
-into ONE pass: each (8,128)-aligned tile is read once, the select is
-written, and the two squared norms accumulate in SMEM across the grid.
+Single-layer form (``luar_agg``): per layer and per round the server
+needs three HBM sweeps over the layer's update: (a) select
+recycled-vs-fresh update, (b) ||applied||^2 and (c) ||x||^2 for the
+Eq. (1) metric s_{t,l}.  The kernel fuses them into ONE pass: each
+(8,128)-aligned tile is read once, the select is written, and the two
+squared norms accumulate in SMEM across the grid.
+
+Batched multi-unit form (``luar_agg_batched``): the whole server round
+in ONE Pallas sweep instead of one call per leaf.  All units' flattened
+leaves are packed into a single (8,128)-aligned f32 buffer — each unit
+owns a contiguous block-aligned row range — and a scalar-prefetched
+per-grid-step segment map tells every block which unit it belongs to
+(so the per-unit output index maps can read it).  Per block the kernel
+
+  * reduces the K buffered client deltas with per-(client, unit) merge
+    weights ``wn`` — the staleness-discount x HT x validity
+    normalization is O(K x n_units) scalars, precomputed host-side and
+    held in SMEM;
+  * forms  applied = a_prev[u] * prev + a_fresh[u] * merged, two
+    per-unit scalars that express every recycled / fresh / fallback /
+    drop-mode / FedAsync-eta combination (see core/recycle.py);
+  * accumulates the per-unit ||applied||^2 and ||x||^2 for Eq. (1) into
+    (n_units, 1) outputs whose block index follows the segment map.
+    Units are row-contiguous, so each output block is revisited only by
+    CONSECUTIVE grid steps — the legal Pallas accumulation pattern —
+    and a per-step ``first`` flag zero-initializes each unit's
+    accumulator when its first block arrives.
+
+One read of every operand and one write of the applied update replace
+the 4+ separate passes of the per-leaf reference path (merge select,
+s-metric and grad-norm tree_maps each sweep the full model through HBM).
+
+Everything is computed in f32 regardless of input dtype (bf16 leaves
+upcast on pack, cast back on unpack); a bf16-bucketed packed buffer is
+the natural extension if the upcast bandwidth ever shows up on a
+roofline.
 """
 from __future__ import annotations
 
+from functools import lru_cache
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -18,6 +52,26 @@ from repro.kernels import _CompilerParams
 
 _LANES = 128
 _ROWS = 8
+
+LeafUnit = Union[int, Tuple[int, int]]
+
+
+def _block_rows_for(pad_rows: int, block_rows: int) -> int:
+    """Largest (8-row aligned) block height that divides ``pad_rows``.
+
+    The old ``while pad_rows % bt: bt //= 2`` shrink was broken at edge
+    shapes: an odd ``block_rows`` (or repeated halving) could leave a bt
+    that is not a multiple of the 8-row sublane tile — or 0 — and Mosaic
+    rejects (or worse, mispads) such blocks.  pad_rows is always a
+    multiple of 8, so stepping DOWN by 8 from the aligned candidate
+    always terminates at a legal divisor (worst case bt = 8).
+    """
+    bt = min(block_rows, pad_rows)
+    bt -= bt % _ROWS                    # align to the (8, 128) tile
+    bt = max(bt, _ROWS)
+    while pad_rows % bt:
+        bt -= _ROWS
+    return bt
 
 
 def _kernel(mask_ref, d_ref, x_ref, r_ref, o_ref, d2_ref, x2_ref, acc_scr):
@@ -55,9 +109,7 @@ def luar_agg(delta: jax.Array, x: jax.Array, recycled: jax.Array,
     width = _LANES
     rows = -(-n // width)
     pad_rows = -(-rows // _ROWS) * _ROWS
-    bt = min(block_rows, pad_rows)
-    while pad_rows % bt:
-        bt //= 2
+    bt = _block_rows_for(pad_rows, block_rows)
     grid = pad_rows // bt
 
     def prep(a):
@@ -92,3 +144,219 @@ def luar_agg(delta: jax.Array, x: jax.Array, recycled: jax.Array,
     )(mask, prep(delta), prep(x), prep(recycled))
     applied = out.reshape(-1)[:n].reshape(shape).astype(dtype)
     return applied, d2[0, 0], x2[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-unit fused round
+# ---------------------------------------------------------------------------
+
+
+class PackLayout(NamedTuple):
+    """Static packing plan for one (leaf_unit, shapes, block_rows) triple.
+
+    Segment-packed layout: the flat f32 buffer is (total_rows, 128) with
+    each unit occupying ``unit_rows[u]`` CONTIGUOUS rows starting at
+    ``unit_row_start[u]`` (rows per unit are a multiple of the kernel
+    block height, so no block straddles two units).  A leaf that maps to
+    several units (stacked "depth" leaves) is scattered across its
+    units' regions; ``leaf_parts`` records the flat-element offsets to
+    gather it back.
+    """
+    n_units: int
+    block_rows: int
+    total_rows: int
+    grid: int
+    unit_rows: Tuple[int, ...]
+    unit_row_start: Tuple[int, ...]
+    # per unit: ((leaf_idx, depth_idx|None, size), ...) in pack order
+    unit_pieces: Tuple[Tuple[Tuple[int, Optional[int], int], ...], ...]
+    # per leaf: ((depth_idx|None, flat_elem_offset, size), ...)
+    leaf_parts: Tuple[Tuple[Tuple[Optional[int], int, int], ...], ...]
+    seg: Tuple[int, ...]                # grid step -> unit id
+    first: Tuple[int, ...]              # 1 on a unit's first grid step
+
+
+def leaf_unit_count(leaf_unit: Sequence[LeafUnit]) -> int:
+    n = 0
+    for u in leaf_unit:
+        n = max(n, u[0] + u[1] if isinstance(u, tuple) else u + 1)
+    return n
+
+
+@lru_cache(maxsize=128)
+def build_pack_layout(leaf_unit: Tuple[LeafUnit, ...],
+                      shapes: Tuple[Tuple[int, ...], ...],
+                      block_rows: int = 64) -> PackLayout:
+    """Plan the segment-packed buffer (cached: pure shape metadata)."""
+    if block_rows % _ROWS:
+        block_rows = max(_ROWS, block_rows - block_rows % _ROWS)
+    n = leaf_unit_count(leaf_unit)
+    pieces: List[List[Tuple[int, Optional[int], int]]] = [[] for _ in range(n)]
+    for li, (u, shape) in enumerate(zip(leaf_unit, shapes)):
+        size = int(np.prod(shape)) if shape else 1
+        if isinstance(u, tuple):
+            start, L = u
+            per = size // L
+            for i in range(L):
+                pieces[start + i].append((li, i, per))
+        else:
+            pieces[u].append((li, None, size))
+    unit_rows: List[int] = []
+    unit_row_start: List[int] = []
+    leaf_parts: List[List[Tuple[Optional[int], int, int]]] = \
+        [[] for _ in leaf_unit]
+    seg: List[int] = []
+    first: List[int] = []
+    row = 0
+    for u in range(n):
+        elems = sum(sz for _, _, sz in pieces[u])
+        # every unit is padded to a whole number of kernel blocks so the
+        # (1,1) per-unit norm accumulators are revisited consecutively
+        blocks = max(1, -(-elems // (block_rows * _LANES)))
+        unit_row_start.append(row)
+        unit_rows.append(blocks * block_rows)
+        off = row * _LANES
+        for li, di, sz in pieces[u]:
+            leaf_parts[li].append((di, off, sz))
+            off += sz
+        seg.extend([u] * blocks)
+        first.extend([1] + [0] * (blocks - 1))
+        row += blocks * block_rows
+    return PackLayout(
+        n_units=n, block_rows=block_rows, total_rows=row,
+        grid=len(seg),
+        unit_rows=tuple(unit_rows), unit_row_start=tuple(unit_row_start),
+        unit_pieces=tuple(tuple(p) for p in pieces),
+        leaf_parts=tuple(tuple(p) for p in leaf_parts),
+        seg=tuple(seg), first=tuple(first))
+
+
+def pack_leaves(leaves: Sequence[jax.Array], layout: PackLayout,
+                lead: int = 0) -> jax.Array:
+    """Gather leaves into the (… , total_rows, 128) f32 packed buffer.
+
+    ``lead`` leading axes (the K client axis) are preserved; zero padding
+    between a unit's payload and its block boundary is what makes the
+    kernel's norm accumulation exact (0 contributes nothing).
+    """
+    lead_shape = leaves[0].shape[:lead]
+    bufs = []
+    for u in range(layout.n_units):
+        parts = []
+        for li, di, size in layout.unit_pieces[u]:
+            a = leaves[li].astype(jnp.float32)
+            if di is None:
+                parts.append(a.reshape(lead_shape + (size,)))
+            else:
+                L = a.shape[lead]
+                parts.append(a.reshape(lead_shape + (L, size))[..., di, :])
+        buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+        pad = layout.unit_rows[u] * _LANES - buf.shape[-1]
+        if pad:
+            buf = jnp.pad(buf, [(0, 0)] * lead + [(0, pad)])
+        bufs.append(buf)
+    flat = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs, axis=-1)
+    return flat.reshape(lead_shape + (layout.total_rows, _LANES))
+
+
+def unpack_applied(flat: jax.Array, layout: PackLayout,
+                   shapes: Sequence[Tuple[int, ...]],
+                   dtypes: Sequence[Any]) -> List[jax.Array]:
+    """Scatter the packed applied-update buffer back into leaves."""
+    v = flat.reshape(-1)
+    out = []
+    for li, (shape, dtype) in enumerate(zip(shapes, dtypes)):
+        parts = [jax.lax.slice(v, (off,), (off + size,))
+                 for _, off, size in layout.leaf_parts[li]]
+        leaf = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        out.append(leaf.reshape(shape).astype(dtype))
+    return out
+
+
+def _batched_kernel(seg_ref, first_ref, wn_ref, ap_ref, af_ref,
+                    d_ref, prev_ref, x_ref, o_ref, d2_ref, x2_ref):
+    i = pl.program_id(0)
+    u = seg_ref[i]
+
+    @pl.when(first_ref[i] == 1)
+    def _init():
+        d2_ref[0, 0] = 0.0
+        x2_ref[0, 0] = 0.0
+
+    prev = prev_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    K = d_ref.shape[0]
+    merged = wn_ref[0, u] * d_ref[0].astype(jnp.float32)
+    for k in range(1, K):                   # K is static (buffer size)
+        merged = merged + wn_ref[k, u] * d_ref[k].astype(jnp.float32)
+    applied = ap_ref[u] * prev + af_ref[u] * merged
+    o_ref[...] = applied
+    d2_ref[0, 0] += jnp.sum(applied * applied)
+    x2_ref[0, 0] += jnp.sum(x * x)
+
+
+def luar_agg_batched(delta_leaves: Sequence[jax.Array],
+                     x_leaves: Sequence[jax.Array],
+                     prev_leaves: Sequence[jax.Array],
+                     leaf_unit: Sequence[LeafUnit], *,
+                     wn: jax.Array, a_prev: jax.Array, a_fresh: jax.Array,
+                     block_rows: int = 64, interpret: bool = False):
+    """Whole-round fused aggregation over ALL units in one Pallas pass.
+
+    delta_leaves: model leaves with a leading K axis (K buffered client
+    deltas; K=1 for the synchronous round).  x_leaves: current params
+    (Eq. (1) denominator).  prev_leaves: \\hat{Delta}_{t-1} (the
+    recycled direction).  leaf_unit: ``UnitMap.leaf_unit`` — plain ints
+    and (start, L) stacked entries both supported.
+
+    wn (K, n_units) f32: normalized per-(client, unit) merge weights.
+    a_prev / a_fresh (n_units,) f32: the two coefficients of
+    ``applied_u = a_prev[u] * prev_u + a_fresh[u] * merge_u``.
+
+    Returns (applied_leaves (x dtypes), ||applied||^2 per unit,
+    ||x||^2 per unit).
+    """
+    shapes = tuple(tuple(x.shape) for x in x_leaves)
+    dtypes = [x.dtype for x in x_leaves]
+    layout = build_pack_layout(tuple(leaf_unit), shapes, int(block_rows))
+    K = delta_leaves[0].shape[0]
+    d = pack_leaves(delta_leaves, layout, lead=1)
+    prev = pack_leaves(prev_leaves, layout)
+    x = pack_leaves(x_leaves, layout)
+    seg = jnp.asarray(layout.seg, jnp.int32)
+    first = jnp.asarray(layout.first, jnp.int32)
+    wn = wn.astype(jnp.float32)
+    a_prev = a_prev.astype(jnp.float32)
+    a_fresh = a_fresh.astype(jnp.float32)
+    bt = layout.block_rows
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # seg, first drive the index maps
+        grid=(layout.grid,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # wn
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # a_prev
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # a_fresh
+            pl.BlockSpec((K, bt, _LANES), lambda i, seg, first: (0, i, 0)),
+            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
+            pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
+        ],
+    )
+    out, d2, x2 = pl.pallas_call(
+        _batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((layout.total_rows, _LANES), jnp.float32),
+            jax.ShapeDtypeStruct((layout.n_units, 1), jnp.float32),
+            jax.ShapeDtypeStruct((layout.n_units, 1), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(seg, first, wn, a_prev, a_fresh, d, prev, x)
+    applied = unpack_applied(out, layout, shapes, dtypes)
+    return applied, d2[:, 0], x2[:, 0]

@@ -40,3 +40,18 @@ def luar_agg(delta, x, recycled, use_recycled, *, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     fn = partial(_la.luar_agg, interpret=interpret)
     return jax.jit(fn)(delta, x, recycled, use_recycled)
+
+
+def luar_agg_batched(delta_leaves, x_leaves, prev_leaves, leaf_unit, *,
+                     wn, a_prev, a_fresh, block_rows=64, interpret=None):
+    """Whole-round fused LUAR aggregation (all units, one Pallas pass).
+
+    Takes the plain ``UnitMap.leaf_unit`` tuple (not the UnitMap itself,
+    so the kernel layer stays import-independent of ``repro.core``).
+    Jit-compatible: callers inside a trace call it directly; this
+    wrapper exists for standalone use."""
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = partial(_la.luar_agg_batched, leaf_unit=tuple(leaf_unit),
+                 block_rows=block_rows, interpret=interpret)
+    return jax.jit(fn)(delta_leaves, x_leaves, prev_leaves,
+                       wn=wn, a_prev=a_prev, a_fresh=a_fresh)

@@ -66,3 +66,48 @@ def luar_agg_ref(delta: jax.Array, x: jax.Array, recycled: jax.Array,
     d2 = jnp.sum(jnp.square(applied.astype(jnp.float32)))
     x2 = jnp.sum(jnp.square(x.astype(jnp.float32)))
     return applied, d2, x2
+
+
+def luar_agg_batched_ref(delta_leaves, x_leaves, prev_leaves, leaf_unit, *,
+                         wn, a_prev, a_fresh):
+    """Oracle for ``luar_agg_batched``: the whole-round merge+select+norms.
+
+    Per unit u:  applied_u = a_prev[u] * prev_u + a_fresh[u] * sum_k
+    wn[k,u] * delta_ku, plus ||applied_u||^2 and ||x_u||^2.  delta
+    leaves carry a leading K axis; ``leaf_unit`` accepts plain ints and
+    (start, L) stacked entries like ``UnitMap.leaf_unit``.  All math in
+    f32; applied leaves are cast back to the x-leaf dtypes (matching the
+    kernel's pack/unpack round trip)."""
+    f32 = jnp.float32
+    n = 0
+    for u in leaf_unit:
+        n = max(n, u[0] + u[1] if isinstance(u, tuple) else u + 1)
+    wn = wn.astype(f32)
+    a_prev = a_prev.astype(f32)
+    a_fresh = a_fresh.astype(f32)
+    d2 = [jnp.zeros((), f32) for _ in range(n)]
+    x2 = [jnp.zeros((), f32) for _ in range(n)]
+    out = []
+    for u, d, x, p in zip(leaf_unit, delta_leaves, x_leaves, prev_leaves):
+        d, p, xf = d.astype(f32), p.astype(f32), x.astype(f32)
+        if isinstance(u, tuple):
+            start, L = u
+            tail = (1,) * (d.ndim - 2)
+            wb = wn[:, start:start + L].reshape((-1, L) + tail)
+            merged = jnp.sum(d * wb, axis=0)
+            ap = a_prev[start:start + L].reshape((L,) + tail)
+            af = a_fresh[start:start + L].reshape((L,) + tail)
+            applied = ap * p + af * merged
+            dd = jnp.sum(jnp.square(applied).reshape(L, -1), axis=1)
+            xx = jnp.sum(jnp.square(xf).reshape(L, -1), axis=1)
+            for i in range(L):
+                d2[start + i] = d2[start + i] + dd[i]
+                x2[start + i] = x2[start + i] + xx[i]
+        else:
+            wb = wn[:, u].reshape((-1,) + (1,) * (d.ndim - 1))
+            merged = jnp.sum(d * wb, axis=0)
+            applied = a_prev[u] * p + a_fresh[u] * merged
+            d2[u] = d2[u] + jnp.sum(jnp.square(applied))
+            x2[u] = x2[u] + jnp.sum(jnp.square(xf))
+        out.append(applied.astype(x.dtype))
+    return out, jnp.stack(d2), jnp.stack(x2)

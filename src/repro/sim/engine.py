@@ -86,8 +86,9 @@ import numpy as np
 from repro.compress import (Direction, delta_step_price, snapshot_price,
                             versioned_download_price)
 from repro.configs.base import get_scenario
-from repro.core import (luar_init, luar_round, round_trip_time,
-                        staleness_discount, staleness_weighted_merge)
+from repro.core import (fused_buffer_round, luar_init, luar_round,
+                        round_trip_time, staleness_discount,
+                        staleness_weighted_merge)
 from repro.core.comm import ClientResources, compute_time, download_time
 from repro.fl.client import local_update
 from repro.fl.rounds import (FLConfig, _stack_client_batches,
@@ -885,21 +886,30 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
         # inverse-inclusion-probability weights into the same
         # normalization, so selection bias and staleness discounting are
         # corrected by ONE self-normalizing merge
-        fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
-                                         validity=validity, um=um,
-                                         fallback=luar_state.prev_update,
-                                         ht=ht)
-        if fedasync:
-            # a K=1 buffer renormalizes any discount back to 1, so the
-            # staleness weight must scale the server mixing rate instead:
-            # x <- x + (1+tau)^-alpha * delta  (FedAsync)
-            eta = staleness_discount(staleness[0], alpha_t)
-            fresh = jax.tree.map(lambda l: l * eta, fresh)
-        # units NO valid client uploaded recycle prev_update; when every
-        # buffered client saw the current mask this is state.mask exactly
-        eff_mask = ~jnp.any(validity, axis=0)
-        applied, luar_state = luar_round(luar_state, um, cfg.luar, fresh,
-                                         params, mask_override=eff_mask)
+        if cfg.luar.fused_agg:
+            # merge + select + Eq. (1) norms collapse into ONE batched
+            # Pallas sweep (same math, see core.fused_buffer_round)
+            applied, luar_state = fused_buffer_round(
+                luar_state, um, cfg.luar, stacked, staleness, alpha_t,
+                params, validity=validity, ht=ht, fedasync=fedasync)
+        else:
+            fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
+                                             validity=validity, um=um,
+                                             fallback=luar_state.prev_update,
+                                             ht=ht)
+            if fedasync:
+                # a K=1 buffer renormalizes any discount back to 1, so the
+                # staleness weight must scale the server mixing rate
+                # instead: x <- x + (1+tau)^-alpha * delta  (FedAsync)
+                eta = staleness_discount(staleness[0], alpha_t)
+                fresh = jax.tree.map(lambda l: l * eta, fresh)
+            # units NO valid client uploaded recycle prev_update; when
+            # every buffered client saw the current mask this is
+            # state.mask exactly
+            eff_mask = ~jnp.any(validity, axis=0)
+            applied, luar_state = luar_round(luar_state, um, cfg.luar,
+                                             fresh, params,
+                                             mask_override=eff_mask)
         params, server_state = apply_update(params, applied, server_state,
                                             cfg.server)
         return params, luar_state, server_state

@@ -1,0 +1,178 @@
+"""Property tests for the batched multi-unit fused aggregation path.
+
+The claim under test: ``fused_buffer_round`` / ``luar_round(fused_agg)``
+— one Pallas sweep — match the per-leaf reference composition
+(``staleness_weighted_merge`` + ``luar_round``) within f32 accumulation
+tolerance across random unit maps, validity masks, HT weights and
+staleness vectors, including the all-recycled and all-fresh extremes.
+
+The fuzz runs on the seeded conftest hypothesis stub in tier-1 (bounded
+examples) and is soaked nightly by the CI ``full`` job via
+STUB_HYPOTHESIS_MAX_EXAMPLES (the slow-marked deep case).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LuarConfig, fused_buffer_round, luar_init,
+                        luar_round, staleness_weighted_merge)
+from repro.core.units import build_units
+
+# a few FIXED model layouts (so jit/pallas trace caches hit across
+# examples; the randomness lives in weights, masks and staleness)
+_LAYOUTS = {
+    "mlp_module": (
+        {"l1": {"w": (32, 16), "b": (16,)}, "l2": {"w": (16, 4), "b": (4,)}},
+        "module"),
+    "odd_leaf": (
+        {"a": {"w": (7,), "b": ()}, "c": {"w": (13, 3)}},
+        "leaf"),
+    "stacked_depth": (
+        {"blocks": {"w": (3, 6, 4), "b": (3, 4)}, "head": {"w": (4, 2)}},
+        "depth"),
+}
+
+
+def _params_for(layout_key, rng):
+    tmpl, granularity = _LAYOUTS[layout_key]
+    params = jax.tree.map(
+        lambda s: jnp.asarray(rng.normal(size=s), jnp.float32), tmpl,
+        is_leaf=lambda x: isinstance(x, tuple))
+    return params, granularity
+
+
+def _reference_round(state, um, cfg, stacked, staleness, alpha, params,
+                     validity, ht, fedasync):
+    fresh = staleness_weighted_merge(stacked, staleness, alpha,
+                                     validity=validity, um=um,
+                                     fallback=state.prev_update, ht=ht)
+    if fedasync:
+        eta = (1.0 + staleness[0].astype(jnp.float32)) ** (-alpha)
+        fresh = jax.tree.map(lambda l: l * eta, fresh)
+    eff_mask = ~jnp.any(validity, axis=0)
+    return luar_round(state, um, cfg, fresh, params, mask_override=eff_mask)
+
+
+def _check_fused_matches(layout_key, K, seed, alpha, use_ht, mode,
+                         validity_kind):
+    rng = np.random.default_rng(seed)
+    params, granularity = _params_for(layout_key, rng)
+    cfg = LuarConfig(delta=1, granularity=granularity, mode=mode)
+    fcfg = cfg._replace(fused_agg=True)
+    state, um = luar_init(params, cfg, jax.random.PRNGKey(seed))
+    # a non-zero prev_update so the recycled direction is visible
+    prev = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=l.shape), l.dtype), params)
+    state = state._replace(prev_update=prev)
+    n = len(um.names)
+    stacked = jax.tree.map(
+        lambda l: jnp.asarray(rng.normal(size=(K,) + l.shape), l.dtype),
+        params)
+    staleness = jnp.asarray(rng.integers(0, 9, K), jnp.int32)
+    if validity_kind == "all_fresh":
+        validity = jnp.ones((K, n), bool)
+    elif validity_kind == "all_recycled":
+        validity = jnp.zeros((K, n), bool)
+    else:
+        validity = jnp.asarray(rng.random((K, n)) > 0.4)
+    ht = (jnp.asarray(rng.uniform(0.5, 3.0, K), jnp.float32)
+          if use_ht else None)
+    fedasync = K == 1
+
+    ar, sr = _reference_round(state, um, cfg, stacked, staleness, alpha,
+                              params, validity, ht, fedasync)
+    af, sf = fused_buffer_round(state, um, fcfg, stacked, staleness, alpha,
+                                params, validity=validity, ht=ht,
+                                fedasync=fedasync)
+    for x, y in zip(jax.tree.leaves(ar), jax.tree.leaves(af)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sr.s), np.asarray(sf.s),
+                               rtol=1e-3, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sr.staleness),
+                                  np.asarray(sf.staleness))
+    np.testing.assert_array_equal(np.asarray(sr.mask), np.asarray(sf.mask))
+
+
+@pytest.mark.parametrize("validity_kind", ["all_fresh", "all_recycled"])
+@pytest.mark.parametrize("layout_key", sorted(_LAYOUTS))
+def test_fused_extremes(layout_key, validity_kind):
+    """All-fresh (everybody uploaded everything) and all-recycled
+    (nobody uploaded anything) pin both ends of the coefficient math."""
+    _check_fused_matches(layout_key, K=3, seed=0, alpha=0.5, use_ht=False,
+                         mode="recycle", validity_kind=validity_kind)
+
+
+def test_fused_fedasync_eta_scaling():
+    """K=1 routes the staleness weight through the server mixing rate."""
+    _check_fused_matches("mlp_module", K=1, seed=4, alpha=0.7, use_ht=False,
+                         mode="recycle", validity_kind="random")
+
+
+def test_fused_drop_mode():
+    _check_fused_matches("odd_leaf", K=2, seed=5, alpha=0.5, use_ht=True,
+                         mode="drop", validity_kind="random")
+
+
+@pytest.mark.slow
+@given(st.sampled_from(sorted(_LAYOUTS)), st.integers(1, 4),
+       st.integers(0, 10_000), st.floats(0.0, 1.5), st.booleans(),
+       st.sampled_from(["recycle", "drop"]))
+@settings(deadline=None, max_examples=10)
+def test_fused_matches_reference_fuzz(layout_key, K, seed, alpha, use_ht,
+                                      mode):
+    """Random unit maps x masks x HT weights x staleness vectors."""
+    _check_fused_matches(layout_key, K, seed, alpha, use_ht, mode,
+                         validity_kind="random")
+
+
+@pytest.mark.slow
+def test_fedbuff_engine_fused_run_matches_reference():
+    """End to end through the event-driven fedbuff engine: the fused
+    agg_fn reproduces the reference trajectory within tolerance (same
+    seeds, same event order — only the server math is rerouted)."""
+    from repro.data.synthetic import gaussian_mixture
+    from repro.fl.client import ClientConfig
+    from repro.fl.partition import dirichlet_partition
+    from repro.fl.rounds import FLConfig
+    from repro.models.cnn import mlp_apply, mlp_init, softmax_xent
+    from repro.sim import SimConfig, run_sim
+
+    x, y = gaussian_mixture(600, n_classes=10, d=32, seed=0)
+    parts = dirichlet_partition(y, 12, alpha=0.3, seed=0)
+    params = mlp_init(jax.random.PRNGKey(0), n_features=32, n_classes=10)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    finals = {}
+    for fused in (False, True):
+        cfg = FLConfig(n_clients=12, n_active=6, tau=2, batch_size=8,
+                       rounds=4, eval_every=4,
+                       client=ClientConfig(lr=0.05),
+                       luar=LuarConfig(delta=2, fused_agg=fused))
+        sim = SimConfig(scenario="bimodal", mode="fedbuff", buffer_size=3,
+                        concurrency=6)
+        res = run_sim(loss_fn, params, {"x": x, "y": y}, parts, cfg, sim)
+        finals[fused] = np.concatenate(
+            [np.asarray(l, np.float32).ravel()
+             for l in jax.tree.leaves(res.params)])
+        assert res.rounds_done == cfg.rounds
+    np.testing.assert_allclose(finals[True], finals[False],
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_fused_flag_default_off():
+    """The reference path stays the default: fingerprint-pinned
+    trajectories must not route through the kernel silently."""
+    assert LuarConfig().fused_agg is False
+
+
+def test_luar_round_unknown_mode_raises_with_fused():
+    params = {"a": jnp.ones((4,))}
+    cfg = LuarConfig(delta=0, mode="bogus", fused_agg=True)
+    state, um = luar_init(params, LuarConfig(), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        luar_round(state, um, cfg, params, params)

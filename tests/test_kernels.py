@@ -159,3 +159,116 @@ def test_luar_agg_2d_shape():
     a, d2, x2 = ops.luar_agg(d, x, r, jnp.asarray(1.0), interpret=True)
     assert a.shape == (37, 53)
     np.testing.assert_allclose(np.asarray(a), np.asarray(r), atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 7, 127, 129, 1023, 8 * 128 + 1])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_luar_agg_edge_shapes(n, dtype):
+    """Tiny/odd sizes (scalar-bias-like leaves) and non-fp32 inputs —
+    the shapes the old block-shrink loop mishandled."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    d = jax.random.normal(ks[0], (n,), dtype)
+    x = jax.random.normal(ks[1], (n,), dtype)
+    r = jax.random.normal(ks[2], (n,), dtype)
+    a, d2, x2 = ops.luar_agg(d, x, r, jnp.asarray(0.0), interpret=True)
+    ae, d2e, x2e = ref.luar_agg_ref(d, x, r, jnp.asarray(0.0))
+    assert a.dtype == dtype
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(ae, np.float32), atol=1e-6)
+    assert np.isclose(float(d2), float(d2e), rtol=1e-4, atol=1e-6)
+    assert np.isclose(float(x2), float(x2e), rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_rows", [3, 8, 17, 100, 256])
+def test_luar_agg_block_rows_legal(block_rows):
+    """Any block_rows request (odd included) resolves to a legal
+    8-aligned divisor of the padded rows — the fixed shrink loop."""
+    from repro.kernels.luar_agg import _ROWS, _block_rows_for, luar_agg
+    for pad_rows in (8, 16, 24, 40, 8 * 37):
+        bt = _block_rows_for(pad_rows, block_rows)
+        assert bt % _ROWS == 0 and bt >= _ROWS and pad_rows % bt == 0
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    n = 5000
+    d, x, r = (jax.random.normal(k, (n,)) for k in ks)
+    a, d2, x2 = luar_agg(d, x, r, jnp.asarray(0.0),
+                         block_rows=block_rows, interpret=True)
+    ae, d2e, x2e = ref.luar_agg_ref(d, x, r, jnp.asarray(0.0))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ae), atol=1e-6)
+    assert np.isclose(float(d2), float(d2e), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-unit fused round kernel
+# ---------------------------------------------------------------------------
+
+
+def _rand_leaves(rng, shapes, dtypes, lead=()):
+    return [jnp.asarray(rng.normal(size=lead + s), d)
+            for s, d in zip(shapes, dtypes)]
+
+
+def _assert_batched_matches(shapes, leaf_unit, dtypes, K, seed=0,
+                            block_rows=64):
+    rng = np.random.default_rng(seed)
+    n = 0
+    for u in leaf_unit:
+        n = max(n, u[0] + u[1] if isinstance(u, tuple) else u + 1)
+    dl = _rand_leaves(rng, shapes, dtypes, lead=(K,))
+    xl = _rand_leaves(rng, shapes, dtypes)
+    pl_ = _rand_leaves(rng, shapes, dtypes)
+    wn = jnp.asarray(rng.uniform(size=(K, n)), jnp.float32)
+    ap = jnp.asarray(rng.uniform(size=(n,)), jnp.float32)
+    af = jnp.asarray(rng.uniform(size=(n,)), jnp.float32)
+    a, d2, x2 = ops.luar_agg_batched(dl, xl, pl_, leaf_unit, wn=wn,
+                                     a_prev=ap, a_fresh=af,
+                                     block_rows=block_rows, interpret=True)
+    ae, d2e, x2e = ref.luar_agg_batched_ref(dl, xl, pl_, leaf_unit, wn=wn,
+                                            a_prev=ap, a_fresh=af)
+    for g, e in zip(a, ae):
+        assert g.shape == e.shape and g.dtype == e.dtype
+        tol = 2e-2 if g.dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(e, np.float32),
+                                   atol=tol, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2e),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x2e),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_luar_agg_batched_cnn_like():
+    """Module-granularity CNN-like layout: several leaves per unit."""
+    shapes = [(3, 3, 1, 8), (8,), (3, 3, 8, 16), (16,), (392, 32), (32,)]
+    _assert_batched_matches(shapes, [0, 0, 1, 1, 2, 2],
+                            [jnp.float32] * 6, K=4)
+
+
+def test_luar_agg_batched_edge_leaves():
+    """Scalars, tiny odd leaves, bf16, stacked depth leaves and odd
+    block_rows all in one layout."""
+    shapes = [(), (7,), (33, 5), (3, 10, 4), (129,)]
+    leaf_unit = [0, 1, 1, (2, 3), 5]
+    dtypes = [jnp.float32, jnp.float32, jnp.bfloat16, jnp.float32,
+              jnp.float32]
+    _assert_batched_matches(shapes, leaf_unit, dtypes, K=3, block_rows=17)
+
+
+def test_luar_agg_batched_k1():
+    """K=1 (the synchronous round's degenerate merge)."""
+    shapes = [(40, 3), (3,), (3, 9)]
+    _assert_batched_matches(shapes, [0, 0, 1], [jnp.float32] * 3, K=1)
+
+
+def test_pack_unpack_roundtrip():
+    """pack -> unpack is the identity on every leaf (padding dropped)."""
+    from repro.kernels.luar_agg import (build_pack_layout, pack_leaves,
+                                        unpack_applied)
+    shapes = ((), (5,), (2, 3, 4), (3, 6))
+    leaf_unit = (0, 1, 0, (2, 3))
+    rng = np.random.default_rng(3)
+    leaves = [jnp.asarray(rng.normal(size=s), jnp.float32) for s in shapes]
+    layout = build_pack_layout(leaf_unit, shapes, 8)
+    packed = pack_leaves(leaves, layout)
+    back = unpack_applied(packed, layout, shapes, [l.dtype for l in leaves])
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

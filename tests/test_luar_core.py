@@ -408,3 +408,123 @@ def test_upload_bytes_linearity(n, k):
 class UnitMapStub:
     def __init__(self, sizes):
         self.unit_bytes = sizes
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) denominator guard (zero-norm units must not poison selection)
+# ---------------------------------------------------------------------------
+
+
+def test_s_metric_zero_norm_unit_is_finite_neutral():
+    """The pinned convention: a unit whose update AND params are all-zero
+    (zero-init bias, fully-pruned layer) scores s == 1.0 exactly — the
+    shared eps makes 0/0 a neutral 'no signal', not inf/NaN."""
+    params = {"a": {"w": jnp.ones((4, 4))}, "z": {"b": jnp.zeros((8,))}}
+    um = build_units(params, "module")
+    upd = jax.tree.map(jnp.zeros_like, params)
+    s = s_metric(um, upd, params)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    zi = um.names.index("z")
+    assert float(s[zi]) == 1.0
+    p = recycle_probs(s)
+    assert bool(jnp.all(jnp.isfinite(p)))
+    assert np.isclose(float(jnp.sum(p)), 1.0, atol=1e-6)
+
+
+def test_s_metric_nan_and_inf_updates_stay_finite():
+    """A NaN or overflowed update in ONE unit must not turn every unit's
+    Eq. (2) probability NaN through the normalizer."""
+    from repro.core.metric import _S_MAX
+    params = {"a": {"w": jnp.ones((4,))}, "b": {"w": jnp.ones((4,))},
+              "c": {"w": jnp.ones((4,))}}
+    um = build_units(params, "module")
+    upd = {"a": {"w": jnp.full((4,), jnp.nan)},
+           "b": {"w": jnp.full((4,), 1e30)},     # norm overflows f32 -> inf
+           "c": {"w": jnp.full((4,), 0.5)}}
+    s = s_metric(um, upd, params)
+    assert bool(jnp.all(jnp.isfinite(s)))
+    assert float(s[um.names.index("a")]) == 1.0          # NaN -> neutral
+    assert float(s[um.names.index("b")]) == float(np.float32(_S_MAX))  # capped
+    p = recycle_probs(s)
+    assert bool(jnp.all(jnp.isfinite(p)))
+    # the diverged unit is effectively never recycled; the NaN unit takes
+    # only its neutral (s=1) share, and the healthy unit the rest
+    assert float(p[um.names.index("b")]) < 1e-6
+    assert np.isclose(float(p[um.names.index("a")]), 1 / 3, atol=1e-5)
+    assert np.isclose(float(p[um.names.index("c")]), 2 / 3, atol=1e-5)
+
+
+def test_selection_under_zero_init_layer():
+    """Regression: rounds with a zero-init layer keep sampling valid
+    delta-sized recycle sets (probabilities never NaN)."""
+    params = {"conv": {"w": jnp.ones((5, 5))},
+              "zero": {"w": jnp.zeros((7,))},    # zero-init layer
+              "fc": {"w": jnp.ones((3, 3))}}
+    cfg = LuarConfig(delta=1, granularity="module")
+    state, um = luar_init(params, cfg, jax.random.PRNGKey(11))
+    fresh = jax.tree.map(jnp.zeros_like, params)   # zero update too: 0/0
+    for _ in range(5):
+        _, state = luar_round(state, um, cfg, fresh, params)
+        assert bool(jnp.all(jnp.isfinite(state.s)))
+        assert int(jnp.sum(state.mask)) == 1
+
+
+def test_s_metric_guard_is_identity_on_finite_values(cnn_params):
+    """Bitwise: the non-finite guard must not perturb any healthy value
+    (this is what keeps fingerprint-pinned trajectories intact)."""
+    um = build_units(cnn_params, "module")
+    upd = _const_update(cnn_params, 0.03)
+    d2 = unit_sq_norms(um, upd)
+    x2 = unit_sq_norms(um, cnn_params)
+    raw = jnp.sqrt(d2 + 1e-12) / jnp.sqrt(x2 + 1e-12)
+    np.testing.assert_array_equal(np.asarray(s_metric(um, upd, cnn_params)),
+                                  np.asarray(raw))
+
+
+# ---------------------------------------------------------------------------
+# fused_agg: the batched-kernel round vs the per-leaf reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("granularity", ["leaf", "module"])
+@pytest.mark.parametrize("mode", ["recycle", "drop"])
+def test_fused_luar_round_matches_reference(cnn_params, granularity, mode):
+    """cfg.fused_agg=True reproduces the reference round: applied update
+    within kernel tolerance, s within accumulation-order tolerance, and
+    the SAME sampled recycle sets over several rounds."""
+    cfg = LuarConfig(delta=2, granularity=granularity, mode=mode)
+    fcfg = cfg._replace(fused_agg=True)
+    state_r, um = luar_init(cnn_params, cfg, jax.random.PRNGKey(5))
+    state_f, _ = luar_init(cnn_params, fcfg, jax.random.PRNGKey(5))
+    fresh = _const_update(cnn_params, 0.05)
+    for _ in range(3):
+        ar, state_r = luar_round(state_r, um, cfg, fresh, cnn_params)
+        af, state_f = luar_round(state_f, um, fcfg, fresh, cnn_params)
+        for x, y in zip(jax.tree.leaves(ar), jax.tree.leaves(af)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state_r.s),
+                                   np.asarray(state_f.s), rtol=1e-3)
+        np.testing.assert_array_equal(np.asarray(state_r.mask),
+                                      np.asarray(state_f.mask))
+
+
+def test_fused_luar_round_depth_granularity():
+    """The batched kernel handles stacked (start, L) depth units the
+    per-leaf ops.luar_agg path never could."""
+    params = {"blocks": {"w": jnp.arange(24.0).reshape(3, 2, 4) / 24.0,
+                         "b": jnp.ones((3, 4)) * 0.1},
+              "head": {"w": jnp.ones((4, 2))}}
+    cfg = LuarConfig(delta=2, granularity="depth")
+    fcfg = cfg._replace(fused_agg=True)
+    state_r, um = luar_init(params, cfg, jax.random.PRNGKey(9))
+    state_f, _ = luar_init(params, fcfg, jax.random.PRNGKey(9))
+    fresh = _const_update(params, 0.2)
+    for _ in range(3):
+        ar, state_r = luar_round(state_r, um, cfg, fresh, params)
+        af, state_f = luar_round(state_f, um, fcfg, fresh, params)
+        for x, y in zip(jax.tree.leaves(ar), jax.tree.leaves(af)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(state_r.mask),
+                                      np.asarray(state_f.mask))

@@ -424,6 +424,32 @@ def test_check_regression_cli_modes(tmp_path, capsys):
                        "--tolerance", "20"]) == 0
 
 
+def test_bench_footer_dirty_flag_and_warning(tmp_path, capsys):
+    """``bench_record`` stamps the working-tree state; the regression
+    gate warns (never fails) when a baseline's footer says dirty=True,
+    and stays silent on pre-flag snapshots that lack the key."""
+    from benchmarks.check_regression import dirty_warning
+
+    base = bench_record("d", _rows(), 1.0, True, str(tmp_path))
+    doc = load_snapshot(base)
+    assert isinstance(doc["footer"]["dirty"], bool)
+    # back-compat: schema-1 snapshots recorded before the flag existed
+    legacy = {**doc, "footer": {k: v for k, v in doc["footer"].items()
+                                if k != "dirty"}}
+    assert dirty_warning(legacy, base) == ""
+    load_snapshot_path = tmp_path / "BENCH_dirty.json"
+    dirty_doc = {**doc, "footer": {**doc["footer"], "dirty": True}}
+    load_snapshot_path.write_text(json.dumps(dirty_doc))
+    assert "DIRTY working tree" in dirty_warning(dirty_doc,
+                                                 str(load_snapshot_path))
+    # compare mode: dirty BASELINE annotates but the verdict is still
+    # driven by the numbers alone
+    assert check_main(["--baseline", str(load_snapshot_path),
+                       "--fresh", base]) == 0
+    err = capsys.readouterr().err
+    assert "::warning::comparing against a dirty baseline" in err
+
+
 def test_committed_bench_baselines_validate():
     """The acceptance gate: BENCH_kernels.json and BENCH_tta.json exist
     at the repo root and pass the no-arg validator."""
