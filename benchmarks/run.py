@@ -20,7 +20,7 @@ import sys
 import time
 
 from benchmarks import (fig1_motivation, fig3_layer_counts, fig4_curves,
-                        kernels_bench, roofline, table1_memory,
+                        kernels_bench, roofline, serve_bench, table1_memory,
                         table2_comparative, table3_harmonization,
                         table4_selection, table5_drop_vs_recycle,
                         table9_delta_sensitivity, table13_alpha,
@@ -42,6 +42,7 @@ MODULES = {
     "roofline": roofline,
     "kernels": kernels_bench,
     "tta": time_to_accuracy,
+    "serve": serve_bench,
 }
 
 

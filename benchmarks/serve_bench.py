@@ -1,0 +1,146 @@
+"""Load harness for the round service (``repro.serve``).
+
+Three rows measure the service's three costs:
+
+  serve/inproc_round    dispatch+train+upload against the RoundServer
+                        object directly — the aggregation-loop floor
+  serve/http_roundtrip  the same trips over the real HTTP wire
+                        (ThreadingHTTPServer + npz-over-JSON payloads)
+  serve/http_paced_wan  HTTP trips with clients paced by the measured
+                        per-link bandwidths (``launch.mesh``'s WAN-heavy
+                        fleet mix replayed as client-side dwell time)
+  serve/wal_snapshot    one write-ahead checkpoint save + restore cycle
+
+``secs`` is mean seconds per round trip (per snapshot for the WAL row);
+derived carries p50/p95 latency, rounds/sec, and the byte ledgers.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--record] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import bench_record, emit
+from repro.obs import Telemetry
+from repro.serve import http as serve_http
+from repro.serve import state as serve_state
+from repro.serve.client import (_build_workload, latency_quantiles,
+                                make_clients, run_harness)
+from repro.serve.core import RoundServer
+
+
+def _drive(transport, loss_fn, params, data, parts, cfg, n_clients: int,
+           rounds: int, pace: float, seed: int) -> Tuple[float, Dict]:
+    clients = make_clients(n_clients, transport, loss_fn, params, data,
+                           parts, cfg, pace=pace, seed=seed)
+    t0 = time.perf_counter()
+    results = run_harness(clients, rounds)
+    wall = time.perf_counter() - t0
+    q = latency_quantiles(results)
+    n = len(results)
+    derived = {
+        "trips": n,
+        "accepted": sum(r["status"] == "accepted" for r in results),
+        "p50_ms": round(q["p50_ms"], 2),
+        "p95_ms": round(q["p95_ms"], 2),
+        "rounds_per_s": round(n / max(wall, 1e-9), 2),
+    }
+    return wall / max(n, 1), derived
+
+
+def rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+    n_clients, n_rounds = (4, 3) if quick else (8, 6)
+    seed = 0
+    loss_fn, params, data, parts, cfg, sc = _build_workload(
+        n_clients, seed, buffer_size=n_clients - 1, codecs="down:delta")
+    out: List[Tuple[str, float, Dict]] = []
+
+    # -- floor: no transport, no pacing --------------------------------
+    rs = RoundServer(params, cfg, sc, telemetry=Telemetry())
+    # warm the jitted paths so the rows measure steady state
+    _drive(rs, loss_fn, params, data, parts, cfg, n_clients, 1, 0.0, seed)
+    secs, derived = _drive(rs, loss_fn, params, data, parts, cfg,
+                           n_clients, n_rounds, 0.0, seed)
+    st = rs.status()
+    derived.update(up_mb=round(st["uploaded_mb"], 4),
+                   down_mb=round(st["downloaded_mb"], 4),
+                   delta_dl=st["downloads_delta"])
+    out.append(("serve/inproc_round", secs, derived))
+
+    # -- the real wire --------------------------------------------------
+    for name, pace in (("serve/http_roundtrip", 0.0),
+                       ("serve/http_paced_wan", 1.0)):
+        rs = RoundServer(_build_workload(n_clients, seed,
+                                         buffer_size=n_clients - 1,
+                                         codecs="down:delta")[1],
+                         cfg, sc, telemetry=Telemetry())
+        httpd = serve_http.start(rs)
+        try:
+            _drive(httpd.url, loss_fn, params, data, parts, cfg,
+                   n_clients, 1, 0.0, seed)
+            secs, derived = _drive(httpd.url, loss_fn, params, data, parts,
+                                   cfg, n_clients, n_rounds, pace, seed)
+        finally:
+            serve_http.stop(httpd, checkpoint=False)
+        st = rs.status()
+        derived.update(up_mb=round(st["uploaded_mb"], 4),
+                       down_mb=round(st["downloaded_mb"], 4))
+        if pace:
+            derived["pace"] = pace
+        out.append((name, secs, derived))
+
+    # -- WAL cost: save + restore one full snapshot ---------------------
+    import os
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "wal")
+        sc_w = serve_state.ServeConfig(buffer_size=sc.buffer_size,
+                                       ckpt_path=path)
+        rs = RoundServer(params, cfg, sc_w, telemetry=Telemetry())
+        _drive(rs, loss_fn, params, data, parts, cfg, n_clients, 1, 0.0,
+               seed)
+        reps = 3 if quick else 10
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            serve_state.save(rs)
+        t_save = (time.perf_counter() - t0) / reps
+        rs2 = RoundServer(params, cfg, sc_w, telemetry=Telemetry())
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            serve_state.load_into(rs2, path)
+        t_restore = (time.perf_counter() - t0) / reps
+        kb = (os.path.getsize(path + ".npz")
+              + os.path.getsize(path + ".json")) / 1e3
+        out.append(("serve/wal_snapshot", t_save,
+                    {"restore_ms": round(t_restore * 1e3, 2),
+                     "snapshot_kb": round(kb, 1),
+                     "arrays": int(np.load(path + ".npz").__len__())}))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--record", action="store_true",
+                    help="write BENCH_serve.json")
+    ap.add_argument("--out-dir", default=".")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    r = rows(quick)
+    emit(r)
+    if args.record:
+        path = bench_record("serve", r, time.time() - t0, quick,
+                            args.out_dir)
+        print(f"# recorded {path}")
+
+
+if __name__ == "__main__":
+    main()

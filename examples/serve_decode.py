@@ -5,7 +5,7 @@ any assigned architecture (reduced configs on CPU).
 """
 import sys
 
-from repro.launch.serve import main
+from repro.launch.generate import main
 
 if __name__ == "__main__":
     main(sys.argv[1:])

@@ -1,4 +1,21 @@
-"""Simple npz-based pytree checkpointing (params + round state + meta)."""
+"""npz-based pytree checkpointing (params + round state + meta).
+
+Every write is ATOMIC: the payload goes to a ``<path>.tmp`` sibling
+first and is moved into place with ``os.replace``, so a crash mid-save
+can never leave a torn snapshot that a recovery path would trust.  The
+``.json`` meta is replaced LAST — it is the commit record: a snapshot
+whose meta names keys the ``.npz`` lacks (or vice versa) is reported
+loudly by ``restore``/``load_arrays`` instead of half-loading.
+
+Two layers:
+
+  * ``save``/``restore`` — the original pytree API (structure template
+    supplied at restore time);
+  * ``save_arrays``/``load_arrays`` + ``flatten_tree``/``unflatten_like``
+    — the raw building blocks ``repro.serve`` composes its write-ahead
+    ``ServerState`` snapshots from (many trees + host arrays packed into
+    ONE atomic npz under key prefixes).
+"""
 from __future__ import annotations
 
 import json
@@ -9,36 +26,106 @@ import jax
 import numpy as np
 
 
-def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Pytree -> flat {path: host array} dict ("/"-joined key paths,
+    optional ``prefix`` for packing several trees into one namespace)."""
     leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in leaves:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out[key] = np.asarray(leaf)
+        out[prefix + _path_key(path)] = np.asarray(leaf)
     return out
+
+
+# back-compat alias (pre-serve callers)
+_flatten = flatten_tree
+
+
+def unflatten_like(like: Any, arrays: Dict[str, np.ndarray],
+                   prefix: str = "", label: str = "checkpoint") -> Any:
+    """Rebuild a pytree with the structure/dtypes of ``like`` from a flat
+    array dict.  Raises ``ValueError`` naming every missing and every
+    shape-mismatched key (not a bare KeyError on the first one)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    missing, mismatched, out = [], [], []
+    for p, leaf in leaves:
+        key = prefix + _path_key(p)
+        arr = arrays.get(key)
+        if arr is None:
+            missing.append(key)
+            continue
+        if arr.shape != np.shape(leaf):
+            mismatched.append(f"{key}: saved {arr.shape} != "
+                              f"expected {np.shape(leaf)}")
+            continue
+        out.append(arr.astype(np.asarray(leaf).dtype))
+    if missing or mismatched:
+        parts = []
+        if missing:
+            parts.append(f"missing keys {missing}")
+        if mismatched:
+            parts.append(f"shape mismatches [{'; '.join(mismatched)}]")
+        raise ValueError(f"{label} does not match the expected structure: "
+                         + "; ".join(parts))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _atomic_write_npz(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **arrays)
+    os.replace(tmp, path)
+
+
+def _atomic_write_json(path: str, doc: Dict[str, Any]) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=2, default=str)
+    os.replace(tmp, path)
+
+
+def save_arrays(path: str, arrays: Dict[str, np.ndarray],
+                meta: Optional[Dict[str, Any]] = None) -> None:
+    """Atomically persist a flat array dict + JSON meta as
+    ``<path>.npz`` / ``<path>.json`` (arrays first, meta last — the meta
+    replace is the commit point)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    _atomic_write_npz(path + ".npz", arrays)
+    doc = dict(meta or {})
+    doc.setdefault("keys", sorted(arrays))
+    _atomic_write_json(path + ".json", doc)
+
+
+def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Load a ``save_arrays`` snapshot; raises ``FileNotFoundError`` when
+    absent and ``ValueError`` when the npz/meta pair is torn (keys the
+    meta committed to that the npz lacks)."""
+    with np.load(path + ".npz") as data:
+        arrays = dict(data)
+    with open(path + ".json") as fh:
+        meta = json.load(fh)
+    committed = meta.get("keys")
+    if committed is not None:
+        lost = sorted(set(committed) - set(arrays))
+        if lost:
+            raise ValueError(f"{path}: torn snapshot — meta commits to "
+                             f"keys the npz lacks: {lost}")
+    return arrays, meta
 
 
 def save(path: str, params: Any, *, step: int = 0,
          extra: Optional[Dict[str, Any]] = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    arrays = _flatten(params)
-    np.savez(path + ".npz", **arrays)
-    meta = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
-    with open(path + ".json", "w") as f:
-        json.dump(meta, f, indent=2, default=str)
+    save_arrays(path, flatten_tree(params),
+                {"step": step, "extra": extra or {}})
 
 
 def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
-    """Restore into the structure of ``like`` (shapes must match)."""
-    with np.load(path + ".npz") as data:
-        arrays = dict(data)
-    with open(path + ".json") as f:
-        meta = json.load(f)
-    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out = []
-    for p, leaf in leaves:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
-        arr = arrays[key]
-        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
-        out.append(arr.astype(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out), meta
+    """Restore into the structure of ``like`` (shapes must match).
+    A snapshot that lacks keys or carries wrong shapes raises
+    ``ValueError`` listing every offending key."""
+    arrays, meta = load_arrays(path)
+    return unflatten_like(like, arrays, label=path), meta

@@ -1,4 +1,4 @@
-"""Production meshes.
+"""Production meshes + the measured per-link bandwidth trace.
 
 Single pod: (16, 16) = 256 v5e chips, axes (data, model).
 Multi-pod : (2, 16, 16) = 512 chips, axes (pod, data, model) — the 'pod'
@@ -7,12 +7,57 @@ the cross-pod all-reduce per layer.
 
 These are FUNCTIONS so importing this module never touches jax device
 state; the dry-run sets XLA_FLAGS before any jax import.
+
+``MEASURED_LINK_BW``/``client_link_trace`` replay measured per-link
+goodput in place of the simulator's synthetic profiles: four link
+classes (pod-internal ICI, inter-pod DCN, on-prem metro silo uplinks,
+last-mile WAN edge devices) with the fleet mix pinned, mapped
+deterministically onto a client population.  ``repro.serve.client``
+uses the trace as client-side pacing so the load harness stresses the
+round service under realistic, asymmetric link times instead of
+localhost latency.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Tuple
 
 import jax
+
+# goodput in bytes/s as (up, down) — medians from a production transfer
+# sweep; WAN is strongly asymmetric (last-mile uplink is the FL
+# bottleneck the paper's byte savings actually buy wall-clock on)
+MEASURED_LINK_BW = {
+    "ici":   (4.2e10, 4.2e10),     # intra-pod chip interconnect
+    "dcn":   (6.1e9, 6.1e9),       # pod-to-pod datacenter network
+    "metro": (1.1e9, 2.2e9),       # on-prem silo uplink
+    "wan":   (1.0e7, 4.1e7),       # edge clients behind last-mile links
+}
+
+# fleet mix: fraction of the population on each link class (edge-heavy,
+# as cross-device FL populations are)
+LINK_MIX = (("wan", 0.80), ("metro", 0.15), ("dcn", 0.04), ("ici", 0.01))
+
+
+def client_link_trace(n_clients: int) -> List[Tuple[str, float, float]]:
+    """Per-client (link class, up bytes/s, down bytes/s), replayed from
+    the measured table.  Deterministic largest-remainder apportionment of
+    the fleet mix — the same population always maps to the same links,
+    so paced load-harness runs are reproducible."""
+    if n_clients < 1:
+        raise ValueError(f"n_clients must be >= 1, got {n_clients}")
+    exact = [(name, frac * n_clients) for name, frac in LINK_MIX]
+    counts = {name: int(e) for name, e in exact}
+    short = n_clients - sum(counts.values())
+    # largest fractional remainders get the leftover slots (ties broken
+    # by mix order: wan first)
+    by_rem = sorted(exact, key=lambda kv: kv[1] - int(kv[1]), reverse=True)
+    for name, _ in by_rem[:short]:
+        counts[name] += 1
+    out: List[Tuple[str, float, float]] = []
+    for name, _ in LINK_MIX:
+        up, down = MEASURED_LINK_BW[name]
+        out.extend((name, up, down) for _ in range(counts[name]))
+    return out
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -24,7 +24,9 @@ from repro.obs.metrics import (DEFAULT_BUCKETS, STALENESS_BUCKETS,  # noqa: F401
                                M_DOWNLOADS_DELTA, M_DOWNLOADS_FULL,
                                M_DROPOUTS, M_FAIRNESS, M_INFLIGHT_END,
                                M_LEDGER_EVICTIONS, M_LEDGER_MISSES,
-                               M_ROUNDS, M_SIM_TIME, M_STALENESS,
+                               M_ROUNDS, M_SERVER_BUFFER_FILL,
+                               M_SERVER_INFLIGHT, M_SERVER_VERSION,
+                               M_SIM_TIME, M_STALENESS,
                                M_STRAGGLERS, M_STRANDED_END, M_UPLINKS,
                                M_UPLOAD_BYTES, M_WASTED_DOWN, M_WASTED_UP)
 from repro.obs.profile import SPAN_METRIC, Profiler  # noqa: F401

@@ -225,6 +225,54 @@ class MetricsRegistry:
         child = fam._children.get(kv)
         return default if child is None else child.value
 
+    # -- snapshot/restore (repro.serve crash recovery) ------------------
+    # JSON round-trips Python floats exactly (repr-based), and histogram
+    # restore RE-OBSERVES the raw samples in emission order, so counter
+    # sums, bucket counts and f64 accumulation order all come back
+    # bit-for-bit — the kill-and-resume equivalence test pins the full
+    # Prometheus exposition byte-for-byte on this.
+
+    def state_dict(self) -> Dict:
+        """JSON-serializable snapshot of every family, child and sample
+        (family/child insertion order preserved)."""
+        fams = []
+        for fam in self.families():
+            children = []
+            for child in fam.children():
+                rec: Dict = {"labels": [list(kv) for kv in child.labels]}
+                if isinstance(child, Histogram):
+                    rec["samples"] = list(child.samples)
+                else:
+                    rec["value"] = child.value
+                children.append(rec)
+            fams.append({"name": fam.name, "kind": fam.kind,
+                         "help": fam.help, "unit": fam.unit,
+                         "buckets": list(fam._buckets),
+                         "children": children})
+        return {"schema": 1, "families": fams}
+
+    def load_state_dict(self, doc: Dict) -> None:
+        """Merge a ``state_dict`` snapshot back in.  Families/children
+        already registered (e.g. by instrument construction on resume)
+        are overwritten in place; unseen ones are created in snapshot
+        order."""
+        if doc.get("schema") != 1:
+            raise ValueError(f"metrics snapshot schema {doc.get('schema')!r}"
+                             " != 1")
+        for f in doc["families"]:
+            fam = self._get(f["name"], f["kind"], f["help"], f["unit"],
+                            tuple(f["buckets"]))
+            for rec in f["children"]:
+                child = fam.labels(**{k: v for k, v in rec["labels"]})
+                if isinstance(child, Histogram):
+                    child.counts = [0] * (len(child.buckets) + 1)
+                    child.sum = 0.0
+                    child.samples = []
+                    for s in rec["samples"]:
+                        child.observe(s)
+                else:
+                    child.value = float(rec["value"])
+
 
 class _NullInstrument:
     """Shared do-nothing counter/gauge/histogram AND family."""
@@ -303,6 +351,17 @@ M_FAIRNESS = "fl_participation_fairness"            # gauge, stat=min|median|max
 M_INFLIGHT_END = "fl_inflight_end"                  # gauge
 M_STRANDED_END = "fl_stranded_end"                  # gauge
 M_STALENESS = "fl_staleness_rounds"                 # histogram, version lag
+
+# the fl_server_* gauge group: live state of the repro.serve round
+# service (the sim engines never set these — a scrape distinguishes a
+# service from a replayed run by their presence)
+M_SERVER_VERSION = "fl_server_version"              # gauge, current model
+                                                    # version (aggregations
+                                                    # applied since init)
+M_SERVER_BUFFER_FILL = "fl_server_buffer_fill"      # gauge, uploads waiting
+                                                    # in the merge buffer
+M_SERVER_INFLIGHT = "fl_server_inflight_dispatches"  # gauge, dispatched but
+                                                     # not yet uploaded
 
 STALENESS_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
 

@@ -17,6 +17,10 @@ from typing import List
 
 from repro.obs.metrics import Histogram, MetricsRegistry
 
+# the HTTP Content-Type a /metrics endpoint must serve this body under
+# (Prometheus text exposition format, version 0.0.4)
+CONTENT_TYPE = "text/plain; version=0.0.4"
+
 
 def _escape_help(s: str) -> str:
     return s.replace("\\", "\\\\").replace("\n", "\\n")

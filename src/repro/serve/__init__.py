@@ -1,0 +1,22 @@
+"""repro.serve — the FL round service.
+
+The fedbuff aggregation loop as a long-lived HTTP service with
+write-ahead crash recovery, live Prometheus telemetry, and a simulated
+client load harness.  See ``serve.core`` (service object),
+``serve.http`` (stdlib transport), ``serve.state`` (snapshot layout),
+``serve.client`` (drivers + CI smoke), ``serve.wire`` (npz-over-JSON
+payload codec).
+"""
+from repro.serve.core import (ClientBusy, ClientUnavailable, RoundServer,
+                              ServeError, UnknownDispatch, VersionMismatch)
+from repro.serve.http import ServeHTTP, start, stop
+from repro.serve.state import ServeConfig
+from repro.serve.wire import (decode_arrays, decode_tree, encode_arrays,
+                              encode_tree)
+
+__all__ = [
+    "ClientBusy", "ClientUnavailable", "RoundServer", "ServeConfig",
+    "ServeError", "ServeHTTP", "UnknownDispatch", "VersionMismatch",
+    "decode_arrays", "decode_tree", "encode_arrays", "encode_tree",
+    "start", "stop",
+]

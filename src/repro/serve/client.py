@@ -1,0 +1,265 @@
+"""Simulated FL clients + the load harness for the round service.
+
+``ServeClient`` drives one client's full round trip — dispatch, local
+training (``fl.client.local_update``, jitted), upload — against either
+a ``RoundServer`` object (in-process; zero transport overhead, used by
+the crash-recovery tests) or a base URL (the real HTTP wire via
+urllib).  Link realism comes from ``launch.mesh.client_link_trace``:
+each client is pinned to a measured link class and ``pace > 0`` sleeps
+``pace * (down_bytes/down_bw + up_bytes/up_bw)`` per round trip, so a
+paced run replays the measured bandwidth asymmetry as client-side
+dwell time (``pace=1`` = full measured link time; the benchmark uses a
+small fraction so quick mode stays quick).
+
+The CLI is the CI smoke: boot an in-process HTTP server, run N clients
+x R rounds, scrape ``/metrics`` + ``/v1/status``, assert a clean
+shutdown.
+
+  PYTHONPATH=src python -m repro.serve.client --clients 3 --rounds 2 \\
+      --scrape
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.fl.client import local_update
+from repro.launch.mesh import client_link_trace
+from repro.serve import wire
+from repro.serve.core import RoundServer, ServeError
+
+Transport = Union[RoundServer, str]
+
+
+class HTTPError(ServeError):
+    """Non-2xx from the wire, carrying the server's error body."""
+
+
+def _http_json(url: str, body: Optional[Dict] = None,
+               timeout: float = 60.0) -> Dict[str, Any]:
+    data = None if body is None else json.dumps(body).encode()
+    req = urllib.request.Request(
+        url, data=data,
+        headers={"Content-Type": "application/json"} if data else {})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        payload = e.read().decode(errors="replace")
+        err = HTTPError(f"{url} -> {e.code}: {payload.strip()}")
+        err.status = e.code
+        raise err from None
+
+
+class ServeClient:
+    """One simulated client bound to a server (in-proc or URL)."""
+
+    def __init__(self, cid: int, transport: Transport, loss_fn,
+                 template_params: Any, data: Dict[str, np.ndarray],
+                 part: np.ndarray, cfg, *, pace: float = 0.0,
+                 link=None, seed: int = 0):
+        self.cid = int(cid)
+        self.transport = transport
+        self.template = template_params
+        self.data = data
+        self.part = np.asarray(part)
+        self.cfg = cfg
+        self.pace = float(pace)
+        self.link = link               # (class, up_bw, down_bw) or None
+        self._rng = np.random.default_rng(
+            np.random.SeedSequence([int(seed) & 0xFFFFFFFF, 0x5EC, cid]))
+        self._local = jax.jit(
+            lambda p, b: local_update(loss_fn, p, b, cfg.client))
+        # nominal uplink payload for pacing: the dense f32 model
+        self._up_bytes = float(sum(
+            np.asarray(leaf).nbytes for leaf in
+            jax.tree_util.tree_leaves(template_params)))
+
+    # -- transport ------------------------------------------------------
+
+    def _dispatch(self) -> Dict[str, Any]:
+        if isinstance(self.transport, str):
+            out = _http_json(self.transport + "/v1/dispatch",
+                             {"client": self.cid})
+            out["broadcast"] = wire.decode_tree(out.pop("params"),
+                                                self.template)
+            return out
+        return self.transport.dispatch(self.cid)
+
+    def _upload(self, update: Any, version: int) -> Dict[str, Any]:
+        if isinstance(self.transport, str):
+            return _http_json(self.transport + "/v1/upload",
+                              {"client": self.cid, "version": int(version),
+                               "update": wire.encode_tree(update)})
+        return self.transport.upload(self.cid, update, version)
+
+    # -- one round trip -------------------------------------------------
+
+    def run_round(self) -> Dict[str, Any]:
+        t0 = time.perf_counter()
+        d = self._dispatch()
+        sel = self._rng.choice(self.part,
+                               size=(self.cfg.tau, self.cfg.batch_size),
+                               replace=True)
+        batches = {k: jax.numpy.asarray(arr[sel])
+                   for k, arr in self.data.items()}
+        delta = self._local(d["broadcast"], batches)
+        jax.block_until_ready(delta)
+        if self.pace > 0.0 and self.link is not None:
+            _, up_bw, down_bw = self.link
+            time.sleep(self.pace * (float(d["down_bytes"]) / down_bw
+                                    + self._up_bytes / up_bw))
+        u = self._upload(delta, d["version"])
+        u["latency_s"] = time.perf_counter() - t0
+        u["down_bytes"] = float(d["down_bytes"])
+        u["client"] = self.cid
+        return u
+
+
+def make_clients(n: int, transport: Transport, loss_fn, template_params,
+                 data, parts, cfg, *, pace: float = 0.0,
+                 seed: int = 0) -> List[ServeClient]:
+    """N clients over the measured link trace (client i -> trace row i)."""
+    trace = client_link_trace(n)
+    return [ServeClient(c, transport, loss_fn, template_params, data,
+                        parts[c], cfg, pace=pace, link=trace[c], seed=seed)
+            for c in range(n)]
+
+
+def run_harness(clients: List[ServeClient], rounds: int,
+                concurrent: bool = False) -> List[Dict[str, Any]]:
+    """Drive every client through ``rounds`` round trips.
+
+    Sequential round-robin by default (deterministic request order — the
+    crash-recovery tests rely on it); ``concurrent`` runs one thread per
+    client to actually contend on the server's lock."""
+    results: List[Dict[str, Any]] = []
+    if not concurrent:
+        for _ in range(rounds):
+            for cl in clients:
+                results.append(cl.run_round())
+        return results
+    lock = threading.Lock()
+
+    def loop(cl: ServeClient):
+        for _ in range(rounds):
+            r = cl.run_round()
+            with lock:
+                results.append(r)
+
+    threads = [threading.Thread(target=loop, args=(cl,)) for cl in clients]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results
+
+
+def latency_quantiles(results: List[Dict[str, Any]]) -> Dict[str, float]:
+    lat = np.asarray([r["latency_s"] for r in results], np.float64)
+    if lat.size == 0:
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "max_ms": 0.0}
+    return {"p50_ms": float(np.quantile(lat, 0.5) * 1e3),
+            "p95_ms": float(np.quantile(lat, 0.95) * 1e3),
+            "max_ms": float(lat.max() * 1e3)}
+
+
+def _build_workload(n_clients: int, seed: int, buffer_size: int,
+                    codecs: str, ckpt: str = ""):
+    """Self-contained mixture-MLP workload (no benchmarks/ import)."""
+    from repro.core import LuarConfig
+    from repro.data.synthetic import gaussian_mixture
+    from repro.fl.client import ClientConfig
+    from repro.fl.partition import dirichlet_partition
+    from repro.fl.rounds import FLConfig
+    from repro.fl.server import ServerConfig
+    from repro.models.cnn import mlp_apply, mlp_init, softmax_xent
+    from repro.serve.state import ServeConfig
+
+    x, y = gaussian_mixture(1500, n_classes=10, d=32, seed=seed)
+    parts = dirichlet_partition(y, n_clients, alpha=0.5, seed=seed)
+    params = mlp_init(jax.random.PRNGKey(seed), n_features=32, n_classes=10)
+
+    def loss_fn(p, b):
+        return softmax_xent(mlp_apply(p, b["x"]), b["y"])
+
+    cfg = FLConfig(
+        n_clients=n_clients, n_active=min(8, n_clients), tau=2,
+        batch_size=16, rounds=10 ** 9, seed=seed,
+        client=ClientConfig(lr=0.05), server=ServerConfig(),
+        luar=LuarConfig(delta=2),
+        codecs=tuple(s for s in codecs.split(",") if s))
+    sc = ServeConfig(buffer_size=buffer_size, ckpt_path=ckpt)
+    return loss_fn, params, {"x": x, "y": y}, parts, cfg, sc
+
+
+def main(argv=None) -> int:
+    from repro.serve import http as serve_http
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--buffer", type=int, default=3)
+    ap.add_argument("--codecs", default="down:delta")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="fraction of measured link time to sleep per trip")
+    ap.add_argument("--url", default="",
+                    help="existing server URL (default: boot one in-proc)")
+    ap.add_argument("--concurrent", action="store_true")
+    ap.add_argument("--scrape", action="store_true",
+                    help="print /metrics and /v1/status at the end")
+    args = ap.parse_args(argv)
+
+    loss_fn, params, data, parts, cfg, sc = _build_workload(
+        args.clients, args.seed, args.buffer, args.codecs)
+    httpd = None
+    if args.url:
+        url = args.url
+    else:
+        rs = RoundServer(params, cfg, sc)
+        httpd = serve_http.start(rs)
+        url = httpd.url
+        print(f"# booted in-process server on {url}")
+
+    clients = make_clients(args.clients, url, loss_fn, params, data, parts,
+                           cfg, pace=args.pace, seed=args.seed)
+    t0 = time.perf_counter()
+    results = run_harness(clients, args.rounds, concurrent=args.concurrent)
+    wall = time.perf_counter() - t0
+    status = _http_json(url + "/v1/status")
+    q = latency_quantiles(results)
+    n_acc = sum(r["status"] == "accepted" for r in results)
+    print(f"# {len(results)} round trips ({n_acc} accepted) in {wall:.2f}s "
+          f"-> {status['rounds_done'] / max(wall, 1e-9):.2f} rounds/s; "
+          f"p50 {q['p50_ms']:.1f}ms p95 {q['p95_ms']:.1f}ms; "
+          f"server version {status['version']}; "
+          f"up {status['uploaded_mb']:.3f}MB down "
+          f"{status['downloaded_mb']:.3f}MB")
+    if args.scrape:
+        print(json.dumps(status, indent=2))
+        metrics = urllib.request.urlopen(url + "/metrics",
+                                         timeout=30).read().decode()
+        print(metrics, end="")
+
+    ok = n_acc == len(results) and status["version"] > 0
+    if httpd is not None:
+        serve_http.stop(httpd)
+        print("# clean shutdown ok")
+    if not ok:
+        print("# FAILED: not every round trip accepted, or no aggregation "
+              "happened")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

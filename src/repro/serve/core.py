@@ -1,0 +1,448 @@
+"""The round server — the fedbuff aggregation loop as a long-lived,
+transport-agnostic service object.
+
+``RoundServer`` is the exact server side of the simulator's fedbuff
+loop (same ledgers, same codec pipelines, same jitted merge via
+``sim.engine.make_buffer_agg_fn``) re-cut from event-loop-local state
+into an object whose every mutation can be checkpointed:
+
+    dispatch(c)   client pulls the versioned broadcast + recycle mask;
+                  downlink priced through the ``down:`` pipeline with
+                  DeltaLedger chain-vs-snapshot per the client's lag
+    upload(c, d)  client submits its raw update; the server runs the
+                  UP codec pipeline (per-client EF state lives server-
+                  side), prices the masked payload, buffers it, and
+                  merges every ``buffer_size`` arrivals (LUAR recycle +
+                  staleness discount + HT weights — optionally the
+                  fused Pallas kernel via ``LuarConfig.fused_agg``)
+    status()      JSON summary (version, buffer, byte ledgers)
+    metrics_text()  Prometheus exposition of the live registry
+
+With ``ServeConfig.ckpt_path`` set, every mutation atomically persists
+the full ``ServerState`` bundle (``serve.state``): a ``kill -9``
+between two requests resumes losslessly via ``RoundServer.resume`` —
+bitwise-identical params, ledgers and metrics versus a never-killed
+server fed the same request sequence (tested).
+
+Thread-safe: one re-entrant lock serializes mutations (the stdlib HTTP
+layer in ``serve.http`` is threaded).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import (Direction, delta_step_price,
+                            versioned_download_price)
+from repro.core import luar_init
+from repro.fl.rounds import (FLConfig, build_codec_pipeline,
+                             server_broadcast_additive)
+from repro.fl.server import broadcast_point, server_init
+from repro.obs import (AGGREGATE, DISPATCH, EVICT, M_ACCEPTED, M_DISPATCHES,
+                       M_DOWNLOAD_BYTES, M_DOWNLOADS_DELTA, M_DOWNLOADS_FULL,
+                       M_LEDGER_EVICTIONS, M_LEDGER_MISSES,
+                       M_SERVER_BUFFER_FILL, M_SERVER_INFLIGHT,
+                       M_SERVER_VERSION, M_UPLOAD_BYTES, RUN_START,
+                       Telemetry, UPLOAD)
+from repro.obs import prom
+from repro.participate import HT_CLIP, RoundContext, ht_weights, resolve_policy
+from repro.serve import state as serve_state
+from repro.serve.state import ServeConfig
+from repro.sim.engine import (DeltaLedger, MaskLedger, _Instruments,
+                              make_buffer_agg_fn)
+
+STATUS_SCHEMA = 1
+
+
+class ServeError(Exception):
+    """Service-level request failure; ``status`` is the HTTP code."""
+    status = 400
+
+
+class ClientUnavailable(ServeError):
+    """The participation policy refused the dispatch (e.g. flat
+    battery, availability trough)."""
+    status = 503
+
+
+class ClientBusy(ServeError):
+    """Client already holds an unanswered dispatch."""
+    status = 409
+
+
+class UnknownDispatch(ServeError):
+    """Upload from a client the server has no inflight dispatch for."""
+    status = 409
+
+
+class VersionMismatch(ServeError):
+    """Upload claims a different base version than its dispatch."""
+    status = 409
+
+
+class RoundServer:
+    """See module docstring.  ``clock`` is injectable (monotonic seconds)
+    so status/trace output is byte-stable in goldens."""
+
+    def __init__(self, init_params: Any, cfg: FLConfig,
+                 serve_cfg: Optional[ServeConfig] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg or ServeConfig()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._clock = clock if clock is not None else time.monotonic
+        self._t0 = self._clock()
+        self._lock = threading.RLock()
+        self.init_params = init_params
+
+        pipeline = build_codec_pipeline(cfg)
+        down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
+        sync_only = pipeline.sync_only_specs() + down_pipe.sync_only_specs()
+        if sync_only:
+            raise NotImplementedError(
+                f"codec stage(s) {list(sync_only)} need a synchronous "
+                "server view the round service never holds; drop them "
+                "from FLConfig.codecs")
+        self.pipeline, self.down_pipe = pipeline, down_pipe
+
+        # -- learning state (identical init to the fedbuff engine) ------
+        self.rng = np.random.default_rng(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed)
+        self.key, k1, k2 = jax.random.split(key, 3)
+        self.params = init_params
+        self.luar_state, self.um = luar_init(init_params, cfg.luar, k1)
+        self.server_state = server_init(init_params, cfg.server, k2)
+        self.sizes = np.asarray(self.um.unit_bytes, np.float64)
+        self.n_units = len(self.um.names)
+        self.no_mask = np.zeros(self.n_units, bool)
+
+        self.policy = resolve_policy(cfg.participation, cfg.n_clients,
+                                     cfg.seed, None)
+        self.part_count = np.zeros(cfg.n_clients, np.int64)
+
+        additive = server_broadcast_additive(cfg)
+        self.has_delta = down_pipe.has("delta") and additive
+        self.seed_cache = self.has_delta and cfg.luar.mode == "recycle"
+        self.down_state = down_pipe.init_state(init_params, self.um)
+        self.down_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xD0FF))
+        self.codec_states: Dict[int, tuple] = {}
+        self._codec_template = pipeline.init_state(init_params, self.um)
+
+        # -- instruments: the engine catalogue + the fl_server_* gauges;
+        # everything eagerly so family/child order is construction-order
+        # deterministic (the metrics snapshot restores values in place)
+        self.ins = _Instruments(self.telemetry)
+        m = self.telemetry.metrics
+        self.g_version = m.gauge(M_SERVER_VERSION,
+                                 "current model version").labels()
+        self.g_buffer = m.gauge(M_SERVER_BUFFER_FILL,
+                                "uploads waiting in the merge "
+                                "buffer").labels()
+        self.g_inflight = m.gauge(M_SERVER_INFLIGHT,
+                                  "dispatched, not yet uploaded").labels()
+        self._tr = self.telemetry.trace
+
+        def _evict_hook(which: str):
+            child = self.ins.evictions.labels(ledger=which)
+
+            def hook(version: int) -> None:
+                child.inc()
+                if self._tr:
+                    self._tr.emit(EVICT, self.uptime(), ledger=which,
+                                  version=version)
+            return hook
+
+        cap = self.serve_cfg.ledger_capacity
+        self.delta_ledger = (DeltaLedger(cap, on_evict=_evict_hook("delta"))
+                             if self.has_delta else None)
+        self.mask_ledger = MaskLedger(cap, on_evict=_evict_hook("mask"))
+
+        # -- mutable round state ----------------------------------------
+        self.version = 0
+        self.mutations = 0
+        self.buffer: List[tuple] = []   # (delta, staleness, validity row,
+                                        #  per_unit f64, down bytes, ht)
+        self.jobs: Dict[int, dict] = {}    # inflight dispatches
+        self.last_dl: Dict[int, int] = {}  # client -> last downloaded ver
+
+        # -- jitted bodies (shared definitions with the sim engine) -----
+        fedasync = self.serve_cfg.buffer_size == 1
+        self.agg_fn = make_buffer_agg_fn(cfg, self.um, fedasync)
+        self.encode_fn = jax.jit(
+            lambda st, delta, qkey: pipeline.encode(st, delta, qkey))
+        self.down_encode_fn = jax.jit(
+            lambda st, tree, k: down_pipe.encode(st, tree, k))
+
+        if self._tr:
+            self._tr.emit(RUN_START, self.uptime(), engine="serve",
+                          mode="fedbuff", n_clients=cfg.n_clients,
+                          buffer_size=self.serve_cfg.buffer_size,
+                          n_units=self.n_units, units=list(self.um.names))
+
+    # -- lifecycle ------------------------------------------------------
+
+    @classmethod
+    def resume(cls, init_params: Any, cfg: FLConfig, serve_cfg: ServeConfig,
+               telemetry: Optional[Telemetry] = None,
+               clock: Optional[Callable[[], float]] = None) -> "RoundServer":
+        """Rebuild a server from its WAL snapshot (``serve_cfg.ckpt_path``
+        must point at one written by the same-configured server)."""
+        if not serve_cfg.ckpt_path:
+            raise ValueError("resume needs ServeConfig.ckpt_path")
+        srv = cls(init_params, cfg, serve_cfg, telemetry=telemetry,
+                  clock=clock)
+        serve_state.load_into(srv, serve_cfg.ckpt_path)
+        return srv
+
+    def uptime(self) -> float:
+        return self._clock() - self._t0
+
+    def set_uptime(self, uptime_s: float) -> None:
+        """Resume support: continue the killed server's uptime."""
+        self._t0 = self._clock() - uptime_s
+
+    def fresh_codec_state(self) -> tuple:
+        return self.pipeline.init_state(self.init_params, self.um)
+
+    def _codec_state_for(self, c: int) -> tuple:
+        if not self.pipeline.stateful:
+            return self._codec_template
+        if c not in self.codec_states:
+            self.codec_states[c] = self.fresh_codec_state()
+        return self.codec_states[c]
+
+    def _mutated(self) -> None:
+        """WAL point: one state mutation finished; persist if configured."""
+        self.mutations += 1
+        sc = self.serve_cfg
+        if sc.ckpt_path and self.mutations % max(sc.ckpt_every, 1) == 0:
+            serve_state.save(self)
+
+    def checkpoint(self) -> Optional[str]:
+        """Force a snapshot now (clean-shutdown path)."""
+        with self._lock:
+            if not self.serve_cfg.ckpt_path:
+                return None
+            return serve_state.save(self)
+
+    # -- the endpoints --------------------------------------------------
+
+    def dispatch(self, client: int) -> Dict[str, Any]:
+        """Hand ``client`` the current broadcast: admission through the
+        participation policy, downlink priced chain-vs-snapshot, the
+        dispatched recycle mask recorded in the MaskLedger."""
+        with self._lock:
+            c = int(client)
+            if not 0 <= c < self.cfg.n_clients:
+                raise ServeError(f"client id {c} outside population "
+                                 f"[0, {self.cfg.n_clients})")
+            if c in self.jobs:
+                raise ClientBusy(f"client {c} already has an inflight "
+                                 "dispatch; upload it first")
+            now = self.uptime()
+            sel = self.policy.select(RoundContext(
+                rng=self.rng, n_clients=self.cfg.n_clients, cohort_size=1,
+                candidates=np.asarray([c], np.int64), population=False,
+                distinct=True, sim=False, round=self.version, now=now))
+            if len(sel.cohort) == 0:
+                raise ClientUnavailable(
+                    f"participation policy {self.policy.spec()!r} refused "
+                    f"client {c} at this time")
+            ht = 1.0 if sel.uniform else float(ht_weights(sel)[0])
+            self.part_count[c] += 1
+
+            mask_now = np.asarray(self.luar_state.mask)
+            self.mask_ledger.record(self.version, mask_now)
+            per_unit = self.pipeline.price_per_unit(self.sizes, mask_now)
+            if self.has_delta:
+                chain = (self.delta_ledger.chain_price(
+                    self.last_dl[c], self.version, self.n_units)
+                    if c in self.last_dl else None)
+                down_pu, used_chain = versioned_download_price(
+                    self.sizes, mask_now, chain, seed_cache=self.seed_cache)
+                down_aux = self.down_pipe.aux_for("delta", down_pu)
+            else:
+                down_aux, used_chain = None, False
+            down_bytes = self.down_pipe.price_bytes(self.sizes, self.no_mask,
+                                                    down_aux)
+            self.ins.down.add(down_bytes)
+            self.ins.dispatches.inc()
+            if used_chain:
+                self.ins.delta_dl.inc()
+            else:
+                self.ins.full_dl.inc()
+            if self._tr:
+                self._tr.emit(DISPATCH, now, client=c, version=self.version,
+                              down_bytes=down_bytes, delta=bool(used_chain),
+                              first=c not in self.last_dl)
+            first_contact = c not in self.last_dl
+            self.last_dl[c] = self.version
+            broadcast = self._broadcast_for_dispatch()
+            self.jobs[c] = {"version": self.version, "mask": mask_now,
+                            "per_unit": per_unit,
+                            "bytes": float(per_unit.sum()),
+                            "down_bytes": down_bytes, "ht": ht}
+            self.policy.observe_dispatch(c, now=now)
+            self.g_inflight.set(len(self.jobs))
+            self._mutated()
+            return {"client": c, "version": self.version,
+                    "mask": [bool(b) for b in mask_now],
+                    "broadcast": broadcast,
+                    "down_bytes": float(down_bytes),
+                    "delta": bool(used_chain), "first": bool(first_contact)}
+
+    def _broadcast_for_dispatch(self):
+        start = broadcast_point(self.params, self.server_state,
+                                self.cfg.server)
+        if not self.down_pipe:
+            return start
+        self.down_key, sub = jax.random.split(self.down_key)
+        enc, self.down_state, _ = self.down_encode_fn(self.down_state,
+                                                      start, sub)
+        return self.down_pipe.decode(self.down_state, enc)
+
+    def upload(self, client: int, update: Any,
+               version: Optional[int] = None) -> Dict[str, Any]:
+        """Accept ``client``'s raw update tree: UP-pipeline encode (per-
+        client EF state server-side), exact masked pricing, buffer, and
+        the LUAR merge once ``buffer_size`` uploads are in."""
+        with self._lock:
+            c = int(client)
+            job = self.jobs.get(c)
+            if job is None:
+                raise UnknownDispatch(f"no inflight dispatch for client {c}")
+            if version is not None and int(version) != job["version"]:
+                raise VersionMismatch(
+                    f"client {c} uploads against version {version}, "
+                    f"dispatched at {job['version']}")
+            del self.jobs[c]
+            now = self.uptime()
+            mask_v = self.mask_ledger.get(job["version"])
+            if mask_v is None:
+                # dispatch mask evicted mid-flight: reject outright and
+                # charge the whole round trip (engine semantics)
+                self.ins.misses.inc()
+                self.ins.up.add(job["bytes"])
+                self.ins.uplinks.inc()
+                self.ins.wasted_up.add(float(job["per_unit"].sum()))
+                self.ins.wasted_down.add(job["down_bytes"])
+                if self._tr:
+                    self._tr.emit(UPLOAD, now, client=c,
+                                  version=job["version"],
+                                  lag=self.version - job["version"],
+                                  bytes=job["bytes"], status="rejected")
+                self.g_inflight.set(len(self.jobs))
+                self._mutated()
+                return {"status": "rejected", "reason": "ledger_miss",
+                        "version": self.version, "merged": False,
+                        "buffer_fill": len(self.buffer)}
+
+            self.key, qkey = jax.random.split(self.key)
+            cstate = self._codec_state_for(c)
+            delta, cstate, aux = self.encode_fn(cstate, update, qkey)
+            if self.pipeline.stateful:
+                self.codec_states[c] = cstate
+            per_unit = self.pipeline.price_per_unit(self.sizes, job["mask"],
+                                                    aux)
+            self.ins.up.add(float(per_unit.sum()))
+            self.ins.uplinks.inc()
+            stal = self.version - job["version"]
+            self.ins.staleness.observe(stal)
+            if self._tr:
+                self._tr.emit(UPLOAD, now, client=c, version=job["version"],
+                              lag=int(stal), bytes=float(per_unit.sum()),
+                              status="accepted")
+            self.buffer.append((delta, stal, ~mask_v, per_unit,
+                                job["down_bytes"], job["ht"]))
+            self.ins.accepted.inc()
+            merged = False
+            if len(self.buffer) >= self.serve_cfg.buffer_size:
+                self._merge(now)
+                merged = True
+            self.g_buffer.set(len(self.buffer))
+            self.g_inflight.set(len(self.jobs))
+            self._mutated()
+            return {"status": "accepted", "version": self.version,
+                    "merged": merged, "staleness": int(stal),
+                    "bytes": float(per_unit.sum()),
+                    "buffer_fill": len(self.buffer)}
+
+    def _merge(self, now: float) -> None:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[b[0] for b in self.buffer])
+        stal_arr = jnp.asarray([b[1] for b in self.buffer], jnp.int32)
+        valid_np = np.stack([b[2] for b in self.buffer])
+        alpha_t = self.serve_cfg.staleness_alpha
+        cur_mask = np.asarray(self.luar_state.mask)
+        if self.policy.weighted:
+            hts = np.asarray([b[5] for b in self.buffer], np.float64)
+            hts = np.minimum(hts, HT_CLIP * hts.min())
+            self.params, self.luar_state, self.server_state = self.agg_fn(
+                self.params, self.luar_state, self.server_state, stacked,
+                stal_arr, jnp.asarray(valid_np), jnp.float32(alpha_t),
+                jnp.asarray(hts, jnp.float32))
+        else:
+            self.params, self.luar_state, self.server_state = self.agg_fn(
+                self.params, self.luar_state, self.server_state, stacked,
+                stal_arr, jnp.asarray(valid_np), jnp.float32(alpha_t))
+        if self.has_delta:
+            # price the delta step this aggregation created (same
+            # eff-and-current rule as the engine: see _run_fedbuff)
+            eff_mask = ~np.any(valid_np, axis=0)
+            self.delta_ledger.record_step(
+                self.version, delta_step_price(self.sizes,
+                                               eff_mask & cur_mask))
+        n_merged = len(self.buffer)
+        self.buffer.clear()
+        self.version += 1
+        self.ins.rounds.inc()
+        self.g_version.set(self.version)
+        if self._tr:
+            self._tr.emit(AGGREGATE, now, version=self.version, n=n_merged,
+                          alpha=float(alpha_t),
+                          recycled=[int(i) for i in
+                                    np.flatnonzero(~np.any(valid_np,
+                                                           axis=0))])
+
+    # -- read-only views ------------------------------------------------
+
+    def status(self) -> Dict[str, Any]:
+        with self._lock:
+            val = self.telemetry.metrics.value
+            return {
+                "schema": STATUS_SCHEMA,
+                "version": int(self.version),
+                "rounds_done": int(self.version),
+                "buffer_fill": len(self.buffer),
+                "buffer_size": int(self.serve_cfg.buffer_size),
+                "inflight": len(self.jobs),
+                "clients_seen": len(self.last_dl),
+                "accepted": int(val(M_ACCEPTED)),
+                "rejected": int(val(M_LEDGER_MISSES)),
+                "dispatches": int(val(M_DISPATCHES)),
+                "uploaded_mb": val(M_UPLOAD_BYTES) / 1e6,
+                "downloaded_mb": val(M_DOWNLOAD_BYTES) / 1e6,
+                "downloads_full": int(val(M_DOWNLOADS_FULL)),
+                "downloads_delta": int(val(M_DOWNLOADS_DELTA)),
+                "ledger": {
+                    "mask_entries": len(self.mask_ledger),
+                    "delta_entries": (len(self.delta_ledger)
+                                      if self.delta_ledger is not None
+                                      else 0),
+                    "evictions_mask": int(val(M_LEDGER_EVICTIONS,
+                                              ledger="mask")),
+                    "evictions_delta": int(val(M_LEDGER_EVICTIONS,
+                                               ledger="delta")),
+                },
+                "uptime_s": round(self.uptime(), 3),
+            }
+
+    def metrics_text(self) -> str:
+        with self._lock:
+            return prom.exposition(self.telemetry.metrics)

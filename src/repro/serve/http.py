@@ -1,0 +1,190 @@
+"""HTTP transport for the round server (stdlib only).
+
+Endpoints (JSON bodies unless noted):
+
+  POST /v1/dispatch   {"client": int}
+                      -> versioned broadcast (base64 npz in "params"),
+                         recycle mask, downlink pricing
+  POST /v1/upload     {"client": int, "version": int, "update": b64 npz}
+                      -> accepted/rejected, merge outcome, buffer fill
+  GET  /v1/status     -> round/version/buffer/byte-ledger summary
+  GET  /metrics       -> Prometheus text 0.0.4 (``obs.prom.CONTENT_TYPE``)
+
+Service errors map to HTTP codes via ``ServeError.status`` (503 policy
+refusal, 409 unknown dispatch / version mismatch / busy, 400 malformed).
+``ThreadingHTTPServer`` + the core's lock give one-mutation-at-a-time
+semantics under concurrent clients.
+
+Standalone:
+
+  PYTHONPATH=src python -m repro.serve.http --clients 16 --port 8080 \\
+      --ckpt out/serve            # kill -9 it; then add --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs import prom
+from repro.serve import wire
+from repro.serve.core import RoundServer, ServeError
+
+JSON_TYPE = "application/json"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-serve/1"
+    protocol_version = "HTTP/1.1"
+
+    @property
+    def rs(self) -> RoundServer:
+        return self.server.round_server
+
+    def log_message(self, fmt, *args):     # quiet by default
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    def _send(self, code: int, body: bytes, ctype: str) -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _json(self, code: int, doc) -> None:
+        self._send(code, (json.dumps(doc) + "\n").encode(), JSON_TYPE)
+
+    def do_GET(self):
+        if self.path == "/v1/status":
+            self._json(200, self.rs.status())
+        elif self.path == "/metrics":
+            self._send(200, self.rs.metrics_text().encode(),
+                       prom.CONTENT_TYPE)
+        else:
+            self._json(404, {"error": f"unknown path {self.path!r}"})
+
+    def do_POST(self):
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            body = json.loads(self.rfile.read(n) or b"{}")
+            if self.path == "/v1/dispatch":
+                out = self.rs.dispatch(int(body["client"]))
+                out["params"] = wire.encode_tree(out.pop("broadcast"))
+                self._json(200, out)
+            elif self.path == "/v1/upload":
+                update = wire.decode_tree(body["update"], self.rs.params)
+                out = self.rs.upload(int(body["client"]), update,
+                                     body.get("version"))
+                self._json(200, out)
+            else:
+                self._json(404, {"error": f"unknown path {self.path!r}"})
+        except ServeError as e:
+            self._json(e.status, {"error": str(e),
+                                  "kind": type(e).__name__})
+        except (KeyError, TypeError, ValueError, json.JSONDecodeError) as e:
+            self._json(400, {"error": f"malformed request: {e}"})
+
+
+class ServeHTTP(ThreadingHTTPServer):
+    daemon_threads = True
+
+    def __init__(self, addr, round_server: RoundServer,
+                 verbose: bool = False):
+        super().__init__(addr, _Handler)
+        self.round_server = round_server
+        self.verbose = verbose
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.server_address[0]}:{self.port}"
+
+
+def start(round_server: RoundServer, host: Optional[str] = None,
+          port: Optional[int] = None, verbose: bool = False) -> ServeHTTP:
+    """Bind + serve in a daemon thread; returns the server (``.url``)."""
+    sc = round_server.serve_cfg
+    httpd = ServeHTTP((host if host is not None else sc.host,
+                       sc.port if port is None else port),
+                      round_server, verbose)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True,
+                         name="repro-serve-http")
+    httpd._thread = t
+    t.start()
+    return httpd
+
+
+def stop(httpd: ServeHTTP, checkpoint: bool = True) -> None:
+    """Clean shutdown: stop accepting, join the loop, final snapshot."""
+    httpd.shutdown()
+    if httpd._thread is not None:
+        httpd._thread.join(timeout=30)
+    httpd.server_close()
+    if checkpoint:
+        httpd.round_server.checkpoint()
+
+
+def main(argv=None) -> int:
+    import jax
+
+    from repro.core import LuarConfig
+    from repro.fl.client import ClientConfig
+    from repro.fl.rounds import FLConfig
+    from repro.fl.server import ServerConfig
+    from repro.models.cnn import mlp_init
+    from repro.serve.state import ServeConfig
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--buffer", type=int, default=4)
+    ap.add_argument("--delta", type=int, default=2, help="LUAR recycle count")
+    ap.add_argument("--codecs", default="down:delta",
+                    help="comma-joined codec specs ('' = none)")
+    ap.add_argument("--participation", default="uniform")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--ckpt", default="", help="WAL snapshot prefix")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore state from --ckpt before serving")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    params = mlp_init(jax.random.PRNGKey(args.seed), n_features=32,
+                      n_classes=10)
+    cfg = FLConfig(
+        n_clients=args.clients, n_active=min(8, args.clients), tau=2,
+        batch_size=16, rounds=10 ** 9, seed=args.seed,
+        client=ClientConfig(lr=0.05), server=ServerConfig(),
+        luar=LuarConfig(delta=args.delta),
+        codecs=tuple(s for s in args.codecs.split(",") if s),
+        participation=args.participation)
+    sc = ServeConfig(buffer_size=args.buffer, ckpt_path=args.ckpt,
+                     host=args.host, port=args.port)
+    if args.resume:
+        rs = RoundServer.resume(params, cfg, sc)
+        print(f"# resumed at version {rs.version} "
+              f"({rs.mutations} mutations)")
+    else:
+        rs = RoundServer(params, cfg, sc)
+    httpd = start(rs, verbose=args.verbose)
+    print(f"# serving on {httpd.url}  (model: mlp 32->10, "
+          f"{rs.n_units} units; ctrl-c for clean shutdown)")
+    try:
+        httpd._thread.join()
+    except KeyboardInterrupt:
+        stop(httpd)
+        print(f"# clean shutdown at version {rs.version}"
+              + (f"; snapshot -> {args.ckpt}.npz" if args.ckpt else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

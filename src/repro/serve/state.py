@@ -1,0 +1,250 @@
+"""The round service's recoverable state — snapshot/restore layout.
+
+Everything the fedbuff aggregation loop keeps between two HTTP requests
+is packed into ONE atomic checkpoint (``checkpoint.ckpt.save_arrays``):
+
+  arrays (npz)                       meta (json)
+  ------------------------------     --------------------------------
+  params/*        model pytree       schema, version, mutations
+  luar/*          LuarState          buffer row scalars (staleness,
+  server/*        ServerState         down_bytes, ht)
+  down/*          downlink codec     inflight job scalars
+  codec/<cid>/*   per-client codec   last_dl map, codec client ids
+  buffer/<i>/*    buffered deltas    ledger version order + evictions
+  job/<cid>/*     inflight masks     np/policy RNG bit-generator state
+  maskledger/<v>  dispatched masks   policy scalar attributes
+  deltaledger/<v> delta step prices  metrics registry state_dict
+  rng/*           jax key streams    config fingerprint
+  policy/*        policy arrays
+  part_count      dispatches/client
+
+The snapshot is written AFTER every state mutation (write-ahead with
+respect to the next request: a ``kill -9`` between two uploads finds
+either the pre- or post-mutation state on disk, never a torn one —
+``save_arrays`` replaces tmp files atomically).  Restore rebuilds every
+tree against the freshly initialized server's own structures as
+templates, restores both numpy bit-generator states and the metrics
+registry, and refuses a snapshot whose config fingerprint (population
+size, buffer size, codec specs, participation spec) does not match the
+server it is being loaded into.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+STATE_SCHEMA = 1
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Service-level knobs (the learning config stays ``FLConfig``)."""
+    buffer_size: int = 4         # K uploads per LUAR merge (1 = FedAsync)
+    staleness_alpha: float = 0.5  # discount (1+tau)^-alpha at merge
+    ledger_capacity: int = 64    # mask/delta ring size (versions)
+    ckpt_path: str = ""          # WAL snapshot prefix ("" = no persistence)
+    ckpt_every: int = 1          # state mutations between WAL snapshots
+    host: str = "127.0.0.1"      # HTTP bind address
+    port: int = 0                # 0 = ephemeral
+
+
+def _fingerprint(server) -> Dict[str, Any]:
+    cfg = server.cfg
+    return {"n_clients": int(cfg.n_clients), "seed": int(cfg.seed),
+            "codecs": list(cfg.codecs), "participation": cfg.participation,
+            "buffer_size": int(server.serve_cfg.buffer_size),
+            "luar_delta": int(cfg.luar.delta), "luar_mode": cfg.luar.mode}
+
+
+def _policy_state(policy) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Split a policy's instance attrs into (arrays, json-able scalars);
+    the policy's own RNG stream rides in the scalars as bit-gen state."""
+    arrays: Dict[str, np.ndarray] = {}
+    scalars: Dict[str, Any] = {}
+    for k, v in vars(policy).items():
+        if isinstance(v, np.ndarray):
+            arrays[k] = v
+        elif isinstance(v, (bool, int, float)):
+            scalars[k] = v
+        elif isinstance(v, np.random.Generator):
+            scalars[k + "@rng"] = v.bit_generator.state
+    return arrays, scalars
+
+
+def _restore_policy(policy, arrays: Dict[str, np.ndarray],
+                    scalars: Dict[str, Any]) -> None:
+    for k, v in arrays.items():
+        setattr(policy, k, v.copy())
+    for k, v in scalars.items():
+        if k.endswith("@rng"):
+            gen = np.random.default_rng()
+            gen.bit_generator.state = v
+            setattr(policy, k[:-4], gen)
+        else:
+            setattr(policy, k, v)
+
+
+def snapshot(server) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Pack a ``RoundServer``'s full mutable state (see module doc)."""
+    arrays: Dict[str, np.ndarray] = {}
+    arrays.update(ckpt.flatten_tree(server.params, "params/"))
+    arrays.update(ckpt.flatten_tree(server.luar_state, "luar/"))
+    arrays.update(ckpt.flatten_tree(server.server_state, "server/"))
+    if server.down_pipe:
+        arrays.update(ckpt.flatten_tree(server.down_state, "down/"))
+    arrays["rng/key"] = np.asarray(server.key)
+    arrays["rng/down_key"] = np.asarray(server.down_key)
+    arrays["part_count"] = server.part_count
+
+    for cid, st in server.codec_states.items():
+        arrays.update(ckpt.flatten_tree(st, f"codec/{cid}/"))
+    buffer_meta = []
+    for i, (delta, stal, valid, per_unit, down_bytes, ht) in enumerate(
+            server.buffer):
+        arrays.update(ckpt.flatten_tree(delta, f"buffer/{i}/delta/"))
+        arrays[f"buffer/{i}/valid"] = np.asarray(valid, bool)
+        arrays[f"buffer/{i}/per_unit"] = np.asarray(per_unit, np.float64)
+        buffer_meta.append({"staleness": int(stal),
+                            "down_bytes": float(down_bytes),
+                            "ht": float(ht)})
+    jobs_meta = {}
+    for cid, job in server.jobs.items():
+        arrays[f"job/{cid}/mask"] = np.asarray(job["mask"], bool)
+        arrays[f"job/{cid}/per_unit"] = np.asarray(job["per_unit"],
+                                                   np.float64)
+        jobs_meta[str(cid)] = {"version": int(job["version"]),
+                               "bytes": float(job["bytes"]),
+                               "down_bytes": float(job["down_bytes"]),
+                               "ht": float(job["ht"])}
+
+    mask_entries, mask_ev = server.mask_ledger.export_state()
+    for v, mask in mask_entries:
+        arrays[f"maskledger/{v}"] = np.asarray(mask, bool)
+    ledgers: Dict[str, Any] = {
+        "mask": {"versions": [int(v) for v, _ in mask_entries],
+                 "evictions": int(mask_ev)}}
+    if server.delta_ledger is not None:
+        delta_entries, delta_ev = server.delta_ledger.export_state()
+        for v, (price, _tree) in delta_entries:
+            arrays[f"deltaledger/{v}"] = np.asarray(price, np.float64)
+        ledgers["delta"] = {"versions": [int(v) for v, _ in delta_entries],
+                            "evictions": int(delta_ev)}
+
+    pol_arrays, pol_scalars = _policy_state(server.policy)
+    for k, v in pol_arrays.items():
+        arrays[f"policy/{k}"] = v
+
+    meta = {
+        "schema": STATE_SCHEMA,
+        "version": int(server.version),
+        "mutations": int(server.mutations),
+        "uptime_s": float(server.uptime()),
+        "buffer": buffer_meta,
+        "jobs": jobs_meta,
+        "last_dl": {str(c): int(v) for c, v in server.last_dl.items()},
+        "codec_clients": sorted(server.codec_states),
+        "ledgers": ledgers,
+        "rng_np": server.rng.bit_generator.state,
+        "policy_scalars": pol_scalars,
+        "policy_arrays": sorted(pol_arrays),
+        "metrics": server.telemetry.metrics.state_dict(),
+        "config": _fingerprint(server),
+    }
+    return arrays, meta
+
+
+def save(server) -> str:
+    path = server.serve_cfg.ckpt_path
+    arrays, meta = snapshot(server)
+    ckpt.save_arrays(path, arrays, meta)
+    return path
+
+
+def load_into(server, path: str) -> None:
+    """Restore a snapshot into a freshly constructed ``RoundServer`` —
+    the fresh instance's own (deterministically initialized) structures
+    are the unflatten templates."""
+    arrays, meta = ckpt.load_arrays(path)
+    if meta.get("schema") != STATE_SCHEMA:
+        raise ValueError(f"{path}: serve state schema "
+                         f"{meta.get('schema')!r} != {STATE_SCHEMA}")
+    want = _fingerprint(server)
+    got = meta.get("config", {})
+    drift = {k: (got.get(k), v) for k, v in want.items()
+             if got.get(k) != v}
+    if drift:
+        raise ValueError(
+            f"{path}: snapshot was taken by a differently configured "
+            f"server — mismatched (saved, expected): {drift}")
+
+    lbl = path
+    server.params = ckpt.unflatten_like(server.params, arrays, "params/", lbl)
+    server.luar_state = ckpt.unflatten_like(server.luar_state, arrays,
+                                            "luar/", lbl)
+    server.server_state = ckpt.unflatten_like(server.server_state, arrays,
+                                              "server/", lbl)
+    if server.down_pipe:
+        server.down_state = ckpt.unflatten_like(server.down_state, arrays,
+                                                "down/", lbl)
+    server.key = jnp.asarray(arrays["rng/key"])
+    server.down_key = jnp.asarray(arrays["rng/down_key"])
+    server.part_count = arrays["part_count"].copy()
+
+    server.codec_states = {}
+    for cid in meta["codec_clients"]:
+        template = server.fresh_codec_state()
+        server.codec_states[int(cid)] = ckpt.unflatten_like(
+            template, arrays, f"codec/{cid}/", lbl)
+
+    server.buffer = []
+    for i, row in enumerate(meta["buffer"]):
+        delta = ckpt.unflatten_like(server.params, arrays,
+                                    f"buffer/{i}/delta/", lbl)
+        server.buffer.append((delta, int(row["staleness"]),
+                              arrays[f"buffer/{i}/valid"].copy(),
+                              arrays[f"buffer/{i}/per_unit"].copy(),
+                              float(row["down_bytes"]), float(row["ht"])))
+
+    server.jobs = {}
+    for cid_s, job in meta["jobs"].items():
+        cid = int(cid_s)
+        server.jobs[cid] = {
+            "version": int(job["version"]),
+            "mask": arrays[f"job/{cid}/mask"].copy(),
+            "per_unit": arrays[f"job/{cid}/per_unit"].copy(),
+            "bytes": float(job["bytes"]),
+            "down_bytes": float(job["down_bytes"]),
+            "ht": float(job["ht"]),
+        }
+    server.last_dl = {int(c): int(v)
+                      for c, v in meta["last_dl"].items()}
+
+    mk = meta["ledgers"]["mask"]
+    server.mask_ledger.import_state(
+        [(v, arrays[f"maskledger/{v}"].copy()) for v in mk["versions"]],
+        mk["evictions"])
+    if server.delta_ledger is not None:
+        dl = meta["ledgers"].get("delta")
+        if dl is None:
+            raise ValueError(f"{path}: snapshot lacks the delta ledger this "
+                             "server's downlink codecs require")
+        server.delta_ledger.import_state(
+            [(v, (arrays[f"deltaledger/{v}"].copy(), None))
+             for v in dl["versions"]], dl["evictions"])
+
+    server.rng = np.random.default_rng()
+    server.rng.bit_generator.state = meta["rng_np"]
+    _restore_policy(server.policy,
+                    {k: arrays[f"policy/{k}"]
+                     for k in meta["policy_arrays"]},
+                    meta["policy_scalars"])
+
+    server.telemetry.metrics.load_state_dict(meta["metrics"])
+    server.version = int(meta["version"])
+    server.mutations = int(meta["mutations"])
+    server.set_uptime(float(meta["uptime_s"]))

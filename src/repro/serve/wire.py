@@ -1,0 +1,47 @@
+"""Wire format for the round-service HTTP API.
+
+Pytrees cross the wire as base64-encoded npz archives inside JSON
+bodies: the same "/"-joined key paths the checkpoint layer uses, so a
+payload is decodable against any structure template (`decode_tree`)
+and the encoding is exact — raw IEEE-754 bytes, no text round-trip of
+float values.  This is a TRANSPORT encoding, not the compression
+accounting: byte *pricing* still runs through the codec pipelines on
+the server (the npz container would otherwise make the measured sizes
+codec-dependent in uninteresting ways).
+"""
+from __future__ import annotations
+
+import base64
+import binascii
+import io
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.checkpoint.ckpt import flatten_tree, unflatten_like
+
+
+def encode_arrays(arrays: Dict[str, np.ndarray]) -> str:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    return base64.b64encode(buf.getvalue()).decode("ascii")
+
+
+def decode_arrays(b64: str) -> Dict[str, np.ndarray]:
+    try:
+        raw = base64.b64decode(b64.encode("ascii"), validate=True)
+        with np.load(io.BytesIO(raw)) as data:
+            return dict(data)
+    except (binascii.Error, EOFError, OSError, UnicodeError) as e:
+        raise ValueError(f"undecodable wire payload: {e}") from None
+
+
+def encode_tree(tree: Any) -> str:
+    """Pytree -> base64 npz string (leaf paths as archive keys)."""
+    return encode_arrays(flatten_tree(tree))
+
+
+def decode_tree(b64: str, like: Any) -> Any:
+    """Inverse of ``encode_tree`` against a structure template; raises
+    ``ValueError`` listing missing/mismatched keys on a bad payload."""
+    return unflatten_like(like, decode_arrays(b64), label="wire payload")

@@ -13,8 +13,8 @@ deadlines, dropout, and FedBuff-style buffered async aggregation.
 from repro.configs.base import (SIM_SCENARIOS, SimScenario,  # noqa: F401
                                 get_scenario, validate_scenario)
 from repro.sim.engine import (DeltaLedger, MaskLedger, SimConfig,  # noqa: F401
-                              SimResult, VersionLedger, run_sim,
-                              time_to_target)
+                              SimResult, VersionLedger,
+                              make_buffer_agg_fn, run_sim, time_to_target)
 from repro.sim.events import (ARRIVAL, DEADLINE, DROPOUT, Event,  # noqa: F401
                               EventQueue)
 from repro.sim.profiles import describe, sample_resources  # noqa: F401

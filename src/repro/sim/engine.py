@@ -77,7 +77,7 @@ import bisect
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +152,26 @@ class VersionLedger:
     def get(self, version: int) -> Optional[Any]:
         """The record at ``version``, or None if evicted/never seen."""
         return self._entries.get(version)
+
+    # -- state extraction (repro.serve checkpointing) -------------------
+    # The ledgers are part of the server's recoverable state: a resumed
+    # round server must reject/price exactly what the killed one would
+    # have, so the ENTRY ORDER (eviction order) and the eviction counter
+    # both round-trip.
+
+    def export_state(self) -> Tuple[List[Tuple[int, Any]], int]:
+        """(ordered entries, eviction count) — insertion order preserved."""
+        return list(self._entries.items()), self.evictions
+
+    def import_state(self, entries: List[Tuple[int, Any]],
+                     evictions: int = 0) -> None:
+        """Replace contents with ``entries`` (oldest first), bypassing the
+        ``on_evict`` hook — restoring is not evicting."""
+        if len(entries) > self.capacity:
+            raise ValueError(f"cannot import {len(entries)} entries into a "
+                             f"capacity-{self.capacity} ledger")
+        self._entries = OrderedDict((int(v), val) for v, val in entries)
+        self.evictions = int(evictions)
 
 
 class MaskLedger(VersionLedger):
@@ -230,6 +250,56 @@ class DeltaLedger(VersionLedger):
                                f"is not reconstructible")
             out = jax.tree.map(lambda p, d: p + d, out, entry[1])
         return out
+
+
+def make_buffer_agg_fn(cfg: FLConfig, um, fedasync: bool = False):
+    """The jitted buffered-aggregation body — ONE function shared by the
+    fedbuff engine and the ``repro.serve`` round service, so the live
+    server's merge is bit-for-bit the simulator's.
+
+    Per-unit validity merge: a unit is averaged only over the clients
+    whose dispatched mask says they uploaded it; the weight mass of
+    clients that skipped a unit goes to the recycled direction
+    (fallback), which keeps small stale subsets from being blown up to
+    full magnitude under non-IID data.  ``ht`` (biased policies only;
+    None leaves the trace bit-for-bit) folds the policy's
+    inverse-inclusion-probability weights into the same normalization,
+    so selection bias and staleness discounting are corrected by ONE
+    self-normalizing merge.  With ``cfg.luar.fused_agg`` the merge +
+    select + Eq. (1) norms collapse into one batched Pallas sweep
+    (same math, see ``core.fused_buffer_round``).
+    """
+
+    @jax.jit
+    def agg_fn(params, luar_state, server_state, stacked, staleness,
+               validity, alpha_t, ht=None):
+        if cfg.luar.fused_agg:
+            applied, luar_state = fused_buffer_round(
+                luar_state, um, cfg.luar, stacked, staleness, alpha_t,
+                params, validity=validity, ht=ht, fedasync=fedasync)
+        else:
+            fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
+                                             validity=validity, um=um,
+                                             fallback=luar_state.prev_update,
+                                             ht=ht)
+            if fedasync:
+                # a K=1 buffer renormalizes any discount back to 1, so the
+                # staleness weight must scale the server mixing rate
+                # instead: x <- x + (1+tau)^-alpha * delta  (FedAsync)
+                eta = staleness_discount(staleness[0], alpha_t)
+                fresh = jax.tree.map(lambda l: l * eta, fresh)
+            # units NO valid client uploaded recycle prev_update; when
+            # every buffered client saw the current mask this is
+            # state.mask exactly
+            eff_mask = ~jnp.any(validity, axis=0)
+            applied, luar_state = luar_round(luar_state, um, cfg.luar,
+                                             fresh, params,
+                                             mask_override=eff_mask)
+        params, server_state = apply_update(params, applied, server_state,
+                                            cfg.server)
+        return params, luar_state, server_state
+
+    return agg_fn
 
 
 @dataclass
@@ -874,45 +944,9 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
             codec_states[c] = pipeline.init_state(init_params, um)
         return codec_states[c]
 
-    @jax.jit
-    def agg_fn(params, luar_state, server_state, stacked, staleness,
-               validity, alpha_t, ht=None):
-        # per-unit validity merge: a unit is averaged only over the clients
-        # whose dispatched mask says they uploaded it; the weight mass of
-        # clients that skipped a unit goes to the recycled direction
-        # (fallback), which keeps small stale subsets from being blown up
-        # to full magnitude under non-IID data.  ``ht`` (biased policies
-        # only; None leaves the trace bit-for-bit) folds the policy's
-        # inverse-inclusion-probability weights into the same
-        # normalization, so selection bias and staleness discounting are
-        # corrected by ONE self-normalizing merge
-        if cfg.luar.fused_agg:
-            # merge + select + Eq. (1) norms collapse into ONE batched
-            # Pallas sweep (same math, see core.fused_buffer_round)
-            applied, luar_state = fused_buffer_round(
-                luar_state, um, cfg.luar, stacked, staleness, alpha_t,
-                params, validity=validity, ht=ht, fedasync=fedasync)
-        else:
-            fresh = staleness_weighted_merge(stacked, staleness, alpha_t,
-                                             validity=validity, um=um,
-                                             fallback=luar_state.prev_update,
-                                             ht=ht)
-            if fedasync:
-                # a K=1 buffer renormalizes any discount back to 1, so the
-                # staleness weight must scale the server mixing rate
-                # instead: x <- x + (1+tau)^-alpha * delta  (FedAsync)
-                eta = staleness_discount(staleness[0], alpha_t)
-                fresh = jax.tree.map(lambda l: l * eta, fresh)
-            # units NO valid client uploaded recycle prev_update; when
-            # every buffered client saw the current mask this is
-            # state.mask exactly
-            eff_mask = ~jnp.any(validity, axis=0)
-            applied, luar_state = luar_round(luar_state, um, cfg.luar,
-                                             fresh, params,
-                                             mask_override=eff_mask)
-        params, server_state = apply_update(params, applied, server_state,
-                                            cfg.server)
-        return params, luar_state, server_state
+    # the merge body is SHARED with the repro.serve round service (one
+    # definition, one trace): see make_buffer_agg_fn
+    agg_fn = make_buffer_agg_fn(cfg, um, fedasync)
 
     queue = EventQueue()
     ledger = MaskLedger(sim.ledger_capacity, on_evict=_evict_hook("mask"))

@@ -1,8 +1,8 @@
-"""End-to-end driver smoke tests: the CLI trainer and the serving loop."""
+"""End-to-end driver smoke tests: the CLI trainer and the decode loop."""
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.serve import serve
+from repro.launch.generate import serve
 from repro.launch.train import main as train_main
 
 

@@ -1,0 +1,417 @@
+"""repro.serve — the FL round service.
+
+Load-bearing checks:
+
+1. KILL-AND-RESUME IS LOSSLESS: a server killed between two uploads and
+   resumed from its write-ahead snapshot finishes a fixed request tape
+   with BITWISE-identical params, byte ledgers, /metrics exposition and
+   /v1/status versus a never-killed server fed the same tape — at every
+   kill point.
+2. Ledger eviction survives a restart: a dispatch whose recycle mask is
+   evicted mid-flight is rejected identically (counters and all) whether
+   or not the server was killed and resumed in between.
+3. GOLDEN ENDPOINTS: with an injected zero clock, /v1/status and
+   /metrics are byte-stable across independent runs and match the pinned
+   schema.
+4. The checkpoint substrate: atomic save (no torn snapshots trusted),
+   restore errors that NAME every missing/mismatched key.
+5. The HTTP wire end-to-end (the CI smoke via ``repro.serve.client``),
+   error-to-status-code mapping, metrics state_dict round-trip, the
+   measured link trace, and the launch/serve -> launch/generate rename.
+"""
+import json
+import os
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.obs import MetricsRegistry, Telemetry
+from repro.serve import http as serve_http
+from repro.serve.client import ServeClient, _build_workload, make_clients
+from repro.serve.core import (ClientBusy, ClientUnavailable, RoundServer,
+                              ServeError, UnknownDispatch, VersionMismatch)
+from repro.serve.state import ServeConfig
+
+N_CLIENTS = 4
+
+
+def workload(n=N_CLIENTS, codecs="down:delta", buffer_size=3):
+    return _build_workload(n, 0, buffer_size, codecs)
+
+
+def request_tape(n_ops, n_clients=N_CLIENTS, seed=7):
+    """Deterministic (kind, client, update-seed) request sequence with a
+    dispatch always preceding its upload."""
+    rng = np.random.default_rng(seed)
+    ops, inflight = [], set()
+    while len(ops) < n_ops:
+        c = int(rng.integers(n_clients))
+        if c in inflight:
+            ops.append(("upload", c, int(rng.integers(1 << 30))))
+            inflight.discard(c)
+        else:
+            ops.append(("dispatch", c, 0))
+            inflight.add(c)
+    return ops
+
+
+def fixed_update(template, useed):
+    r = np.random.default_rng(useed)
+    return jax.tree.map(lambda x: np.asarray(
+        r.standard_normal(np.shape(x)), np.float32) * 0.01, template)
+
+
+def drive(server, ops):
+    for kind, c, useed in ops:
+        if kind == "dispatch":
+            server.dispatch(c)
+        else:
+            server.upload(c, fixed_update(server.params, useed))
+
+
+def leaves_bitwise_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        and np.asarray(x).dtype == np.asarray(y).dtype
+        for x, y in zip(la, lb))
+
+
+# -- 1. crash recovery ------------------------------------------------------
+
+@pytest.mark.parametrize("kill_at", [1, 7, 14, 23])
+def test_kill_and_resume_bitwise(tmp_path, kill_at):
+    _, params, _, _, cfg, _ = workload()
+    ops = request_tape(24)
+
+    ref = RoundServer(params, cfg, ServeConfig(buffer_size=3),
+                      telemetry=Telemetry(), clock=lambda: 0.0)
+    drive(ref, ops)
+
+    sc = ServeConfig(buffer_size=3, ckpt_path=str(tmp_path / "wal"))
+    killed = RoundServer(params, cfg, sc, telemetry=Telemetry(),
+                         clock=lambda: 0.0)
+    drive(killed, ops[:kill_at])
+    del killed                              # the kill -9
+    resumed = RoundServer.resume(params, cfg, sc, telemetry=Telemetry(),
+                                 clock=lambda: 0.0)
+    drive(resumed, ops[kill_at:])
+
+    assert leaves_bitwise_equal(ref.params, resumed.params)
+    assert leaves_bitwise_equal(ref.luar_state, resumed.luar_state)
+    assert ref.version == resumed.version
+    assert ref.status() == resumed.status()
+    assert ref.metrics_text() == resumed.metrics_text()
+    # byte ledgers: same versions, bitwise-same recorded prices/masks
+    ma, mb = ref.mask_ledger.export_state(), resumed.mask_ledger.export_state()
+    assert [v for v, _ in ma[0]] == [v for v, _ in mb[0]]
+    assert all(np.array_equal(x[1], y[1]) for x, y in zip(ma[0], mb[0]))
+    da, db = (ref.delta_ledger.export_state(),
+              resumed.delta_ledger.export_state())
+    assert [v for v, _ in da[0]] == [v for v, _ in db[0]]
+    assert all(np.array_equal(x[1][0], y[1][0])
+               for x, y in zip(da[0], db[0]))
+
+
+def test_resume_restores_inflight_and_buffer(tmp_path):
+    _, params, _, _, cfg, _ = workload()
+    sc = ServeConfig(buffer_size=3, ckpt_path=str(tmp_path / "wal"))
+    srv = RoundServer(params, cfg, sc, telemetry=Telemetry(),
+                      clock=lambda: 0.0)
+    srv.dispatch(0)
+    srv.dispatch(1)
+    srv.upload(1, fixed_update(srv.params, 5))   # buffered, no merge yet
+    del srv
+    res = RoundServer.resume(params, cfg, sc, telemetry=Telemetry(),
+                             clock=lambda: 0.0)
+    assert set(res.jobs) == {0} and len(res.buffer) == 1
+    out = res.upload(0, fixed_update(res.params, 6))
+    assert out["status"] == "accepted" and out["buffer_fill"] == 2
+
+
+def test_resume_refuses_config_drift(tmp_path):
+    _, params, _, _, cfg, _ = workload()
+    sc = ServeConfig(buffer_size=3, ckpt_path=str(tmp_path / "wal"))
+    RoundServer(params, cfg, sc, telemetry=Telemetry()).checkpoint()
+    with pytest.raises(ValueError, match="differently configured"):
+        RoundServer.resume(params, cfg,
+                           ServeConfig(buffer_size=2,
+                                       ckpt_path=sc.ckpt_path),
+                           telemetry=Telemetry())
+
+
+# -- 2. eviction across restart --------------------------------------------
+
+def eviction_scenario(params, cfg, sc, kill_resume, tmp_path=None):
+    srv = RoundServer(params, cfg, sc, telemetry=Telemetry(),
+                      clock=lambda: 0.0)
+    srv.dispatch(0)                    # mask recorded at version 0
+    rounds = sc.ledger_capacity + 2    # enough merges to evict version 0
+
+    def one_round(s):
+        for c in (1, 2, 3):
+            s.dispatch(c)
+            s.upload(c, fixed_update(s.params, 100 + s.version * 10 + c))
+
+    for _ in range(rounds // 2):
+        one_round(srv)
+    if kill_resume:
+        del srv
+        srv = RoundServer.resume(params, cfg, sc, telemetry=Telemetry(),
+                                 clock=lambda: 0.0)
+    for _ in range(rounds - rounds // 2):
+        one_round(srv)
+    out = srv.upload(0, fixed_update(srv.params, 999))
+    return srv, out
+
+
+def test_ledger_eviction_across_restart(tmp_path):
+    _, params, _, _, cfg, _ = workload()
+    mk = lambda name: ServeConfig(buffer_size=3, ledger_capacity=4,
+                                  ckpt_path=str(tmp_path / name))
+    ref, out_ref = eviction_scenario(params, cfg, mk("a"), kill_resume=False)
+    res, out_res = eviction_scenario(params, cfg, mk("b"), kill_resume=True)
+    assert out_ref["status"] == "rejected"
+    assert out_ref["reason"] == "ledger_miss"
+    assert out_res == out_ref
+    assert ref.status() == res.status()
+    assert ref.status()["ledger"]["evictions_mask"] > 0
+    assert ref.metrics_text() == res.metrics_text()
+    assert leaves_bitwise_equal(ref.params, res.params)
+
+
+# -- 3. golden endpoints ----------------------------------------------------
+
+def http_fixture_run():
+    """3 clients x 2 rounds over the real wire with a zero clock."""
+    loss_fn, params, data, parts, cfg, _ = workload(3)
+    rs = RoundServer(params, cfg, ServeConfig(buffer_size=3),
+                     telemetry=Telemetry(), clock=lambda: 0.0)
+    httpd = serve_http.start(rs)
+    try:
+        clients = make_clients(3, httpd.url, loss_fn, params, data, parts,
+                               cfg, seed=0)
+        for _ in range(2):
+            for cl in clients:
+                assert cl.run_round()["status"] == "accepted"
+        status = json.loads(urllib.request.urlopen(
+            httpd.url + "/v1/status", timeout=30).read())
+        resp = urllib.request.urlopen(httpd.url + "/metrics", timeout=30)
+        metrics = resp.read().decode()
+        ctype = resp.headers["Content-Type"]
+    finally:
+        serve_http.stop(httpd, checkpoint=False)
+    return status, metrics, ctype
+
+
+def test_golden_status_and_metrics_byte_stable():
+    s1, m1, ctype = http_fixture_run()
+    s2, m2, _ = http_fixture_run()
+    assert s1 == s2                      # byte-stable under the zero clock
+    assert m1 == m2
+    assert ctype == "text/plain; version=0.0.4"
+
+    # the pinned /v1/status schema: 3 clients x 2 rounds, buffer of 3
+    assert s1["schema"] == 1
+    assert s1["version"] == 2 and s1["rounds_done"] == 2
+    assert s1["buffer_fill"] == 0 and s1["buffer_size"] == 3
+    assert s1["inflight"] == 0 and s1["clients_seen"] == 3
+    assert s1["accepted"] == 6 and s1["rejected"] == 0
+    assert s1["dispatches"] == 6
+    assert s1["downloads_full"] + s1["downloads_delta"] == 6
+    assert s1["uploaded_mb"] > 0 and s1["downloaded_mb"] > 0
+    assert s1["ledger"]["mask_entries"] >= 1
+    assert s1["uptime_s"] == 0.0
+
+    assert m1.startswith("# HELP")
+    for line in ("# TYPE fl_server_version gauge",
+                 "fl_server_version 2",
+                 "fl_server_buffer_fill 0",
+                 "fl_server_inflight_dispatches 0",
+                 "# TYPE fl_staleness_rounds histogram",
+                 "fl_rounds_total 2",
+                 "fl_updates_accepted_total 6"):
+        assert line in m1, f"missing exposition line: {line}"
+
+
+# -- 4. checkpoint substrate ------------------------------------------------
+
+def test_ckpt_atomic_save_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "snap")
+    ckpt.save_arrays(path, {"a": np.arange(4.0)}, {"note": 1})
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    arrays, meta = ckpt.load_arrays(path)
+    assert np.array_equal(arrays["a"], np.arange(4.0))
+    assert meta["note"] == 1 and meta["keys"] == ["a"]
+
+
+def test_ckpt_torn_snapshot_detected(tmp_path):
+    path = str(tmp_path / "snap")
+    ckpt.save_arrays(path, {"a": np.arange(4.0), "b": np.zeros(2)})
+    np.savez(path + ".npz", a=np.arange(4.0))      # lose "b" from the npz
+    with pytest.raises(ValueError, match=r"torn snapshot.*\['b'\]"):
+        ckpt.load_arrays(path)
+
+
+def test_ckpt_restore_names_every_offending_key(tmp_path):
+    path = str(tmp_path / "m")
+    like = {"w": np.zeros((2, 3)), "b": np.zeros(3), "extra": np.zeros(1)}
+    ckpt.save(path, {"w": np.zeros((2, 4)), "b": np.zeros(3)})
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(path, like)
+    msg = str(ei.value)
+    assert "extra" in msg and "w" in msg
+    assert "(2, 4)" in msg and "(2, 3)" in msg
+    # and the happy path round-trips
+    good = {"w": np.full((2, 3), 7.0), "b": np.arange(3.0)}
+    ckpt.save(path, good, step=5)
+    back, meta = ckpt.restore(path, {"w": np.zeros((2, 3)),
+                                     "b": np.zeros(3)})
+    assert np.array_equal(back["w"], good["w"]) and meta["step"] == 5
+
+
+# -- 5. wire, errors, satellites --------------------------------------------
+
+def test_http_smoke_cli():
+    from repro.serve.client import main
+    assert main(["--clients", "3", "--rounds", "2", "--buffer", "3"]) == 0
+
+
+def test_error_mapping_over_http():
+    _, params, _, _, cfg, _ = workload(3)
+    rs = RoundServer(params, cfg, ServeConfig(buffer_size=3),
+                     telemetry=Telemetry())
+    httpd = serve_http.start(rs)
+    try:
+        def post(path, body):
+            req = urllib.request.Request(
+                httpd.url + path, data=json.dumps(body).encode(),
+                headers={"Content-Type": "application/json"})
+            try:
+                with urllib.request.urlopen(req, timeout=30) as r:
+                    return r.status, json.loads(r.read())
+            except urllib.error.HTTPError as e:
+                return e.code, json.loads(e.read())
+
+        code, doc = post("/v1/upload", {"client": 0, "update": ""})
+        assert code == 400                                # malformed payload
+        code, doc = post("/v1/dispatch", {"client": 99})
+        assert code == 400 and "population" in doc["error"]
+        code, first = post("/v1/dispatch", {"client": 0})
+        assert code == 200 and first["version"] == 0 and first["first"]
+        code, doc = post("/v1/dispatch", {"client": 0})
+        assert code == 409 and doc["kind"] == "ClientBusy"
+        from repro.serve import wire
+        upd = wire.encode_tree(fixed_update(rs.params, 3))
+        code, doc = post("/v1/upload", {"client": 1, "update": upd})
+        assert code == 409 and doc["kind"] == "UnknownDispatch"
+        code, doc = post("/v1/upload",
+                         {"client": 0, "version": 41, "update": upd})
+        assert code == 409 and doc["kind"] == "VersionMismatch"
+        code, doc = post("/v1/upload",
+                         {"client": 0, "version": 0, "update": upd})
+        assert code == 200 and doc["status"] == "accepted"
+    finally:
+        serve_http.stop(httpd, checkpoint=False)
+
+
+def test_core_error_types():
+    _, params, _, _, cfg, _ = workload(3)
+    rs = RoundServer(params, cfg, ServeConfig(buffer_size=3),
+                     telemetry=Telemetry())
+    with pytest.raises(ServeError):
+        rs.dispatch(-1)
+    rs.dispatch(0)
+    with pytest.raises(ClientBusy):
+        rs.dispatch(0)
+    with pytest.raises(UnknownDispatch):
+        rs.upload(2, fixed_update(rs.params, 1))
+    with pytest.raises(VersionMismatch):
+        rs.upload(0, fixed_update(rs.params, 1), version=3)
+    assert issubclass(ClientUnavailable, ServeError)
+    assert ClientUnavailable.status == 503
+
+
+def test_sync_only_codec_refused():
+    _, params, _, _, cfg, _ = workload(3)
+    from dataclasses import replace
+    cfg = replace(cfg, codecs=("lbgm",))   # needs a synchronous view
+    with pytest.raises(NotImplementedError, match="lbgm"):
+        RoundServer(params, cfg, ServeConfig(), telemetry=Telemetry())
+
+
+def test_metrics_state_dict_roundtrip():
+    from repro.obs import prom
+    reg = MetricsRegistry()
+    a = reg.counter("t_total", "c").labels(kind="a")
+    for _ in range(3):
+        a.inc()
+    reg.counter("t_total", "c").labels(kind="b").inc()
+    reg.gauge("g", "g").labels().set(2.5)
+    h = reg.histogram("h", "h", buckets=(1, 2, 4)).labels()
+    for v in (0.5, 3, 9, 1.5):
+        h.observe(v)
+    doc = reg.state_dict()
+    doc = json.loads(json.dumps(doc))      # survives the JSON round trip
+    fresh = MetricsRegistry()
+    fresh.load_state_dict(doc)
+    assert prom.exposition(fresh) == prom.exposition(reg)
+
+
+def test_client_link_trace():
+    from repro.launch.mesh import LINK_MIX, MEASURED_LINK_BW, \
+        client_link_trace
+    tr = client_link_trace(100)
+    assert len(tr) == 100 and tr == client_link_trace(100)
+    counts = {name: sum(1 for t in tr if t[0] == name)
+              for name, _ in LINK_MIX}
+    assert counts == {"wan": 80, "metro": 15, "dcn": 4, "ici": 1}
+    assert all((up, down) == MEASURED_LINK_BW[name]
+               for name, up, down in tr)
+    assert [t[0] for t in client_link_trace(1)] == ["wan"]
+    assert sum(1 for t in client_link_trace(7) if t[0] == "wan") >= 5
+    with pytest.raises(ValueError):
+        client_link_trace(0)
+
+
+def test_launch_serve_shim_deprecated():
+    import importlib
+    import sys
+    import warnings
+    sys.modules.pop("repro.launch.serve", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mod = importlib.import_module("repro.launch.serve")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.launch import generate
+    assert mod.serve is generate.serve and mod.main is generate.main
+
+
+def test_wire_roundtrip_bitwise():
+    from repro.serve import wire
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.asarray([1.5, -2.25], np.float64)}}
+    b64 = wire.encode_tree(tree)
+    back = wire.decode_tree(b64, tree)
+    assert leaves_bitwise_equal(tree, back)
+
+
+def test_serve_client_pacing_sleeps(monkeypatch):
+    loss_fn, params, data, parts, cfg, _ = workload(3)
+    rs = RoundServer(params, cfg, ServeConfig(buffer_size=3),
+                     telemetry=Telemetry())
+    slept = []
+    import repro.serve.client as client_mod
+    monkeypatch.setattr(client_mod.time, "sleep",
+                        lambda s: slept.append(s))
+    cl = ServeClient(0, rs, loss_fn, params, data, parts[0], cfg,
+                     pace=1.0, link=("wan", 1.0e7, 4.1e7), seed=0)
+    out = cl.run_round()
+    assert out["status"] == "accepted"
+    assert len(slept) == 1 and slept[0] > 0
+    # WAN uplink at 10 MB/s dominates: the dwell is the byte time
+    assert slept[0] == pytest.approx(
+        out["down_bytes"] / 4.1e7 + cl._up_bytes / 1.0e7)
