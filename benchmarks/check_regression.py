@@ -16,9 +16,13 @@ Two modes:
     only catches step-function blowups — an accidentally interpreted
     kernel, a jit cache miss in the hot loop — not percent-level drift).
     Rows missing from fresh count as coverage regressions; new rows are
-    fine.  ``--soft`` demotes failure to a GitHub ``::warning::``
-    annotation and exit 0 (tier-1 stays green on a noisy runner; the
-    nightly full run uploads fresh artifacts for human eyes).
+    fine.  ``--soft`` demotes failure to a warning and exit 0 (tier-1
+    stays green on a noisy runner; the nightly full run uploads fresh
+    artifacts for human eyes).  ``--format=github`` renders every
+    message as a workflow-command annotation (``::error::`` when the
+    gate is hard, ``::warning::`` when soft or informational) so the CI
+    run surfaces them inline; the default ``text`` stays plain for
+    local shells.
 
       python -m benchmarks.run --record --only kernels --out-dir /tmp/b
       python -m benchmarks.check_regression \\
@@ -31,18 +35,24 @@ import glob
 import json
 import math
 import sys
-from typing import Dict, List
 
 from benchmarks.common import BENCH_SCHEMA
 
 REQUIRED_FOOTER = ("total_wall_s", "git_sha", "jax_version")
+
+
+def _emit(msg: str, kind: str, fmt: str, stream=None) -> None:
+    """Print ``msg`` plainly (text) or as a ``::error::``/``::warning::``
+    workflow command (github)."""
+    stream = stream or sys.stdout
+    print(f"::{kind}::{msg}" if fmt == "github" else msg, file=stream)
 # "dirty" is OPTIONAL footer (schema 1 back-compat: snapshots recorded
 # before the flag existed still load); when present and true the snapshot
 # was recorded from an uncommitted tree, so its stamped SHA alone cannot
 # reproduce the numbers — every consumer warns below.
 
 
-def dirty_warning(doc: Dict, path: str) -> str:
+def dirty_warning(doc: dict, path: str) -> str:
     """Non-empty message when a snapshot's footer says the tree was dirty
     at record time (or the flag is absent AND the snapshot claims an
     unknown sha)."""
@@ -53,7 +63,7 @@ def dirty_warning(doc: Dict, path: str) -> str:
     return ""
 
 
-def load_snapshot(path: str) -> Dict:
+def load_snapshot(path: str) -> dict:
     """Load + validate one BENCH_*.json snapshot; raise ValueError with
     the reason on any malformation."""
     try:
@@ -83,9 +93,9 @@ def load_snapshot(path: str) -> Dict:
     return doc
 
 
-def compare(baseline: Dict, fresh: Dict, tolerance: float) -> List[str]:
+def compare(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
     """Regression messages (empty = pass)."""
-    problems: List[str] = []
+    problems: list[str] = []
     base_rows = {r["name"]: r for r in baseline["rows"]}
     fresh_rows = {r["name"]: r for r in fresh["rows"]}
     for name, b in base_rows.items():
@@ -105,7 +115,7 @@ def compare(baseline: Dict, fresh: Dict, tolerance: float) -> List[str]:
     return problems
 
 
-def validate_committed(root: str = ".") -> int:
+def validate_committed(root: str = ".", fmt: str = "text") -> int:
     paths = sorted(glob.glob(f"{root}/BENCH_*.json"))
     if not paths:
         print(f"no BENCH_*.json snapshots under {root!r}", file=sys.stderr)
@@ -117,7 +127,7 @@ def validate_committed(root: str = ".") -> int:
               f"jax {doc['footer']['jax_version']}")
         warn = dirty_warning(doc, p)
         if warn:
-            print(f"::warning::{warn}", file=sys.stderr)
+            _emit(warn, "warning", fmt, sys.stderr)
     return 0
 
 
@@ -134,25 +144,29 @@ def main(argv=None) -> int:
                     help="on regression print ::warning:: and exit 0")
     ap.add_argument("--root", default=".",
                     help="where no-arg mode looks for BENCH_*.json")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="github = workflow-command annotations "
+                         "(::error:: hard, ::warning:: soft)")
     args = ap.parse_args(argv)
 
     if bool(args.baseline) != bool(args.fresh):
         ap.error("--baseline and --fresh must be given together")
     if not args.baseline:
-        return validate_committed(args.root)
+        return validate_committed(args.root, args.format)
 
     try:
         base = load_snapshot(args.baseline)
         fresh = load_snapshot(args.fresh)
     except ValueError as e:
-        print(f"::warning::{e}" if args.soft else str(e), file=sys.stderr)
+        _emit(str(e), "warning" if args.soft else "error", args.format,
+              sys.stderr)
         return 0 if args.soft else 2
     warn = dirty_warning(base, args.baseline)
     if warn:
         # never fatal: a dirty BASELINE is a provenance problem, not a
         # perf regression — flag it for human eyes in both modes
-        print(f"::warning::comparing against a dirty baseline — {warn}",
-              file=sys.stderr)
+        _emit(f"comparing against a dirty baseline — {warn}", "warning",
+              args.format, sys.stderr)
     problems = compare(base, fresh, args.tolerance)
     if not problems:
         print(f"perf gate ok: {len(fresh['rows'])} rows within "
@@ -160,8 +174,8 @@ def main(argv=None) -> int:
               f"(sha {base['footer']['git_sha']})")
         return 0
     for msg in problems:
-        print(f"::warning::perf regression — {msg}" if args.soft
-              else f"perf regression — {msg}")
+        _emit(f"perf regression — {msg}",
+              "warning" if args.soft else "error", args.format)
     return 0 if args.soft else 1
 
 

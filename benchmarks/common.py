@@ -17,7 +17,7 @@ import json
 import os
 import subprocess
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -63,9 +63,9 @@ def make_task(kind: str = "mixture", n_clients: int = 24, alpha: float = 0.1,
     return Task(loss_fn, eval_fn, params, {"x": x, "y": y}, parts)
 
 
-def fl(task: Task, rounds: int = 30, *, luar: Optional[LuarConfig] = None,
-       server: Optional[ServerConfig] = None, client: Optional[ClientConfig] = None,
-       codecs: Tuple[str, ...] = (),
+def fl(task: Task, rounds: int = 30, *, luar: LuarConfig | None = None,
+       server: ServerConfig | None = None, client: ClientConfig | None = None,
+       codecs: tuple[str, ...] = (),
        n_active: int = 8, tau: int = 5, eval_every: int = 0) -> FLResult:
     cfg = FLConfig(
         n_clients=len(task.parts), n_active=n_active, tau=tau, batch_size=16,
@@ -79,13 +79,13 @@ def fl(task: Task, rounds: int = 30, *, luar: Optional[LuarConfig] = None,
                   task.eval_fn)
 
 
-def timed(fn: Callable[[], FLResult]) -> Tuple[FLResult, float]:
+def timed(fn: Callable[[], FLResult]) -> tuple[FLResult, float]:
     t0 = time.time()
     res = fn()
     return res, time.time() - t0
 
 
-def emit(rows: List[Tuple[str, float, Dict]]):
+def emit(rows: list[tuple[str, float, dict]]):
     for name, secs, derived in rows:
         d = ";".join(f"{k}={v}" for k, v in derived.items())
         print(f"{name},{secs * 1e6:.0f},{d}")
@@ -119,7 +119,7 @@ def git_dirty() -> bool:
         return True
 
 
-def bench_record(suite: str, rows: List[Tuple[str, float, Dict]],
+def bench_record(suite: str, rows: list[tuple[str, float, dict]],
                  wall_s: float, quick: bool, out_dir: str = ".") -> str:
     """Persist one suite's rows as ``BENCH_<suite>.json``.
 

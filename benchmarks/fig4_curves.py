@@ -12,7 +12,7 @@ def rows(quick: bool = True):
         "fedluar": dict(luar=LuarConfig(delta=2, granularity="leaf")),
         "dropping": dict(luar=LuarConfig(delta=2, granularity="leaf", mode="drop")),
     }.items():
-        res, t = timed(lambda: fl(task, rounds, eval_every=max(rounds // 6, 1), **kw))
+        res, t = timed(lambda kw=kw: fl(task, rounds, eval_every=max(rounds // 6, 1), **kw))
         curve = "|".join(f"{h['comm_ratio']:.2f}:{h['acc']:.3f}" for h in res.history)
         out.append((f"fig4/{name}", t / rounds, {"curve(comm:acc)": curve}))
     return out

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Tuple
 
 from repro.launch.sweep import ARCHS, SHAPES, path_for
 
@@ -36,7 +35,7 @@ ADVICE = {
 HBM_GBPS = 1200.0               # v4-class reference bandwidth
 
 
-def server_agg_rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+def server_agg_rows(quick: bool = True) -> list[tuple[str, float, dict]]:
     """Bandwidth-bound roofline of the server aggregation round.
 
     Element traffic per full round, in model-sized f32 passes:
@@ -54,7 +53,7 @@ def server_agg_rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
     from benchmarks.kernels_bench import model_mb
     from repro.models.cnn import cnn_init
 
-    out: List[Tuple[str, float, Dict]] = []
+    out: list[tuple[str, float, dict]] = []
     params = cnn_init(jax.random.PRNGKey(0))
     mb = model_mb(params)
     for K in (1, 4) if quick else (1, 4, 16, 64):
@@ -75,7 +74,7 @@ def server_agg_rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
     return out
 
 
-def rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+def rows(quick: bool = True) -> list[tuple[str, float, dict]]:
     out = server_agg_rows(quick)
     meshes = (False,) if quick else (False, True)
     for arch in ARCHS:

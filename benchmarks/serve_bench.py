@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -34,7 +33,7 @@ from repro.serve.core import RoundServer
 
 
 def _drive(transport, loss_fn, params, data, parts, cfg, n_clients: int,
-           rounds: int, pace: float, seed: int) -> Tuple[float, Dict]:
+           rounds: int, pace: float, seed: int) -> tuple[float, dict]:
     clients = make_clients(n_clients, transport, loss_fn, params, data,
                            parts, cfg, pace=pace, seed=seed)
     t0 = time.perf_counter()
@@ -52,12 +51,12 @@ def _drive(transport, loss_fn, params, data, parts, cfg, n_clients: int,
     return wall / max(n, 1), derived
 
 
-def rows(quick: bool = True) -> List[Tuple[str, float, Dict]]:
+def rows(quick: bool = True) -> list[tuple[str, float, dict]]:
     n_clients, n_rounds = (4, 3) if quick else (8, 6)
     seed = 0
     loss_fn, params, data, parts, cfg, sc = _build_workload(
         n_clients, seed, buffer_size=n_clients - 1, codecs="down:delta")
-    out: List[Tuple[str, float, Dict]] = []
+    out: list[tuple[str, float, dict]] = []
 
     # -- floor: no transport, no pacing --------------------------------
     rs = RoundServer(params, cfg, sc, telemetry=Telemetry())

@@ -9,9 +9,9 @@ def rows(quick: bool = True):
     out = []
     for alpha in (0.1, 0.5, 1.0):
         task = make_task("mixture" if quick else "femnist", alpha=alpha)
-        base, t = timed(lambda: fl(task, rounds))
-        luar, _ = timed(lambda: fl(task, rounds,
-                                   luar=LuarConfig(delta=2, granularity="leaf")))
+        base, t = timed(lambda task=task: fl(task, rounds))
+        luar, _ = timed(lambda task=task: fl(
+            task, rounds, luar=LuarConfig(delta=2, granularity="leaf")))
         out.append((f"table13/alpha{alpha}", t / rounds, {
             "acc_fedavg": round(base.history[-1]["acc"], 4),
             "acc_fedluar": round(luar.history[-1]["acc"], 4),

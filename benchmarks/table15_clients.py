@@ -9,9 +9,10 @@ def rows(quick: bool = True):
     out = []
     for n_clients in (16, 32, 64):
         task = make_task("mixture" if quick else "femnist", n_clients=n_clients)
-        base, t = timed(lambda: fl(task, rounds, n_active=8))
-        luar, _ = timed(lambda: fl(task, rounds, n_active=8,
-                                   luar=LuarConfig(delta=2, granularity="leaf")))
+        base, t = timed(lambda task=task: fl(task, rounds, n_active=8))
+        luar, _ = timed(lambda task=task: fl(
+            task, rounds, n_active=8,
+            luar=LuarConfig(delta=2, granularity="leaf")))
         out.append((f"table15/clients{n_clients}", t / rounds, {
             "activation": round(8 / n_clients, 3),
             "acc_fedavg": round(base.history[-1]["acc"], 4),

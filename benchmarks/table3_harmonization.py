@@ -18,8 +18,8 @@ def rows(quick: bool = True):
     }
     out = []
     for name, kw in variants.items():
-        base, t1 = timed(lambda: fl(task, rounds, **kw))
-        with_luar, t2 = timed(lambda: fl(task, rounds, luar=luar, **kw))
+        base, t1 = timed(lambda kw=kw: fl(task, rounds, **kw))
+        with_luar, t2 = timed(lambda kw=kw: fl(task, rounds, luar=luar, **kw))
         out.append((f"table3/{name}", t1 / rounds, {
             "acc": round(base.history[-1]["acc"], 4),
             "acc_luar": round(with_luar.history[-1]["acc"], 4),

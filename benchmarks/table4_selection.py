@@ -10,9 +10,9 @@ def rows(quick: bool = True):
     out = []
     for scheme in ("luar", "random", "top", "bottom", "grad_norm",
                    "deterministic"):
-        res, t = timed(lambda: fl(task, rounds,
-                                  luar=LuarConfig(delta=2, scheme=scheme,
-                                                  granularity="leaf")))
+        res, t = timed(lambda scheme=scheme: fl(
+            task, rounds,
+            luar=LuarConfig(delta=2, scheme=scheme, granularity="leaf")))
         out.append((f"table4/{scheme}", t / rounds, {
             "acc": round(res.history[-1]["acc"], 4),
             "comm": round(res.comm_ratio, 3)}))

@@ -8,11 +8,11 @@ def rows(quick: bool = True):
     task = make_task("mixture" if quick else "femnist")
     out = []
     for delta in ((2, 3) if quick else (2, 3, 4)):
-        rec, t1 = timed(lambda: fl(task, rounds,
-                                   luar=LuarConfig(delta=delta, granularity="leaf")))
-        drp, t2 = timed(lambda: fl(task, rounds,
-                                   luar=LuarConfig(delta=delta, granularity="leaf",
-                                                   mode="drop")))
+        rec, t1 = timed(lambda delta=delta: fl(
+            task, rounds, luar=LuarConfig(delta=delta, granularity="leaf")))
+        drp, t2 = timed(lambda delta=delta: fl(
+            task, rounds, luar=LuarConfig(delta=delta, granularity="leaf",
+                                          mode="drop")))
         out.append((f"table5/delta{delta}", (t1 + t2) / (2 * rounds), {
             "acc_recycle": round(rec.history[-1]["acc"], 4),
             "acc_drop": round(drp.history[-1]["acc"], 4),

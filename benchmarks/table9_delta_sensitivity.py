@@ -10,8 +10,8 @@ def rows(quick: bool = True):
     out = []
     n_units = 6  # MLP leaf units
     for delta in range(0, n_units):
-        res, t = timed(lambda: fl(task, rounds,
-                                  luar=LuarConfig(delta=delta, granularity="leaf")))
+        res, t = timed(lambda delta=delta: fl(
+            task, rounds, luar=LuarConfig(delta=delta, granularity="leaf")))
         out.append((f"table9/delta{delta}", t / rounds, {
             "acc": round(res.history[-1]["acc"], 4),
             "comm": round(res.comm_ratio, 3)}))

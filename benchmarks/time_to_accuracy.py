@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import math
-from typing import Dict, List, Optional, Tuple
 
 from repro.compress import split_codec_specs
 from repro.configs.base import get_scenario
@@ -42,7 +41,7 @@ def scaled_scenario(name: str, model_bytes: float):
                       step_time=0.06)
 
 
-ALGOS: List[Tuple[str, Dict]] = [
+ALGOS: list[tuple[str, dict]] = [
     ("fedavg", dict()),
     ("fedluar", dict(luar=LuarConfig(delta=2, granularity="leaf"))),
     ("fedpaq", dict(codecs=("fedpaq:8",))),
@@ -51,7 +50,7 @@ ALGOS: List[Tuple[str, Dict]] = [
 ]
 
 
-def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
+def rows(quick: bool = True, codec_specs: tuple[str, ...] | None = None):
     task: Task = make_task("mixture" if quick else "femnist")
     rounds = 30 if quick else 60
     target = 0.9 if quick else 0.7
@@ -71,7 +70,7 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
             cfg = FLConfig(n_clients=len(task.parts), n_active=8, tau=5,
                            batch_size=16, rounds=rounds,
                            client=ClientConfig(lr=0.05), eval_every=2, **kw)
-            res, secs = timed(lambda: run_sim(
+            res, secs = timed(lambda sc=sc, cfg=cfg: run_sim(
                 task.loss_fn, task.params, task.data, task.parts, cfg,
                 SimConfig(scenario=sc), task.eval_fn))
             t_hit = time_to_target(res, "acc", target)
@@ -95,7 +94,7 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
                        client=ClientConfig(lr=0.05), eval_every=2,
                        luar=LuarConfig(delta=2, granularity="leaf",
                                        staleness_penalty=penalty))
-        res, secs = timed(lambda: run_sim(
+        res, secs = timed(lambda cfg=cfg, ledger=ledger: run_sim(
             task.loss_fn, task.params, task.data, task.parts, cfg,
             SimConfig(scenario=sc, mode="fedbuff", buffer_size=4,
                       concurrency=16, mask_ledger=ledger), task.eval_fn))
@@ -119,7 +118,7 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
                        client=ClientConfig(lr=0.05), eval_every=2,
                        luar=LuarConfig(delta=2, granularity="leaf"),
                        participation=part)
-        res, secs = timed(lambda: run_sim(
+        res, secs = timed(lambda cfg=cfg: run_sim(
             task.loss_fn, task.params, task.data, task.parts, cfg,
             SimConfig(scenario=sc), task.eval_fn))
         t_hit = time_to_target(res, "acc", target)
@@ -148,7 +147,7 @@ def rows(quick: bool = True, codec_specs: Optional[Tuple[str, ...]] = None):
                        rounds=rounds, client=ClientConfig(lr=0.05),
                        eval_every=2, codecs=codecs,
                        luar=LuarConfig(delta=4, granularity="leaf"))
-        res, secs = timed(lambda: run_sim(
+        res, secs = timed(lambda cfg=cfg: run_sim(
             task.loss_fn, task.params, task.data, task.parts, cfg,
             SimConfig(scenario=scaled_scenario("uniform", model_bytes),
                       mode="fedbuff", buffer_size=n_cl, concurrency=n_cl),

@@ -1,0 +1,25 @@
+"""repro.analyze — AST-based static invariant checker.
+
+The hard guarantees of this repro (bitwise trajectory replay, kill-9
+WAL recovery, fused-kernel equivalence) rest on coding conventions no
+single test run exercises end to end.  This package checks them
+statically: jit purity, jax.random key discipline, Pallas tile layout,
+checkpoint coverage, and metric/spec-registry consistency.
+
+Use ``run_rules(root)`` programmatically (the fleet-scale refactor's
+tests assert invariants through it), ``python -m repro.analyze`` or the
+``repro-analyze`` console script from a shell/CI.
+"""
+from repro.analyze.baseline import load_baseline, write_baseline
+from repro.analyze.cli import main
+from repro.analyze.core import (RULES, Finding, Project, Rule,
+                                _ensure_rules_loaded, parse_rules,
+                                register_rule, run_rules)
+
+_ensure_rules_loaded()          # importing the package exposes a full RULES
+
+__all__ = [
+    "Finding", "Project", "Rule", "RULES",
+    "register_rule", "parse_rules", "run_rules",
+    "load_baseline", "write_baseline", "main",
+]

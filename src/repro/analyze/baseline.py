@@ -1,0 +1,49 @@
+"""Grandfathered findings.
+
+The baseline file is a committed JSON document; every entry carries a
+mandatory human-written ``reason`` so an exception is an *explained*
+exception — ``--write-baseline`` stamps entries with a TODO reason that
+review is expected to replace.  Matching is by fingerprint (rule + file
++ message, line-independent), so baselined findings survive unrelated
+edits but die with the code they describe.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analyze.core import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = "analyze_baseline.json"
+
+
+def load_baseline(path: str | Path) -> set[str]:
+    """-> the grandfathered fingerprint set (empty for a missing file)."""
+    path = Path(path)
+    if not path.is_file():
+        return set()
+    doc = json.loads(path.read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: baseline version {doc.get('version')!r} "
+                         f"!= {BASELINE_VERSION}")
+    fps = set()
+    for entry in doc.get("entries", []):
+        if not entry.get("reason", "").strip():
+            raise ValueError(f"{path}: baseline entry {entry.get('fingerprint')} "
+                             f"({entry.get('path')}) has no reason — every "
+                             f"grandfathered finding must be justified")
+        fps.add(entry["fingerprint"])
+    return fps
+
+
+def write_baseline(path: str | Path, findings: list[Finding],
+                   note: str = "") -> None:
+    entries = [{**f.to_json(),
+                "reason": "TODO: justify or fix"} for f in findings]
+    doc = {"version": BASELINE_VERSION,
+           "note": note or ("Grandfathered repro.analyze findings. Every "
+                            "entry needs a human-written reason; delete "
+                            "entries as the code they cover is fixed."),
+           "entries": entries}
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")

@@ -1,0 +1,281 @@
+"""Call-graph construction for the traced-purity rules.
+
+The graph is deliberately conservative in what it *resolves* (bare
+names through module scope and ``from``-imports, ``mod.f`` through
+module aliases, ``self.m`` within a class) and conservative in what it
+*roots*: a function is a jit root when it is
+
+  * decorated with ``jax.jit`` (including ``partial(jax.jit, ...)``),
+  * the direct argument of a ``jax.jit(...)`` call (through
+    ``functools.partial`` wrappers), or
+  * a traced codec surface — an ``encode`` / ``decode`` / ``commit``
+    method of a class under ``compress/`` (the ``UpdateCodec``
+    protocol's contract is that those three run under trace).
+
+Everything reachable from a root through resolved edges is "traced
+scope" for the purity and RNG rules.  Unresolvable receivers are left
+out of the graph rather than over-approximated — a static checker that
+cries wolf gets deleted from CI.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analyze.core import (Project, SourceFile, dotted_name,
+                                import_aliases)
+
+# decorators that mark host-only helpers: results are computed once at
+# trace time and cached, so host calls inside are deliberate
+_HOST_CACHE_DECOS = frozenset({
+    "functools.lru_cache", "lru_cache", "functools.cache", "cache"})
+
+_CODEC_TRACED_METHODS = frozenset({"encode", "decode", "commit"})
+
+
+@dataclass
+class FuncInfo:
+    """One function/method definition in the project."""
+
+    qualname: str                 # "module:Class.method" or "module:func"
+    module: str
+    cls: str | None
+    node: ast.FunctionDef
+    file: SourceFile
+    is_root: bool = False
+    root_reason: str = ""
+    host_cached: bool = False     # behind lru_cache: host by design
+    calls: set[str] = field(default_factory=set)   # resolved callee qualnames
+
+
+def _deco_origin(deco: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Dotted origin of a decorator, unwrapping ``partial(...)`` and
+    plain calls (``@jax.jit`` and ``@partial(jax.jit, ...)`` both
+    resolve to ``jax.jit``)."""
+    if isinstance(deco, ast.Call):
+        origin = _deco_origin(deco.func, aliases)
+        if origin in ("functools.partial", "partial") and deco.args:
+            return _deco_origin(deco.args[0], aliases)
+        return origin
+    name = dotted_name(deco)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = aliases.get(head, head)
+    return f"{origin}.{rest}" if rest else origin
+
+
+def _unwrap_partial(node: ast.AST, aliases: dict[str, str]) -> ast.AST:
+    """``partial(f, ...)`` -> ``f`` (recursively)."""
+    while isinstance(node, ast.Call):
+        origin = _deco_origin(node.func, aliases)
+        if origin in ("functools.partial", "partial") and node.args:
+            node = node.args[0]
+        else:
+            break
+    return node
+
+
+class CallGraph:
+    def __init__(self, project: Project):
+        self.project = project
+        self.funcs: dict[str, FuncInfo] = {}
+        # module -> {local name -> dotted origin}
+        self._aliases: dict[str, dict[str, str]] = {}
+        # module -> {top-level def/class names}
+        self._module_defs: dict[str, set[str]] = {}
+        # module -> {local var -> partial-unwrapped target node}
+        self._local_partials: dict[str, dict[str, ast.AST]] = {}
+        for f in project.files:
+            self._index_file(f)
+        for info in list(self.funcs.values()):
+            self._collect_edges(info)
+        self._mark_roots()
+
+    # -- indexing -----------------------------------------------------------
+
+    def _index_file(self, f: SourceFile) -> None:
+        aliases = import_aliases(f.tree)
+        self._aliases[f.module] = aliases
+        defs: set[str] = set()
+        self._module_defs[f.module] = defs
+
+        def visit(body, cls: str | None):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if cls is None:
+                        defs.add(node.name)
+                    qual = (f"{f.module}:{cls}.{node.name}" if cls
+                            else f"{f.module}:{node.name}")
+                    decos = [_deco_origin(d, aliases)
+                             for d in node.decorator_list]
+                    info = FuncInfo(
+                        qualname=qual, module=f.module, cls=cls,
+                        node=node, file=f,
+                        host_cached=any(d in _HOST_CACHE_DECOS
+                                        for d in decos))
+                    if "jax.jit" in decos:
+                        info.is_root = True
+                        info.root_reason = "@jax.jit"
+                    self.funcs[qual] = info
+                    # nested defs (make_round_step's inner round_step)
+                    visit(node.body, cls)
+                elif isinstance(node, ast.ClassDef):
+                    defs.add(node.name)
+                    visit(node.body, node.name)
+                elif isinstance(node, (ast.If, ast.For, ast.While)):
+                    # defs guarded by config flags (make_round_step's
+                    # per-mode round bodies) still need indexing
+                    visit(node.body, cls)
+                    visit(node.orelse, cls)
+                elif isinstance(node, ast.With):
+                    visit(node.body, cls)
+                elif isinstance(node, ast.Try):
+                    visit(node.body, cls)
+                    for h in node.handlers:
+                        visit(h.body, cls)
+                    visit(node.orelse, cls)
+                    visit(node.finalbody, cls)
+
+        visit(f.tree.body, None)
+        # local partial bindings: `fn = partial(mod.f, ...)` — lets the
+        # jax.jit(fn) / pallas_call(fn) call forms root the real target
+        self._local_partials.setdefault(f.module, {})
+        for node in ast.walk(f.tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                target = _unwrap_partial(node.value, aliases)
+                if isinstance(target, (ast.Name, ast.Attribute)) \
+                        and target is not node.value:
+                    self._local_partials[f.module][node.targets[0].id] = target
+
+    # -- edges --------------------------------------------------------------
+
+    def _resolve_name(self, module: str, name: str,
+                      cls: str | None) -> str | None:
+        """A bare-name reference inside ``module`` -> qualname, through
+        local defs, ``from``-imports, and package ``__init__``
+        re-exports (``from repro.core import luar_round`` resolves to
+        ``repro.core.recycle:luar_round``)."""
+        if name in self._module_defs.get(module, ()):  # top-level def/sibling
+            qual = f"{module}:{name}"
+            if qual in self.funcs:
+                return qual
+        origin = self._aliases.get(module, {}).get(name)
+        for _hop in range(4):                 # bounded re-export chase
+            if not origin or "." not in origin:
+                return None
+            mod, _, leaf = origin.rpartition(".")
+            qual = f"{mod}:{leaf}"
+            if qual in self.funcs:
+                return qual
+            origin = self._aliases.get(mod, {}).get(leaf)
+        return None
+
+    def _resolve_call(self, call: ast.Call, info: FuncInfo) -> str | None:
+        func = call.func
+        if isinstance(func, ast.Name):
+            # nested function in the same scope?
+            for candidate in (f"{info.module}:{func.id}",
+                              f"{info.module}:{info.cls}.{func.id}"
+                              if info.cls else None):
+                if candidate and candidate in self.funcs:
+                    return candidate
+            return self._resolve_name(info.module, func.id, info.cls)
+        if isinstance(func, ast.Attribute):
+            # self.m() within the same class
+            if (isinstance(func.value, ast.Name) and func.value.id == "self"
+                    and info.cls):
+                qual = f"{info.module}:{info.cls}.{func.attr}"
+                if qual in self.funcs:
+                    return qual
+            # mod.f() through a module alias
+            base = dotted_name(func.value)
+            if base:
+                origin = self._aliases.get(info.module, {}).get(
+                    base.partition(".")[0])
+                if origin:
+                    tail = base.partition(".")[2]
+                    mod = f"{origin}.{tail}" if tail else origin
+                    qual = f"{mod}:{func.attr}"
+                    if qual in self.funcs:
+                        return qual
+        return None
+
+    def _collect_edges(self, info: FuncInfo) -> None:
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Call):
+                callee = self._resolve_call(node, info)
+                if callee and callee != info.qualname:
+                    info.calls.add(callee)
+
+    # -- roots --------------------------------------------------------------
+
+    def _mark_roots(self) -> None:
+        # codec traced surfaces
+        for info in self.funcs.values():
+            if (info.cls and info.node.name in _CODEC_TRACED_METHODS
+                    and "/compress/" in f"/{info.file.rel}"):
+                info.is_root = True
+                info.root_reason = info.root_reason or "codec traced surface"
+        # jax.jit(f) / pallas_call(kernel) call forms, through
+        # functools.partial wrappers and `fn = partial(...)` locals
+        for f in self.project.files:
+            aliases = self._aliases[f.module]
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                origin = _deco_origin(node.func, aliases)
+                if origin == "jax.jit":
+                    reason = "jax.jit(...)"
+                elif origin is not None and origin.endswith("pallas_call"):
+                    reason = "pallas kernel"
+                else:
+                    continue
+                self._root_target(f.module, node.args[0], reason)
+
+    def _root_target(self, module: str, arg: ast.AST, reason: str) -> None:
+        aliases = self._aliases.get(module, {})
+        target = _unwrap_partial(arg, aliases)
+        if isinstance(target, ast.Name):
+            qual = self._resolve_name(module, target.id, None)
+            if qual is None:
+                # `fn = partial(mod.f, ...)` then jax.jit(fn)
+                bound = self._local_partials.get(module, {}).get(target.id)
+                if bound is not None and bound is not arg:
+                    self._root_target(module, bound, reason)
+                return
+            self.funcs[qual].is_root = True
+            self.funcs[qual].root_reason = (
+                self.funcs[qual].root_reason or reason)
+        elif isinstance(target, ast.Attribute):
+            # jax.jit(mod.fn): resolve through the module alias
+            base = dotted_name(target.value)
+            if base:
+                origin_mod = aliases.get(base.partition(".")[0])
+                if origin_mod:
+                    tail = base.partition(".")[2]
+                    mod = f"{origin_mod}.{tail}" if tail else origin_mod
+                    qual = f"{mod}:{target.attr}"
+                    if qual in self.funcs:
+                        self.funcs[qual].is_root = True
+                        self.funcs[qual].root_reason = (
+                            self.funcs[qual].root_reason or reason)
+
+    # -- reachability -------------------------------------------------------
+
+    def traced_funcs(self) -> dict[str, FuncInfo]:
+        """Roots plus everything reachable from them, minus host-cached
+        helpers (their bodies run once on the host by construction)."""
+        seen: dict[str, FuncInfo] = {}
+        stack = [q for q, i in self.funcs.items() if i.is_root]
+        while stack:
+            qual = stack.pop()
+            if qual in seen:
+                continue
+            info = self.funcs[qual]
+            if info.host_cached:
+                continue
+            seen[qual] = info
+            stack.extend(info.calls)
+        return seen

@@ -1,0 +1,101 @@
+"""``python -m repro.analyze`` — run the invariant checker.
+
+Exit codes: 0 clean, 1 findings, 2 usage error.  ``--format=github``
+emits workflow-command annotations so the CI job anchors findings to
+PR lines; ``--baseline`` grandfathers the committed exception list
+(``analyze_baseline.json`` at the root is picked up automatically).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analyze import baseline as bl
+from repro.analyze.core import RULES, parse_rules, run_rules
+
+
+def _detect_root(start: Path) -> Path:
+    """Walk up to the checkout root (the dir holding pyproject.toml)."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return cur
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-analyze",
+        description="static invariant checker for the repro codebase")
+    ap.add_argument("--root", default=None,
+                    help="project root to analyze (default: auto-detect "
+                         "from the working directory)")
+    ap.add_argument("--rules", default="all",
+                    help="comma-separated rule names (default: all)")
+    ap.add_argument("--format", choices=("text", "json", "github"),
+                    default="text")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON of grandfathered findings "
+                         f"(default: <root>/{bl.DEFAULT_BASELINE} when "
+                         f"present; pass '' to disable)")
+    ap.add_argument("--write-baseline", metavar="PATH",
+                    help="write current findings as a new baseline and exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    try:
+        args = ap.parse_args(argv)
+        rules = parse_rules(args.rules)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    except SystemExit as e:              # argparse's own usage errors
+        return 0 if e.code in (0, None) else 2
+
+    if args.list_rules:
+        for rule in rules:
+            print(f"{rule.name:20s} {rule.help}")
+        return 0
+
+    root = Path(args.root) if args.root else _detect_root(Path.cwd())
+
+    if args.write_baseline:
+        findings = run_rules(root, args.rules)
+        bl.write_baseline(args.write_baseline, findings)
+        print(f"wrote {len(findings)} entries to {args.write_baseline}")
+        return 0
+
+    if args.baseline is None:
+        default = root / bl.DEFAULT_BASELINE
+        baseline_path = default if default.is_file() else None
+    else:
+        baseline_path = Path(args.baseline) if args.baseline else None
+    try:
+        fps = bl.load_baseline(baseline_path) if baseline_path else set()
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    findings = run_rules(root, args.rules, baseline=fps)
+
+    if args.format == "json":
+        print(json.dumps({"root": str(root),
+                          "rules": [r.name for r in rules],
+                          "findings": [f.to_json() for f in findings]},
+                         indent=2))
+    elif args.format == "github":
+        for f in findings:
+            print(f.format_github())
+        if findings:
+            print(f"::notice::repro.analyze: {len(findings)} finding(s)")
+    else:
+        for f in findings:
+            print(f.format())
+        suffix = f" ({len(fps)} baselined)" if fps else ""
+        print(f"repro.analyze: {len(findings)} finding(s) across "
+              f"{len(rules)} rule(s){suffix}")
+    return 1 if findings else 0
+
+
+__all__ = ["main", "RULES"]

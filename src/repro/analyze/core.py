@@ -1,0 +1,316 @@
+"""Core of ``repro.analyze`` — findings, the rule registry, and the
+parsed-project model every rule consumes.
+
+The registry mirrors the ``repro.compress`` / ``repro.participate``
+spec-grammar idiom: a module-level dict populated by a ``register_rule``
+decorator, a ``parse_rules`` front door that turns the CLI's comma
+string into concrete rule callables, and unknown names rejected with
+the catalogue in the error message.
+
+A rule is ``fn(project) -> list[Finding]``.  Rules are pure functions
+of the parsed source tree — nothing here imports the modules under
+analysis (the one deliberate exception: the spec-consistency rule
+validates string literals against the real codec/participation
+registries, which is an import of *this* package's siblings, not of the
+code being analyzed).
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+from collections.abc import Callable, Iterable, Iterator
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# directories (relative to the project root) that make up the analyzed
+# source set; missing ones are skipped so the analyzer also runs on the
+# minimal fixture trees under tests/analyze_fixtures/
+SOURCE_ROOTS = ("src", "benchmarks", "examples", "tests", "configs")
+
+# directory names whose files are host-side by construction — purity
+# and RNG rules skip them (tests/benchmarks intentionally poke host
+# APIs around traced calls)
+HOST_ONLY_DIRS = frozenset({"tests", "benchmarks", "examples"})
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file:line span.
+
+    The fingerprint deliberately excludes the line number so a baseline
+    entry survives unrelated edits above the finding; it tracks the
+    (rule, file, message) triple instead.
+    """
+
+    rule: str
+    path: str               # posix path relative to the project root
+    line: int
+    col: int
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        raw = f"{self.rule}|{self.path}|{self.message}"
+        return hashlib.sha256(raw.encode()).hexdigest()[:12]
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def format_github(self) -> str:
+        # GitHub Actions annotation syntax; newlines must be %0A-escaped
+        msg = f"[{self.rule}] {self.message}".replace("\n", "%0A")
+        return (f"::error file={self.path},line={self.line},"
+                f"col={self.col}::{msg}")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "fingerprint": self.fingerprint}
+
+
+@dataclass(frozen=True)
+class SourceFile:
+    """A parsed module: absolute path, root-relative posix path, text,
+    and its AST (parents pre-linked via ``parent_of``)."""
+
+    path: Path
+    rel: str
+    text: str
+    tree: ast.Module
+
+    @property
+    def parts(self) -> tuple[str, ...]:
+        return tuple(self.rel.split("/"))
+
+    @property
+    def module(self) -> str:
+        """Dotted module name (``src/repro/x/y.py`` -> ``repro.x.y``)."""
+        parts = list(self.parts)
+        if parts[0] == "src":
+            parts = parts[1:]
+        if parts[-1].endswith(".py"):
+            parts[-1] = parts[-1][:-3]
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+
+class Project:
+    """Every parsed source file under the analyzed roots, loaded once
+    and shared by all rules."""
+
+    def __init__(self, root: Path, files: list[SourceFile]):
+        self.root = root
+        self.files = files
+        self._by_rel = {f.rel: f for f in files}
+
+    @classmethod
+    def load(cls, root: str | Path,
+             roots: Iterable[str] = SOURCE_ROOTS) -> "Project":
+        root = Path(root).resolve()
+        files: list[SourceFile] = []
+        for sub in roots:
+            base = root / sub
+            if not base.is_dir():
+                continue
+            for path in sorted(base.rglob("*.py")):
+                rel = path.relative_to(root).as_posix()
+                # fixture trees hold deliberate violations; they are
+                # analyzed by pointing --root at them directly (the
+                # check is against the root-RELATIVE parts so a fixture
+                # tree used as the root still loads its own files)
+                if {"__pycache__", "analyze_fixtures"} & set(rel.split("/")):
+                    continue
+                text = path.read_text()
+                try:
+                    tree = ast.parse(text, filename=rel)
+                except SyntaxError:          # not ours to flag; ruff owns it
+                    continue
+                files.append(SourceFile(path=path, rel=rel, text=text,
+                                        tree=tree))
+        return cls(root, files)
+
+    def get(self, rel: str) -> SourceFile | None:
+        return self._by_rel.get(rel)
+
+    def iter_files(self, pred: Callable[[SourceFile], bool] | None = None
+                   ) -> Iterator[SourceFile]:
+        for f in self.files:
+            if pred is None or pred(f):
+                yield f
+
+
+# ---------------------------------------------------------------------------
+# rule registry (mirrors compress/participate: dict + decorator + parser)
+# ---------------------------------------------------------------------------
+
+RuleFn = Callable[[Project], "list[Finding]"]
+
+
+@dataclass(frozen=True)
+class Rule:
+    name: str
+    help: str
+    fn: RuleFn = field(repr=False)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register_rule(name: str, help: str = "") -> Callable[[RuleFn], RuleFn]:
+    """Class decorator-style registration: ``@register_rule("jit-purity",
+    help=...)`` over a ``fn(project) -> list[Finding]``."""
+
+    def deco(fn: RuleFn) -> RuleFn:
+        if name in RULES:
+            raise ValueError(f"duplicate rule {name!r}")
+        RULES[name] = Rule(name=name, help=help, fn=fn)
+        return fn
+
+    return deco
+
+
+def parse_rules(spec: str | None) -> list[Rule]:
+    """``"jit-purity,pallas-layout"`` -> concrete rules; ``None`` or
+    ``"all"`` selects the whole catalogue (registration order)."""
+    _ensure_rules_loaded()
+    if spec is None or spec.strip() in ("", "all"):
+        return list(RULES.values())
+    out = []
+    for name in (s.strip() for s in spec.split(",")):
+        if not name:
+            continue
+        if name not in RULES:
+            known = ", ".join(sorted(RULES))
+            raise ValueError(f"unknown rule {name!r}; known rules: {known}")
+        out.append(RULES[name])
+    return out
+
+
+def _ensure_rules_loaded() -> None:
+    # rule modules self-register on import; keep imports here so `core`
+    # stays importable from the rule modules without a cycle
+    from repro.analyze import (rules_ckpt, rules_consistency,  # noqa: F401
+                               rules_pallas, rules_purity)
+
+
+def run_rules(root: str | Path, rules: str | Iterable[str] | None = None,
+              baseline: "set[str] | None" = None) -> list[Finding]:
+    """The importable API: run the selected rules over the tree at
+    ``root`` and return findings not grandfathered by ``baseline``
+    (a set of fingerprints), sorted by file then line."""
+    if isinstance(rules, str) or rules is None:
+        selected = parse_rules(rules)
+    else:
+        selected = parse_rules(",".join(rules))
+    project = Project.load(root)
+    findings: list[Finding] = []
+    for rule in selected:
+        findings.extend(rule.fn(project))
+    if baseline:
+        findings = [f for f in findings if f.fingerprint not in baseline]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chain -> ``"a.b.c"``; None when the chain
+    roots in anything but a plain name."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.Module) -> dict[str, str]:
+    """Map local name -> dotted origin for every top-level import.
+
+    ``import numpy as np``          -> {"np": "numpy"}
+    ``from jax import random``      -> {"random": "jax.random"}
+    ``from repro.obs import M_X``   -> {"M_X": "repro.obs.M_X"}
+    """
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_call_origin(call: ast.Call, aliases: dict[str, str]) -> str | None:
+    """Dotted origin of a call through the module's import aliases:
+    with ``import jax.numpy as jnp``, ``jnp.sum(...)`` resolves to
+    ``jax.numpy.sum``."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = aliases.get(head, head)
+    return f"{origin}.{rest}" if rest else origin
+
+
+class ConstEnv:
+    """Module-level integer constants (``_LANES = 128``) plus simple
+    arithmetic over them — enough to resolve Pallas block shapes
+    statically without executing anything."""
+
+    def __init__(self, tree: ast.Module):
+        self.values: dict[str, int] = {}
+        for node in tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                v = self.resolve(node.value)
+                if v is not None:
+                    self.values[node.targets[0].id] = v
+
+    def child(self, fn: ast.FunctionDef) -> "ConstEnv":
+        """Extend with simple constant assignments local to ``fn``
+        (single-target, resolvable at the time of the walk)."""
+        env = ConstEnv.__new__(ConstEnv)
+        env.values = dict(self.values)
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                v = env.resolve(node.value)
+                if v is not None:
+                    env.values[node.targets[0].id] = v
+        return env
+
+    def resolve(self, node: ast.AST) -> int | None:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+                and not isinstance(node.value, bool):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.values.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self.resolve(node.operand)
+            return -v if v is not None else None
+        if isinstance(node, ast.BinOp):
+            lhs, rhs = self.resolve(node.left), self.resolve(node.right)
+            if lhs is None or rhs is None:
+                return None
+            if isinstance(node.op, ast.Add):
+                return lhs + rhs
+            if isinstance(node.op, ast.Sub):
+                return lhs - rhs
+            if isinstance(node.op, ast.Mult):
+                return lhs * rhs
+            if isinstance(node.op, ast.FloorDiv) and rhs:
+                return lhs // rhs
+            if isinstance(node.op, ast.Mod) and rhs:
+                return lhs % rhs
+        return None

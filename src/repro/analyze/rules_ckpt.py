@@ -1,0 +1,332 @@
+"""Checkpoint-coverage rule: the serve WAL's bitwise-recovery guarantee
+dies silently the day a new piece of mutable server state misses the
+snapshot/restore pair.  This rule proves, statically, that it can't:
+
+  * every ``RoundServer`` attribute mutated outside ``__init__``
+    (assignment, augmented assignment, subscript/del, or a mutating
+    method call — list/dict/set/ledger/instrument/policy/RNG verbs)
+    must be referenced in BOTH ``snapshot()`` and ``load_into()`` in
+    ``serve/state.py``.  An attribute derived from another covered
+    attribute in ``__init__`` (instrument handles built off
+    ``self.telemetry``) is covered through its root;
+  * every ``ServeConfig`` field must appear in ``_fingerprint`` — the
+    config-drift refusal — unless listed in the operational exemptions
+    below (knobs that change where the server runs, not what it
+    computes);
+  * the ``flatten_tree`` prefixes written by ``snapshot`` must equal
+    the ``unflatten_like`` prefixes read by ``load_into``, and
+    string-literal ``arrays[...]`` / ``meta[...]`` keys must be
+    written-and-read symmetrically (a key written but never read is
+    dead weight; read but never written is a restore-time KeyError).
+
+Methods called on the ``server`` object inside state.py extend coverage
+with the attrs they read (save side) or write (restore side) — that is
+how ``uptime()`` / ``set_uptime()`` carry ``_t0`` across the WAL.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import Finding, Project, SourceFile, register_rule
+
+# method names whose call mutates the receiver: containers, the version
+# ledgers, metric instruments, participation policies, numpy Generators
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "popitem", "clear",
+    "setdefault", "update", "add", "discard",
+    "record", "record_step", "import_state",
+    "inc", "set", "observe",
+    "select", "observe_dispatch", "observe_report",
+    "integers", "choice", "shuffle", "permutation", "normal", "random",
+})
+
+# ServeConfig fields that deliberately stay out of the fingerprint:
+# they relocate or re-pace the service without changing any computed
+# trajectory, so a resume across them is safe by design
+_FINGERPRINT_EXEMPT = frozenset({"ckpt_path", "ckpt_every", "host", "port"})
+
+_SERVER_CLASS = "RoundServer"
+_CONFIG_CLASS = "ServeConfig"
+
+
+def _self_attr(node: ast.AST, owner: str = "self") -> str | None:
+    """``self.X`` / ``server.X`` (possibly deeper chains) -> ``X``."""
+    while isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                         ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == owner:
+        return node.attr
+    return None
+
+
+class _MethodSummary:
+    def __init__(self):
+        self.reads: set[str] = set()
+        self.writes: set[str] = set()
+
+
+def _summarize_method(fn: ast.FunctionDef) -> _MethodSummary:
+    s = _MethodSummary()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            attr = _self_attr(node)
+            if attr is None:
+                continue
+            if isinstance(node.ctx, (ast.Store, ast.Del)):
+                s.writes.add(attr)
+            else:
+                s.reads.add(attr)
+    return s
+
+
+def _mutated_attrs(cls: ast.ClassDef) -> tuple[dict[str, int],
+                                               dict[str, set[str]],
+                                               dict[str, _MethodSummary]]:
+    """-> (attr -> first mutation line outside __init__,
+           attr -> derivation roots from __init__,
+           method name -> read/write summary)."""
+    mutated: dict[str, int] = {}
+    roots: dict[str, set[str]] = {}
+    methods: dict[str, _MethodSummary] = {}
+    for item in cls.body:
+        if not isinstance(item, ast.FunctionDef):
+            continue
+        methods[item.name] = _summarize_method(item)
+        if item.name == "__init__":
+            _derivation_roots(item, roots)
+            continue
+        for node in ast.walk(item):
+            line = getattr(node, "lineno", item.lineno)
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target] if isinstance(node, ast.AugAssign)
+                           else node.targets)
+                for t in targets:
+                    base = t
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    attr = _self_attr(base)
+                    if attr:
+                        mutated.setdefault(attr, line)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _MUTATORS:
+                attr = _self_attr(node.func.value)
+                if attr:
+                    mutated.setdefault(attr, line)
+    return mutated, roots, methods
+
+
+def _derivation_roots(init: ast.FunctionDef,
+                      roots: dict[str, set[str]]) -> None:
+    """self.X = <expr over self.Y / aliases of self.Y> -> X derives Y."""
+    local_roots: dict[str, set[str]] = {}
+
+    def expr_roots(value: ast.AST) -> set[str]:
+        found: set[str] = set()
+        for node in ast.walk(value):
+            attr = _self_attr(node) if isinstance(node, ast.Attribute) else None
+            if attr:
+                found.add(attr)
+            elif isinstance(node, ast.Name) and node.id in local_roots:
+                found |= local_roots[node.id]
+        return found
+
+    for stmt in init.body:
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            continue
+        target = stmt.targets[0]
+        rts = expr_roots(stmt.value)
+        if isinstance(target, ast.Name) and rts:
+            local_roots[target.id] = rts
+        else:
+            attr = _self_attr(target)
+            if attr and rts:
+                roots[attr] = rts - {attr}
+
+
+def _server_accesses(fn: ast.FunctionDef, param: str) -> tuple[set[str],
+                                                               set[str]]:
+    """-> (attrs referenced on ``param``, methods called on ``param``)."""
+    attrs: set[str] = set()
+    called: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            m = _self_attr(node.func, owner=param)
+            if m and isinstance(node.func.value, ast.Name):
+                called.add(m)
+        if isinstance(node, ast.Attribute):
+            attr = _self_attr(node, owner=param)
+            if attr:
+                attrs.add(attr)
+    return attrs, called
+
+
+def _literal_keys(fn: ast.FunctionDef, var: str) -> set[str]:
+    """String-literal keys of ``var[...]`` subscripts, ``var.get(...)``
+    calls, and (for dict literals assigned to ``var``) the dict keys."""
+    keys: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == var \
+                and isinstance(node.slice, ast.Constant) \
+                and isinstance(node.slice.value, str):
+            keys.add(node.slice.value)
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "get" \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == var \
+                and node.args and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            keys.add(node.args[0].value)
+        elif isinstance(node, ast.Assign) \
+                and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == var \
+                and isinstance(node.value, ast.Dict):
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys
+
+
+def _flatten_prefixes(fn: ast.FunctionDef, callee: str) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == callee:
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Constant) and isinstance(arg.value, str) \
+                        and arg.value.endswith("/"):
+                    out.add(arg.value)
+    return out
+
+
+def _find(project: Project, suffix: str) -> SourceFile | None:
+    for f in project.files:
+        if f.rel.endswith(suffix):
+            return f
+    return None
+
+
+def _top_fn(tree: ast.Module, name: str) -> ast.FunctionDef | None:
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+@register_rule(
+    "ckpt-coverage",
+    help="every mutable RoundServer attr round-trips through "
+         "snapshot/load_into; every ServeConfig field is fingerprinted "
+         "or exempt; array/meta keys and tree prefixes are symmetric")
+def ckpt_coverage(project: Project) -> list[Finding]:
+    core_f = _find(project, "serve/core.py")
+    state_f = _find(project, "serve/state.py")
+    if core_f is None or state_f is None:
+        return []
+    out: list[Finding] = []
+
+    cls = next((n for n in core_f.tree.body if isinstance(n, ast.ClassDef)
+                and n.name == _SERVER_CLASS), None)
+    snap = _top_fn(state_f.tree, "snapshot")
+    load = _top_fn(state_f.tree, "load_into")
+
+    if cls is not None and snap is not None and load is not None:
+        mutated, roots, methods = _mutated_attrs(cls)
+        # transitive closure of local state.py helpers called with server
+        save_attrs, save_calls = _closure(state_f.tree, snap)
+        load_attrs, load_calls = _closure(state_f.tree, load)
+        for m in save_calls:
+            if m in methods:
+                save_attrs |= methods[m].reads
+        for m in load_calls:
+            if m in methods:
+                load_attrs |= methods[m].writes | methods[m].reads
+        for attr, line in sorted(mutated.items()):
+            cov_roots = {attr} | roots.get(attr, set())
+            if not cov_roots & save_attrs:
+                out.append(Finding(
+                    "ckpt-coverage", core_f.rel, line, 0,
+                    f"mutable server attr `{attr}` is never saved by "
+                    f"snapshot() — WAL recovery silently drops it"))
+            if not cov_roots & load_attrs:
+                out.append(Finding(
+                    "ckpt-coverage", core_f.rel, line, 0,
+                    f"mutable server attr `{attr}` is never restored by "
+                    f"load_into() — WAL recovery silently drops it"))
+
+    out.extend(_config_fingerprint(state_f))
+    if snap is not None and load is not None:
+        out.extend(_symmetry(state_f, snap, load))
+    return out
+
+
+def _closure(tree: ast.Module, fn: ast.FunctionDef) -> tuple[set[str],
+                                                             set[str]]:
+    """Server-attr accesses + server-method calls of ``fn``, plus those
+    of local helpers it calls with the server argument."""
+    param = fn.args.args[0].arg if fn.args.args else "server"
+    attrs, called = _server_accesses(fn, param)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            passes_server = any(isinstance(a, ast.Name) and a.id == param
+                                for a in node.args)
+            helper = _top_fn(tree, node.func.id)
+            if passes_server and helper is not None:
+                hp = helper.args.args[0].arg if helper.args.args else "server"
+                a2, c2 = _server_accesses(helper, hp)
+                attrs |= a2
+                called |= c2
+    return attrs, called
+
+
+def _config_fingerprint(state_f: SourceFile) -> list[Finding]:
+    cls = next((n for n in state_f.tree.body if isinstance(n, ast.ClassDef)
+                and n.name == _CONFIG_CLASS), None)
+    fp = _top_fn(state_f.tree, "_fingerprint")
+    if cls is None or fp is None:
+        return []
+    fields = [(n.target.id, n.lineno) for n in cls.body
+              if isinstance(n, ast.AnnAssign) and isinstance(n.target,
+                                                             ast.Name)]
+    used: set[str] = set()
+    for node in ast.walk(fp):
+        if isinstance(node, ast.Attribute):
+            used.add(node.attr)
+    out = []
+    for name, line in fields:
+        if name not in used and name not in _FINGERPRINT_EXEMPT:
+            out.append(Finding(
+                "ckpt-coverage", state_f.rel, line, 0,
+                f"ServeConfig field `{name}` is not part of _fingerprint — "
+                f"a resume under a different {name} silently diverges "
+                f"instead of being refused"))
+    return out
+
+
+def _symmetry(state_f: SourceFile, snap: ast.FunctionDef,
+              load: ast.FunctionDef) -> list[Finding]:
+    out = []
+    for kind, saver, loader in (
+            ("flatten prefix", _flatten_prefixes(snap, "flatten_tree"),
+             _flatten_prefixes(load, "unflatten_like")),
+            ("arrays key", _literal_keys(snap, "arrays"),
+             _literal_keys(load, "arrays")),
+            ("meta key", _literal_keys(snap, "meta"),
+             _literal_keys(load, "meta"))):
+        for key in sorted(saver - loader):
+            out.append(Finding(
+                "ckpt-coverage", state_f.rel, snap.lineno, 0,
+                f"{kind} `{key}` is written by snapshot() but never read "
+                f"by load_into()"))
+        for key in sorted(loader - saver):
+            out.append(Finding(
+                "ckpt-coverage", state_f.rel, load.lineno, 0,
+                f"{kind} `{key}` is read by load_into() but never written "
+                f"by snapshot()"))
+    return out

@@ -1,0 +1,240 @@
+"""Cross-subsystem consistency rules.
+
+``metric-consistency`` — every ``fl_*`` metric name an engine creates
+must be a constant in the ``obs`` catalogue (``M_*`` in
+``obs/metrics.py``): ad-hoc literals fork the namespace and break the
+result-rederivation contract.  Additionally, one family name must keep
+one instrument kind repo-wide (a counter in one engine and a gauge in
+another shards the family), and explicit ``.labels(...)`` call sites of
+the same family must agree on label names.
+
+``spec-consistency`` — every codec / participation spec string literal
+(``codecs=("fedpaq:4", ...)``, ``participation="powd:10"``, argparse
+defaults for ``--codecs`` / ``--participation``) must parse under the
+REAL registries.  This is the one rule that imports repo code: the
+registries are the single source of truth for the grammar, and
+re-implementing their parsers here would guarantee drift.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import (Finding, Project, SourceFile,
+                                import_aliases, register_rule)
+
+_INSTRUMENT_KINDS = ("counter", "gauge", "histogram")
+
+
+def _catalogue(project: Project) -> dict[str, str]:
+    """M_* constants of obs/metrics.py: metric value -> constant name."""
+    f = next((f for f in project.files
+              if f.rel.endswith("obs/metrics.py")), None)
+    if f is None:
+        return {}
+    out: dict[str, str] = {}
+    for node in f.tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id.startswith("M_")
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, str)):
+            out[node.value.value] = node.targets[0].id
+    return out
+
+
+def _metric_name(arg: ast.AST, aliases: dict[str, str],
+                 consts: dict[str, str]) -> str | None:
+    """Resolve the name argument of an instrument call to its string."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value
+    if isinstance(arg, ast.Name):
+        origin = aliases.get(arg.id, "")
+        leaf = origin.rsplit(".", 1)[-1] if origin else arg.id
+        for value, const in consts.items():
+            if const == leaf:
+                return value
+    return None
+
+
+@register_rule(
+    "metric-consistency",
+    help="fl_* metric names exist in the obs catalogue, keep one "
+         "instrument kind, and agree on label names across call sites")
+def metric_consistency(project: Project) -> list[Finding]:
+    consts = _catalogue(project)
+    if not consts:
+        return []
+    out: list[Finding] = []
+    kinds: dict[str, tuple[str, str, int]] = {}     # name -> kind, file, line
+    labels: dict[str, tuple[frozenset, str, int]] = {}
+    # attr name -> metric name for `self.X = m.counter(NAME, ...)` sites,
+    # so later `<recv>.X.labels(...)` calls attribute their label set
+    attr_names: dict[str, str] = {}
+    files = list(project.iter_files(
+        lambda f: f.parts[0] != "tests"
+        and not f.rel.endswith("obs/metrics.py")))
+
+    def instrument_name(call: ast.AST, aliases) -> str | None:
+        if (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr in _INSTRUMENT_KINDS and call.args):
+            return _metric_name(call.args[0], aliases, consts)
+        return None
+
+    for f in files:
+        aliases = import_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                name = instrument_name(node.value, aliases)
+                # unwrap `var = m.counter(...).labels()`
+                if name is None and isinstance(node.value, ast.Call) \
+                        and isinstance(node.value.func, ast.Attribute) \
+                        and node.value.func.attr == "labels":
+                    name = instrument_name(node.value.func.value, aliases)
+                if name is not None and isinstance(node.targets[0],
+                                                   ast.Attribute):
+                    attr_names[node.targets[0].attr] = name
+            if not isinstance(node, ast.Call):
+                continue
+            name = instrument_name(node, aliases)
+            if name is not None:
+                if name.startswith("fl_") and name not in consts:
+                    out.append(Finding(
+                        "metric-consistency", f.rel, node.lineno,
+                        node.col_offset,
+                        f"metric `{name}` is not in the obs catalogue "
+                        f"(obs/metrics.py M_*) — ad-hoc fl_* names fork "
+                        f"the namespace"))
+                kind = node.func.attr
+                prev = kinds.get(name)
+                if prev is not None and prev[0] != kind:
+                    out.append(Finding(
+                        "metric-consistency", f.rel, node.lineno,
+                        node.col_offset,
+                        f"metric `{name}` created as {kind} here but as "
+                        f"{prev[0]} at {prev[1]}:{prev[2]} — one family, "
+                        f"one kind"))
+                else:
+                    kinds.setdefault(name, (kind, f.rel, node.lineno))
+
+    # second pass: explicit .labels(...) sites, now that every bound
+    # instrument attr is known
+    for f in files:
+        aliases = import_aliases(f.tree)
+        local_bound: dict[str, str] = {}
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = instrument_name(node.value, aliases)
+                if name is not None:
+                    local_bound[node.targets[0].id] = name
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "labels"):
+                continue
+            recv = node.func.value
+            name = instrument_name(recv, aliases)
+            if name is None and isinstance(recv, ast.Name):
+                name = local_bound.get(recv.id)
+            if name is None and isinstance(recv, ast.Attribute):
+                name = attr_names.get(recv.attr)
+            if name is None:
+                continue
+            lset = frozenset(kw.arg for kw in node.keywords if kw.arg)
+            prev = labels.get(name)
+            if prev is not None and prev[0] != lset:
+                out.append(Finding(
+                    "metric-consistency", f.rel, node.lineno,
+                    node.col_offset,
+                    f"metric `{name}` labeled {sorted(lset)} here but "
+                    f"{sorted(prev[0])} at {prev[1]}:{prev[2]} — label "
+                    f"sets must agree"))
+            else:
+                labels.setdefault(name, (lset, f.rel, node.lineno))
+    return out
+
+
+# spec-literal collection ---------------------------------------------------
+
+_SPEC_KWARGS = ("codecs", "participation")
+_SPEC_FLAGS = ("--codecs", "--participation")
+
+
+def _spec_strings(node: ast.AST) -> list[str] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            vals.append(e.value)
+        return vals
+    return None
+
+
+def _validate_codecs(specs: list[str]) -> str | None:
+    from repro.compress import registry as creg
+    try:
+        # '+'-join replays the registry's own string normalization, so
+        # both the tuple form and the CLI '+'-joined form validate the
+        # way FLConfig would resolve them
+        up, down = creg.partition_codec_specs("+".join(specs))
+        for spec in up + down:
+            creg.parse_codec(spec)
+    except Exception as e:                      # noqa: BLE001 — message IS the finding
+        return str(e)
+    return None
+
+
+def _validate_participation(spec: str) -> str | None:
+    from repro.participate import registry as preg
+    try:
+        preg.parse_policy(spec)
+    except Exception as e:                      # noqa: BLE001
+        return str(e)
+    return None
+
+
+@register_rule(
+    "spec-consistency",
+    help="codec/participation spec string literals in configs, examples, "
+         "benchmarks, and tests parse under the real registries")
+def spec_consistency(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for f in project.files:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg in _SPEC_KWARGS:
+                    out.extend(_check_literal(f, kw.arg, kw.value))
+            # argparse defaults: add_argument("--codecs", default="...")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "add_argument" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and node.args[0].value in _SPEC_FLAGS):
+                flag = node.args[0].value.lstrip("-")
+                for kw in node.keywords:
+                    if kw.arg == "default":
+                        out.extend(_check_literal(f, flag, kw.value))
+    return out
+
+
+def _check_literal(f: SourceFile, kind: str, value: ast.AST) -> list[Finding]:
+    specs = _spec_strings(value)
+    if specs is None:
+        return []
+    if kind == "codecs":
+        err = _validate_codecs(specs)
+    else:
+        err = None
+        for s in specs:
+            err = _validate_participation(s)
+            if err:
+                break
+    if err:
+        return [Finding(
+            "spec-consistency", f.rel, value.lineno, value.col_offset,
+            f"{kind} spec {specs!r} rejected by the registry: {err}")]
+    return []

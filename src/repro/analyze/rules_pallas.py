@@ -1,0 +1,258 @@
+"""Pallas layout rule: static TPU-tiling sanity for every
+``pl.pallas_call`` under ``kernels/``.
+
+Checks, in decreasing order of how often they bite:
+
+  * kernel arity — the kernel function's positional parameter count
+    must equal ``num_scalar_prefetch + len(in_specs) + len(out_specs)
+    + len(scratch_shapes)``; a mismatch is a guaranteed runtime error
+    that interpret-mode tests on tiny shapes can still hit late;
+  * index-map arity — every BlockSpec index lambda takes one argument
+    per grid axis plus one per scalar-prefetch operand (the
+    scalar-prefetch arg-ordering contract);
+  * tile alignment — statically resolvable block dims must respect the
+    (sublane, lane) = (8, 128) f32 tile (16 sublanes for bf16 outputs);
+    dims of 1 are exempt (scalar accumulator blocks) and unresolvable
+    dims are skipped rather than guessed;
+  * VMEM footprint — a LOWER bound (unresolvable dims priced at 1,
+    f32, double-buffered) on the per-step VMEM working set is compared
+    to ``VMEM_BUDGET_BYTES``; only a lower bound can exceed the budget
+    without false positives.
+
+Everything is best-effort constant propagation (module constants plus
+simple local assignments) — the rule never imports or traces the
+kernel.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import (ConstEnv, Finding, Project, dotted_name,
+                                import_aliases, register_rule,
+                                resolve_call_origin)
+
+_LANE = 128
+_SUBLANE_F32 = 8
+_SUBLANE_BF16 = 16
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024      # per-core VMEM on current TPUs
+
+
+def _kwarg(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _spec_list(node: ast.AST | None) -> list[ast.AST] | None:
+    """in/out_specs value -> list of BlockSpec-ish nodes (a bare spec
+    counts as a one-element list)."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]
+
+
+def _is_smem_spec(spec: ast.AST) -> bool:
+    if not isinstance(spec, ast.Call):
+        return False
+    ms = _kwarg(spec, "memory_space")
+    if ms is None:
+        return False
+    name = dotted_name(ms) or ""
+    return name.endswith("SMEM") or name.endswith("ANY")
+
+
+def _block_shape(spec: ast.AST) -> ast.AST | None:
+    """First positional arg of BlockSpec(...) when it is a tuple."""
+    if isinstance(spec, ast.Call) and spec.args:
+        shp = spec.args[0]
+        if isinstance(shp, (ast.Tuple, ast.List)):
+            return shp
+    return None
+
+
+def _index_map(spec: ast.AST) -> ast.Lambda | None:
+    if isinstance(spec, ast.Call):
+        for cand in list(spec.args[1:]) + [kw.value for kw in spec.keywords
+                                           if kw.arg == "index_map"]:
+            if isinstance(cand, ast.Lambda):
+                return cand
+    return None
+
+
+class _CallSite:
+    """One pl.pallas_call with its resolved grid spec pieces."""
+
+    def __init__(self):
+        self.kernel_name: str | None = None
+        self.grid_len: int | None = None
+        self.n_prefetch: int = 0
+        self.in_specs: list[ast.AST] | None = None
+        self.out_specs: list[ast.AST] | None = None
+        self.n_out_shape: int | None = None
+        self.n_scratch: int = 0
+        self.out_dtypes: list[str | None] = []
+        self.node: ast.Call | None = None
+
+
+def _resolve_local(fn: ast.FunctionDef, name: str) -> ast.AST | None:
+    """Last single-target assignment to ``name`` inside ``fn``."""
+    found = None
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name):
+            found = node.value
+    return found
+
+
+def _parse_site(call: ast.Call, fn: ast.FunctionDef,
+                aliases: dict[str, str]) -> _CallSite:
+    site = _CallSite()
+    site.node = call
+    # kernel: first positional arg, through functools.partial
+    target = call.args[0] if call.args else None
+    while isinstance(target, ast.Call):
+        origin = resolve_call_origin(target, aliases)
+        if origin in ("functools.partial", "partial") and target.args:
+            target = target.args[0]
+        else:
+            break
+    if isinstance(target, ast.Name):
+        site.kernel_name = target.id
+
+    grid_spec = _kwarg(call, "grid_spec")
+    if isinstance(grid_spec, ast.Name):
+        grid_spec = _resolve_local(fn, grid_spec.id)
+    holder = grid_spec if isinstance(grid_spec, ast.Call) else call
+    npf = _kwarg(holder, "num_scalar_prefetch")
+    if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+        site.n_prefetch = npf.value
+    grid = _kwarg(holder, "grid")
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        site.grid_len = len(grid.elts)
+    site.in_specs = _spec_list(_kwarg(holder, "in_specs"))
+    site.out_specs = _spec_list(_kwarg(holder, "out_specs"))
+    out_shape = _kwarg(call, "out_shape")
+    if out_shape is not None:
+        shapes = out_shape.elts if isinstance(
+            out_shape, (ast.Tuple, ast.List)) else [out_shape]
+        site.n_out_shape = len(shapes)
+        for s in shapes:
+            dt = None
+            if isinstance(s, ast.Call) and len(s.args) >= 2:
+                dt = dotted_name(s.args[1])
+            site.out_dtypes.append(dt)
+    scratch = _kwarg(call, "scratch_shapes")
+    if isinstance(scratch, (ast.Tuple, ast.List)):
+        site.n_scratch = len(scratch.elts)
+    return site
+
+
+@register_rule(
+    "pallas-layout",
+    help="kernel arity, index-map/scalar-prefetch ordering, (8,128) tile "
+         "alignment, and a VMEM lower-bound budget for kernels/")
+def pallas_layout(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for f in project.iter_files(lambda f: "kernels" in f.parts[:-1]):
+        aliases = import_aliases(f.tree)
+        menv = ConstEnv(f.tree)
+        fn_defs = {n.name: n for n in ast.walk(f.tree)
+                   if isinstance(n, ast.FunctionDef)}
+        for fn in [n for n in ast.walk(f.tree)
+                   if isinstance(n, ast.FunctionDef)]:
+            env = menv.child(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                origin = resolve_call_origin(node, aliases)
+                if origin is None or not origin.endswith("pallas_call"):
+                    continue
+                site = _parse_site(node, fn, aliases)
+                out.extend(_check_site(site, f.rel, fn_defs, env))
+    return out
+
+
+def _check_site(site: _CallSite, rel: str,
+                fn_defs: dict[str, ast.FunctionDef],
+                env: ConstEnv) -> list[Finding]:
+    out: list[Finding] = []
+    node = site.node
+    n_in = len(site.in_specs) if site.in_specs is not None else None
+    n_out = (len(site.out_specs) if site.out_specs is not None
+             else site.n_out_shape)
+
+    # -- kernel arity -------------------------------------------------------
+    kernel = fn_defs.get(site.kernel_name or "")
+    if kernel is not None and n_in is not None and n_out is not None:
+        expect = site.n_prefetch + n_in + n_out + site.n_scratch
+        got = len(kernel.args.posonlyargs) + len(kernel.args.args)
+        if got != expect:
+            out.append(Finding(
+                "pallas-layout", rel, kernel.lineno, kernel.col_offset,
+                f"kernel `{kernel.name}` takes {got} positional refs but "
+                f"pallas_call wires {expect} "
+                f"({site.n_prefetch} scalar-prefetch + {n_in} in + "
+                f"{n_out} out + {site.n_scratch} scratch)"))
+
+    specs = [("in", s) for s in (site.in_specs or [])] \
+        + [("out", s) for s in (site.out_specs or [])]
+
+    # -- index-map arity (scalar-prefetch arg ordering) ---------------------
+    if site.grid_len is not None:
+        want = site.grid_len + site.n_prefetch
+        for kind, spec in specs:
+            lam = _index_map(spec)
+            if lam is None:
+                continue
+            got = len(lam.args.args)
+            if got != want:
+                out.append(Finding(
+                    "pallas-layout", rel, lam.lineno, lam.col_offset,
+                    f"{kind}_spec index map takes {got} args; grid has "
+                    f"{site.grid_len} axes + {site.n_prefetch} "
+                    f"scalar-prefetch operands = {want}"))
+
+    # -- tile alignment + VMEM lower bound ----------------------------------
+    vmem_lb = 0
+    for idx, (kind, spec) in enumerate(specs):
+        if _is_smem_spec(spec):
+            continue
+        shp = _block_shape(spec)
+        if shp is None:
+            continue
+        dims = [env.resolve(d) for d in shp.elts]
+        sublane_req = _SUBLANE_F32
+        if kind == "out":
+            oi = idx - len(site.in_specs or [])
+            if oi < len(site.out_dtypes) and site.out_dtypes[oi] \
+                    and site.out_dtypes[oi].endswith("bfloat16"):
+                sublane_req = _SUBLANE_BF16
+        if dims:
+            last = dims[-1]
+            if last is not None and last != 1 and last % _LANE:
+                out.append(Finding(
+                    "pallas-layout", rel, shp.lineno, shp.col_offset,
+                    f"{kind}_spec block lane dim {last} is not a "
+                    f"multiple of {_LANE}"))
+            if len(dims) >= 2:
+                sub = dims[-2]
+                if sub is not None and sub != 1 and sub % sublane_req:
+                    out.append(Finding(
+                        "pallas-layout", rel, shp.lineno, shp.col_offset,
+                        f"{kind}_spec block sublane dim {sub} is not a "
+                        f"multiple of {sublane_req}"))
+        size = 1
+        for d in dims:
+            size *= d if d is not None else 1   # lower bound
+        vmem_lb += size * 4 * 2                 # f32, double-buffered
+
+    if vmem_lb > VMEM_BUDGET_BYTES and node is not None:
+        out.append(Finding(
+            "pallas-layout", rel, node.lineno, node.col_offset,
+            f"VMEM working-set lower bound {vmem_lb / 2**20:.1f} MiB "
+            f"exceeds the {VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget"))
+    return out

@@ -1,0 +1,352 @@
+"""Traced-scope rules: jit purity and jax.random key discipline.
+
+``jit-purity`` walks the call graph from the jit roots (see
+``callgraph``) and flags host-side escapes inside traced scope: numpy
+calls (the host-f64 accounting layer must never leak into a traced
+body), ``.item()`` / ``.tolist()`` materialization, ``float()`` /
+``np.float64()`` coercions of non-constants, and Python branching on a
+root's array arguments (a tracer in an ``if`` raises at trace time at
+best, silently specializes at worst).
+
+``rng-discipline`` flags (a) numpy RNG anywhere in traced scope —
+systems randomness must stay in host streams, learning randomness in
+jax keys — and (b) a ``jax.random`` key consumed twice without an
+intervening ``split`` / ``fold_in`` rebind, the classic correlated-
+samples bug.  Key tracking is a linear scan per function: ``split`` /
+``fold_in`` derive (and rebinding resets), any other call that takes
+the key consumes; ``if`` arms merge by max, loop bodies are unrolled
+twice so consume-without-rebind-per-iteration is caught.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.callgraph import CallGraph, FuncInfo
+from repro.analyze.core import (HOST_ONLY_DIRS, Finding, Project,
+                                register_rule, resolve_call_origin,
+                                import_aliases)
+
+_MATERIALIZERS = frozenset({"item", "tolist"})
+_KEY_DERIVERS = frozenset({"split", "fold_in"})
+# numpy namespaces whose *calls* are host-side; attribute reads like
+# np.float64 as a dtype argument are fine, calling them is not
+_NUMPY = ("numpy.", "numpy")
+
+
+def _is_numpy_origin(origin: str | None) -> bool:
+    return origin is not None and (origin == "numpy"
+                                   or origin.startswith("numpy."))
+
+
+def _analyzed(info: FuncInfo) -> bool:
+    return info.file.parts[0] not in HOST_ONLY_DIRS
+
+
+def _walk_own(fn: ast.FunctionDef):
+    """Walk a function body without descending into nested def/class
+    bodies — those are indexed (and checked) as their own functions."""
+    stack: list[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+@register_rule(
+    "jit-purity",
+    help="no host escapes (np.*, .item(), float(), tracer branching) in "
+         "functions reachable from jax.jit / codec encode/decode roots")
+def jit_purity(project: Project) -> list[Finding]:
+    graph = CallGraph(project)
+    out: list[Finding] = []
+    for info in graph.traced_funcs().values():
+        if not _analyzed(info):
+            continue
+        aliases = import_aliases(info.file.tree)
+        fname = info.node.name
+        for node in _walk_own(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            origin = resolve_call_origin(node, aliases)
+            if _is_numpy_origin(origin):
+                if origin.startswith("numpy.random"):
+                    continue          # rng-discipline owns that finding
+                out.append(Finding(
+                    "jit-purity", info.file.rel, node.lineno, node.col_offset,
+                    f"host numpy call `{origin}` inside traced "
+                    f"`{fname}` (reached from {info.root_reason or 'a jit root'})"))
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MATERIALIZERS
+                    and not node.args and not node.keywords):
+                out.append(Finding(
+                    "jit-purity", info.file.rel, node.lineno, node.col_offset,
+                    f"`.{node.func.attr}()` materializes a tracer to host "
+                    f"inside traced `{fname}`"))
+            elif (isinstance(node.func, ast.Name) and node.func.id == "float"
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)):
+                out.append(Finding(
+                    "jit-purity", info.file.rel, node.lineno, node.col_offset,
+                    f"`float(...)` coerces a traced value to host inside "
+                    f"traced `{fname}`"))
+        if info.is_root:
+            out.extend(_tracer_branches(info))
+    return out
+
+
+def _tracer_branches(info: FuncInfo) -> list[Finding]:
+    """Python `if` on a bare positional parameter of a jit-root body.
+
+    Only the root's own parameters are checked (downstream callees get
+    config objects whose static branches are legitimate), and only bare
+    names — `cfg.mode == ...` is a static branch, `if mask:` on an
+    array argument is not.  `is (not) None` and `isinstance` tests are
+    structural and excluded.
+    """
+    # kwonly args are excluded: in this codebase they are static config
+    # bound by functools.partial before tracing (kernel `causal=` flags,
+    # `interpret=`), never tracers
+    params = {a.arg for a in (info.node.args.posonlyargs
+                              + info.node.args.args)
+              if a.arg not in ("self", "cls")}
+    out: list[Finding] = []
+    for node in _walk_own(info.node):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        test = node.test
+        if _is_structural_test(test):
+            continue
+        for name in ast.walk(test):
+            if isinstance(name, ast.Name) and name.id in params \
+                    and isinstance(name.ctx, ast.Load) \
+                    and not _inside_structural(name, test):
+                out.append(Finding(
+                    "jit-purity", info.file.rel, node.lineno,
+                    node.col_offset,
+                    f"Python branch on parameter `{name.id}` inside "
+                    f"jit root `{info.node.name}` — a tracer in `if` "
+                    f"fails or silently specializes"))
+                break
+    return out
+
+
+def _is_structural_test(test: ast.AST) -> bool:
+    if isinstance(test, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.Call) and isinstance(test.func, ast.Name) \
+            and test.func.id in ("isinstance", "callable", "hasattr", "len"):
+        return True
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_structural_test(test.operand)
+    return False
+
+
+def _inside_structural(name: ast.Name, test: ast.AST) -> bool:
+    """True when `name` only appears under a structural sub-test of a
+    BoolOp (e.g. ``x is None or y``)."""
+    for sub in ast.walk(test):
+        if isinstance(sub, (ast.Compare, ast.Call)) \
+                and _is_structural_test(sub) \
+                and any(n is name for n in ast.walk(sub)):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# rng-discipline
+# ---------------------------------------------------------------------------
+
+
+@register_rule(
+    "rng-discipline",
+    help="jax.random keys never consumed twice without split/fold_in; "
+         "no numpy RNG inside traced scope")
+def rng_discipline(project: Project) -> list[Finding]:
+    graph = CallGraph(project)
+    out: list[Finding] = []
+    traced = graph.traced_funcs()
+    for info in traced.values():
+        if not _analyzed(info):
+            continue
+        aliases = import_aliases(info.file.tree)
+        for node in _walk_own(info.node):
+            if isinstance(node, ast.Call):
+                origin = resolve_call_origin(node, aliases)
+                if origin and origin.startswith("numpy.random"):
+                    out.append(Finding(
+                        "rng-discipline", info.file.rel, node.lineno,
+                        node.col_offset,
+                        f"numpy RNG `{origin}` inside traced "
+                        f"`{info.node.name}` — host randomness must not "
+                        f"enter traced scope"))
+    # key-reuse: every function in src/ (host loops split keys too)
+    seen_funcs: set[int] = set()
+    for info in graph.funcs.values():
+        if not _analyzed(info) or id(info.node) in seen_funcs:
+            continue
+        seen_funcs.add(id(info.node))
+        aliases = import_aliases(info.file.tree)
+        out.extend(_key_reuse(info, aliases))
+    return out
+
+
+def _jax_random_leaf(call: ast.Call, aliases: dict[str, str]) -> str | None:
+    origin = resolve_call_origin(call, aliases)
+    if origin and origin.startswith("jax.random."):
+        return origin.rsplit(".", 1)[1]
+    return None
+
+
+def _terminates(body: list[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+def _key_reuse(info: FuncInfo, aliases: dict[str, str]) -> list[Finding]:
+    out: list[Finding] = []
+    # counts[name] = consumptions since the last rebind; absent = untracked
+    counts: dict[str, int] = {}
+    for a in info.node.args.args + info.node.args.kwonlyargs:
+        if a.arg in ("key", "rng_key"):
+            counts[a.arg] = 0
+
+    def flag(name: str, node: ast.AST) -> None:
+        out.append(Finding(
+            "rng-discipline", info.file.rel, node.lineno, node.col_offset,
+            f"key `{name}` consumed twice without an intervening "
+            f"split/fold_in in `{info.node.name}` — correlated samples"))
+
+    def consume_expr(expr: ast.AST) -> None:
+        # one pass over the expression: a tracked name consumes when it
+        # sits inside at least one call, each occurrence counted once
+        # (innermost attribution), with two carve-outs — a subtree under
+        # split/fold_in derives rather than consumes, and IfExp arms are
+        # exclusive so they merge by max
+        def visit(node: ast.AST, in_call: bool) -> None:
+            if isinstance(node, ast.Call):
+                if _jax_random_leaf(node, aliases) in _KEY_DERIVERS:
+                    return
+                for child in ast.iter_child_nodes(node):
+                    visit(child, True)
+                return
+            if isinstance(node, ast.IfExp):
+                visit(node.test, in_call)
+                snap = dict(counts)
+                visit(node.body, in_call)
+                after = dict(counts)
+                counts.clear()
+                counts.update(snap)
+                visit(node.orelse, in_call)
+                for name in set(after) & set(counts):
+                    counts[name] = max(counts[name], after[name])
+                return
+            if isinstance(node, ast.Name) and in_call and node.id in counts:
+                counts[node.id] += 1
+                if counts[node.id] == 2:
+                    flag(node.id, node)
+                return
+            for child in ast.iter_child_nodes(node):
+                visit(child, in_call)
+
+        visit(expr, False)
+
+    def is_key_rhs(value: ast.AST) -> bool:
+        if isinstance(value, ast.Call):
+            leaf = _jax_random_leaf(value, aliases)
+            if leaf in ("PRNGKey", "key", "split", "fold_in"):
+                return True
+        if isinstance(value, ast.Attribute) and value.attr in ("key",
+                                                               "down_key"):
+            return True
+        return False
+
+    def rebind(target: ast.AST, value: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            if is_key_rhs(value):
+                counts[target.id] = 0
+            elif target.id in counts:
+                del counts[target.id]   # rebound to a non-key: untrack
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            # key, sub = jax.random.split(key) — every target is a key
+            if isinstance(value, ast.Call) \
+                    and _jax_random_leaf(value, aliases) == "split":
+                for t in target.elts:
+                    if isinstance(t, ast.Name):
+                        counts[t.id] = 0
+            else:
+                for t in target.elts:
+                    if isinstance(t, ast.Name) and t.id in counts:
+                        del counts[t.id]
+
+    def run(body: list[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign):
+                consume_expr(stmt.value)
+                for t in stmt.targets:
+                    rebind(t, stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                consume_expr(stmt.value)
+                rebind(stmt.target, stmt.value)
+            elif isinstance(stmt, ast.AugAssign):
+                consume_expr(stmt.value)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                if getattr(stmt, "value", None) is not None:
+                    consume_expr(stmt.value)
+            elif isinstance(stmt, ast.If):
+                consume_expr(stmt.test)
+                snap = dict(counts)
+                run(stmt.body)
+                body_state, body_term = dict(counts), _terminates(stmt.body)
+                counts.clear()
+                counts.update(snap)
+                run(stmt.orelse)
+                orelse_term = bool(stmt.orelse) and _terminates(stmt.orelse)
+                # merge only paths that fall through: a branch ending in
+                # return/raise never reaches the code below, so a chain
+                # of `if kind == ...: return use(key)` is one consumer
+                states = []
+                if not body_term:
+                    states.append(body_state)
+                if not orelse_term:
+                    states.append(dict(counts))
+                if not states:
+                    states = [snap]       # both arms terminate
+                merged = {}
+                for name in set.intersection(*(set(s) for s in states)):
+                    merged[name] = max(s[name] for s in states)
+                counts.clear()
+                counts.update(merged)
+            elif isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    consume_expr(stmt.iter)
+                    rebind(stmt.target, stmt.iter)
+                else:
+                    consume_expr(stmt.test)
+                # unroll twice: consuming an outer key once per iteration
+                # without rebinding is a reuse across iterations
+                run(stmt.body)
+                run(stmt.body)
+                run(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                run(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                run(stmt.body)
+                for h in stmt.handlers:
+                    run(h.body)
+                run(stmt.orelse)
+                run(stmt.finalbody)
+            # nested defs get their own scan via the outer loop
+
+    run(info.node.body)
+    # deduplicate repeat flags of the same (name, line)
+    seen: set[tuple[int, int, str]] = set()
+    uniq = []
+    for f in out:
+        k = (f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(f)
+    return uniq

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -31,7 +31,7 @@ def _path_key(path) -> str:
                     for p in path)
 
 
-def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+def flatten_tree(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
     """Pytree -> flat {path: host array} dict ("/"-joined key paths,
     optional ``prefix`` for packing several trees into one namespace)."""
     leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
@@ -45,7 +45,7 @@ def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
 _flatten = flatten_tree
 
 
-def unflatten_like(like: Any, arrays: Dict[str, np.ndarray],
+def unflatten_like(like: Any, arrays: dict[str, np.ndarray],
                    prefix: str = "", label: str = "checkpoint") -> Any:
     """Rebuild a pytree with the structure/dtypes of ``like`` from a flat
     array dict.  Raises ``ValueError`` naming every missing and every
@@ -74,22 +74,22 @@ def unflatten_like(like: Any, arrays: Dict[str, np.ndarray],
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def _atomic_write_npz(path: str, arrays: Dict[str, np.ndarray]) -> None:
+def _atomic_write_npz(path: str, arrays: dict[str, np.ndarray]) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as fh:
         np.savez(fh, **arrays)
     os.replace(tmp, path)
 
 
-def _atomic_write_json(path: str, doc: Dict[str, Any]) -> None:
+def _atomic_write_json(path: str, doc: dict[str, Any]) -> None:
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(doc, fh, indent=2, default=str)
     os.replace(tmp, path)
 
 
-def save_arrays(path: str, arrays: Dict[str, np.ndarray],
-                meta: Optional[Dict[str, Any]] = None) -> None:
+def save_arrays(path: str, arrays: dict[str, np.ndarray],
+                meta: dict[str, Any] | None = None) -> None:
     """Atomically persist a flat array dict + JSON meta as
     ``<path>.npz`` / ``<path>.json`` (arrays first, meta last — the meta
     replace is the commit point)."""
@@ -100,7 +100,7 @@ def save_arrays(path: str, arrays: Dict[str, np.ndarray],
     _atomic_write_json(path + ".json", doc)
 
 
-def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+def load_arrays(path: str) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
     """Load a ``save_arrays`` snapshot; raises ``FileNotFoundError`` when
     absent and ``ValueError`` when the npz/meta pair is torn (keys the
     meta committed to that the npz lacks)."""
@@ -118,12 +118,12 @@ def load_arrays(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
 
 
 def save(path: str, params: Any, *, step: int = 0,
-         extra: Optional[Dict[str, Any]] = None) -> None:
+         extra: dict[str, Any] | None = None) -> None:
     save_arrays(path, flatten_tree(params),
                 {"step": step, "extra": extra or {}})
 
 
-def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+def restore(path: str, like: Any) -> tuple[Any, dict[str, Any]]:
     """Restore into the structure of ``like`` (shapes must match).
     A snapshot that lacks keys or carries wrong shapes raises
     ``ValueError`` listing every offending key."""

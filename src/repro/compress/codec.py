@@ -56,7 +56,8 @@ well-defined.
 from __future__ import annotations
 
 import enum
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any
+from collections.abc import Sequence
 
 import jax
 import numpy as np
@@ -147,7 +148,7 @@ class CodecPipeline:
         self.direction: Direction = dirs.pop() if dirs else Direction.UP
         front = [s for s in stages if s.needs_commit or s.front]
         rest = [s for s in stages if not (s.needs_commit or s.front)]
-        self.stages: Tuple[UpdateCodec, ...] = tuple(front + rest)
+        self.stages: tuple[UpdateCodec, ...] = tuple(front + rest)
 
     # -- introspection ------------------------------------------------------
 
@@ -164,11 +165,11 @@ class CodecPipeline:
     def has(self, name: str) -> bool:
         return any(s.name == name for s in self.stages)
 
-    def sync_only_specs(self) -> Tuple[str, ...]:
+    def sync_only_specs(self) -> tuple[str, ...]:
         """Specs of stages that cannot run under async engines."""
         return tuple(s.spec() for s in self.stages if s.requires_sync)
 
-    def specs(self) -> Tuple[str, ...]:
+    def specs(self) -> tuple[str, ...]:
         return tuple(s.spec() for s in self.stages)
 
     def aux_for(self, name: str, value) -> tuple:
@@ -219,7 +220,7 @@ class CodecPipeline:
     # -- host side ----------------------------------------------------------
 
     def price_per_unit(self, sizes: np.ndarray, mask: np.ndarray,
-                       auxes: Optional[tuple] = None) -> np.ndarray:
+                       auxes: tuple | None = None) -> np.ndarray:
         """ONE client's upload bytes PER UNIT (host-side float64).
 
         ``mask`` is the recycle mask the client DOWNLOADED at dispatch
@@ -239,5 +240,5 @@ class CodecPipeline:
         return per_unit
 
     def price_bytes(self, sizes: np.ndarray, mask: np.ndarray,
-                    auxes: Optional[tuple] = None) -> float:
+                    auxes: tuple | None = None) -> float:
         return float(self.price_per_unit(sizes, mask, auxes).sum())

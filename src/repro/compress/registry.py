@@ -25,19 +25,18 @@ order the old hard-coded stack applied them (fedpaq -> prune -> dropout
 -> lbgm), so legacy configs run bit-for-bit through the pipeline.
 """
 from __future__ import annotations
-
-from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
+from collections.abc import Sequence
 
 from repro.compress.codec import CodecPipeline, Direction, UpdateCodec
 from repro.compress.codecs import (DeltaDownlink, DropoutAvg, ErrorFeedback,
                                    FedPAQ, LBGM, Prune, TopK)
 
-CODECS: Dict[str, Type[UpdateCodec]] = {}
+CODECS: dict[str, type[UpdateCodec]] = {}
 
 _DOWN_PREFIX = "down:"
 
 
-def register_codec(cls: Type[UpdateCodec]) -> Type[UpdateCodec]:
+def register_codec(cls: type[UpdateCodec]) -> type[UpdateCodec]:
     """Register a codec class under ``cls.name`` (usable as decorator)."""
     if not getattr(cls, "name", None):
         raise ValueError(f"{cls!r} has no codec name")
@@ -50,7 +49,7 @@ for _cls in (FedPAQ, Prune, DropoutAvg, LBGM, TopK, ErrorFeedback,
     register_codec(_cls)
 
 
-def _parse_arg(tok: str) -> Union[int, float]:
+def _parse_arg(tok: str) -> int | float:
     tok = tok.strip()
     try:
         return int(tok)
@@ -83,7 +82,7 @@ def parse_codec(spec: str) -> UpdateCodec:
     return codec
 
 
-def split_codec_specs(specs: Union[str, Sequence[str]]) -> Tuple[str, ...]:
+def split_codec_specs(specs: str | Sequence[str]) -> tuple[str, ...]:
     """Normalize a codec-stack declaration to a tuple of spec strings.
 
     Accepts either a sequence of per-stage specs or one '+'-joined
@@ -93,8 +92,8 @@ def split_codec_specs(specs: Union[str, Sequence[str]]) -> Tuple[str, ...]:
     return tuple(s.strip() for s in specs if s.strip())
 
 
-def partition_codec_specs(specs: Union[str, Sequence[str]]
-                          ) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+def partition_codec_specs(specs: str | Sequence[str]
+                          ) -> tuple[tuple[str, ...], tuple[str, ...]]:
     """Split one mixed codec declaration into ``(up_specs, down_specs)``
     by the ``down:`` direction prefix (each side keeps its listed order)."""
     specs = split_codec_specs(specs)
@@ -103,8 +102,8 @@ def partition_codec_specs(specs: Union[str, Sequence[str]]
     return up, down
 
 
-def parse_codecs(specs: Union[str, Sequence[str]],
-                 direction: Optional[Direction] = None) -> CodecPipeline:
+def parse_codecs(specs: str | Sequence[str],
+                 direction: Direction | None = None) -> CodecPipeline:
     """Spec strings -> a ``CodecPipeline`` (empty specs -> identity).
 
     ``direction`` filters a mixed declaration to one link's stages;
@@ -118,9 +117,9 @@ def parse_codecs(specs: Union[str, Sequence[str]],
 
 def legacy_codec_specs(fedpaq_bits: int = 0, prune_keep: float = 0.0,
                        dropout_rate: float = 0.0,
-                       lbgm_threshold: float = 0.0) -> Tuple[str, ...]:
+                       lbgm_threshold: float = 0.0) -> tuple[str, ...]:
     """The retired FLConfig scalar flags as an equivalent spec tuple."""
-    out: List[str] = []
+    out: list[str] = []
     if fedpaq_bits:
         out.append(f"fedpaq:{int(fedpaq_bits)}")
     if prune_keep:

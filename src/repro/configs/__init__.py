@@ -7,7 +7,6 @@ returns the CPU smoke-test variant.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
 
 from repro.configs.base import (  # noqa: F401
     SHAPES,
@@ -18,7 +17,7 @@ from repro.configs.base import (  # noqa: F401
     param_counts,
 )
 
-ARCH_IDS: List[str] = [
+ARCH_IDS: list[str] = [
     "qwen3-14b",
     "internvl2-76b",
     "mixtral-8x7b",
@@ -31,7 +30,7 @@ ARCH_IDS: List[str] = [
     "minitron-8b",
 ]
 
-_MODULES: Dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+_MODULES: dict[str, str] = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
 
 
 def get_config(name: str, reduced: bool = False) -> ModelConfig:
@@ -42,5 +41,5 @@ def get_config(name: str, reduced: bool = False) -> ModelConfig:
     return cfg.reduced() if reduced else cfg
 
 
-def all_configs(reduced: bool = False) -> Dict[str, ModelConfig]:
+def all_configs(reduced: bool = False) -> dict[str, ModelConfig]:
     return {a: get_config(a, reduced) for a in ARCH_IDS}

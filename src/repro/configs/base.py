@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ class ShapeSpec:
     global_batch: int
 
 
-SHAPES: Dict[str, ShapeSpec] = {
+SHAPES: dict[str, ShapeSpec] = {
     "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
     "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
     "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
@@ -125,7 +125,7 @@ class ModelConfig:
     # -- reduced smoke variant ----------------------------------------------
     def reduced(self) -> "ModelConfig":
         """A tiny same-family variant: 2 layers, d_model<=256, <=4 experts."""
-        kw: Dict[str, Any] = dict(
+        kw: dict[str, Any] = dict(
             name=self.name + "-reduced",
             n_layers=2,
             d_model=128,
@@ -159,7 +159,7 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 
-def param_counts(cfg: ModelConfig) -> Dict[str, float]:
+def param_counts(cfg: ModelConfig) -> dict[str, float]:
     """Analytic total and *active* parameter counts (active differs for MoE)."""
     d, L = cfg.d_model, cfg.n_layers
     H, K, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
@@ -226,7 +226,7 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(tuple(shape), dtype)
 
 
-def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of a step.
 
     train   -> {tokens, labels, (vis_embeds | enc_frames)}
@@ -235,7 +235,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
     """
     B, S = shape.global_batch, shape.seq_len
     d = cfg.d_model
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     if shape.kind == "train":
         out["tokens"] = _sds((B, S), jnp.int32)
         out["labels"] = _sds((B, S), jnp.int32)
@@ -297,7 +297,7 @@ class SimScenario:
         return dataclasses.replace(self, **kw)
 
 
-SIM_SCENARIOS: Dict[str, SimScenario] = {
+SIM_SCENARIOS: dict[str, SimScenario] = {
     "uniform": SimScenario("uniform", "uniform"),
     "lognormal": SimScenario("lognormal", "lognormal", sigma=0.6),
     "bimodal": SimScenario("bimodal", "bimodal", step_time=0.04,
@@ -341,11 +341,11 @@ def get_scenario(name_or_spec) -> SimScenario:
                        f"have {sorted(SIM_SCENARIOS)}") from None
 
 
-def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict[str, Any]:
     """ShapeDtypeStruct tree for the decode cache of ``cfg``."""
     L, K, hd = cfg.n_layers, cfg.kv_heads, cfg.hd
     dt = cfg.dtype
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     if cfg.family in ("dense", "vlm", "encdec"):
         out["k"] = _sds((L, batch, seq_len, K, hd), dt)
         out["v"] = _sds((L, batch, seq_len, K, hd), dt)

@@ -27,8 +27,7 @@ is cheaper than a snapshot, and downlink codecs (``down:fedpaq:8``)
 price the broadcast exactly like uplink codecs price the update.
 """
 from __future__ import annotations
-
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import numpy as np
 
@@ -102,7 +101,7 @@ class ClientResources(NamedTuple):
 
 
 def download_time(um: UnitMap, res: ClientResources,
-                  payload_bytes: Optional[float] = None) -> float:
+                  payload_bytes: float | None = None) -> float:
     """Broadcast leg of the round trip.
 
     Default (``payload_bytes=None``) is the full model — recycled units
@@ -122,7 +121,7 @@ def compute_time(tau: int, res: ClientResources) -> float:
 
 def upload_time(um: UnitMap, mask: Any, res: ClientResources,
                 scale: float = 1.0,
-                payload_bytes: Optional[float] = None) -> float:
+                payload_bytes: float | None = None) -> float:
     """Mask-aware: units in R_t are never serialized to the uplink.
 
     ``payload_bytes`` (codec-pipeline-priced) overrides the mask-gated
@@ -135,8 +134,8 @@ def upload_time(um: UnitMap, mask: Any, res: ClientResources,
 
 def round_trip_time(um: UnitMap, mask: Any, res: ClientResources, tau: int,
                     scale: float = 1.0,
-                    payload_bytes: Optional[float] = None,
-                    download_bytes: Optional[float] = None) -> float:
+                    payload_bytes: float | None = None,
+                    download_bytes: float | None = None) -> float:
     """Dispatch-to-arrival latency of one client round (both transfer
     legs take pipeline-priced byte overrides)."""
     return (download_time(um, res, download_bytes) + compute_time(tau, res)

@@ -12,7 +12,6 @@ instead of three; on CPU it runs in interpret mode and is only sensible
 for validation.
 """
 from __future__ import annotations
-
 from typing import Any
 
 import jax

@@ -10,8 +10,7 @@ Everything inside ``luar_round`` is jit-compatible; the recycle set is a
 per-unit boolean mask.
 """
 from __future__ import annotations
-
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -180,10 +179,10 @@ def staleness_discount(staleness: jax.Array, alpha: float = 0.5) -> jax.Array:
 
 def staleness_weighted_merge(stacked_updates: Any, staleness: jax.Array,
                              alpha: float = 0.5, *,
-                             validity: Optional[jax.Array] = None,
-                             um: Optional[UnitMap] = None,
+                             validity: jax.Array | None = None,
+                             um: UnitMap | None = None,
                              fallback: Any = None,
-                             ht: Optional[jax.Array] = None) -> Any:
+                             ht: jax.Array | None = None) -> Any:
     """Merge a buffer of K client updates into one pseudo-update.
 
     stacked_updates: pytree whose leaves have leading axis K (one slice per
@@ -281,7 +280,7 @@ def fused_buffer_round(state: LuarState, um: UnitMap, cfg: LuarConfig,
                        stacked_updates: Any, staleness: jax.Array,
                        alpha: float, params: Any, *,
                        validity: jax.Array,
-                       ht: Optional[jax.Array] = None,
+                       ht: jax.Array | None = None,
                        fedasync: bool = False):
     """The fedbuff server round in ONE batched-kernel sweep.
 

@@ -12,8 +12,7 @@ each weight tensor on DistilBERT).  For pytree models we support:
     (40-layer DistilBERT-style model -> 40 units per weight kind).
 """
 from __future__ import annotations
-
-from typing import Any, Dict, List, NamedTuple, Tuple, Union
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +22,14 @@ _STACKED_PREFIXES = ("blocks", "enc_blocks", "dec_blocks")
 
 # leaf -> unit mapping: an int (whole leaf is one unit) or (start, count)
 # (stacked leaf: units start..start+count-1, one per first-axis slice)
-LeafUnit = Union[int, Tuple[int, int]]
+LeafUnit = int | tuple[int, int]
 
 
 class UnitMap(NamedTuple):
-    names: Tuple[str, ...]          # unit names, ordered
-    leaf_unit: Tuple[LeafUnit, ...]
+    names: tuple[str, ...]          # unit names, ordered
+    leaf_unit: tuple[LeafUnit, ...]
     treedef: Any
-    unit_bytes: Tuple[int, ...]     # parameter bytes per unit
+    unit_bytes: tuple[int, ...]     # parameter bytes per unit
 
 
 def _path_str(path) -> str:
@@ -47,10 +46,10 @@ def _path_str(path) -> str:
 
 def build_units(params: Any, granularity: str = "leaf") -> UnitMap:
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
-    names: List[str] = []
-    leaf_unit: List[LeafUnit] = []
-    nbytes: List[int] = []
-    index: Dict[str, int] = {}
+    names: list[str] = []
+    leaf_unit: list[LeafUnit] = []
+    nbytes: list[int] = []
+    index: dict[str, int] = {}
     for path, leaf in leaves_with_path:
         full = _path_str(path)
         total = int(np.prod(leaf.shape)) * leaf.dtype.itemsize

@@ -5,14 +5,12 @@ are identical to the paper's settings).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
 import numpy as np
 
 
 def gaussian_mixture(n: int, n_classes: int = 10, d: int = 64,
                      sep: float = 3.0, seed: int = 0,
-                     means_seed: int = 1234) -> Tuple[np.ndarray, np.ndarray]:
+                     means_seed: int = 1234) -> tuple[np.ndarray, np.ndarray]:
     """Linearly-separable-ish class clusters (MLP-learnable).  The class
     means are drawn from ``means_seed`` so train/test splits with
     different ``seed`` share the same task."""
@@ -25,7 +23,7 @@ def gaussian_mixture(n: int, n_classes: int = 10, d: int = 64,
 
 
 def synthetic_images(n: int, n_classes: int = 62, size: int = 28,
-                     seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+                     seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
     """FEMNIST-like: class-specific low-frequency pattern + pixel noise."""
     rng = np.random.default_rng(seed)
     yy, xx = np.mgrid[0:size, 0:size].astype(np.float32) / size
@@ -39,7 +37,7 @@ def synthetic_images(n: int, n_classes: int = 62, size: int = 28,
 
 
 def synthetic_tokens(n_seqs: int, seq_len: int = 64, vocab: int = 512,
-                     n_classes: int = 4, seed: int = 0) -> Dict[str, np.ndarray]:
+                     n_classes: int = 4, seed: int = 0) -> dict[str, np.ndarray]:
     """AG-News-like: class-conditioned token distributions for sequence
     classification, plus next-token LM targets."""
     rng = np.random.default_rng(seed)
@@ -54,7 +52,7 @@ def synthetic_tokens(n_seqs: int, seq_len: int = 64, vocab: int = 512,
     return {"tokens": toks, "labels": labels.astype(np.int32)}
 
 
-def lm_batch(tokens: np.ndarray) -> Dict[str, np.ndarray]:
+def lm_batch(tokens: np.ndarray) -> dict[str, np.ndarray]:
     """Next-token prediction batch from raw token sequences."""
     return {"tokens": tokens[:, :-1].astype(np.int32),
             "labels": tokens[:, 1:].astype(np.int32)}

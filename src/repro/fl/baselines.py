@@ -12,8 +12,7 @@
   feddropoutavg   : random dropout of update entries with rate fdr.
 """
 from __future__ import annotations
-
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,7 @@ def lbgm_init(params: Params, um: UnitMap) -> LBGMState:
 
 
 def lbgm_round(state: LBGMState, um: UnitMap, fresh: Params,
-               threshold: float = 0.95) -> Tuple[Params, LBGMState, jax.Array]:
+               threshold: float = 0.95) -> tuple[Params, LBGMState, jax.Array]:
     """Returns (applied_update, new_state, per-unit sent_full mask)."""
     fresh_sq = unit_sq_norms(um, fresh)
     # per-unit <fresh, anchor>

@@ -6,8 +6,8 @@ Supports the FedProx proximal term and MOON-free advanced-optimizer
 hooks (the server side lives in fl/server.py).
 """
 from __future__ import annotations
-
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, NamedTuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +24,8 @@ class ClientConfig(NamedTuple):
     prox_mu: float = 0.0            # FedProx
 
 
-def local_update(loss_fn: Callable[[Params, Dict], jax.Array],
-                 params: Params, batches: Dict[str, jax.Array],
+def local_update(loss_fn: Callable[[Params, dict], jax.Array],
+                 params: Params, batches: dict[str, jax.Array],
                  cfg: ClientConfig) -> Params:
     """Run tau local steps.  ``batches`` arrays are (tau, ...) stacked.
 
@@ -54,7 +54,7 @@ def local_update(loss_fn: Callable[[Params, Dict], jax.Array],
 
 
 def batched_local_updates(loss_fn, params: Params,
-                          client_batches: Dict[str, jax.Array],
+                          client_batches: dict[str, jax.Array],
                           cfg: ClientConfig) -> Params:
     """vmap over the active cohort.  client_batches arrays: (a, tau, ...).
     Returns stacked Delta^i with leading axis a."""

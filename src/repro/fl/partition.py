@@ -2,18 +2,16 @@
 alpha=0.1 for CIFAR/FEMNIST-like, 0.5 for AG-News-like)."""
 from __future__ import annotations
 
-from typing import List
-
 import numpy as np
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
-                        seed: int = 0, min_size: int = 2) -> List[np.ndarray]:
+                        seed: int = 0, min_size: int = 2) -> list[np.ndarray]:
     """Returns per-client index arrays.  Highly skewed for small alpha."""
     rng = np.random.default_rng(seed)
     n_classes = int(labels.max()) + 1
     while True:
-        idx_per_client: List[List[int]] = [[] for _ in range(n_clients)]
+        idx_per_client: list[list[int]] = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
             rng.shuffle(idx_c)
@@ -27,7 +25,7 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
     return [np.array(sorted(ix)) for ix in idx_per_client]
 
 
-def partition_stats(parts: List[np.ndarray], labels: np.ndarray) -> dict:
+def partition_stats(parts: list[np.ndarray], labels: np.ndarray) -> dict:
     n_classes = int(labels.max()) + 1
     sizes = np.array([len(p) for p in parts])
     per_class = np.stack([np.bincount(labels[p], minlength=n_classes) for p in parts])

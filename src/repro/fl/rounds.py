@@ -23,7 +23,8 @@ from __future__ import annotations
 import warnings
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +60,7 @@ class FLConfig:
     luar: LuarConfig = field(default_factory=LuarConfig)
     # the upload compressor stack (repro.compress): a tuple of codec spec
     # strings, or one '+'-joined string ("fedpaq:4+topk:0.1+ef")
-    codecs: Tuple[str, ...] = ()
+    codecs: tuple[str, ...] = ()
     # who trains each round (repro.participate): one policy spec string —
     # "uniform" (the legacy sampler, bit-for-bit), "powd:8",
     # "importance:norm", "avail:diurnal", "avail:bernoulli:0.1",
@@ -76,7 +77,7 @@ class FLConfig:
 
 @dataclass
 class FLResult:
-    history: List[Dict[str, float]] = field(default_factory=list)
+    history: list[dict[str, float]] = field(default_factory=list)
     comm_ratio: float = 1.0          # uplink bytes vs FedAvg (same rounds)
     uploaded: float = 0.0            # cumulative client->server bytes (f64)
     n_uplinks_spent: int = 0         # uploads that crossed the wire (the
@@ -85,16 +86,16 @@ class FLResult:
                                      # so every cohort member spends one)
     downloaded: float = 0.0          # cumulative server->client bytes (f64)
     down_ratio: float = 1.0          # downlink bytes vs full-model broadcast
-    participation_count: Optional[np.ndarray] = None   # per-client rounds
+    participation_count: np.ndarray | None = None   # per-client rounds
                                      # trained (biased-policy telemetry)
-    fairness: Optional[Dict[str, float]] = None        # min/median/max of it
-    agg_count: Optional[np.ndarray] = None
-    unit_names: Optional[tuple] = None
+    fairness: dict[str, float] | None = None        # min/median/max of it
+    agg_count: np.ndarray | None = None
+    unit_names: tuple | None = None
     params: Any = None
     luar_state: Any = None
 
 
-def resolve_codec_specs(cfg: FLConfig) -> Tuple[str, ...]:
+def resolve_codec_specs(cfg: FLConfig) -> tuple[str, ...]:
     """The effective codec stack of a config.
 
     ``cfg.codecs`` wins; the legacy scalar flags are shimmed onto the
@@ -138,16 +139,16 @@ def server_broadcast_additive(cfg: FLConfig) -> bool:
 
 
 @lru_cache(maxsize=128)
-def _pricing_pipeline(specs: Tuple[str, ...]) -> CodecPipeline:
+def _pricing_pipeline(specs: tuple[str, ...]) -> CodecPipeline:
     """Cached UPLINK pipelines for HOST-SIDE PRICING ONLY (never
     init_state'd or encoded with, so sharing across models is safe)."""
     return parse_codecs(partition_codec_specs(specs)[0])
 
 
-def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
-                          cohort: np.ndarray, tau: int, bs: int, rng) -> Dict[str, jnp.ndarray]:
+def _stack_client_batches(data: dict[str, np.ndarray], parts: list[np.ndarray],
+                          cohort: np.ndarray, tau: int, bs: int, rng) -> dict[str, jnp.ndarray]:
     """(a, tau, bs, ...) batches sampled with replacement per client."""
-    out: Dict[str, list] = {k: [] for k in data}
+    out: dict[str, list] = {k: [] for k in data}
     for c in cohort:
         idx = parts[c]
         sel = rng.choice(idx, size=(tau, bs), replace=True)
@@ -157,7 +158,7 @@ def _stack_client_batches(data: Dict[str, np.ndarray], parts: List[np.ndarray],
 
 
 def init_codec_states(params, um, pipeline: CodecPipeline,
-                      down_pipeline: Optional[CodecPipeline] = None):
+                      down_pipeline: CodecPipeline | None = None):
     """The opaque codec state a ``make_round_step`` body threads: the UP
     pipeline state alone, or an ``(up, down)`` pair when a non-empty DOWN
     pipeline is declared (the pair shape is private to the closure — the
@@ -172,12 +173,12 @@ _DOWN_KEY_TAG = 0x0D0               # fold_in tag for the broadcast encode
                                     # (pure: never advances the round key)
 
 
-def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
-                    cfg: FLConfig, um, pipeline: Optional[CodecPipeline] = None,
-                    down_pipeline: Optional[CodecPipeline] = None,
+def make_round_step(loss_fn: Callable[[Params, dict], jax.Array],
+                    cfg: FLConfig, um, pipeline: CodecPipeline | None = None,
+                    down_pipeline: CodecPipeline | None = None,
                     weighted: bool = False, want_loss: bool = True,
                     want_norm: bool = True,
-                    fused_agg: Optional[bool] = None) -> Callable:
+                    fused_agg: bool | None = None) -> Callable:
     """Build the jitted synchronous round body (Alg. 2 lines 5-12).
 
     Shared by ``run_fl`` and by ``repro.sim``'s deadline engine so the
@@ -284,8 +285,8 @@ def make_round_step(loss_fn: Callable[[Params, Dict], jax.Array],
 
 def client_payload_bytes_per_unit(sizes: np.ndarray, mask: np.ndarray,
                                   cfg: FLConfig,
-                                  aux: Optional[tuple] = None,
-                                  pipeline: Optional[CodecPipeline] = None
+                                  aux: tuple | None = None,
+                                  pipeline: CodecPipeline | None = None
                                   ) -> np.ndarray:
     """ONE client's upload bytes this round, PER UNIT (host-side float64).
 
@@ -302,21 +303,21 @@ def client_payload_bytes_per_unit(sizes: np.ndarray, mask: np.ndarray,
 
 
 def client_payload_bytes(sizes: np.ndarray, mask: np.ndarray, cfg: FLConfig,
-                         aux: Optional[tuple] = None,
-                         pipeline: Optional[CodecPipeline] = None) -> float:
+                         aux: tuple | None = None,
+                         pipeline: CodecPipeline | None = None) -> float:
     """ONE client's upload bytes this round: units outside R_t, priced by
     the codec pipeline (host-side float64)."""
     return float(client_payload_bytes_per_unit(sizes, mask, cfg, aux,
                                                pipeline).sum())
 
 
-def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
+def run_fl(loss_fn: Callable[[Params, dict], jax.Array],
            init_params: Params,
-           data: Dict[str, np.ndarray],
-           parts: List[np.ndarray],
+           data: dict[str, np.ndarray],
+           parts: list[np.ndarray],
            cfg: FLConfig,
-           eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
-           telemetry: Optional[Telemetry] = None) -> FLResult:
+           eval_fn: Callable[[Params], dict[str, float]] | None = None,
+           telemetry: Telemetry | None = None) -> FLResult:
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     key, k1, k2 = jax.random.split(key, 3)
@@ -385,7 +386,7 @@ def run_fl(loss_fn: Callable[[Params, Dict], jax.Array],
     has_delta = down_pipe.has("delta") and additive
     seed_cache = has_delta and cfg.luar.mode == "recycle"
     no_mask = np.zeros(n_units, bool)
-    prev_mask: Optional[np.ndarray] = None
+    prev_mask: np.ndarray | None = None
     seen: set = set()                # clients holding a base snapshot
 
     for t in range(cfg.rounds):

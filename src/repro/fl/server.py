@@ -9,8 +9,7 @@ update \\hat{Delta}_t (Section 4.2 — LUAR is agnostic to the optimizer):
            adding +/- alpha * Delta-hat with random per-layer signs.
 """
 from __future__ import annotations
-
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +27,8 @@ class ServerConfig(NamedTuple):
 
 
 class ServerState(NamedTuple):
-    adam: Optional[optim.AdamState]
-    momentum: Optional[Params]
+    adam: optim.AdamState | None
+    momentum: Params | None
     key: jax.Array
 
 
@@ -48,7 +47,7 @@ def broadcast_point(params: Params, state: ServerState, cfg: ServerConfig) -> Pa
 
 
 def apply_update(params: Params, applied: Params, state: ServerState,
-                 cfg: ServerConfig) -> Tuple[Params, ServerState]:
+                 cfg: ServerConfig) -> tuple[Params, ServerState]:
     """x_{t+1} = server_opt(x_t, Delta-hat_t)   (Alg. 2 line 12)."""
     key, sub = jax.random.split(state.key)
     if cfg.kind == "fedavg" or cfg.kind == "fedmut":

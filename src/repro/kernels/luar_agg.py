@@ -40,7 +40,8 @@ roofline.
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import Any, List, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Any, NamedTuple
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +54,7 @@ from repro.kernels import _CompilerParams
 _LANES = 128
 _ROWS = 8
 
-LeafUnit = Union[int, Tuple[int, int]]
+LeafUnit = int | tuple[int, int]
 
 
 def _block_rows_for(pad_rows: int, block_rows: int) -> int:
@@ -166,14 +167,14 @@ class PackLayout(NamedTuple):
     block_rows: int
     total_rows: int
     grid: int
-    unit_rows: Tuple[int, ...]
-    unit_row_start: Tuple[int, ...]
+    unit_rows: tuple[int, ...]
+    unit_row_start: tuple[int, ...]
     # per unit: ((leaf_idx, depth_idx|None, size), ...) in pack order
-    unit_pieces: Tuple[Tuple[Tuple[int, Optional[int], int], ...], ...]
+    unit_pieces: tuple[tuple[tuple[int, int | None, int], ...], ...]
     # per leaf: ((depth_idx|None, flat_elem_offset, size), ...)
-    leaf_parts: Tuple[Tuple[Tuple[Optional[int], int, int], ...], ...]
-    seg: Tuple[int, ...]                # grid step -> unit id
-    first: Tuple[int, ...]              # 1 on a unit's first grid step
+    leaf_parts: tuple[tuple[tuple[int | None, int, int], ...], ...]
+    seg: tuple[int, ...]                # grid step -> unit id
+    first: tuple[int, ...]              # 1 on a unit's first grid step
 
 
 def leaf_unit_count(leaf_unit: Sequence[LeafUnit]) -> int:
@@ -184,14 +185,14 @@ def leaf_unit_count(leaf_unit: Sequence[LeafUnit]) -> int:
 
 
 @lru_cache(maxsize=128)
-def build_pack_layout(leaf_unit: Tuple[LeafUnit, ...],
-                      shapes: Tuple[Tuple[int, ...], ...],
+def build_pack_layout(leaf_unit: tuple[LeafUnit, ...],
+                      shapes: tuple[tuple[int, ...], ...],
                       block_rows: int = 64) -> PackLayout:
     """Plan the segment-packed buffer (cached: pure shape metadata)."""
     if block_rows % _ROWS:
         block_rows = max(_ROWS, block_rows - block_rows % _ROWS)
     n = leaf_unit_count(leaf_unit)
-    pieces: List[List[Tuple[int, Optional[int], int]]] = [[] for _ in range(n)]
+    pieces: list[list[tuple[int, int | None, int]]] = [[] for _ in range(n)]
     for li, (u, shape) in enumerate(zip(leaf_unit, shapes)):
         size = int(np.prod(shape)) if shape else 1
         if isinstance(u, tuple):
@@ -201,12 +202,12 @@ def build_pack_layout(leaf_unit: Tuple[LeafUnit, ...],
                 pieces[start + i].append((li, i, per))
         else:
             pieces[u].append((li, None, size))
-    unit_rows: List[int] = []
-    unit_row_start: List[int] = []
-    leaf_parts: List[List[Tuple[Optional[int], int, int]]] = \
+    unit_rows: list[int] = []
+    unit_row_start: list[int] = []
+    leaf_parts: list[list[tuple[int | None, int, int]]] = \
         [[] for _ in leaf_unit]
-    seg: List[int] = []
-    first: List[int] = []
+    seg: list[int] = []
+    first: list[int] = []
     row = 0
     for u in range(n):
         elems = sum(sz for _, _, sz in pieces[u])
@@ -260,8 +261,8 @@ def pack_leaves(leaves: Sequence[jax.Array], layout: PackLayout,
 
 
 def unpack_applied(flat: jax.Array, layout: PackLayout,
-                   shapes: Sequence[Tuple[int, ...]],
-                   dtypes: Sequence[Any]) -> List[jax.Array]:
+                   shapes: Sequence[tuple[int, ...]],
+                   dtypes: Sequence[Any]) -> list[jax.Array]:
     """Scatter the packed applied-update buffer back into leaves."""
     v = flat.reshape(-1)
     out = []

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +55,7 @@ def ssd_ref(x, dt, A, Bm, Cm, D, initial_state=None):
 
 
 def luar_agg_ref(delta: jax.Array, x: jax.Array, recycled: jax.Array,
-                 use_recycled: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 use_recycled: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused server-side LUAR op for one layer: select the applied update
     and produce the squared norms for Eq. (1)'s s_{t,l}.
 

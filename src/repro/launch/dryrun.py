@@ -17,7 +17,7 @@ import argparse
 import json
 import sys
 import time
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import numpy as np
@@ -50,7 +50,7 @@ def _static_mask(um, frac: float):
 
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               static: bool = False, delta_frac: float = 0.25,
-              strategy: str = "fsdp_sp", compile_: bool = True) -> Dict[str, Any]:
+              strategy: str = "fsdp_sp", compile_: bool = True) -> dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     if shape_name == "long_500k" and not cfg.sub_quadratic:
@@ -101,7 +101,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                          out_shardings=(None, csh))
             lowered = fn.lower(params_shapes, cshapes, input_specs(cfg, shape))
 
-        rec: Dict[str, Any] = {
+        rec: dict[str, Any] = {
             "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
             "static": static, "strategy": strategy, "lower_s": round(time.time() - t0, 1),
         }

@@ -37,9 +37,10 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, steps: int = 16,
           reduced: bool = True, seed: int = 0, greedy: bool = True):
     cfg = get_config(arch, reduced=reduced)
     model = build(cfg)
-    key = jax.random.PRNGKey(seed)
+    key, prompt_key = jax.random.split(jax.random.PRNGKey(seed))
     params = model.init(key)
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    prompts = jax.random.randint(prompt_key, (batch, prompt_len), 0,
+                                 cfg.vocab_size)
     pf_batch = {"tokens": prompts}
     if cfg.family == "vlm":
         pf_batch["vis_embeds"] = 0.1 * jnp.ones(

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -51,7 +50,7 @@ ICI_BW = 50e9
 DCI_BW = 25e9
 
 
-def _shape_list_bytes(text: str) -> List[Tuple[str, List[int]]]:
+def _shape_list_bytes(text: str) -> list[tuple[str, list[int]]]:
     out = []
     for m in _SHAPE_RE.finditer(text):
         dims = [int(d) for d in m.group(2).split(",") if d]
@@ -71,8 +70,8 @@ def _bytes_of(dt_dims) -> int:
 class Instr:
     name: str
     op: str
-    result_shapes: List
-    operands: List[str]
+    result_shapes: list
+    operands: list[str]
     rhs: str
 
 
@@ -80,16 +79,16 @@ class Instr:
 class Computation:
     name: str
     is_entry: bool
-    instrs: List[Instr] = field(default_factory=list)
-    shapes: Dict[str, List] = field(default_factory=dict)  # symbol table
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict[str, list] = field(default_factory=dict)  # symbol table
 
 
 _OP_RE = re.compile(r"\b([a-z][\w\-]*)\(")
 
 
-def parse_computations(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
     for raw in text.splitlines():
         line = raw.strip()
         if cur is None:
@@ -132,7 +131,7 @@ def parse_computations(text: str) -> Dict[str, Computation]:
     return comps
 
 
-def _callees(instr: Instr) -> List[Tuple[str, str]]:
+def _callees(instr: Instr) -> list[tuple[str, str]]:
     """[(role, computation-name)] referenced by this instruction."""
     out = []
     for role in ("body", "condition", "to_apply", "calls"):
@@ -195,8 +194,8 @@ def _conv_flops(ins: Instr, comp: Computation) -> float:
 class Cost:
     flops: float = 0.0
     bytes: float = 0.0
-    coll: Dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
-    coll_counts: Dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll: dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
 
     def add(self, other: "Cost", mult: float = 1.0):
         self.flops += mult * other.flops
@@ -206,9 +205,9 @@ class Cost:
             self.coll_counts[k] += mult * other.coll_counts[k]
 
 
-def analyze(text: str) -> Dict[str, float]:
+def analyze(text: str) -> dict[str, float]:
     comps = parse_computations(text)
-    memo: Dict[str, Cost] = {}
+    memo: dict[str, Cost] = {}
 
     def cost_of(name: str, stack=()) -> Cost:
         if name in memo:
@@ -298,8 +297,8 @@ def analyze(text: str) -> Dict[str, float]:
     return out
 
 
-def roofline(analysis: Dict[str, float], *, cross_pod_bytes: float = 0.0
-             ) -> Dict[str, float]:
+def roofline(analysis: dict[str, float], *, cross_pod_bytes: float = 0.0
+             ) -> dict[str, float]:
     terms = {
         "compute_s": analysis["flops"] / PEAK_FLOPS,
         "memory_s": analysis["hbm_bytes"] / HBM_BW,

@@ -19,8 +19,6 @@ localhost latency.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
-
 import jax
 
 # goodput in bytes/s as (up, down) — medians from a production transfer
@@ -38,7 +36,7 @@ MEASURED_LINK_BW = {
 LINK_MIX = (("wan", 0.80), ("metro", 0.15), ("dcn", 0.04), ("ici", 0.01))
 
 
-def client_link_trace(n_clients: int) -> List[Tuple[str, float, float]]:
+def client_link_trace(n_clients: int) -> list[tuple[str, float, float]]:
     """Per-client (link class, up bytes/s, down bytes/s), replayed from
     the measured table.  Deterministic largest-remainder apportionment of
     the fleet mix — the same population always maps to the same links,
@@ -53,7 +51,7 @@ def client_link_trace(n_clients: int) -> List[Tuple[str, float, float]]:
     by_rem = sorted(exact, key=lambda kv: kv[1] - int(kv[1]), reverse=True)
     for name, _ in by_rem[:short]:
         counts[name] += 1
-    out: List[Tuple[str, float, float]] = []
+    out: list[tuple[str, float, float]] = []
     for name, _ in LINK_MIX:
         up, down = MEASURED_LINK_BW[name]
         out.extend((name, up, down) for _ in range(counts[name]))
@@ -72,7 +70,7 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
-def data_axes(mesh) -> Tuple[str, ...]:
+def data_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 

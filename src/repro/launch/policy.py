@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import contextlib
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -31,26 +31,26 @@ from jax.sharding import PartitionSpec as P
 @dataclass
 class Policy:
     mesh: Any
-    batch_axes: Tuple[str, ...] = ("data",)
-    seq_axis: Optional[str] = "model"
-    head_axis: Optional[str] = "model"
-    ep_axis: Optional[str] = "model"
+    batch_axes: tuple[str, ...] = ("data",)
+    seq_axis: str | None = "model"
+    head_axis: str | None = "model"
+    ep_axis: str | None = "model"
 
-    def axis_size(self, name: Optional[str]) -> int:
+    def axis_size(self, name: str | None) -> int:
         if name is None:
             return 1
         return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(name, 1)
 
 
-_ACTIVE: Optional[Policy] = None
+_ACTIVE: Policy | None = None
 
 
-def active() -> Optional[Policy]:
+def active() -> Policy | None:
     return _ACTIVE
 
 
 @contextlib.contextmanager
-def use_policy(policy: Optional[Policy]):
+def use_policy(policy: Policy | None):
     global _ACTIVE
     prev = _ACTIVE
     _ACTIVE = policy

@@ -22,8 +22,7 @@ Strategies
     collective time (see EXPERIMENTS.md §Perf iteration 1).
 """
 from __future__ import annotations
-
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -70,7 +69,7 @@ def layout(cfg: ModelConfig, shape: ShapeSpec, mesh):
 
 
 def make_policy(mesh, cfg: ModelConfig, strategy: str = "fsdp_sp",
-                shape: Optional[ShapeSpec] = None) -> Optional[Policy]:
+                shape: ShapeSpec | None = None) -> Policy | None:
     if strategy != "fsdp_sp":
         return None
     if shape is None:
@@ -174,7 +173,7 @@ def _bspec(mesh, batch: int):
 
 
 def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                    strategy: str = "fsdp_sp") -> Dict[str, Any]:
+                    strategy: str = "fsdp_sp") -> dict[str, Any]:
     """Shardings for the input_specs() tree."""
     msz = model_axis_size(mesh)
     if strategy == "fsdp_sp" and shape.kind in ("train", "prefill"):
@@ -185,7 +184,7 @@ def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
     else:
         bspec = _bspec(mesh, shape.global_batch)
         seq = None
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
     if shape.kind == "train":
         out["tokens"] = NamedSharding(mesh, P(bspec, seq))
         out["labels"] = NamedSharding(mesh, P(bspec, seq))
@@ -204,7 +203,7 @@ def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                    strategy: str = "fsdp_sp") -> Dict[str, Any]:
+                    strategy: str = "fsdp_sp") -> dict[str, Any]:
     """Decode-cache layouts.
 
     decode_32k : batch on (pod,data), sequence on 'model'.
@@ -225,7 +224,7 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh,
         tot = dtotal * msz
         seq_axes = all_ax if S % tot == 0 else ("model" if S % msz == 0 else None)
 
-    out: Dict[str, Any] = {}
+    out: dict[str, Any] = {}
 
     def kv():
         return NamedSharding(mesh, P(None, bspec, seq_axes, None, None))

@@ -14,8 +14,8 @@ Two variants (DESIGN.md §3):
     executable per mask pattern.
 """
 from __future__ import annotations
-
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, NamedTuple
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +36,8 @@ class TrainState(NamedTuple):
 
 
 def train_state_shapes(model: Model,
-                       codec: Optional[CodecPipeline] = None
-                       ) -> Tuple[TrainState, UnitMap]:
+                       codec: CodecPipeline | None = None
+                       ) -> tuple[TrainState, UnitMap]:
     """abstract TrainState (ShapeDtypeStructs only, no allocation)."""
     params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     um = build_units(params, "leaf")
@@ -65,8 +65,8 @@ def make_fedluar_train_step(
     *,
     lr: float = 1e-3,
     momentum: float = 0.9,
-    static_mask: Optional[Sequence[bool]] = None,
-    codec: Optional[CodecPipeline] = None,
+    static_mask: Sequence[bool] | None = None,
+    codec: CodecPipeline | None = None,
 ) -> Callable:
     """Returns step(state, batch) -> (state, loss).
 

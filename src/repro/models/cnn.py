@@ -2,15 +2,14 @@
 layer-units, matching Table 11's delta in {0..3} out of 4) plus a small
 MLP for fast unit tests.  Pure JAX, channels-last."""
 from __future__ import annotations
-
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as nn
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def cnn_init(key, n_classes: int = 62, in_ch: int = 1, width: int = 32) -> Params:

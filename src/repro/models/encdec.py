@@ -10,7 +10,7 @@ DESIGN.md §7).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import policy as _policy
 from repro.models import layers as nn
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def sinusoid(S: int, d: int, offset=0) -> jax.Array:
@@ -139,21 +139,21 @@ def decode_seq(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return nn.rms_norm(x, params["final_norm"]), kvs
 
 
-def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def train_loss(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     enc_out = encode(params, cfg, batch["enc_frames"])
     h, _ = decode_seq(params, cfg, batch["tokens"], enc_out)
     return nn.cross_entropy(_policy.gather_params(params["embed"]), h, batch["labels"])
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     enc_out = encode(params, cfg, batch["enc_frames"])
     h, kvs = decode_seq(params, cfg, batch["tokens"], enc_out, collect_kv=True)
     logits = nn.unembed_logits(params["embed"], h[:, -1:])[:, 0]
     return logits, {"k": kvs[0], "v": kvs[1], "enc_out": enc_out}
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]):
+def decode_step(params: Params, cfg: ModelConfig, cache: dict[str, jax.Array],
+                batch: dict[str, jax.Array]):
     token, pos = batch["token"], batch["pos"]
     enc_out = cache["enc_out"]
     x = nn.embed_lookup(params["embed"], token)

@@ -8,7 +8,7 @@ aggregates gradients from all application sites.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, List, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,10 +19,10 @@ from repro.models import layers as nn
 from repro.models import ssm
 from repro.models.transformer import _tree_slice, block_init as attn_block_init
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
-def attn_sites(cfg: ModelConfig) -> List[int]:
+def attn_sites(cfg: ModelConfig) -> list[int]:
     """Mamba-layer indices after which the shared block is applied."""
     return [i for i in range(cfg.n_layers) if (i + 1) % cfg.attn_every == 0]
 
@@ -46,7 +46,7 @@ def _shared_block(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     return x + nn.mlp_apply(p["mlp"], h)
 
 
-def _segments(cfg: ModelConfig) -> List[Tuple[int, int, bool]]:
+def _segments(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
     """[(start, length, attn_after)] — static segmentation of the stack."""
     out, start = [], 0
     for site in attn_sites(cfg):
@@ -69,7 +69,7 @@ def forward(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     return nn.rms_norm(x, params["final_norm"])
 
 
-def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def train_loss(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     h = forward(params, cfg, x)
     return nn.cross_entropy(_policy.gather_params(params["embed"]), h, batch["labels"])
@@ -80,7 +80,7 @@ def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
 # ---------------------------------------------------------------------------
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     B, S, _ = x.shape
     W = cfg.conv_width
@@ -116,8 +116,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
     }
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]):
+def decode_step(params: Params, cfg: ModelConfig, cache: dict[str, jax.Array],
+                batch: dict[str, jax.Array]):
     token, pos = batch["token"], batch["pos"]
     x = nn.embed_lookup(params["embed"], token)
     convs, ssms, new_k, new_v = [], [], [], []

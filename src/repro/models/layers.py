@@ -9,12 +9,12 @@ matters for honest roofline numbers on mixtral / gemma3 / zamba2.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 # ---------------------------------------------------------------------------
 # init helpers
@@ -331,7 +331,7 @@ def unembed_logits(embed: jax.Array, x: jax.Array) -> jax.Array:
 
 
 def cross_entropy(embed: jax.Array, x: jax.Array, labels: jax.Array,
-                  mask: Optional[jax.Array] = None, chunk: int = 512) -> jax.Array:
+                  mask: jax.Array | None = None, chunk: int = 512) -> jax.Array:
     """Sequence-chunked CE so (B,S,V) never fully materialises.
 
     Under a sequence-sharded distribution policy the chunk loop is

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import policy as _policy
 from repro.models import layers as nn
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 def capacity(cfg: ModelConfig, S: int) -> int:
@@ -63,7 +63,7 @@ def router_probs(p: Params, x: jax.Array, cfg: ModelConfig):
     return gates, idx, aux
 
 
-def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p: Params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Capacity-based dispatch.  x: (B,S,d) -> (y, aux_loss).
 
     Under a distribution policy with a sequence axis the shard_map
@@ -105,7 +105,7 @@ def _expert_ffn(xe, w_gate, w_up, w_down):
     return jnp.einsum("becf,efd->becd", h, w_down)
 
 
-def _moe_dense(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def _moe_dense(p: Params, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Reference (single-host / no-policy) path: global routing."""
     B, S, d = x.shape
     C = capacity(cfg, S)
@@ -119,7 +119,7 @@ def _moe_dense(p: Params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, ja
     return y, aux
 
 
-def _moe_shardmap(p: Params, cfg: ModelConfig, x: jax.Array, pol) -> Tuple[jax.Array, jax.Array]:
+def _moe_shardmap(p: Params, cfg: ModelConfig, x: jax.Array, pol) -> tuple[jax.Array, jax.Array]:
     """Group-wise routed MoE under shard_map (tokens sequence-sharded)."""
     import jax.experimental.shard_map as _shmap
     from jax.sharding import PartitionSpec as P
@@ -347,7 +347,7 @@ def _block(cfg: ModelConfig, p: Params, x: jax.Array, aux: jax.Array):
     return x + y, aux + a
 
 
-def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+def train_loss(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
                aux_weight: float = 0.01) -> jax.Array:
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     aux = jnp.zeros((), jnp.float32)
@@ -391,7 +391,7 @@ def _prefill_block(cfg, p, x):
     return x + y, entries
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     params = {**params, "embed": _policy.gather_params(params["embed"])}
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     first = []
@@ -429,8 +429,8 @@ def _decode_block(cfg, p, x, cache_entries, pos):
     return x + y, (c1, c2)
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]):
+def decode_step(params: Params, cfg: ModelConfig, cache: dict[str, jax.Array],
+                batch: dict[str, jax.Array]):
     token, pos = batch["token"], batch["pos"]
     names = ("c_kv", "k_pe") if cfg.kv_lora_rank else ("k", "v")
     c1, c2 = cache[names[0]], cache[names[1]]

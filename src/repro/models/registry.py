@@ -1,7 +1,7 @@
 """Family dispatch: build a functional Model bundle from a ModelConfig."""
 from __future__ import annotations
-
-from typing import Callable, NamedTuple
+from typing import NamedTuple
+from collections.abc import Callable
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer

@@ -8,7 +8,7 @@ against; decode is the O(1) recurrent step.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as nn
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +144,7 @@ def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
 
 
 def block_apply(p: Params, cfg: ModelConfig, x: jax.Array,
-                initial_state=None) -> Tuple[jax.Array, jax.Array]:
+                initial_state=None) -> tuple[jax.Array, jax.Array]:
     """Full-sequence mamba2 block.  Returns (out, final_ssm_state)."""
     from repro.launch import policy as _pol
     p = _pol.gather_params(p)
@@ -222,14 +222,14 @@ def forward(params: Params, cfg: ModelConfig, x: jax.Array,
     return nn.rms_norm(x, params["final_norm"]), states
 
 
-def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def train_loss(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     from repro.launch import policy as _pol
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     h, _ = forward(params, cfg, x)
     return nn.cross_entropy(_pol.gather_params(params["embed"]), h, batch["labels"])
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     B, S, _ = x.shape
     C = cfg.d_inner + 2 * cfg.ssm_state
@@ -249,8 +249,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
     return logits, {"ssm": states, "conv": conv_tails}
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]):
+def decode_step(params: Params, cfg: ModelConfig, cache: dict[str, jax.Array],
+                batch: dict[str, jax.Array]):
     x = nn.embed_lookup(params["embed"], batch["token"])
 
     def body(carry, xs):

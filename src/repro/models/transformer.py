@@ -10,7 +10,7 @@ path — the scan runs per segment.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, List, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +19,12 @@ from repro.configs.base import ModelConfig
 from repro.launch import policy as _policy
 from repro.models import layers as nn
 
-Params = Dict[str, Any]
+Params = dict[str, Any]
 
 
-def segments(cfg: ModelConfig) -> List[Tuple[int, int, int]]:
+def segments(cfg: ModelConfig) -> list[tuple[int, int, int]]:
     """[(start, length, window)] grouping consecutive equal-window layers."""
-    out: List[Tuple[int, int, int]] = []
+    out: list[tuple[int, int, int]] = []
     for i in range(cfg.n_layers):
         w = cfg.layer_window(i)
         if out and out[-1][2] == w:
@@ -85,14 +85,14 @@ def forward(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         blk = partial(_block, cfg, window)
         blk = jax.checkpoint(blk)
 
-        def body(carry, p):
+        def body(carry, p, blk=blk):
             return blk(p, carry), None
 
         x, _ = jax.lax.scan(body, x, _tree_slice(params["blocks"], start, length))
     return nn.rms_norm(x, params["final_norm"])
 
 
-def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+def embed_inputs(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]) -> jax.Array:
     x = nn.embed_lookup(params["embed"], batch["tokens"])
     if cfg.family == "vlm" and "vis_embeds" in batch:
         # overlay the (stub-frontend) patch embeddings on the first Nv slots
@@ -101,7 +101,7 @@ def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) 
     return x
 
 
-def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+def train_loss(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]) -> jax.Array:
     # the token-lookup keeps the FSDP-sharded embed (its scatter-add grad
     # then stays sharded); only the CE unembed gathers a replicated copy
     x = embed_inputs(params, cfg, batch)
@@ -119,7 +119,7 @@ def train_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) ->
 # ---------------------------------------------------------------------------
 
 
-def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+def prefill(params: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
     """Full forward that also materialises the KV cache.
 
     Returns (last-token logits (B,V), cache {k,v: (L,B,S,K,hd)}).
@@ -149,8 +149,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
     return logits, cache
 
 
-def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, jax.Array],
-                batch: Dict[str, jax.Array]):
+def decode_step(params: Params, cfg: ModelConfig, cache: dict[str, jax.Array],
+                batch: dict[str, jax.Array]):
     """One new token against a KV cache.  batch: {token (B,1), pos ()}.
 
     Returns (logits (B,V), new cache).

@@ -26,14 +26,15 @@ the engines emit is documented in README ("Observability").
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+from typing import Protocol
+from collections.abc import Iterable, Sequence
 
 import numpy as np
 
-LabelKV = Tuple[Tuple[str, str], ...]
+LabelKV = tuple[tuple[str, str], ...]
 
 
-def _label_kv(labels: Optional[Dict[str, str]]) -> LabelKV:
+def _label_kv(labels: dict[str, str] | None) -> LabelKV:
     if not labels:
         return ()
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
@@ -95,7 +96,7 @@ class Histogram:
         self.buckets = tuple(buckets)
         self.counts = [0] * (len(self.buckets) + 1)   # +Inf bucket last
         self.sum = 0.0
-        self.samples: List[float] = []
+        self.samples: list[float] = []
 
     @property
     def count(self) -> int:
@@ -130,7 +131,7 @@ class Family:
         self.help = help
         self.unit = unit
         self._buckets = tuple(buckets)
-        self._children: "Dict[LabelKV, object]" = {}
+        self._children: dict[LabelKV, object] = {}
 
     def labels(self, **labels):
         kv = _label_kv(labels)
@@ -186,7 +187,7 @@ class MetricsRegistry:
     """The real sink: an ordered catalogue of metric families."""
 
     def __init__(self):
-        self._families: "Dict[str, Family]" = {}
+        self._families: dict[str, Family] = {}
 
     def _get(self, name: str, kind: str, help: str, unit: str,
              buckets: Sequence[float] = DEFAULT_BUCKETS) -> Family:
@@ -212,7 +213,7 @@ class MetricsRegistry:
     def families(self) -> Iterable[Family]:
         return self._families.values()
 
-    def get(self, name: str) -> Optional[Family]:
+    def get(self, name: str) -> Family | None:
         return self._families.get(name)
 
     def value(self, name: str, default: float = 0.0, **labels) -> float:
@@ -232,14 +233,14 @@ class MetricsRegistry:
     # bit-for-bit — the kill-and-resume equivalence test pins the full
     # Prometheus exposition byte-for-byte on this.
 
-    def state_dict(self) -> Dict:
+    def state_dict(self) -> dict:
         """JSON-serializable snapshot of every family, child and sample
         (family/child insertion order preserved)."""
         fams = []
         for fam in self.families():
             children = []
             for child in fam.children():
-                rec: Dict = {"labels": [list(kv) for kv in child.labels]}
+                rec: dict = {"labels": [list(kv) for kv in child.labels]}
                 if isinstance(child, Histogram):
                     rec["samples"] = list(child.samples)
                 else:
@@ -251,7 +252,7 @@ class MetricsRegistry:
                          "children": children})
         return {"schema": 1, "families": fams}
 
-    def load_state_dict(self, doc: Dict) -> None:
+    def load_state_dict(self, doc: dict) -> None:
         """Merge a ``state_dict`` snapshot back in.  Families/children
         already registered (e.g. by instrument construction on resume)
         are overwritten in place; unseen ones are created in snapshot

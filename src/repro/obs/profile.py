@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import time
 from contextlib import contextmanager
-from typing import Dict, List, Tuple
 
 from repro.obs.metrics import Histogram, MetricsRegistry
 
@@ -54,12 +53,12 @@ class Profiler:
             self._fam.labels(span=name, phase=phase).observe(
                 time.perf_counter() - t0)
 
-    def table(self) -> List[Tuple[str, str, int, float, float, float]]:
+    def table(self) -> list[tuple[str, str, int, float, float, float]]:
         """(span, phase, count, total_s, mean_s, min_s) rows, insertion
         order — the ``--profile`` render."""
         rows = []
         for child in self._fam.children():
-            labels: Dict[str, str] = dict(child.labels)
+            labels: dict[str, str] = dict(child.labels)
             if not isinstance(child, Histogram) or not child.samples:
                 continue
             rows.append((labels.get("span", "?"), labels.get("phase", "?"),

@@ -13,7 +13,6 @@ and label values are escaped per the exposition spec.
 from __future__ import annotations
 
 import math
-from typing import List
 
 from repro.obs.metrics import Histogram, MetricsRegistry
 
@@ -47,7 +46,7 @@ def _labels_str(kv, extra=()) -> str:
 
 def exposition(reg: MetricsRegistry) -> str:
     """The whole registry in Prometheus text exposition format."""
-    lines: List[str] = []
+    lines: list[str] = []
     for fam in reg.families():
         kind = {"counter": "counter", "gauge": "gauge",
                 "histogram": "histogram"}[fam.kind]

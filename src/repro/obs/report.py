@@ -6,24 +6,23 @@ formatting path — the numbers in the CLI summary, the Prometheus
 exposition and the result dataclasses all read the same instruments.
 """
 from __future__ import annotations
-
-from typing import Any, Dict
+from typing import Any
 
 from repro.obs.metrics import (M_COMM_RATIO, M_DOWN_RATIO, M_DOWNLOAD_BYTES,
                                M_FAIRNESS, M_UPLINKS, M_UPLOAD_BYTES,
                                MetricsRegistry)
 
 
-def fairness_from_metrics(metrics: MetricsRegistry) -> Dict[str, float]:
+def fairness_from_metrics(metrics: MetricsRegistry) -> dict[str, float]:
     return {stat: metrics.value(M_FAIRNESS, stat=stat)
             for stat in ("min", "median", "max")}
 
 
-def run_summary(metrics: MetricsRegistry, **extra: Any) -> Dict[str, Any]:
+def run_summary(metrics: MetricsRegistry, **extra: Any) -> dict[str, Any]:
     """The CLI's end-of-run summary dict, derived from the registry
     (key order matches the retired hand-rolled block; ``extra`` fields
     append in call order)."""
-    out: Dict[str, Any] = {
+    out: dict[str, Any] = {
         "comm_ratio": round(metrics.value(M_COMM_RATIO), 4),
         "uploaded_mb": round(metrics.value(M_UPLOAD_BYTES) / 1e6, 3),
         "n_uplinks_spent": int(metrics.value(M_UPLINKS)),

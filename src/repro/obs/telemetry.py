@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from collections.abc import Iterator
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.profile import Profiler
@@ -34,11 +34,11 @@ def _null_span() -> Iterator[None]:
 @dataclass
 class Telemetry:
     metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
-    trace: Optional[TraceSink] = None
-    profiler: Optional[Profiler] = None
+    trace: TraceSink | None = None
+    profiler: Profiler | None = None
 
     @classmethod
-    def create(cls, trace_path: Optional[str] = None,
+    def create(cls, trace_path: str | None = None,
                profile: bool = False) -> "Telemetry":
         """The CLI constructor: file-backed trace and/or profiler."""
         metrics = MetricsRegistry()

@@ -31,7 +31,8 @@ from __future__ import annotations
 import io
 import json
 import time
-from typing import Any, Callable, Dict, List, Optional, Union
+from typing import Any
+from collections.abc import Callable
 
 import numpy as np
 
@@ -73,8 +74,8 @@ class TraceSink:
     call on ``if trace:`` so the disabled path costs nothing.
     """
 
-    def __init__(self, path: Union[str, io.IOBase, None] = None,
-                 clock: Optional[Callable[[], float]] = None):
+    def __init__(self, path: str | io.IOBase | None = None,
+                 clock: Callable[[], float] | None = None):
         self._own = False
         if path is None:
             self._fh = None
@@ -83,7 +84,7 @@ class TraceSink:
             self._own = True
         else:
             self._fh = path
-        self.events: List[Dict[str, Any]] = []    # in-memory mode only
+        self.events: list[dict[str, Any]] = []    # in-memory mode only
         self._t0 = time.time() if clock is None else None
         self._clock = clock
         self.n_emitted = 0
@@ -97,7 +98,7 @@ class TraceSink:
         if event not in EVENT_KINDS:
             raise ValueError(f"unknown trace event kind {event!r}; "
                              f"schema v{TRACE_SCHEMA} kinds: {EVENT_KINDS}")
-        rec: Dict[str, Any] = {"v": TRACE_SCHEMA, "event": event,
+        rec: dict[str, Any] = {"v": TRACE_SCHEMA, "event": event,
                                "t_sim": float(t_sim),
                                "t_wall": round(self._now_wall(), 6)}
         for k, val in fields.items():
@@ -108,7 +109,7 @@ class TraceSink:
         else:
             self.events.append(rec)
 
-    def lines(self) -> List[str]:
+    def lines(self) -> list[str]:
         """The emitted stream as JSONL lines (in-memory mode only)."""
         if self._fh is not None:
             raise RuntimeError("lines() is for in-memory sinks; the "
@@ -129,7 +130,7 @@ class TraceSink:
         self.close()
 
 
-def read_trace(path: str) -> List[Dict[str, Any]]:
+def read_trace(path: str) -> list[dict[str, Any]]:
     """Parse a JSONL trace file back into event dicts (schema-checked)."""
     out = []
     with open(path) as fh:

@@ -4,8 +4,7 @@ The paper's local optimizer is mini-batch SGD with momentum 0.9; FedOpt
 needs a server-side Adam.  LR schedules mirror the paper's step decay.
 """
 from __future__ import annotations
-
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ def sgd_init(params: Params) -> SGDState:
 
 def sgd_update(params: Params, grads: Params, state: SGDState, *,
                lr: float, momentum: float = 0.9,
-               weight_decay: float = 0.0) -> Tuple[Params, SGDState]:
+               weight_decay: float = 0.0) -> tuple[Params, SGDState]:
     if weight_decay:
         grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
     new_m = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
@@ -45,7 +44,7 @@ def adam_init(params: Params) -> AdamState:
 
 def adam_update(params: Params, grads: Params, state: AdamState, *,
                 lr: float, b1: float = 0.9, b2: float = 0.999,
-                eps: float = 1e-8) -> Tuple[Params, AdamState]:
+                eps: float = 1e-8) -> tuple[Params, AdamState]:
     count = state.count + 1
     m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
     v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state.v, grads)

@@ -31,7 +31,6 @@ Selection randomness draws from the LEARNING rng in the round context
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import numpy as np
 
@@ -359,7 +358,7 @@ class EnergyBudget(ParticipationPolicy):
         return uniform_selection(ctx, alive)
 
     def observe_dispatch(self, c: int, now: float = 0.0,
-                         cost_s: Optional[float] = None) -> None:
+                         cost_s: float | None = None) -> None:
         self._accrue(now)
         cost = 1.0 if cost_s is None else float(cost_s)
         self.battery[c] = max(0.0, self.battery[c] - self.power * cost)

@@ -45,7 +45,8 @@ each run (``make_policy``), exactly like codec pipeline state.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Sequence
+from typing import Any, NamedTuple
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -108,7 +109,7 @@ class ParticipationPolicy:
     def __init__(self, *args: Any):
         self.args = args
         self.n_clients = 0
-        self._rng: Optional[np.random.Generator] = None
+        self._rng: np.random.Generator | None = None
 
     # -- lifecycle ---------------------------------------------------------
     def bind(self, n_clients: int, seed: int = 0) -> "ParticipationPolicy":
@@ -132,13 +133,13 @@ class ParticipationPolicy:
 
     # -- state hooks (all optional no-ops) ---------------------------------
     def observe_round(self, cohort: Sequence[int],
-                      losses: Optional[np.ndarray] = None,
-                      update_norms: Optional[np.ndarray] = None,
+                      losses: np.ndarray | None = None,
+                      update_norms: np.ndarray | None = None,
                       now: float = 0.0) -> None:
         """Per-client signals after the cohort's updates were computed."""
 
     def observe_dispatch(self, c: int, now: float = 0.0,
-                         cost_s: Optional[float] = None) -> None:
+                         cost_s: float | None = None) -> None:
         """One client was dispatched at ``now``; ``cost_s`` is the cost
         model's estimate of its busy seconds (None in ``run_fl``, which
         has no clock — policies fall back to unit cost per round)."""
@@ -163,7 +164,7 @@ class ParticipationPolicy:
 
 
 def uniform_selection(ctx: RoundContext,
-                      candidates: Optional[np.ndarray] = None) -> Selection:
+                      candidates: np.ndarray | None = None) -> Selection:
     """The legacy sampling calls, verbatim — shared by every policy that
     falls back to uniform choice over some candidate pool.
 
@@ -198,7 +199,7 @@ HT_CLIP = 8.0        # engine default for ``ht_weights(clip=...)``: truncated
                      # for bounded variance, the standard IPS truncation.
 
 
-def ht_weights(sel: Selection, clip: Optional[float] = None) -> np.ndarray:
+def ht_weights(sel: Selection, clip: float | None = None) -> np.ndarray:
     """Inverse-probability aggregation weights for one selection.
 
     Without replacement the weight is the Horvitz–Thompson 1/pi_i; with

@@ -26,16 +26,16 @@ from __future__ import annotations
 
 import re
 import warnings
-from typing import Callable, Dict, Optional, Union
+from collections.abc import Callable
 
 from repro.participate.policies import (AvailBernoulli, AvailDiurnal,
                                         EnergyBudget, ImportanceNorm,
                                         PowerOfChoice, UniformPolicy)
 from repro.participate.policy import ParticipationPolicy
 
-Arg = Union[int, float, str]
+Arg = int | float | str
 
-POLICIES: Dict[str, Callable[..., ParticipationPolicy]] = {}
+POLICIES: dict[str, Callable[..., ParticipationPolicy]] = {}
 
 
 def register_policy(name: str):
@@ -79,7 +79,7 @@ def _parse_arg(tok: str) -> Arg:
             return tok                  # identifier args ("norm", "diurnal")
 
 
-def parse_policy(spec: Union[str, ParticipationPolicy, None]
+def parse_policy(spec: str | ParticipationPolicy | None
                  ) -> ParticipationPolicy:
     """One spec string -> one (unbound) policy instance.  An
     already-constructed policy passes through; empty/None means
@@ -97,15 +97,15 @@ def parse_policy(spec: Union[str, ParticipationPolicy, None]
     return POLICIES[name](*args)
 
 
-def make_policy(spec: Union[str, ParticipationPolicy, None], n_clients: int,
+def make_policy(spec: str | ParticipationPolicy | None, n_clients: int,
                 seed: int = 0) -> ParticipationPolicy:
     """Parse + bind: the fresh per-run policy instance the engines use."""
     return parse_policy(spec).bind(n_clients, seed)
 
 
-def resolve_policy(spec: Union[str, ParticipationPolicy, None],
+def resolve_policy(spec: str | ParticipationPolicy | None,
                    n_clients: int, seed: int = 0,
-                   scenario: Optional[object] = None) -> ParticipationPolicy:
+                   scenario: object | None = None) -> ParticipationPolicy:
     """``make_policy`` plus the ``SimScenario.dropout`` deprecation shim.
 
     A population-wide scalar dropout (uniform/diurnal scenario kinds,

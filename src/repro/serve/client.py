@@ -26,7 +26,7 @@ import threading
 import time
 import urllib.error
 import urllib.request
-from typing import Any, Dict, List, Optional, Union
+from typing import Any
 
 import jax
 import numpy as np
@@ -36,15 +36,15 @@ from repro.launch.mesh import client_link_trace
 from repro.serve import wire
 from repro.serve.core import RoundServer, ServeError
 
-Transport = Union[RoundServer, str]
+Transport = RoundServer | str
 
 
 class HTTPError(ServeError):
     """Non-2xx from the wire, carrying the server's error body."""
 
 
-def _http_json(url: str, body: Optional[Dict] = None,
-               timeout: float = 60.0) -> Dict[str, Any]:
+def _http_json(url: str, body: dict | None = None,
+               timeout: float = 60.0) -> dict[str, Any]:
     data = None if body is None else json.dumps(body).encode()
     req = urllib.request.Request(
         url, data=data,
@@ -63,7 +63,7 @@ class ServeClient:
     """One simulated client bound to a server (in-proc or URL)."""
 
     def __init__(self, cid: int, transport: Transport, loss_fn,
-                 template_params: Any, data: Dict[str, np.ndarray],
+                 template_params: Any, data: dict[str, np.ndarray],
                  part: np.ndarray, cfg, *, pace: float = 0.0,
                  link=None, seed: int = 0):
         self.cid = int(cid)
@@ -85,7 +85,7 @@ class ServeClient:
 
     # -- transport ------------------------------------------------------
 
-    def _dispatch(self) -> Dict[str, Any]:
+    def _dispatch(self) -> dict[str, Any]:
         if isinstance(self.transport, str):
             out = _http_json(self.transport + "/v1/dispatch",
                              {"client": self.cid})
@@ -94,7 +94,7 @@ class ServeClient:
             return out
         return self.transport.dispatch(self.cid)
 
-    def _upload(self, update: Any, version: int) -> Dict[str, Any]:
+    def _upload(self, update: Any, version: int) -> dict[str, Any]:
         if isinstance(self.transport, str):
             return _http_json(self.transport + "/v1/upload",
                               {"client": self.cid, "version": int(version),
@@ -103,7 +103,7 @@ class ServeClient:
 
     # -- one round trip -------------------------------------------------
 
-    def run_round(self) -> Dict[str, Any]:
+    def run_round(self) -> dict[str, Any]:
         t0 = time.perf_counter()
         d = self._dispatch()
         sel = self._rng.choice(self.part,
@@ -126,7 +126,7 @@ class ServeClient:
 
 def make_clients(n: int, transport: Transport, loss_fn, template_params,
                  data, parts, cfg, *, pace: float = 0.0,
-                 seed: int = 0) -> List[ServeClient]:
+                 seed: int = 0) -> list[ServeClient]:
     """N clients over the measured link trace (client i -> trace row i)."""
     trace = client_link_trace(n)
     return [ServeClient(c, transport, loss_fn, template_params, data,
@@ -134,14 +134,14 @@ def make_clients(n: int, transport: Transport, loss_fn, template_params,
             for c in range(n)]
 
 
-def run_harness(clients: List[ServeClient], rounds: int,
-                concurrent: bool = False) -> List[Dict[str, Any]]:
+def run_harness(clients: list[ServeClient], rounds: int,
+                concurrent: bool = False) -> list[dict[str, Any]]:
     """Drive every client through ``rounds`` round trips.
 
     Sequential round-robin by default (deterministic request order — the
     crash-recovery tests rely on it); ``concurrent`` runs one thread per
     client to actually contend on the server's lock."""
-    results: List[Dict[str, Any]] = []
+    results: list[dict[str, Any]] = []
     if not concurrent:
         for _ in range(rounds):
             for cl in clients:
@@ -163,7 +163,7 @@ def run_harness(clients: List[ServeClient], rounds: int,
     return results
 
 
-def latency_quantiles(results: List[Dict[str, Any]]) -> Dict[str, float]:
+def latency_quantiles(results: list[dict[str, Any]]) -> dict[str, float]:
     lat = np.asarray([r["latency_s"] for r in results], np.float64)
     if lat.size == 0:
         return {"p50_ms": 0.0, "p95_ms": 0.0, "max_ms": 0.0}

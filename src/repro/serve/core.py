@@ -31,7 +31,8 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -90,9 +91,9 @@ class RoundServer:
     so status/trace output is byte-stable in goldens."""
 
     def __init__(self, init_params: Any, cfg: FLConfig,
-                 serve_cfg: Optional[ServeConfig] = None,
-                 telemetry: Optional[Telemetry] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 serve_cfg: ServeConfig | None = None,
+                 telemetry: Telemetry | None = None,
+                 clock: Callable[[], float] | None = None):
         self.cfg = cfg
         self.serve_cfg = serve_cfg or ServeConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
@@ -131,7 +132,7 @@ class RoundServer:
         self.seed_cache = self.has_delta and cfg.luar.mode == "recycle"
         self.down_state = down_pipe.init_state(init_params, self.um)
         self.down_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xD0FF))
-        self.codec_states: Dict[int, tuple] = {}
+        self.codec_states: dict[int, tuple] = {}
         self._codec_template = pipeline.init_state(init_params, self.um)
 
         # -- instruments: the engine catalogue + the fl_server_* gauges;
@@ -166,10 +167,10 @@ class RoundServer:
         # -- mutable round state ----------------------------------------
         self.version = 0
         self.mutations = 0
-        self.buffer: List[tuple] = []   # (delta, staleness, validity row,
+        self.buffer: list[tuple] = []   # (delta, staleness, validity row,
                                         #  per_unit f64, down bytes, ht)
-        self.jobs: Dict[int, dict] = {}    # inflight dispatches
-        self.last_dl: Dict[int, int] = {}  # client -> last downloaded ver
+        self.jobs: dict[int, dict] = {}    # inflight dispatches
+        self.last_dl: dict[int, int] = {}  # client -> last downloaded ver
 
         # -- jitted bodies (shared definitions with the sim engine) -----
         fedasync = self.serve_cfg.buffer_size == 1
@@ -189,8 +190,8 @@ class RoundServer:
 
     @classmethod
     def resume(cls, init_params: Any, cfg: FLConfig, serve_cfg: ServeConfig,
-               telemetry: Optional[Telemetry] = None,
-               clock: Optional[Callable[[], float]] = None) -> "RoundServer":
+               telemetry: Telemetry | None = None,
+               clock: Callable[[], float] | None = None) -> "RoundServer":
         """Rebuild a server from its WAL snapshot (``serve_cfg.ckpt_path``
         must point at one written by the same-configured server)."""
         if not serve_cfg.ckpt_path:
@@ -224,7 +225,7 @@ class RoundServer:
         if sc.ckpt_path and self.mutations % max(sc.ckpt_every, 1) == 0:
             serve_state.save(self)
 
-    def checkpoint(self) -> Optional[str]:
+    def checkpoint(self) -> str | None:
         """Force a snapshot now (clean-shutdown path)."""
         with self._lock:
             if not self.serve_cfg.ckpt_path:
@@ -233,7 +234,7 @@ class RoundServer:
 
     # -- the endpoints --------------------------------------------------
 
-    def dispatch(self, client: int) -> Dict[str, Any]:
+    def dispatch(self, client: int) -> dict[str, Any]:
         """Hand ``client`` the current broadcast: admission through the
         participation policy, downlink priced chain-vs-snapshot, the
         dispatched recycle mask recorded in the MaskLedger."""
@@ -308,7 +309,7 @@ class RoundServer:
         return self.down_pipe.decode(self.down_state, enc)
 
     def upload(self, client: int, update: Any,
-               version: Optional[int] = None) -> Dict[str, Any]:
+               version: int | None = None) -> dict[str, Any]:
         """Accept ``client``'s raw update tree: UP-pipeline encode (per-
         client EF state server-side), exact masked pricing, buffer, and
         the LUAR merge once ``buffer_size`` uploads are in."""
@@ -412,7 +413,7 @@ class RoundServer:
 
     # -- read-only views ------------------------------------------------
 
-    def status(self) -> Dict[str, Any]:
+    def status(self) -> dict[str, Any]:
         with self._lock:
             val = self.telemetry.metrics.value
             return {

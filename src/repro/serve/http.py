@@ -26,7 +26,6 @@ import argparse
 import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional
 
 from repro.obs import prom
 from repro.serve import wire
@@ -96,7 +95,7 @@ class ServeHTTP(ThreadingHTTPServer):
         super().__init__(addr, _Handler)
         self.round_server = round_server
         self.verbose = verbose
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
 
     @property
     def port(self) -> int:
@@ -107,8 +106,8 @@ class ServeHTTP(ThreadingHTTPServer):
         return f"http://{self.server_address[0]}:{self.port}"
 
 
-def start(round_server: RoundServer, host: Optional[str] = None,
-          port: Optional[int] = None, verbose: bool = False) -> ServeHTTP:
+def start(round_server: RoundServer, host: str | None = None,
+          port: int | None = None, verbose: bool = False) -> ServeHTTP:
     """Bind + serve in a daemon thread; returns the server (``.url``)."""
     sc = round_server.serve_cfg
     httpd = ServeHTTP((host if host is not None else sc.host,

@@ -31,7 +31,7 @@ server it is being loaded into.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,19 +53,26 @@ class ServeConfig:
     port: int = 0                # 0 = ephemeral
 
 
-def _fingerprint(server) -> Dict[str, Any]:
+def _fingerprint(server) -> dict[str, Any]:
     cfg = server.cfg
+    sc = server.serve_cfg
+    # every ServeConfig field that changes what the server computes
+    # belongs here: staleness_alpha reweights every merge, and
+    # ledger_capacity bounds the ring the snapshot's version lists are
+    # imported into — resuming across either silently diverges
     return {"n_clients": int(cfg.n_clients), "seed": int(cfg.seed),
             "codecs": list(cfg.codecs), "participation": cfg.participation,
-            "buffer_size": int(server.serve_cfg.buffer_size),
+            "buffer_size": int(sc.buffer_size),
+            "staleness_alpha": float(sc.staleness_alpha),
+            "ledger_capacity": int(sc.ledger_capacity),
             "luar_delta": int(cfg.luar.delta), "luar_mode": cfg.luar.mode}
 
 
-def _policy_state(policy) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+def _policy_state(policy) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
     """Split a policy's instance attrs into (arrays, json-able scalars);
     the policy's own RNG stream rides in the scalars as bit-gen state."""
-    arrays: Dict[str, np.ndarray] = {}
-    scalars: Dict[str, Any] = {}
+    arrays: dict[str, np.ndarray] = {}
+    scalars: dict[str, Any] = {}
     for k, v in vars(policy).items():
         if isinstance(v, np.ndarray):
             arrays[k] = v
@@ -76,8 +83,8 @@ def _policy_state(policy) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
     return arrays, scalars
 
 
-def _restore_policy(policy, arrays: Dict[str, np.ndarray],
-                    scalars: Dict[str, Any]) -> None:
+def _restore_policy(policy, arrays: dict[str, np.ndarray],
+                    scalars: dict[str, Any]) -> None:
     for k, v in arrays.items():
         setattr(policy, k, v.copy())
     for k, v in scalars.items():
@@ -89,9 +96,9 @@ def _restore_policy(policy, arrays: Dict[str, np.ndarray],
             setattr(policy, k, v)
 
 
-def snapshot(server) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+def snapshot(server) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
     """Pack a ``RoundServer``'s full mutable state (see module doc)."""
-    arrays: Dict[str, np.ndarray] = {}
+    arrays: dict[str, np.ndarray] = {}
     arrays.update(ckpt.flatten_tree(server.params, "params/"))
     arrays.update(ckpt.flatten_tree(server.luar_state, "luar/"))
     arrays.update(ckpt.flatten_tree(server.server_state, "server/"))
@@ -125,7 +132,7 @@ def snapshot(server) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
     mask_entries, mask_ev = server.mask_ledger.export_state()
     for v, mask in mask_entries:
         arrays[f"maskledger/{v}"] = np.asarray(mask, bool)
-    ledgers: Dict[str, Any] = {
+    ledgers: dict[str, Any] = {
         "mask": {"versions": [int(v) for v, _ in mask_entries],
                  "evictions": int(mask_ev)}}
     if server.delta_ledger is not None:

@@ -14,20 +14,20 @@ from __future__ import annotations
 import base64
 import binascii
 import io
-from typing import Any, Dict
+from typing import Any
 
 import numpy as np
 
 from repro.checkpoint.ckpt import flatten_tree, unflatten_like
 
 
-def encode_arrays(arrays: Dict[str, np.ndarray]) -> str:
+def encode_arrays(arrays: dict[str, np.ndarray]) -> str:
     buf = io.BytesIO()
     np.savez(buf, **arrays)
     return base64.b64encode(buf.getvalue()).decode("ascii")
 
 
-def decode_arrays(b64: str) -> Dict[str, np.ndarray]:
+def decode_arrays(b64: str) -> dict[str, np.ndarray]:
     try:
         raw = base64.b64decode(b64.encode("ascii"), validate=True)
         with np.load(io.BytesIO(raw)) as data:

@@ -77,7 +77,8 @@ import bisect
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -124,11 +125,11 @@ class VersionLedger:
     misses impossible."""
 
     def __init__(self, capacity: int = 64,
-                 on_evict: Optional[Callable[[int], None]] = None):
+                 on_evict: Callable[[int], None] | None = None):
         if capacity < 1:
             raise ValueError(f"ledger capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._entries: "OrderedDict[int, Any]" = OrderedDict()
+        self._entries: OrderedDict[int, Any] = OrderedDict()
         self.evictions = 0
         self.on_evict = on_evict        # telemetry hook: called with the
                                         # evicted version (repro.obs EVICT)
@@ -149,7 +150,7 @@ class VersionLedger:
             if self.on_evict is not None:
                 self.on_evict(old_v)
 
-    def get(self, version: int) -> Optional[Any]:
+    def get(self, version: int) -> Any | None:
         """The record at ``version``, or None if evicted/never seen."""
         return self._entries.get(version)
 
@@ -159,11 +160,11 @@ class VersionLedger:
     # have, so the ENTRY ORDER (eviction order) and the eviction counter
     # both round-trip.
 
-    def export_state(self) -> Tuple[List[Tuple[int, Any]], int]:
+    def export_state(self) -> tuple[list[tuple[int, Any]], int]:
         """(ordered entries, eviction count) — insertion order preserved."""
         return list(self._entries.items()), self.evictions
 
-    def import_state(self, entries: List[Tuple[int, Any]],
+    def import_state(self, entries: list[tuple[int, Any]],
                      evictions: int = 0) -> None:
         """Replace contents with ``entries`` (oldest first), bypassing the
         ``on_evict`` hook — restoring is not evicting."""
@@ -212,7 +213,7 @@ class DeltaLedger(VersionLedger):
     """
 
     def __init__(self, capacity: int = 64, store_trees: bool = False,
-                 on_evict: Optional[Callable[[int], None]] = None):
+                 on_evict: Callable[[int], None] | None = None):
         super().__init__(capacity, on_evict)
         self.store_trees = store_trees
 
@@ -224,7 +225,7 @@ class DeltaLedger(VersionLedger):
         self.record(version, (np.asarray(step_price, np.float64), tree))
 
     def chain_price(self, v_from: int, v_to: int,
-                    n_units: int) -> Optional[np.ndarray]:
+                    n_units: int) -> np.ndarray | None:
         """Summed per-unit wire bytes of the delta chain
         ``v_from -> v_to``, or None if any step was evicted.  An empty
         chain (client already current) is priced at exactly zero."""
@@ -331,7 +332,7 @@ class SimConfig:
 
 @dataclass
 class SimResult:
-    history: List[Dict[str, float]] = field(default_factory=list)
+    history: list[dict[str, float]] = field(default_factory=list)
     comm_ratio: float = 1.0          # uplink bytes / (full model x every
                                      # SPENT uplink) — the FedAvg baseline
                                      # would have paid for the same straggler
@@ -356,7 +357,7 @@ class SimResult:
     n_dropped: int = 0               # device-vanished dispatches
     n_inflight_end: int = 0          # dispatches still in flight at finish
     # staleness-aware LUAR accounting (fedbuff; sync fills in the trivia)
-    wasted_per_unit: Optional[np.ndarray] = None
+    wasted_per_unit: np.ndarray | None = None
     #   ^ uploaded-then-discarded bytes per unit; exactly zero with the
     #     mask ledger enabled and no ledger misses (every uploaded unit
     #     is used by the merge)
@@ -377,17 +378,17 @@ class SimResult:
                                      # the waste ledger
     # participation telemetry (repro.participate): biased cohort policies
     # are only trustworthy if their bias is observable
-    participation_count: Optional[np.ndarray] = None  # dispatches per client
-    dropout_count: Optional[np.ndarray] = None        # mid-round deaths per
+    participation_count: np.ndarray | None = None  # dispatches per client
+    dropout_count: np.ndarray | None = None        # mid-round deaths per
                                                       # client
-    fairness: Optional[Dict[str, float]] = None       # min/median/max of
+    fairness: dict[str, float] | None = None       # min/median/max of
                                                       # participation_count
-    staleness_observed: Optional[np.ndarray] = None   # per accepted arrival
-    staleness_q: Optional[Dict[str, float]] = None    # q50/q90/max summary
-    alphas: List[float] = field(default_factory=list)  # alpha per aggregation
+    staleness_observed: np.ndarray | None = None   # per accepted arrival
+    staleness_q: dict[str, float] | None = None    # q50/q90/max summary
+    alphas: list[float] = field(default_factory=list)  # alpha per aggregation
     params: Any = None
     luar_state: Any = None
-    resources: Optional[List[ClientResources]] = None
+    resources: list[ClientResources] | None = None
 
 
 def time_to_target(result: SimResult, metric: str, target: float,
@@ -408,7 +409,7 @@ def time_to_target(result: SimResult, metric: str, target: float,
     return math.inf
 
 
-def _staleness_quantiles(observed: List[int]) -> Optional[Dict[str, float]]:
+def _staleness_quantiles(observed: list[int]) -> dict[str, float] | None:
     if not observed:
         return None
     arr = np.asarray(observed, np.float64)
@@ -420,7 +421,7 @@ def _staleness_quantiles(observed: List[int]) -> Optional[Dict[str, float]]:
 _ALPHA_TARGET_W = 0.1               # weight a q90-stale update is pushed to
 
 
-def _schedule_alpha(base: float, observed: List[int], window: int) -> float:
+def _schedule_alpha(base: float, observed: list[int], window: int) -> float:
     """FedAsync-style adaptive alpha from observed staleness quantiles.
 
     Picks the alpha that discounts an update at the 90th-percentile
@@ -442,14 +443,14 @@ def _schedule_alpha(base: float, observed: List[int], window: int) -> float:
                          0.25 * base, 4.0 * base))
 
 
-def run_sim(loss_fn: Callable[[Params, Dict], jax.Array],
+def run_sim(loss_fn: Callable[[Params, dict], jax.Array],
             init_params: Params,
-            data: Dict[str, np.ndarray],
-            parts: List[np.ndarray],
+            data: dict[str, np.ndarray],
+            parts: list[np.ndarray],
             cfg: FLConfig,
             sim: SimConfig,
-            eval_fn: Optional[Callable[[Params], Dict[str, float]]] = None,
-            telemetry: Optional[Telemetry] = None) -> SimResult:
+            eval_fn: Callable[[Params], dict[str, float]] | None = None,
+            telemetry: Telemetry | None = None) -> SimResult:
     scenario = get_scenario(sim.scenario)
     resources = sample_resources(scenario, cfg.n_clients, sim.sys_seed)
     tele = telemetry if telemetry is not None else Telemetry()
@@ -583,7 +584,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
     has_delta = down_pipe.has("delta") and additive
     seed_cache = has_delta and cfg.luar.mode == "recycle"
     no_mask = np.zeros(n_units, bool)
-    pending_chain: Optional[np.ndarray] = None
+    pending_chain: np.ndarray | None = None
     seen: set = set()                # clients holding a base snapshot
 
     queue = EventQueue()
@@ -672,7 +673,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         t0 = queue.now
         bw = bandwidth_multiplier(scenario, t0)     # diurnal link quality
         n_scheduled = 0
-        down_by_pos: Dict[int, float] = {}
+        down_by_pos: dict[int, float] = {}
         sched_pos: set = set()
         for pos, c in enumerate(cohort):
             first = has_delta and int(c) not in seen
@@ -710,7 +711,7 @@ def _run_sync(loss_fn, init_params, data, parts, cfg: FLConfig, sim: SimConfig,
         target = min(sim.collect, n_scheduled) if sim.collect else n_scheduled
 
         # -- drain events until the round closes --------------------------
-        arrived_pos: List[int] = []
+        arrived_pos: list[int] = []
         n_drop_round = 0
         while queue:
             ev = queue.pop()
@@ -915,7 +916,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     delta_ledger = (DeltaLedger(sim.ledger_capacity,
                                 on_evict=_evict_hook("delta"))
                     if has_delta else None)
-    last_dl: Dict[int, int] = {}        # client -> last downloaded version
+    last_dl: dict[int, int] = {}        # client -> last downloaded version
     down_state = down_pipe.init_state(params, um) if down_pipe else None
     down_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xD0FF))
     down_encode_fn = jax.jit(
@@ -935,7 +936,7 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     # destroyed).  Stateless pipelines share one empty state; stateful
     # ones lazily allocate O(model) per participating client.
     codec_template = pipeline.init_state(params, um)
-    codec_states: Dict[int, tuple] = {}
+    codec_states: dict[int, tuple] = {}
 
     def codec_state_for(c: int) -> tuple:
         if not pipeline.stateful:
@@ -957,14 +958,14 @@ def _run_fedbuff(loss_fn, init_params, data, parts, cfg: FLConfig,
     # samples ARE the observation list (floats; int version lags are
     # exact in f64, so the adaptive-alpha schedule and the quantile
     # summary are bit-for-bit what the old list produced)
-    observed: List[float] = ins.staleness.samples
-    jobs: Dict[int, dict] = {}
+    observed: list[float] = ins.staleness.samples
+    jobs: dict[int, dict] = {}
     if tr:
         tr.emit(RUN_START, 0.0, engine="sim", mode="fedbuff",
                 n_clients=cfg.n_clients, rounds=cfg.rounds,
                 buffer_size=sim.buffer_size, n_units=n_units,
                 units=list(um.names))
-    buffer: List[tuple] = []            # (delta, staleness, validity row,
+    buffer: list[tuple] = []            # (delta, staleness, validity row,
                                         #  uncharged bytes, down bytes, ht)
 
     def dispatch(c: int, now: float, ht: float = 1.0):

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 ARRIVAL = "arrival"        # a client finished download+compute+upload
 DEADLINE = "deadline"      # the synchronous round deadline fired
@@ -25,7 +25,7 @@ class Event(NamedTuple):
     seq: int
     kind: str
     client: int
-    payload: Dict[str, Any]
+    payload: dict[str, Any]
 
 
 class EventQueue:
@@ -40,7 +40,7 @@ class EventQueue:
         return len(self._heap)
 
     def push(self, time: float, kind: str, client: int = -1,
-             payload: Optional[Dict[str, Any]] = None) -> Event:
+             payload: dict[str, Any] | None = None) -> Event:
         if not math.isfinite(time):
             raise ValueError(f"event time must be finite, got {time}")
         if time < self.now:
@@ -58,7 +58,7 @@ class EventQueue:
     def peek_time(self) -> float:
         return self._heap[0].time if self._heap else math.inf
 
-    def pending_count(self, kind: Optional[str] = None) -> int:
+    def pending_count(self, kind: str | None = None) -> int:
         """Queued events, optionally of one kind only (end-of-run
         accounting: e.g. ARRIVAL events still pending when the fedbuff
         engine stops are dispatches left in flight)."""

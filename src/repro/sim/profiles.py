@@ -9,7 +9,7 @@ equivalence with ``fl/rounds.py``).
 from __future__ import annotations
 
 import math
-from typing import List, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -17,7 +17,7 @@ from repro.configs.base import SimScenario, get_scenario
 from repro.core.comm import ClientResources
 
 
-def sample_resources(scenario, n_clients: int, seed: int = 0) -> List[ClientResources]:
+def sample_resources(scenario, n_clients: int, seed: int = 0) -> list[ClientResources]:
     sc: SimScenario = get_scenario(scenario)
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0x51D]))
     if sc.kind in ("uniform", "diurnal"):

@@ -1,0 +1,17 @@
+"""Deliberate metric-consistency / spec-consistency violations."""
+from proj.obs.metrics import M_BYTES, M_ROUNDS
+
+
+def setup(m):
+    rogue = m.counter("fl_rogue_total", "x")  # VIOLATION: uncatalogued-metric
+    g = m.gauge(M_ROUNDS, "rounds")
+    c = m.counter("fl_rounds", "again")  # VIOLATION: kind-conflict
+    b = m.counter(M_BYTES, "bytes")
+    b.labels(client="0").inc()
+    b.labels(phase="up").inc()  # VIOLATION: label-disagreement
+    return rogue, g, c
+
+
+def make(run):
+    return run(codecs=("nosuch:9",),  # VIOLATION: bad-codec-spec
+               participation="nosuch:1")  # VIOLATION: bad-participation-spec

@@ -1,0 +1,20 @@
+"""Deliberate jit-purity / rng-discipline violations (never executed)."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def impure_step(x, flag):
+    if flag:  # VIOLATION: tracer-branch
+        x = x + 1
+    y = np.cumsum(x)  # VIOLATION: host-numpy
+    z = np.random.rand()  # VIOLATION: numpy-rng
+    s = x.sum().item()  # VIOLATION: materializer
+    f = float(s)  # VIOLATION: host-coercion
+    return x * f + y + z
+
+
+def reuse_keys(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # VIOLATION: key-reuse
+    return a + b

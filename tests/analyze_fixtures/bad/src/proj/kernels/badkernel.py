@@ -1,0 +1,20 @@
+"""Deliberate pallas-layout violations (never executed)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref):  # VIOLATION: kernel-arity (call wires 2)
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        # VIOLATION: index-map-arity + lane-misaligned
+        in_specs=[pl.BlockSpec((8, 100), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((7, 128),  # VIOLATION: sublane-misaligned
+                               lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )(x)

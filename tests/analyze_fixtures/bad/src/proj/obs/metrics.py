@@ -1,0 +1,4 @@
+"""Fixture metric catalogue (mirrors the real obs/metrics.py shape)."""
+
+M_ROUNDS = "fl_rounds"
+M_BYTES = "fl_bytes_up"

@@ -1,0 +1,15 @@
+"""Deliberate ckpt-coverage violation: mutable state the WAL misses."""
+
+
+class RoundServer:
+    def __init__(self, params, cfg, serve_cfg):
+        self.params = params
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.version = 0
+        self.lost_counter = 0
+
+    def step(self, delta):
+        self.params = delta
+        self.version += 1
+        self.lost_counter += 1  # VIOLATION: uncovered-attr

@@ -1,0 +1,14 @@
+"""Clean mirror of bad/src/proj/engine.py."""
+from proj.obs.metrics import M_BYTES, M_ROUNDS
+
+
+def setup(m):
+    g = m.gauge(M_ROUNDS, "rounds")
+    b = m.counter(M_BYTES, "bytes")
+    b.labels(client="0").inc()
+    b.labels(client="1").inc()
+    return g, b
+
+
+def make(run):
+    return run(codecs=("fedpaq:4",), participation="powd:10")

@@ -1,0 +1,16 @@
+"""Clean mirror of bad/src/proj/jitmod.py."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(x):
+    y = jnp.cumsum(x)
+    return x + y
+
+
+def disciplined(key):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a + b

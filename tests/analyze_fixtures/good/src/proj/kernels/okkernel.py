@@ -1,0 +1,18 @@
+"""Clean mirror of bad/src/proj/kernels/badkernel.py."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def run(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x)

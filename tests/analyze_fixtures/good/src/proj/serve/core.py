@@ -1,0 +1,13 @@
+"""Clean mirror of bad/src/proj/serve/core.py."""
+
+
+class RoundServer:
+    def __init__(self, params, cfg, serve_cfg):
+        self.params = params
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.version = 0
+
+    def step(self, delta):
+        self.params = delta
+        self.version += 1

@@ -1,0 +1,29 @@
+"""Clean mirror of bad/src/proj/serve/state.py."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    buffer_size: int = 4
+    ckpt_path: str = ""
+
+
+def _fingerprint(server):
+    return {"buffer_size": int(server.serve_cfg.buffer_size)}
+
+
+def snapshot(server):
+    arrays = {}
+    arrays["version"] = server.version
+    arrays["params"] = server.params
+    meta = {"schema": 1, "config": _fingerprint(server)}
+    return arrays, meta
+
+
+def load_into(server, arrays, meta):
+    if meta["schema"] != 1:
+        raise ValueError("schema drift")
+    if meta["config"] != _fingerprint(server):
+        raise ValueError("config drift")
+    server.version = arrays["version"]
+    server.params = arrays["params"]

@@ -1,0 +1,202 @@
+"""repro.analyze tests: per-rule fixture positives/negatives (with
+file:line span assertions), the whole-repo clean smoke gate, the CLI
+surface, and the baseline workflow."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analyze import (Finding, load_baseline, parse_rules, run_rules,
+                           write_baseline)
+from repro.analyze.cli import main
+
+REPO = Path(__file__).resolve().parent.parent
+FIX = Path(__file__).resolve().parent / "analyze_fixtures"
+BAD, GOOD = FIX / "bad", FIX / "good"
+
+ALL_RULES = ("jit-purity", "rng-discipline", "pallas-layout",
+             "ckpt-coverage", "metric-consistency", "spec-consistency")
+
+
+def marker_line(rel: str, marker: str) -> int:
+    """1-based line of the ``# VIOLATION: <marker>`` comment in a bad
+    fixture file — the tests assert spans by marker so they survive
+    fixture edits."""
+    text = (BAD / rel).read_text().splitlines()
+    for i, line in enumerate(text, 1):
+        if f"VIOLATION: {marker}" in line:
+            return i
+    raise AssertionError(f"no marker {marker!r} in {rel}")
+
+
+# every expected positive: (rule, file, marker-or-None, message fragment)
+EXPECTED = [
+    ("jit-purity", "src/proj/jitmod.py", "tracer-branch",
+     "branch on parameter `flag`"),
+    ("jit-purity", "src/proj/jitmod.py", "host-numpy",
+     "host numpy call `numpy.cumsum`"),
+    ("jit-purity", "src/proj/jitmod.py", "materializer",
+     "`.item()` materializes"),
+    ("jit-purity", "src/proj/jitmod.py", "host-coercion",
+     "`float(...)` coerces"),
+    ("rng-discipline", "src/proj/jitmod.py", "numpy-rng",
+     "numpy RNG `numpy.random.rand`"),
+    ("rng-discipline", "src/proj/jitmod.py", "key-reuse",
+     "key `key` consumed twice"),
+    ("pallas-layout", "src/proj/kernels/badkernel.py", "kernel-arity",
+     "takes 3 positional refs but pallas_call wires 2"),
+    ("pallas-layout", "src/proj/kernels/badkernel.py", None,
+     "lane dim 100 is not a multiple of 128"),
+    ("pallas-layout", "src/proj/kernels/badkernel.py", None,
+     "index map takes 2 args; grid has 1 axes"),
+    ("pallas-layout", "src/proj/kernels/badkernel.py", "sublane-misaligned",
+     "sublane dim 7 is not a multiple of 8"),
+    ("ckpt-coverage", "src/proj/serve/core.py", "uncovered-attr",
+     "`lost_counter` is never saved"),
+    ("ckpt-coverage", "src/proj/serve/core.py", "uncovered-attr",
+     "`lost_counter` is never restored"),
+    ("ckpt-coverage", "src/proj/serve/state.py", "unfingerprinted-field",
+     "`drift_knob` is not part of _fingerprint"),
+    ("ckpt-coverage", "src/proj/serve/state.py", None,
+     "meta key `note` is read by load_into() but never written"),
+    ("metric-consistency", "src/proj/engine.py", "uncatalogued-metric",
+     "`fl_rogue_total` is not in the obs catalogue"),
+    ("metric-consistency", "src/proj/engine.py", "kind-conflict",
+     "created as counter here but as gauge"),
+    ("metric-consistency", "src/proj/engine.py", "label-disagreement",
+     "label sets must agree"),
+    ("spec-consistency", "src/proj/engine.py", "bad-codec-spec",
+     "codecs spec ['nosuch:9'] rejected"),
+    ("spec-consistency", "src/proj/engine.py", "bad-participation-spec",
+     "participation spec ['nosuch:1'] rejected"),
+]
+
+
+@pytest.fixture(scope="module")
+def bad_findings():
+    return run_rules(BAD)
+
+
+@pytest.mark.parametrize("rule,rel,marker,fragment", EXPECTED,
+                         ids=[f"{r}-{m or f[:20]}" for r, _, m, f in EXPECTED])
+def test_bad_fixture_detected_with_span(bad_findings, rule, rel, marker,
+                                        fragment):
+    hits = [f for f in bad_findings
+            if f.rule == rule and f.path == rel and fragment in f.message]
+    assert hits, (f"{rule} did not flag {fragment!r} in {rel}; got "
+                  f"{[f.format() for f in bad_findings if f.rule == rule]}")
+    if marker is not None:
+        want = marker_line(rel, marker)
+        assert any(f.line == want for f in hits), \
+            f"expected line {want}, got {[f.line for f in hits]}"
+
+
+def test_bad_fixture_exact_count(bad_findings):
+    # the fixture set is closed: every finding is one of the expected
+    # ones (no FP drift), and every expectation is found
+    assert len(bad_findings) == len(EXPECTED)
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_good_fixture_clean(rule):
+    assert run_rules(GOOD, rules=rule) == []
+
+
+def test_whole_repo_clean():
+    """Tier-1 smoke: the checker must exit clean on this checkout (CI
+    runs the same thing as a blocking job)."""
+    findings = run_rules(REPO)
+    assert findings == [], "\n" + "\n".join(f.format() for f in findings)
+
+
+# --- registry / API surface ------------------------------------------------
+
+
+def test_parse_rules_unknown_name():
+    with pytest.raises(ValueError, match="unknown rule 'nope'"):
+        parse_rules("nope")
+
+
+def test_parse_rules_selects_subset():
+    rules = parse_rules("jit-purity,pallas-layout")
+    assert [r.name for r in rules] == ["jit-purity", "pallas-layout"]
+
+
+def test_run_rules_accepts_iterable_of_names():
+    fs = run_rules(BAD, rules=["spec-consistency"])
+    assert fs and all(f.rule == "spec-consistency" for f in fs)
+
+
+def test_fingerprint_is_line_independent():
+    a = Finding("r", "p.py", 10, 0, "msg")
+    b = Finding("r", "p.py", 99, 4, "msg")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != Finding("r", "p.py", 10, 0, "other").fingerprint
+
+
+# --- baseline workflow -----------------------------------------------------
+
+
+def test_baseline_roundtrip_suppresses(tmp_path, bad_findings):
+    path = tmp_path / "baseline.json"
+    write_baseline(path, bad_findings)
+    fps = load_baseline(path)
+    assert len(fps) == len({f.fingerprint for f in bad_findings})
+    assert run_rules(BAD, baseline=fps) == []
+
+
+def test_baseline_entry_without_reason_rejected(tmp_path):
+    path = tmp_path / "baseline.json"
+    doc = {"version": 1, "entries": [
+        {"fingerprint": "abc123", "path": "x.py", "reason": "  "}]}
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="has no reason"):
+        load_baseline(path)
+
+
+def test_baseline_version_mismatch_rejected(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"version": 99, "entries": []}))
+    with pytest.raises(ValueError, match="baseline version"):
+        load_baseline(path)
+
+
+# --- CLI surface -----------------------------------------------------------
+
+
+def test_cli_exit_codes_and_text(capsys):
+    assert main(["--root", str(BAD), "--baseline", ""]) == 1
+    out = capsys.readouterr().out
+    assert f"repro.analyze: {len(EXPECTED)} finding(s)" in out
+    assert main(["--root", str(GOOD), "--baseline", ""]) == 0
+
+
+def test_cli_github_format(capsys):
+    assert main(["--root", str(BAD), "--baseline", "",
+                 "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=src/proj/jitmod.py,line=" in out
+    assert f"::notice::repro.analyze: {len(EXPECTED)} finding(s)" in out
+
+
+def test_cli_json_format(capsys):
+    assert main(["--root", str(BAD), "--baseline", "",
+                 "--rules", "pallas-layout", "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["rules"] == ["pallas-layout"]
+    assert all(f["rule"] == "pallas-layout" for f in doc["findings"])
+    assert all(set(f) >= {"rule", "path", "line", "col", "message",
+                          "fingerprint"} for f in doc["findings"])
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    assert main(["--rules", "bogus"]) == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    bl = tmp_path / "bl.json"
+    assert main(["--root", str(BAD), "--write-baseline", str(bl)]) == 0
+    assert main(["--root", str(BAD), "--baseline", str(bl)]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out and "baselined" in out

@@ -183,6 +183,31 @@ def test_fedluar_step_static_freezes_masked_units(tiny_step):
             assert not ch, f"masked unit {um.names[u]} moved"
 
 
+def test_generate_prompts_use_split_key_not_init_key(monkeypatch):
+    """Regression (found by repro.analyze rng-discipline): ``serve`` used
+    to draw the prompt batch from the SAME key that initialised the
+    model, correlating data with weights.  Pin the fix: the key handed
+    to ``randint`` is the split-off half, never the raw seed key."""
+    from repro.launch import generate
+
+    seen = []
+    real_randint = jax.random.randint
+
+    def spy(key, *a, **k):
+        seen.append(np.asarray(key).copy())
+        return real_randint(key, *a, **k)
+
+    monkeypatch.setattr(jax.random, "randint", spy)
+    out, _ = generate.serve("qwen3-14b", batch=2, prompt_len=8,
+                            steps=2, seed=0)
+
+    raw = np.asarray(jax.random.PRNGKey(0))
+    _, prompt_key = jax.random.split(jax.random.PRNGKey(0))
+    assert any(np.array_equal(k, np.asarray(prompt_key)) for k in seen)
+    assert not any(np.array_equal(k, raw) for k in seen)
+    assert out.shape == (2, 2)
+
+
 def test_static_mask_removes_grad_work(tiny_step):
     """Beyond-paper claim: baking R_t into the executable DCEs the masked
     units' weight-gradient matmuls -> fewer HLO flops than dynamic."""

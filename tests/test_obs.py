@@ -416,10 +416,16 @@ def test_check_regression_cli_modes(tmp_path, capsys):
         str(tmp_path / "w"))
     assert check_main(["--baseline", base, "--fresh", base]) == 0
     assert check_main(["--baseline", base, "--fresh", worse]) == 1
-    assert check_main(["--baseline", base, "--fresh", worse,
-                       "--soft"]) == 0
     out = capsys.readouterr().out
-    assert "::warning::" in out
+    assert "perf regression" in out and "::" not in out  # text mode: plain
+    assert check_main(["--baseline", base, "--fresh", worse,
+                       "--soft", "--format", "github"]) == 0
+    out = capsys.readouterr().out
+    assert "::warning::perf regression" in out
+    assert check_main(["--baseline", base, "--fresh", worse,
+                       "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error::perf regression" in out
     assert check_main(["--baseline", base, "--fresh", worse,
                        "--tolerance", "20"]) == 0
 
@@ -445,7 +451,7 @@ def test_bench_footer_dirty_flag_and_warning(tmp_path, capsys):
     # compare mode: dirty BASELINE annotates but the verdict is still
     # driven by the numbers alone
     assert check_main(["--baseline", str(load_snapshot_path),
-                       "--fresh", base]) == 0
+                       "--fresh", base, "--format", "github"]) == 0
     err = capsys.readouterr().err
     assert "::warning::comparing against a dirty baseline" in err
 

@@ -194,7 +194,7 @@ def test_merge_never_divides_by_zero(k, alpha, seed):
                                    fallback=fb)
     got0 = staleness_weighted_merge(stacked, stal, alpha,
                                     validity=jnp.asarray(v), um=_UM)
-    for i, (g, g0, f, l) in enumerate(zip(
+    for i, (g, g0, f, _leaf) in enumerate(zip(
             jax.tree.leaves(got), jax.tree.leaves(got0),
             jax.tree.leaves(fb), jax.tree.leaves(stacked))):
         assert np.all(np.isfinite(np.asarray(g)))

@@ -143,6 +143,33 @@ def test_resume_refuses_config_drift(tmp_path):
                            telemetry=Telemetry())
 
 
+@pytest.mark.parametrize("drift", [dict(staleness_alpha=0.9),
+                                   dict(ledger_capacity=8)])
+def test_resume_refuses_merge_semantics_drift(tmp_path, drift):
+    # regression for the repro.analyze ckpt-coverage finding: these two
+    # fields used to be missing from the fingerprint, so a resume under
+    # a different staleness discount (or a shrunken ledger ring) was
+    # silently accepted and diverged instead of being refused
+    _, params, _, _, cfg, _ = workload()
+    sc = ServeConfig(buffer_size=3, ckpt_path=str(tmp_path / "wal"))
+    RoundServer(params, cfg, sc, telemetry=Telemetry()).checkpoint()
+    drifted = ServeConfig(buffer_size=3, ckpt_path=sc.ckpt_path, **drift)
+    with pytest.raises(ValueError, match="differently configured"):
+        RoundServer.resume(params, cfg, drifted, telemetry=Telemetry())
+
+
+def test_resume_accepts_operational_knob_drift(tmp_path):
+    # relocating the service (host/port) or re-pacing its WAL cadence
+    # must NOT refuse a resume — only trajectory-changing fields are
+    # fingerprinted
+    _, params, _, _, cfg, _ = workload()
+    sc = ServeConfig(buffer_size=3, ckpt_path=str(tmp_path / "wal"))
+    RoundServer(params, cfg, sc, telemetry=Telemetry()).checkpoint()
+    moved = ServeConfig(buffer_size=3, ckpt_path=sc.ckpt_path,
+                        ckpt_every=5, host="0.0.0.0", port=8125)
+    RoundServer.resume(params, cfg, moved, telemetry=Telemetry())
+
+
 # -- 2. eviction across restart --------------------------------------------
 
 def eviction_scenario(params, cfg, sc, kill_resume, tmp_path=None):
