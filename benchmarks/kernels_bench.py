@@ -107,6 +107,22 @@ def rows(quick: bool = True):
                  "note": "interpret-mode off-TPU",
                  "mean_us": round(fb_mean * 1e6, 1)}))
 
+    # same fused round on a bf16 model: the kernel's bf16 bucket packs
+    # (and writes the applied update) in bf16, so the sweep moves half
+    # the f32 pack's HBM bytes; math stays f32 in-register either way
+    bparams = jax.tree.map(lambda l: l.astype(jnp.bfloat16), params)
+    bstate, bum = luar_init(bparams, fcfg, jax.random.PRNGKey(1))
+    bstacked = jax.tree.map(lambda l: l.astype(jnp.bfloat16), stacked)
+    bbstep = jax.jit(lambda s, st: fused_buffer_round(
+        s, bum, fcfg, st, staleness, 0.5, bparams, validity=validity))
+    bb_min, bb_mean = _time(lambda: bbstep(bstate, bstacked)[1].s)
+    out.append(("bench/fedbuff_round_cnn_fused_bf16", bb_min,
+                {"units": len(bum.names), "K": K, "pack_dtype": "bf16",
+                 "model_passes": 1, "hbm_mb": round(mb / 2, 1),
+                 "wall_vs_f32_fused": round(bb_min / max(fb_min, 1e-9), 2),
+                 "note": "interpret-mode off-TPU",
+                 "mean_us": round(bb_mean * 1e6, 1)}))
+
     if not quick:
         S = 1024
         ks = jax.random.split(jax.random.PRNGKey(0), 3)

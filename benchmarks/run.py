@@ -20,11 +20,11 @@ import sys
 import time
 
 from benchmarks import (fig1_motivation, fig3_layer_counts, fig4_curves,
-                        kernels_bench, roofline, serve_bench, table1_memory,
-                        table2_comparative, table3_harmonization,
-                        table4_selection, table5_drop_vs_recycle,
-                        table9_delta_sensitivity, table13_alpha,
-                        table15_clients, time_to_accuracy)
+                        fleet_bench, kernels_bench, roofline, serve_bench,
+                        table1_memory, table2_comparative,
+                        table3_harmonization, table4_selection,
+                        table5_drop_vs_recycle, table9_delta_sensitivity,
+                        table13_alpha, table15_clients, time_to_accuracy)
 from benchmarks.common import bench_record, emit
 
 MODULES = {
@@ -43,6 +43,7 @@ MODULES = {
     "kernels": kernels_bench,
     "tta": time_to_accuracy,
     "serve": serve_bench,
+    "fleet": fleet_bench,
 }
 
 

@@ -2,10 +2,14 @@
 
 The baseline file is a committed JSON document; every entry carries a
 mandatory human-written ``reason`` so an exception is an *explained*
-exception — ``--write-baseline`` stamps entries with a TODO reason that
-review is expected to replace.  Matching is by fingerprint (rule + file
-+ message, line-independent), so baselined findings survive unrelated
-edits but die with the code they describe.
+exception.  The loader enforces that end to end: an entry with an empty
+reason OR the ``--write-baseline`` TODO placeholder is rejected — a
+placeholder that loads is a placeholder nobody ever replaces, which
+made the mandatory-reason rule decorative (the stamped file passed the
+check forever).  Stamp real reasons at write time with ``--reason``, or
+edit the file before the first load.  Matching is by fingerprint (rule
++ file + message, line-independent), so baselined findings survive
+unrelated edits but die with the code they describe.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ from repro.analyze.core import Finding
 
 BASELINE_VERSION = 1
 DEFAULT_BASELINE = "analyze_baseline.json"
+TODO_REASON = "TODO: justify or fix"
 
 
 def load_baseline(path: str | Path) -> set[str]:
@@ -29,18 +34,28 @@ def load_baseline(path: str | Path) -> set[str]:
                          f"!= {BASELINE_VERSION}")
     fps = set()
     for entry in doc.get("entries", []):
-        if not entry.get("reason", "").strip():
+        reason = entry.get("reason", "").strip()
+        if not reason:
             raise ValueError(f"{path}: baseline entry {entry.get('fingerprint')} "
                              f"({entry.get('path')}) has no reason — every "
                              f"grandfathered finding must be justified")
+        if reason.upper().startswith("TODO"):
+            raise ValueError(f"{path}: baseline entry {entry.get('fingerprint')} "
+                             f"({entry.get('path')}) still carries the "
+                             f"placeholder reason {reason!r} — replace it "
+                             f"with the actual justification (or write the "
+                             f"baseline with --reason)")
         fps.add(entry["fingerprint"])
     return fps
 
 
 def write_baseline(path: str | Path, findings: list[Finding],
-                   note: str = "") -> None:
+                   note: str = "", reason: str = "") -> None:
+    """``reason`` stamps every entry; empty leaves the TODO placeholder,
+    which ``load_baseline`` refuses — the written file is then inert
+    until a human justifies (or deletes) each entry."""
     entries = [{**f.to_json(),
-                "reason": "TODO: justify or fix"} for f in findings]
+                "reason": reason.strip() or TODO_REASON} for f in findings]
     doc = {"version": BASELINE_VERSION,
            "note": note or ("Grandfathered repro.analyze findings. Every "
                             "entry needs a human-written reason; delete "

@@ -7,7 +7,9 @@ module aliases, ``self.m`` within a class) and conservative in what it
 
   * decorated with ``jax.jit`` (including ``partial(jax.jit, ...)``),
   * the direct argument of a ``jax.jit(...)`` call (through
-    ``functools.partial`` wrappers), or
+    ``functools.partial`` wrappers),
+  * the direct argument of a ``shard_map(...)`` call (the fleet wave
+    kernels: the body is traced per shard exactly like a jit arg), or
   * a traced codec surface — an ``encode`` / ``decode`` / ``commit``
     method of a class under ``compress/`` (the ``UpdateCodec``
     protocol's contract is that those three run under trace).
@@ -65,11 +67,20 @@ def _deco_origin(deco: ast.AST, aliases: dict[str, str]) -> str | None:
     return f"{origin}.{rest}" if rest else origin
 
 
+# transform wrappers whose argument is traced whenever the wrapper is:
+# jax.jit(jax.vmap(f)) traces f, so rooting must see through them
+_TRACED_WRAPPERS = frozenset({
+    "jax.vmap", "vmap", "jax.grad", "grad",
+    "jax.value_and_grad", "value_and_grad"})
+
+
 def _unwrap_partial(node: ast.AST, aliases: dict[str, str]) -> ast.AST:
-    """``partial(f, ...)`` -> ``f`` (recursively)."""
+    """``partial(f, ...)`` / ``vmap(f)`` / ``grad(f)`` -> ``f``
+    (recursively)."""
     while isinstance(node, ast.Call):
         origin = _deco_origin(node.func, aliases)
-        if origin in ("functools.partial", "partial") and node.args:
+        if (origin in ("functools.partial", "partial")
+                or origin in _TRACED_WRAPPERS) and node.args:
             node = node.args[0]
         else:
             break
@@ -230,6 +241,10 @@ class CallGraph:
                     reason = "jax.jit(...)"
                 elif origin is not None and origin.endswith("pallas_call"):
                     reason = "pallas kernel"
+                elif origin is not None and origin.endswith("shard_map"):
+                    # fleet wave kernels: shard_map(body, mesh=...) traces
+                    # ``body`` per shard exactly like jit traces its arg
+                    reason = "shard_map(...)"
                 else:
                     continue
                 self._root_target(f.module, node.args[0], reason)

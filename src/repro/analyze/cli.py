@@ -42,6 +42,10 @@ def main(argv: list[str] | None = None) -> int:
                          f"present; pass '' to disable)")
     ap.add_argument("--write-baseline", metavar="PATH",
                     help="write current findings as a new baseline and exit")
+    ap.add_argument("--reason", default="",
+                    help="justification stamped on every --write-baseline "
+                         "entry; omitted, entries get a TODO placeholder "
+                         "the loader refuses until a human replaces it")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
     try:
@@ -62,8 +66,11 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.write_baseline:
         findings = run_rules(root, args.rules)
-        bl.write_baseline(args.write_baseline, findings)
-        print(f"wrote {len(findings)} entries to {args.write_baseline}")
+        bl.write_baseline(args.write_baseline, findings, reason=args.reason)
+        tag = "" if args.reason.strip() else (
+            " (placeholder reasons: edit them in before the baseline "
+            "will load)")
+        print(f"wrote {len(findings)} entries to {args.write_baseline}{tag}")
         return 0
 
     if args.baseline is None:

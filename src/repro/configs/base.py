@@ -277,9 +277,19 @@ class SimScenario:
                   (``bw_period`` seconds, ``bw_amplitude`` relative
                   swing); the engines look the multiplier up per
                   dispatch via ``repro.sim.profiles.bandwidth_multiplier``
+      measured  — per-link bandwidths come from the MEASURED link table
+                  in ``launch/mesh.py`` (``client_link_trace``: the same
+                  wan/metro/dcn/ici mix that paces the serve load
+                  harness), so the simulators and the round service price
+                  the same fleet.  ``up_bw``/``down_bw`` means are ignored;
+                  ``step_time``/``dropout`` still apply, and a nonzero
+                  ``bw_amplitude`` layers the diurnal cycle on top
+
+    A nonzero ``bw_amplitude`` activates the day/night cycle for ANY
+    kind (the cycle multiplies whatever per-client links the kind drew).
     """
     name: str = "uniform"
-    kind: str = "uniform"            # uniform | lognormal | bimodal | diurnal
+    kind: str = "uniform"            # uniform | lognormal | bimodal | diurnal | measured
     step_time: float = 0.02          # mean seconds per local SGD step
     up_bw: float = 1.0e6             # mean uplink bytes/s (mobile-grade)
     down_bw: float = 8.0e6           # mean downlink bytes/s (asymmetric link)
@@ -310,6 +320,11 @@ SIM_SCENARIOS: dict[str, SimScenario] = {
     # the payload, the cycle prices the seconds per byte)
     "diurnal": SimScenario("diurnal", "diurnal", bw_period=600.0,
                            bw_amplitude=0.6),
+    # measured per-link bandwidths (launch/mesh.py client_link_trace):
+    # the 80/15/4/1 wan/metro/dcn/ici mix the serve load harness paces
+    # with — sim rows and serve rows price the same fleet.  step_time
+    # stays mobile-grade; the link table carries all bandwidth scatter
+    "measured": SimScenario("measured", "measured", step_time=0.05),
 }
 
 
@@ -321,7 +336,10 @@ def validate_scenario(sc: SimScenario) -> SimScenario:
     ``bw_amplitude == 0.0``, so a bad ``bw_period`` (or an amplitude a
     later ``replace`` pushed out of range) only raised mid-run, if ever.
     Every resolution goes through here instead; the hot path trusts it."""
-    if sc.kind == "diurnal":
+    if sc.kind == "diurnal" or sc.bw_amplitude != 0.0:
+        # the day/night cycle can ride on any kind (e.g. measured links
+        # with a diurnal swing), so its parameters are validated whenever
+        # the amplitude is live — and always for the diurnal kind itself
         if not 0.0 <= sc.bw_amplitude < 1.0:
             raise ValueError(f"scenario {sc.name!r}: bw_amplitude must be "
                              f"in [0, 1), got {sc.bw_amplitude}")

@@ -140,3 +140,86 @@ def round_trip_time(um: UnitMap, mask: Any, res: ClientResources, tau: int,
     legs take pipeline-priced byte overrides)."""
     return (download_time(um, res, download_bytes) + compute_time(tau, res)
             + upload_time(um, mask, res, scale, payload_bytes))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (fleet-scale) cost model — struct-of-arrays counterparts
+# ---------------------------------------------------------------------------
+#
+# ``repro.fleet`` prices whole cohorts per wave instead of one client per
+# event.  These are the EXACT array-program counterparts of the scalar
+# helpers above: host-side numpy float64 end to end (never device f32 —
+# same precision argument as the byte ledgers), and elementwise they
+# perform the same IEEE operations as the scalar path.  Unit byte counts
+# are whole numbers well below 2^53, so the mask-gated sums are exact in
+# f64 regardless of summation order — ``tests/test_fleet.py`` pins
+# bitwise equality against a per-client scalar loop.
+
+
+class ResourceArrays(NamedTuple):
+    """Struct-of-arrays view of N ``ClientResources`` (all f64, shape (N,))."""
+    step_time: np.ndarray
+    up_bw: np.ndarray
+    down_bw: np.ndarray
+    dropout: np.ndarray
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.step_time.shape[0])
+
+    def row(self, i: int) -> ClientResources:
+        """The scalar view of client ``i`` (for host-side spot checks)."""
+        return ClientResources(float(self.step_time[i]), float(self.up_bw[i]),
+                               float(self.down_bw[i]), float(self.dropout[i]))
+
+    def take(self, ids: np.ndarray) -> "ResourceArrays":
+        ids = np.asarray(ids)
+        return ResourceArrays(self.step_time[ids], self.up_bw[ids],
+                              self.down_bw[ids], self.dropout[ids])
+
+
+def resources_to_arrays(resources: list[ClientResources]) -> ResourceArrays:
+    """Pack a host-side resource list into the struct-of-arrays form."""
+    return ResourceArrays(
+        np.asarray([r.step_time for r in resources], np.float64),
+        np.asarray([r.up_bw for r in resources], np.float64),
+        np.asarray([r.down_bw for r in resources], np.float64),
+        np.asarray([r.dropout for r in resources], np.float64),
+    )
+
+
+def masked_upload_bytes_vec(um: UnitMap, masks: np.ndarray,
+                            scale: float = 1.0) -> np.ndarray:
+    """(N, n_units) recycle masks -> (N,) upload payload bytes, f64."""
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    masks = np.asarray(masks, bool)
+    return np.where(masks, 0.0, sizes[None, :]).sum(axis=1) * scale
+
+
+def download_time_vec(um: UnitMap, res: ResourceArrays,
+                      payload_bytes: np.ndarray | float | None = None) -> np.ndarray:
+    if payload_bytes is None:
+        payload_bytes = float(sum(um.unit_bytes))
+    return np.asarray(payload_bytes, np.float64) / res.down_bw
+
+
+def compute_time_vec(tau: int, res: ResourceArrays) -> np.ndarray:
+    return tau * res.step_time
+
+
+def upload_time_vec(um: UnitMap, masks: np.ndarray, res: ResourceArrays,
+                    scale: float = 1.0,
+                    payload_bytes: np.ndarray | float | None = None) -> np.ndarray:
+    if payload_bytes is None:
+        payload_bytes = masked_upload_bytes_vec(um, masks, scale)
+    return np.asarray(payload_bytes, np.float64) / res.up_bw
+
+
+def round_trip_time_vec(um: UnitMap, masks: np.ndarray, res: ResourceArrays,
+                        tau: int, scale: float = 1.0,
+                        payload_bytes: np.ndarray | float | None = None,
+                        download_bytes: np.ndarray | float | None = None) -> np.ndarray:
+    """(N,) dispatch-to-arrival latencies for one cohort wave."""
+    return (download_time_vec(um, res, download_bytes)
+            + compute_time_vec(tau, res)
+            + upload_time_vec(um, masks, res, scale, payload_bytes))

@@ -1,0 +1,12 @@
+"""repro.fleet — vectorized fleet-scale fedbuff simulation.
+
+Struct-of-arrays client populations (``state.py``), jitted event waves
+with a shard_map'd cohort sampler (``waves.py``), and the wave-loop
+engine (``engine.py``) that replays ``sim.run_sim``'s fedbuff semantics
+at N ~ 10^5..10^6 clients.  See ``run_fleet`` and the engine module
+docstring for the host/device split and the documented non-goals.
+"""
+from repro.fleet.engine import run_fleet  # noqa: F401
+from repro.fleet.state import FleetState  # noqa: F401
+from repro.fleet.waves import (INELIGIBLE, make_wave_scorer,  # noqa: F401
+                               make_wave_trainer, wave_top_k)

@@ -1,0 +1,487 @@
+"""repro.fleet — the vectorized fleet-scale fedbuff engine.
+
+``sim/engine.py`` is an event-driven simulator: one heap event per
+client round trip, one Python callback per arrival.  That is the right
+tool at N ~ 10^2..10^3 and asymptotically the wrong one at N ~ 10^5..10^6
+— the heap, the per-event policy callbacks, and the per-client Python
+dicts all scale with *events*, and events scale with N.  This engine
+re-expresses the SAME fedbuff semantics as batched array programs over a
+struct-of-arrays population (``fleet/state.py``):
+
+  wave loop      pop the next ``buffer_size - len(buffer)`` earliest
+                 arrivals AT ONCE (np.argpartition over the f64 arrival
+                 column instead of heap pops), train them as one
+                 vmapped+jitted call, merge, refill every freed slot in
+                 one dispatch wave.
+  cost model     ``core/comm.py``'s ``*_vec`` counterparts price a whole
+                 wave per call (host f64, elementwise the scalar math).
+  participation  ``participate/vectorized.py`` answers eligibility for
+                 the whole population per wave; cohort selection is a
+                 jitted Gumbel top-k sharded over the mesh's data axes
+                 (``fleet/waves.py``).
+
+Host/device split: the virtual clock, byte ledgers, ring ledgers, and
+eligibility masks stay host numpy float64 (integer byte counts and
+clock ties are exact in f64 and silently wrong in device f32); training,
+selection scoring, and the buffered LUAR merge (the SAME jitted
+``make_buffer_agg_fn`` body the sim and ``repro.serve`` run) are device
+code.
+
+Semantics vs the sim engine (pinned in ``tests/test_fleet.py``): under a
+uniform scenario + uniform policy + no codecs the two engines produce
+IDENTICAL dispatch/upload/merge counts, byte ledgers, comm ratios, and
+virtual finish time; accuracy matches within a documented tolerance only
+(the engines draw client batches in different orders, so the learning
+trajectories are statistically — not bitwise — the same run).
+
+Deliberate non-goals (each raises ``NotImplementedError`` rather than
+silently degrading):
+
+  * downlink codec pipelines — the sim's ``broadcast_for_dispatch``
+    advances SERVER-side encoder state once per dispatch, an inherently
+    sequential O(events) host loop; the fleet keeps one broadcast
+    snapshot per version (the ``param_ring``) instead.
+  * stateful uplink codecs (EF error feedback) — per-client codec state
+    is O(N * model) memory at fleet scale.
+  * weighted participation policies — rejected by
+    ``make_vector_policy`` (their bias correction needs per-client
+    feedback the wave loop does not thread yet).
+
+One accounting approximation, documented because it is the only place
+the fleet's ledgers are not exactly the sim's: a ledger-miss rejection
+charges its wasted bytes to units PROPORTIONALLY to unit size (the
+per-dispatch per-unit price array is not stored per client; the mask
+needed to recompute it is exactly what the miss lost).  Misses are
+impossible when ``ledger_capacity`` exceeds the worst-case version lag —
+the regime every equivalence test and benchmark runs in — so the
+approximation touches ``wasted_per_unit`` attribution only, never the
+scalar totals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import Direction
+from repro.configs.base import get_scenario
+from repro.core import luar_init
+from repro.core.comm import (ResourceArrays, compute_time_vec,
+                             download_time_vec, round_trip_time_vec)
+from repro.fl.rounds import FLConfig, build_codec_pipeline
+from repro.fl.server import broadcast_point, server_init
+from repro.fleet.state import FleetState
+from repro.fleet.waves import (INELIGIBLE, make_wave_scorer,
+                               make_wave_trainer, wave_top_k)
+from repro.launch.mesh import data_axes, make_host_mesh
+from repro.obs import (AGGREGATE, DISPATCH, EVICT, M_INFLIGHT_END,
+                       M_STRANDED_END, RUN_END, RUN_START, Telemetry,
+                       UPLOAD, WAKE as TRACE_WAKE)
+from repro.participate import make_vector_policy
+from repro.sim.engine import (MaskLedger, SimConfig, SimResult,
+                              VersionLedger, _Instruments, _schedule_alpha,
+                              _staleness_quantiles, make_buffer_agg_fn)
+from repro.sim.profiles import bandwidth_multiplier, sample_resource_arrays
+
+Params = Any
+
+
+def run_fleet(loss_fn: Callable[[Params, dict], jax.Array],
+              init_params: Params,
+              data: dict[str, np.ndarray],
+              parts: list[np.ndarray] | np.ndarray,
+              cfg: FLConfig,
+              sim: SimConfig,
+              eval_fn: Callable[[Params], dict[str, float]] | None = None,
+              telemetry: Telemetry | None = None,
+              mesh=None) -> SimResult:
+    """Fleet-scale fedbuff over ``cfg.n_clients`` clients.
+
+    Same config objects and same ``SimResult`` as ``sim.run_sim`` (the
+    equivalence tests literally hand both engines the same arguments).
+    ``parts`` may be the sim's per-client index list OR one shared index
+    array — at N ~ 10^5 there is no per-client partition to speak of, so
+    fleet benchmarks hand every client the same proxy pool and let the
+    batch RNG do the partitioning.  ``SimResult.resources`` is ``None``
+    (a million-row ``ClientResources`` list is exactly the per-client
+    Python object layer this engine exists to avoid).
+    """
+    if sim.mode != "fedbuff":
+        raise ValueError(
+            f"the fleet engine is the fedbuff wave loop; got "
+            f"sim.mode={sim.mode!r} (sync cohorts have no population-scale "
+            f"event problem — use sim.run_sim)")
+    if not sim.mask_ledger:
+        raise NotImplementedError(
+            "the fleet engine always merges against the versioned mask "
+            "ledger; the PR-1 mask_ledger=False semantics exist only in "
+            "sim.run_sim")
+    pipeline = build_codec_pipeline(cfg)
+    down_pipe = build_codec_pipeline(cfg, Direction.DOWN)
+    sync_only = pipeline.sync_only_specs() + down_pipe.sync_only_specs()
+    if sync_only:
+        raise NotImplementedError(
+            f"codec stage(s) {list(sync_only)} are anchored to a "
+            "synchronous server view no async engine holds (same "
+            "restriction as the fedbuff sim)")
+    if down_pipe:
+        raise NotImplementedError(
+            f"downlink codec stage(s) {list(down_pipe.specs())}: per-"
+            "dispatch broadcast encoding is a sequential host loop over "
+            "events; the fleet engine broadcasts one per-version snapshot "
+            "(run sim.run_sim for priced downlink pipelines)")
+    if pipeline.stateful:
+        raise NotImplementedError(
+            f"stateful uplink codec in {list(pipeline.specs())}: per-"
+            "client codec state is O(n_clients * model) at fleet scale")
+
+    scenario = get_scenario(sim.scenario)
+    res_arr = sample_resource_arrays(scenario, cfg.n_clients, sim.sys_seed)
+    tele = telemetry if telemetry is not None else Telemetry()
+    n = cfg.n_clients
+
+    # the sim's RNG stream split: learning draws (batches) from cfg.seed,
+    # systems draws (dropout) from sys_seed, and a dedicated selection
+    # key for the Gumbel cohort draw (the sim burns host RNG per select;
+    # the fleet draws on device)
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, k1, k2 = jax.random.split(key, 3)
+    sys_rng = np.random.default_rng(
+        np.random.SeedSequence([sim.sys_seed, 0xE7]))
+    sel_key = jax.random.PRNGKey(np.uint32(cfg.seed ^ 0xF1EE7))
+
+    params = init_params
+    luar_state, um = luar_init(params, cfg.luar, k1)
+    server_state = server_init(params, cfg.server, k2)
+    sizes = np.asarray(um.unit_bytes, np.float64)
+    total_bytes = sizes.sum()
+    n_units = len(um.names)
+    alpha = sim.staleness_alpha
+    fedasync = sim.buffer_size == 1
+
+    vec_policy = make_vector_policy(cfg.participation, n, cfg.seed)
+    state = FleetState.init(n)
+
+    mesh = mesh if mesh is not None else make_host_mesh()
+    shards = math.prod(mesh.shape[a] for a in data_axes(mesh))
+    pad = (-n) % shards
+    scorer = make_wave_scorer(mesh)
+    trainer = make_wave_trainer(loss_fn, cfg.client)
+    codec_template = pipeline.init_state(params, um)
+
+    def _enc_one(d, k):
+        enc, _, aux = pipeline.encode(codec_template, d, k)
+        return enc, aux
+    encode_wave = jax.jit(jax.vmap(_enc_one))
+
+    agg_fn = make_buffer_agg_fn(cfg, um, fedasync)
+
+    now = 0.0
+    version = 0
+    ins = _Instruments(tele)
+    tr = tele.trace
+
+    def _evict_hook(which: str):
+        child = ins.evictions.labels(ledger=which)
+
+        def hook(v: int) -> None:
+            child.inc()
+            if tr:
+                tr.emit(EVICT, now, ledger=which, version=v)
+        return hook
+
+    ledger = MaskLedger(sim.ledger_capacity, on_evict=_evict_hook("mask"))
+    # the per-version broadcast snapshots every in-flight client trains
+    # from — O(capacity * model) server memory, the fleet's replacement
+    # for the sim's per-job ``start`` tree.  Recorded idempotently at
+    # dispatch alongside the mask, same capacity: a mask hit IS a
+    # snapshot hit.
+    param_ring = VersionLedger(sim.ledger_capacity,
+                               on_evict=_evict_hook("params"))
+    res = SimResult(wasted_per_unit=np.zeros(n_units, np.float64))
+    observed: list[float] = ins.staleness.samples
+    buffer: list[tuple] = []
+    no_mask_row = np.zeros((1, n_units), bool)
+
+    if tr:
+        tr.emit(RUN_START, 0.0, engine="fleet", mode="fedbuff",
+                n_clients=n, rounds=cfg.rounds,
+                buffer_size=sim.buffer_size, n_units=n_units,
+                units=list(um.names))
+
+    def draw_cohort(eligible: np.ndarray, want: int) -> np.ndarray:
+        """Uniform-without-replacement cohort over the eligible mask via
+        the sharded Gumbel top-k (k is capped at the eligible count so
+        the sentinel filter is a no-op except under float ties)."""
+        nonlocal sel_key
+        k = min(int(want), int(eligible.sum()))
+        if k <= 0:
+            return np.empty(0, np.int64)
+        sel_key, sub = jax.random.split(sel_key)
+        elig = (np.concatenate([eligible, np.zeros(pad, bool)])
+                if pad else eligible)
+        vals, idx = wave_top_k(scorer(sub, jnp.asarray(elig)), k)
+        idx = np.asarray(idx)[np.asarray(vals) > INELIGIBLE / 2]
+        return idx.astype(np.int64)
+
+    def dispatch_wave(ids: np.ndarray, t: float) -> None:
+        """Serve ``ids`` the current version: record ledgers once, price
+        the whole wave with the vectorized cost model, decide dropout
+        fates, and write the arrival column."""
+        k = len(ids)
+        state.part_count[ids] += 1
+        mask_now = np.asarray(luar_state.mask)
+        ledger.record(version, mask_now)
+        param_ring.record(version,
+                          broadcast_point(params, server_state, cfg.server))
+        with tele.span("pricing"):
+            per_unit = pipeline.price_per_unit(sizes, mask_now)
+            up_nominal = float(per_unit.sum())
+            down_b = float(total_bytes)     # no down pipeline (validated)
+        ins.down.add(down_b * k)
+        ins.dispatches.add(k)
+        ins.full_dl.add(k)
+        if tr:
+            tr.emit(DISPATCH, t, client=-1, n=k, version=version,
+                    down_bytes=down_b, delta=False, first=False)
+        m_bw = bandwidth_multiplier(scenario, t)
+        res_w = ResourceArrays(res_arr.step_time[ids],
+                               res_arr.up_bw[ids] * m_bw,
+                               res_arr.down_bw[ids] * m_bw,
+                               res_arr.dropout[ids])
+        p_dead = vec_policy.survival_prob(ids, res_arr.dropout[ids])
+        dead = (sys_rng.random(k) < p_dead if np.any(p_dead > 0.0)
+                else np.zeros(k, bool))
+        t_dead = (download_time_vec(um, res_w, down_b)
+                  + compute_time_vec(cfg.tau, res_w))
+        t_alive = round_trip_time_vec(um, no_mask_row, res_w, cfg.tau,
+                                      payload_bytes=up_nominal,
+                                      download_bytes=down_b)
+        busy = np.where(dead, t_dead, t_alive)
+        state.arrival_time[ids] = t + busy
+        state.in_flight[ids] = True
+        state.is_dropout[ids] = dead
+        state.dl_version[ids] = version
+        state.job_up_bytes[ids] = up_nominal
+        state.job_down_bytes[ids] = down_b
+        vec_policy.observe_dispatch(ids, t, busy)
+
+    def redispatch(t: float) -> None:
+        nonlocal starved, wake_backoff
+        if starved <= 0:
+            return
+        elig = vec_policy.eligible(t, scenario.bw_period) & ~state.in_flight
+        ids = draw_cohort(elig, starved)
+        if len(ids):
+            dispatch_wave(ids, t)
+            starved -= len(ids)
+            wake_backoff = 1.0
+
+    concurrency = min(sim.concurrency or cfg.n_active, n)
+    first = draw_cohort(
+        vec_policy.eligible(0.0, scenario.bw_period) & ~state.in_flight,
+        concurrency)
+    if len(first):
+        dispatch_wave(first, 0.0)
+    starved = concurrency - len(first)
+    # same starved-server idle step as the sim's WAKE events: one
+    # population-mean full round trip, exponential backoff
+    wake_wait = float(np.mean(round_trip_time_vec(
+        um, no_mask_row, res_arr, cfg.tau, payload_bytes=total_bytes)))
+    wake_backoff = 1.0
+
+    max_waves = 100 * (cfg.rounds * sim.buffer_size + concurrency)
+    waves = 0
+    while version < cfg.rounds and waves < max_waves:
+        waves += 1
+        if state.n_inflight == 0:
+            # nothing will move the clock: either done starving or idle
+            # the server one WAKE step and retry eligibility
+            if starved <= 0:
+                break
+            now += wake_wait * wake_backoff
+            wake_backoff = min(wake_backoff * 2.0, 2.0 ** 20)
+            if now >= sim.max_sim_time:
+                now = min(now, sim.max_sim_time)
+                break
+            if tr:
+                tr.emit(TRACE_WAKE, now)
+            redispatch(now)
+            continue
+
+        # pop the earliest arrivals that can complete the buffer — the
+        # heap pop, batched.  A wave is TIME-HOMOGENEOUS: only arrivals
+        # tied at the earliest f64 instant pop together, so every freed
+        # slot redispatches at exactly the virtual time the sim would
+        # have redispatched it (batching across distinct arrival times
+        # would delay early slots to the wave boundary and drift the
+        # clock).  Identical-resource populations (uniform, diurnal,
+        # measured link classes) tie in whole dispatch generations, which
+        # is where the batching wins; continuous per-client resource
+        # draws (lognormal, bimodal) degenerate to per-arrival waves —
+        # the regime the heap engine already handles.
+        need = sim.buffer_size - len(buffer)
+        k = min(need, state.n_inflight)
+        t_col = np.where(state.in_flight, state.arrival_time, np.inf)
+        idx = np.argpartition(t_col, k - 1)[:k]
+        idx = idx[np.argsort(t_col[idx], kind="stable")]
+        wave_t = float(t_col[idx[0]])
+        idx = idx[t_col[idx] == wave_t]
+        if wave_t > sim.max_sim_time:
+            now = sim.max_sim_time
+            break
+        now = wave_t
+
+        popped = idx.astype(np.int64)
+        dead = state.is_dropout[popped]
+        dlv = state.dl_version[popped].copy()
+        job_up = state.job_up_bytes[popped].copy()
+        job_down = state.job_down_bytes[popped].copy()
+        state.free(popped)
+
+        drop_ids = popped[dead]
+        if len(drop_ids):
+            # downloaded, computed, vanished before upload: downlink waste
+            ins.dropouts.add(len(drop_ids))
+            state.drop_count[drop_ids] += 1
+            ins.wasted_down.add(float(job_down[dead].sum()))
+            if tr:
+                tr.emit(UPLOAD, now, client=-1, n=int(len(drop_ids)),
+                        version=int(dlv[dead][0]), bytes=0.0,
+                        status="dropout")
+
+        arr_ids = popped[~dead]
+        arr_dlv = dlv[~dead]
+        arr_up = job_up[~dead]
+        arr_down = job_down[~dead]
+        masks_v = [ledger.get(int(v)) for v in arr_dlv]
+        miss = np.asarray([m is None for m in masks_v], bool)
+        if miss.any():
+            # dispatch mask evicted: reject outright, charge the spent
+            # uplink at its nominal price (attributed per unit
+            # proportionally to size — see module docstring) and the
+            # fruitless broadcast leg
+            n_miss = int(miss.sum())
+            ins.misses.add(n_miss)
+            ins.uplinks.add(n_miss)
+            up_b = float(arr_up[miss].sum())
+            ins.up.add(up_b)
+            ins.wasted_up.add(up_b)
+            res.wasted_per_unit += sizes * (up_b / total_bytes)
+            ins.wasted_down.add(float(arr_down[miss].sum()))
+            if tr:
+                tr.emit(UPLOAD, now, client=-1, n=n_miss, bytes=up_b,
+                        status="rejected")
+            keep = ~miss
+            arr_ids, arr_dlv = arr_ids[keep], arr_dlv[keep]
+            arr_up, arr_down = arr_up[keep], arr_down[keep]
+            masks_v = [m for m in masks_v if m is not None]
+
+        if len(arr_ids):
+            a = len(arr_ids)
+            # one vmapped train + encode call for the whole wave; each
+            # arrival starts from the snapshot of ITS downloaded version
+            starts = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[param_ring.get(int(v)) for v in arr_dlv])
+            sel = np.stack([
+                rng.choice(parts if isinstance(parts, np.ndarray)
+                           else parts[int(c)],
+                           size=(cfg.tau, cfg.batch_size), replace=True)
+                for c in arr_ids])
+            batches = {kk: jnp.asarray(arr[sel]) for kk, arr in data.items()}
+            key, sub = jax.random.split(key)
+            with tele.span("client_step", jitted=True):
+                raw = trainer(starts, batches)
+                enc, aux = encode_wave(raw, jax.random.split(sub, a))
+            ins.uplinks.add(a)
+            ins.accepted.add(a)
+            up_wave = 0.0
+            for j in range(a):
+                mask_j = masks_v[j]
+                aux_j = tuple(None if x is None else np.asarray(x)[j]
+                              for x in aux)
+                with tele.span("pricing"):
+                    per_unit = pipeline.price_per_unit(sizes, mask_j, aux_j)
+                up_wave += float(per_unit.sum())
+                stal = version - int(arr_dlv[j])
+                ins.staleness.observe(stal)
+                delta_j = jax.tree.map(lambda x, j=j: x[j], enc)
+                buffer.append((delta_j, stal, ~mask_j, per_unit,
+                               float(arr_down[j]), 1.0))
+            ins.up.add(up_wave)
+            if tr:
+                tr.emit(UPLOAD, now, client=-1, n=a, bytes=up_wave,
+                        status="accepted")
+
+            if len(buffer) >= sim.buffer_size:
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *[b[0] for b in buffer])
+                stal_arr = jnp.asarray([b[1] for b in buffer], jnp.int32)
+                valid_np = np.stack([b[2] for b in buffer])
+                valid_arr = jnp.asarray(valid_np)
+                alpha_t = (_schedule_alpha(alpha, observed,
+                                           sim.staleness_window)
+                           if sim.adaptive_alpha else alpha)
+                res.alphas.append(alpha_t)
+                with tele.span("aggregate", jitted=True):
+                    params, luar_state, server_state = agg_fn(
+                        params, luar_state, server_state, stacked,
+                        stal_arr, valid_arr, jnp.float32(alpha_t))
+                n_merged = len(buffer)
+                buffer.clear()
+                version += 1
+                ins.rounds.inc()
+                if tr:
+                    tr.emit(AGGREGATE, now, version=version, n=n_merged,
+                            alpha=float(alpha_t),
+                            recycled=[int(i) for i in
+                                      np.flatnonzero(~np.any(valid_np,
+                                                             axis=0))])
+                if eval_fn is not None and (version % cfg.eval_every == 0
+                                            or version == cfg.rounds):
+                    with tele.span("eval"):
+                        metrics = dict(eval_fn(params))
+                    metrics.update(
+                        round=version, t_sim=now,
+                        up_mb=ins.up.value / 1e6,
+                        comm_ratio=ins.up.value / max(
+                            total_bytes * ins.uplinks.value, 1.0),
+                        down_ratio=ins.down.value / max(
+                            total_bytes * ins.dispatches.value, 1.0))
+                    res.history.append(metrics)
+
+        starved += len(popped)
+        redispatch(now)
+
+    # truncated-run accounting, exactly the sim's: stranded buffer
+    # entries charge their unmerged payload + broadcast leg; in-flight
+    # dispatches charge their broadcast leg
+    res.n_stranded_end = len(buffer)
+    for _, _, _, uncharged, down_b, _ in buffer:
+        res.wasted_per_unit += uncharged
+        ins.wasted_up.add(float(uncharged.sum()))
+        ins.wasted_down.add(down_b)
+    res.n_inflight_end = state.n_inflight
+    ins.wasted_down.add(float(state.job_down_bytes[state.in_flight].sum()))
+    m = tele.metrics
+    m.gauge(M_STRANDED_END, "accepted uploads stranded in a partial "
+            "buffer at finish").set(res.n_stranded_end)
+    m.gauge(M_INFLIGHT_END, "dispatches still in flight at finish").set(
+        res.n_inflight_end)
+    ins.finalize(m, res, total_bytes, now, state.part_count,
+                 state.drop_count)
+    res.staleness_observed = np.asarray(observed, np.int32)
+    res.staleness_q = _staleness_quantiles(observed)
+    res.params = params
+    res.luar_state = luar_state
+    if tr:
+        tr.emit(RUN_END, now, version=version, uploaded=ins.up.value,
+                downloaded=ins.down.value, comm_ratio=res.comm_ratio,
+                n_events=waves)
+    return res

@@ -1,0 +1,60 @@
+"""Struct-of-arrays client population state for the fleet engine.
+
+One dataclass of (N,)-shaped arrays replaces the sim engine's per-client
+Python dicts (``jobs``, the sorted ``idle`` list, per-event heap
+entries) — the representation change that moves the population axis
+from Python objects to array programs.  Everything time- or byte-valued
+is host numpy float64 (the same precision argument as the byte ledgers:
+f32 silently loses integer byte counts past ~16M and collapses
+virtual-clock ties); the device side of the split (selection scoring,
+training, the merge) lives in ``fleet/waves.py``.
+
+The population state the policies own stays in THEIR arrays —
+availability phase is implicit (2*pi*i/N in ``VAvailDiurnal``), battery
+and busy-until live in ``VEnergy``, bandwidth class in
+``ResourceArrays`` — so this dataclass carries only the engine's view:
+who is in flight, from which version, and what their round trip costs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class FleetState:
+    """Engine-side per-client arrays (all shape (N,))."""
+
+    arrival_time: np.ndarray    # f64 virtual arrival instant; +inf = idle
+    in_flight: np.ndarray       # bool: a dispatch is outstanding
+    is_dropout: np.ndarray      # bool: the outstanding dispatch will vanish
+                                #   (decided at dispatch, like the sim's
+                                #   DROPOUT-vs-ARRIVAL event choice)
+    dl_version: np.ndarray      # int64 server version the client downloaded
+    job_up_bytes: np.ndarray    # f64 nominal uplink payload of the job
+    job_down_bytes: np.ndarray  # f64 broadcast-leg bytes of the job
+    part_count: np.ndarray      # int64 dispatches per client
+    drop_count: np.ndarray      # int64 mid-round deaths per client
+
+    @classmethod
+    def init(cls, n_clients: int) -> "FleetState":
+        return cls(
+            arrival_time=np.full(n_clients, np.inf, np.float64),
+            in_flight=np.zeros(n_clients, bool),
+            is_dropout=np.zeros(n_clients, bool),
+            dl_version=np.full(n_clients, -1, np.int64),
+            job_up_bytes=np.zeros(n_clients, np.float64),
+            job_down_bytes=np.zeros(n_clients, np.float64),
+            part_count=np.zeros(n_clients, np.int64),
+            drop_count=np.zeros(n_clients, np.int64),
+        )
+
+    @property
+    def n_inflight(self) -> int:
+        return int(self.in_flight.sum())
+
+    def free(self, ids: np.ndarray) -> None:
+        """Mark a popped wave's clients idle again."""
+        self.in_flight[ids] = False
+        self.arrival_time[ids] = np.inf

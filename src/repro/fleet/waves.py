@@ -1,0 +1,82 @@
+"""The jitted device kernels of the fleet engine.
+
+Three kernels cover everything the wave loop runs on device, each O(N)
+over the population or O(K * model) over a wave:
+
+  * ``make_wave_scorer(mesh)`` — the population-wide redispatch sampler:
+    one Gumbel score per client where eligible (-inf elsewhere), so a
+    global top-k draws a uniform-without-replacement cohort from the
+    eligible set (the Gumbel-max trick).  The score array is sharded
+    over the mesh's data axes with ``shard_map`` — the population is
+    split across devices and each shard folds its own axis index into
+    the key so shards draw independent streams.
+  * ``wave_top_k(scores, k)`` — the global cohort draw over the gathered
+    scores (k is static; the engine sees a handful of distinct k's).
+  * ``make_wave_trainer(loss_fn, client_cfg)`` — K clients' local
+    updates as ONE vmapped+jitted call over stacked start params and
+    stacked batch trees (the sim engine trains per arrival; a wave
+    trains its whole buffer in one dispatch).
+
+Everything here is pure array code: the f64 virtual clock, byte
+ledgers, and ring ledgers stay on the host (see ``fleet/engine.py`` for
+the split).  ``repro.analyze`` roots the shard_map body for the
+jit-purity rule, so host calls cannot creep into the wave kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.fl.client import local_update
+from repro.launch.mesh import data_axes
+
+# below any real Gumbel draw in f32; ineligible clients score here so a
+# top-k can recognize them (the engine drops hits at/below the sentinel)
+INELIGIBLE = -3.0e38
+
+
+def _gumbel_score_body(axis_names: tuple[str, ...], key, eligible):
+    """Per-shard scores: Gumbel(0,1) where eligible, sentinel elsewhere.
+
+    ``key`` is replicated; folding the shard's position on every data
+    axis into it gives each shard its own stream (without the fold all
+    shards would draw IDENTICAL noise and the "uniform" cohort would be
+    striped by shard boundary)."""
+    for ax in axis_names:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    u = jax.random.uniform(key, eligible.shape, jnp.float32,
+                           minval=1e-7, maxval=1.0)
+    scores = -jnp.log(-jnp.log(u))
+    return jnp.where(eligible, scores, INELIGIBLE)
+
+
+def make_wave_scorer(mesh):
+    """Jitted sharded scorer: (key, eligible bool (N,)) -> scores (N,).
+
+    N must be a multiple of the mesh's data-axes extent — the engine
+    pads the eligibility mask with False (padding scores at the
+    sentinel, so it can never be drawn)."""
+    axes = data_axes(mesh)
+    spec = P(axes)
+    fn = shard_map(partial(_gumbel_score_body, axes), mesh=mesh,
+                   in_specs=(P(), spec), out_specs=spec, check_rep=False)
+    return jax.jit(fn)
+
+
+@partial(jax.jit, static_argnames="k")
+def wave_top_k(scores, k: int):
+    """Top-k scores over the (gathered) population: the cohort draw."""
+    return jax.lax.top_k(scores, k)
+
+
+def make_wave_trainer(loss_fn, client_cfg):
+    """One wave's local training: vmap ``local_update`` over stacked
+    start params (each arrival trains from the broadcast of ITS dispatch
+    version) and stacked batch trees, jitted as a single call."""
+    def _train_one(p, b):
+        return local_update(loss_fn, p, b, client_cfg)
+    return jax.jit(jax.vmap(_train_one))

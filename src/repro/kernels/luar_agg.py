@@ -32,10 +32,17 @@ One read of every operand and one write of the applied update replace
 the 4+ separate passes of the per-leaf reference path (merge select,
 s-metric and grad-norm tree_maps each sweep the full model through HBM).
 
-Everything is computed in f32 regardless of input dtype (bf16 leaves
-upcast on pack, cast back on unpack); a bf16-bucketed packed buffer is
-the natural extension if the upcast bandwidth ever shows up on a
-roofline.
+All math happens in f32 regardless of storage dtype, but STORAGE is
+dtype-bucketed: leaves whose delta/x/prev are all bf16 pack into a
+separate bf16 buffer ((16, 128) tiles — bf16's minimum sublane is 16)
+while everything else upcasts into the f32 buffer as before.  Each
+bucket runs its own sweep over the FULL unit-id space (a unit absent
+from a bucket gets one zero block, contributing 0 to its norms) and the
+per-unit ||applied||^2 / ||x||^2 accumulators are summed across
+buckets.  bf16 -> f32 is exact, so bucketing changes no numerics — only
+HBM bytes: a bf16 model moves half the traffic the old always-f32 pack
+did.  An all-f32 model takes the single-bucket path, bit-identical to
+the pre-bucket kernel.
 """
 from __future__ import annotations
 
@@ -53,6 +60,7 @@ from repro.kernels import _CompilerParams
 
 _LANES = 128
 _ROWS = 8
+_BF16_ROWS = 16                 # bf16 minimum sublane tile is (16, 128)
 
 LeafUnit = int | tuple[int, int]
 
@@ -187,11 +195,19 @@ def leaf_unit_count(leaf_unit: Sequence[LeafUnit]) -> int:
 @lru_cache(maxsize=128)
 def build_pack_layout(leaf_unit: tuple[LeafUnit, ...],
                       shapes: tuple[tuple[int, ...], ...],
-                      block_rows: int = 64) -> PackLayout:
-    """Plan the segment-packed buffer (cached: pure shape metadata)."""
-    if block_rows % _ROWS:
-        block_rows = max(_ROWS, block_rows - block_rows % _ROWS)
-    n = leaf_unit_count(leaf_unit)
+                      block_rows: int = 64, n_units: int | None = None,
+                      sublane: int = _ROWS) -> PackLayout:
+    """Plan the segment-packed buffer (cached: pure shape metadata).
+
+    ``n_units`` forces the unit-id space (a dtype bucket holding only
+    SOME leaves must still emit per-unit norm rows for every unit so the
+    buckets' accumulators align — absent units get one zero block).
+    ``sublane`` is the dtype's minimum sublane tile: 8 for f32 packs,
+    16 for bf16.
+    """
+    if block_rows % sublane:
+        block_rows = max(sublane, block_rows - block_rows % sublane)
+    n = leaf_unit_count(leaf_unit) if n_units is None else n_units
     pieces: list[list[tuple[int, int | None, int]]] = [[] for _ in range(n)]
     for li, (u, shape) in enumerate(zip(leaf_unit, shapes)):
         size = int(np.prod(shape)) if shape else 1
@@ -233,24 +249,32 @@ def build_pack_layout(leaf_unit: tuple[LeafUnit, ...],
 
 
 def pack_leaves(leaves: Sequence[jax.Array], layout: PackLayout,
-                lead: int = 0) -> jax.Array:
-    """Gather leaves into the (… , total_rows, 128) f32 packed buffer.
+                lead: int = 0, dtype: Any = jnp.float32) -> jax.Array:
+    """Gather leaves into the (… , total_rows, 128) packed buffer.
 
     ``lead`` leading axes (the K client axis) are preserved; zero padding
     between a unit's payload and its block boundary is what makes the
-    kernel's norm accumulation exact (0 contributes nothing).
+    kernel's norm accumulation exact (0 contributes nothing).  ``dtype``
+    is the bucket's storage dtype — the kernel upcasts to f32 on read
+    either way, so bf16 storage of bf16 leaves is lossless.
     """
     lead_shape = leaves[0].shape[:lead]
     bufs = []
     for u in range(layout.n_units):
         parts = []
         for li, di, size in layout.unit_pieces[u]:
-            a = leaves[li].astype(jnp.float32)
+            a = leaves[li].astype(dtype)
             if di is None:
                 parts.append(a.reshape(lead_shape + (size,)))
             else:
                 L = a.shape[lead]
                 parts.append(a.reshape(lead_shape + (L, size))[..., di, :])
+        if not parts:
+            # unit absent from this dtype bucket: one all-zero block so
+            # the per-unit norm accumulators stay aligned across buckets
+            bufs.append(jnp.zeros(
+                lead_shape + (layout.unit_rows[u] * _LANES,), dtype))
+            continue
         buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
         pad = layout.unit_rows[u] * _LANES - buf.shape[-1]
         if pad:
@@ -291,7 +315,7 @@ def _batched_kernel(seg_ref, first_ref, wn_ref, ap_ref, af_ref,
     for k in range(1, K):                   # K is static (buffer size)
         merged = merged + wn_ref[k, u] * d_ref[k].astype(jnp.float32)
     applied = ap_ref[u] * prev + af_ref[u] * merged
-    o_ref[...] = applied
+    o_ref[...] = applied.astype(o_ref.dtype)
     d2_ref[0, 0] += jnp.sum(applied * applied)
     x2_ref[0, 0] += jnp.sum(x * x)
 
@@ -316,48 +340,83 @@ def luar_agg_batched(delta_leaves: Sequence[jax.Array],
 
     Returns (applied_leaves (x dtypes), ||applied||^2 per unit,
     ||x||^2 per unit).
+
+    Leaves whose delta, x AND prev are all bf16 are packed (and their
+    applied updates written) in a bf16 bucket; everything else upcasts
+    into the f32 bucket.  Each bucket sweeps once; the per-unit norms
+    are summed across buckets.  Numerics are unchanged (the kernel
+    computes in f32 and the final cast to the leaf dtype happens either
+    way) — only the packed buffers' HBM bytes shrink.
     """
     shapes = tuple(tuple(x.shape) for x in x_leaves)
     dtypes = [x.dtype for x in x_leaves]
-    layout = build_pack_layout(tuple(leaf_unit), shapes, int(block_rows))
+    n_units = leaf_unit_count(leaf_unit)
     K = delta_leaves[0].shape[0]
-    d = pack_leaves(delta_leaves, layout, lead=1)
-    prev = pack_leaves(prev_leaves, layout)
-    x = pack_leaves(x_leaves, layout)
-    seg = jnp.asarray(layout.seg, jnp.int32)
-    first = jnp.asarray(layout.first, jnp.int32)
     wn = wn.astype(jnp.float32)
     a_prev = a_prev.astype(jnp.float32)
     a_fresh = a_fresh.astype(jnp.float32)
-    bt = layout.block_rows
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,              # seg, first drive the index maps
-        grid=(layout.grid,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                  # wn
-            pl.BlockSpec(memory_space=pltpu.SMEM),                  # a_prev
-            pl.BlockSpec(memory_space=pltpu.SMEM),                  # a_fresh
-            pl.BlockSpec((K, bt, _LANES), lambda i, seg, first: (0, i, 0)),
-            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
-            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
-            pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
-        ],
-    )
-    out, d2, x2 = pl.pallas_call(
-        _batched_kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((layout.total_rows, _LANES), jnp.float32),
-            jax.ShapeDtypeStruct((layout.n_units, 1), jnp.float32),
-            jax.ShapeDtypeStruct((layout.n_units, 1), jnp.float32),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(seg, first, wn, a_prev, a_fresh, d, prev, x)
-    applied = unpack_applied(out, layout, shapes, dtypes)
+
+    bf16 = jnp.bfloat16
+    in_bf16 = [delta_leaves[i].dtype == bf16 and x_leaves[i].dtype == bf16
+               and prev_leaves[i].dtype == bf16 for i in range(len(shapes))]
+    idx_f32 = tuple(i for i, b in enumerate(in_bf16) if not b)
+    idx_bf16 = tuple(i for i, b in enumerate(in_bf16) if b)
+    buckets = [(idx, dt, sub) for idx, dt, sub in
+               ((idx_f32, jnp.float32, _ROWS), (idx_bf16, bf16, _BF16_ROWS))
+               if idx]
+
+    applied: list[jax.Array | None] = [None] * len(shapes)
+    d2 = jnp.zeros((n_units, 1), jnp.float32)
+    x2 = jnp.zeros((n_units, 1), jnp.float32)
+    for idx, pack_dtype, sublane in buckets:
+        lu = tuple(leaf_unit[i] for i in idx)
+        shp = tuple(shapes[i] for i in idx)
+        layout = build_pack_layout(lu, shp, int(block_rows),
+                                   n_units=n_units, sublane=sublane)
+        d = pack_leaves([delta_leaves[i] for i in idx], layout, lead=1,
+                        dtype=pack_dtype)
+        prev = pack_leaves([prev_leaves[i] for i in idx], layout,
+                           dtype=pack_dtype)
+        x = pack_leaves([x_leaves[i] for i in idx], layout,
+                        dtype=pack_dtype)
+        seg = jnp.asarray(layout.seg, jnp.int32)
+        first = jnp.asarray(layout.first, jnp.int32)
+        bt = layout.block_rows
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,          # seg, first drive the index maps
+            grid=(layout.grid,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),              # wn
+                pl.BlockSpec(memory_space=pltpu.SMEM),              # a_prev
+                pl.BlockSpec(memory_space=pltpu.SMEM),              # a_fresh
+                pl.BlockSpec((K, bt, _LANES),
+                             lambda i, seg, first: (0, i, 0)),
+                pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+                pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bt, _LANES), lambda i, seg, first: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
+                pl.BlockSpec((1, 1), lambda i, seg, first: (seg[i], 0)),
+            ],
+        )
+        out, d2_b, x2_b = pl.pallas_call(
+            _batched_kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((layout.total_rows, _LANES),
+                                     pack_dtype),
+                jax.ShapeDtypeStruct((n_units, 1), jnp.float32),
+                jax.ShapeDtypeStruct((n_units, 1), jnp.float32),
+            ],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("arbitrary",)),
+            interpret=interpret,
+        )(seg, first, wn, a_prev, a_fresh, d, prev, x)
+        bucket_applied = unpack_applied(
+            out, layout, shp, [dtypes[i] for i in idx])
+        for j, i in enumerate(idx):
+            applied[i] = bucket_applied[j]
+        d2 = d2 + d2_b
+        x2 = x2 + x2_b
     return applied, d2[:, 0], x2[:, 0]

@@ -177,7 +177,9 @@ def _moe_shardmap(p: Params, cfg: ModelConfig, x: jax.Array, pol) -> tuple[jax.A
             ye = jax.lax.psum_scatter(ye, axis, scatter_dimension=2,
                                       tiled=True)                  # (B,E,C,d)
         y = jnp.einsum("becd,bsec->bsd", ye, comb)
-        if shared_l:
+        if shared:
+            # branch on the closed-over params dict (static structure),
+            # not the traced shard_map parameter `shared_l`
             y = y + nn.mlp_apply(shared_l, x_l)
         return y, aux
 

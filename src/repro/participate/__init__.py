@@ -21,3 +21,8 @@ from repro.participate.policy import (HT_CLIP, ParticipationPolicy,  # noqa: F40
 from repro.participate.registry import (POLICIES, make_policy,  # noqa: F401
                                         parse_policy, register_policy,
                                         resolve_policy)
+from repro.participate.vectorized import (VECTOR_POLICIES,  # noqa: F401
+                                          VAvailBernoulli, VAvailDiurnal,
+                                          VectorPolicy, VEnergy, VUniform,
+                                          make_vector_policy,
+                                          register_vector_policy)

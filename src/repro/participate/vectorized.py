@@ -1,0 +1,208 @@
+"""Vectorized (fleet-scale) participation policies.
+
+``repro.fleet`` asks "who is eligible right now?" about the WHOLE
+population at once, once per wave — not one host callback per client per
+event.  These are the array-program counterparts of the host policies in
+``policies.py``: same spec grammar, same parameters, and elementwise the
+SAME float64 arithmetic, so eligibility/battery trajectories match the
+host policies bitwise (pinned in ``tests/test_fleet.py``).  They live in
+their own registry (``VECTOR_POLICIES``) alongside the host one — the
+host/device split the participation registry was designed for.
+
+The vectorized family covers the *availability/energy* policies, which
+are uniform-within-the-eligible-set (every inclusion probability equal,
+HT weight 1.0).  The *weighted* policies (``powd``, ``importance``) need
+per-client loss/update-norm feedback threaded through the merge and are
+not vectorized yet — ``make_vector_policy`` raises ``NotImplementedError``
+for them rather than silently dropping the bias correction.
+
+Selection itself (uniform without replacement over the eligible mask) is
+NOT done here: the fleet engine draws it with a jitted Gumbel top-k over
+the population (``fleet/waves.py``), sharded across the mesh.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections.abc import Callable
+
+import numpy as np
+
+from repro.participate.registry import POLICIES, _parse_arg
+
+Arg = int | float | str
+
+
+class VectorPolicy:
+    """Whole-population participation hooks (struct-of-arrays, host f64).
+
+    Lifecycle mirrors ``ParticipationPolicy``: construct from spec args,
+    ``bind(n_clients, seed)`` once per run, then per wave:
+
+      eligible(now, bw_period)        -> (N,) bool mask
+      survival_prob(ids, res_dropout) -> per-dispatch death probabilities
+      observe_dispatch(ids, now, cost_s) — batched busy/energy accounting
+    """
+
+    name = "vector"
+
+    def __init__(self, *args: Arg):
+        self.spec = self.name + "".join(f":{a}" for a in args)
+        self.n_clients = 0
+
+    def bind(self, n_clients: int, seed: int = 0) -> "VectorPolicy":
+        self.n_clients = int(n_clients)
+        self._rng = np.random.default_rng(np.random.SeedSequence(
+            [seed & 0xFFFFFFFF, 0x9A7, sum(ord(c) for c in self.name)]))
+        self._bind_state()
+        return self
+
+    def _bind_state(self) -> None:
+        pass
+
+    def eligible(self, now: float, bw_period: float = 600.0) -> np.ndarray:
+        return np.ones(self.n_clients, bool)
+
+    def survival_prob(self, ids: np.ndarray,
+                      res_dropout: np.ndarray) -> np.ndarray:
+        """Per-dispatch vanish probability (the vectorized counterpart of
+        ``dispatch_survives``; resources' own flakiness by default)."""
+        return np.asarray(res_dropout, np.float64)
+
+    def observe_dispatch(self, ids: np.ndarray, now: float,
+                         cost_s: np.ndarray) -> None:
+        pass
+
+
+class VUniform(VectorPolicy):
+    name = "uniform"
+
+
+class VAvailBernoulli(VectorPolicy):
+    """avail:bernoulli:p — uniform selection; every dispatch dies with
+    probability max(p, resource dropout), exactly the host policy's
+    ``dispatch_survives`` arithmetic."""
+
+    name = "avail"
+
+    def __init__(self, rate: float = 0.0):
+        super().__init__("bernoulli", float(rate))
+        self.rate = float(rate)
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"avail:bernoulli rate must be in [0, 1), "
+                             f"got {rate}")
+
+    def survival_prob(self, ids, res_dropout) -> np.ndarray:
+        return np.maximum(self.rate, np.asarray(res_dropout, np.float64))
+
+
+class VAvailDiurnal(VectorPolicy):
+    """avail:diurnal[:frac[:period]] — the host policy's availability
+    curve evaluated for the whole population at once: client i is up
+    while sin(2 pi t / P + 2 pi i / N) >= cos(pi * frac)."""
+
+    name = "avail"
+
+    def __init__(self, frac: float = 0.5, period: float = 0.0):
+        super().__init__("diurnal", float(frac), float(period))
+        self.frac = float(frac)
+        self.period = float(period)          # 0 -> caller's bw_period
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"avail:diurnal duty fraction must be in "
+                             f"(0, 1], got {frac}")
+
+    def eligible(self, now: float, bw_period: float = 600.0) -> np.ndarray:
+        ids = np.arange(self.n_clients, dtype=np.int64)
+        P = self.period or bw_period
+        phase = 2.0 * math.pi * ids / max(self.n_clients, 1)
+        lvl = np.sin(2.0 * math.pi * now / P + phase)
+        return lvl >= math.cos(math.pi * self.frac)
+
+
+class VEnergy(VectorPolicy):
+    """energy:J[:recharge[:power]] — the host ``EnergyBudget`` arrays
+    verbatim, with dispatch accounting batched over a wave (every client
+    in a wave is charged at the same instant, which is exactly the
+    sequential host bookkeeping when the timestamps coincide: accrual is
+    idempotent at a fixed ``now``)."""
+
+    name = "energy"
+
+    def __init__(self, capacity: float = 20.0, recharge: float = -1.0,
+                 power: float = 1.0):
+        if capacity <= 0:
+            raise ValueError(f"energy capacity must be positive, got {capacity}")
+        self.capacity = float(capacity)
+        self.recharge = (0.02 * self.capacity if recharge < 0
+                         else float(recharge))
+        self.power = float(power)
+        super().__init__(self.capacity, self.recharge, self.power)
+
+    def _bind_state(self) -> None:
+        self.battery = np.full(self.n_clients, self.capacity, np.float64)
+        self._busy_until = np.zeros(self.n_clients, np.float64)
+        self._last_acc = np.zeros(self.n_clients, np.float64)
+
+    def _accrue(self, now: float) -> None:
+        idle_from = np.maximum(self._last_acc, self._busy_until)
+        gain = self.recharge * np.maximum(0.0, now - idle_from)
+        self.battery = np.minimum(self.capacity, self.battery + gain)
+        self._last_acc = np.maximum(self._last_acc, now)
+
+    def eligible(self, now: float, bw_period: float = 600.0) -> np.ndarray:
+        self._accrue(now)
+        return self.battery > 0.0
+
+    def observe_dispatch(self, ids, now, cost_s) -> None:
+        self._accrue(now)
+        cost = np.asarray(cost_s, np.float64)
+        self.battery[ids] = np.maximum(0.0, self.battery[ids]
+                                       - self.power * cost)
+        self._busy_until[ids] = now + cost
+
+
+def _make_vavail(kind: Arg = "bernoulli", *args: Arg) -> VectorPolicy:
+    if kind == "bernoulli":
+        return VAvailBernoulli(*args)
+    if kind == "diurnal":
+        return VAvailDiurnal(*args)
+    raise ValueError(f"unknown availability kind {kind!r}; "
+                     f"have: bernoulli, diurnal")
+
+
+VECTOR_POLICIES: dict[str, Callable[..., VectorPolicy]] = {
+    "uniform": VUniform,
+    "avail": _make_vavail,
+    "energy": VEnergy,
+}
+
+
+def register_vector_policy(name: str):
+    """Register a vectorized policy factory under ``name`` (decorator)."""
+    def deco(factory):
+        VECTOR_POLICIES[name] = factory
+        return factory
+    return deco
+
+
+def make_vector_policy(spec: str | VectorPolicy | None, n_clients: int,
+                       seed: int = 0) -> VectorPolicy:
+    """Spec string -> bound vectorized policy (same grammar as
+    ``make_policy``); weighted host policies raise rather than losing
+    their bias correction silently."""
+    if isinstance(spec, VectorPolicy):
+        return spec.bind(n_clients, seed)
+    body = (spec or "uniform").strip()
+    name, _, argstr = body.partition(":")
+    name = name.strip()
+    if name not in VECTOR_POLICIES:
+        if name in POLICIES:
+            raise NotImplementedError(
+                f"participation policy {name!r} is host-side only (weighted "
+                f"selection needs per-client feedback); the fleet engine "
+                f"supports: {sorted(VECTOR_POLICIES)}")
+        raise ValueError(f"unknown participation policy {name!r} in spec "
+                         f"{spec!r}; registered: {sorted(VECTOR_POLICIES)}")
+    args = [_parse_arg(a) for a in re.split("[,:]", argstr) if a.strip()] \
+        if argstr else []
+    return VECTOR_POLICIES[name](*args).bind(n_clients, seed)

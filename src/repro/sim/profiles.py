@@ -5,6 +5,11 @@ draws one ``ClientResources`` per client.  Sampling is seeded and uses a
 dedicated RNG stream so the systems side never perturbs the data/cohort
 RNG stream of the learning algorithm (required for the ideal-regime
 equivalence with ``fl/rounds.py``).
+
+``sample_resource_arrays`` is the struct-of-arrays form the fleet engine
+consumes: identical RNG draws and identical elementwise arithmetic, so
+``sample_resources(sc, n, seed)[i] == arrays.row(i)`` bitwise — the list
+form is just rows of the array form (tested in ``tests/test_fleet.py``).
 """
 from __future__ import annotations
 
@@ -14,46 +19,82 @@ from collections.abc import Sequence
 import numpy as np
 
 from repro.configs.base import SimScenario, get_scenario
-from repro.core.comm import ClientResources
+from repro.core.comm import ClientResources, ResourceArrays
+from repro.launch.mesh import LINK_MIX, MEASURED_LINK_BW
 
 
-def sample_resources(scenario, n_clients: int, seed: int = 0) -> list[ClientResources]:
+def _measured_link_counts(n_clients: int) -> list[tuple[str, int]]:
+    """Largest-remainder apportionment of ``LINK_MIX`` over the fleet —
+    the same rule as ``launch.mesh.client_link_trace`` (which builds the
+    O(n) per-client list; at fleet scale only the counts are needed)."""
+    exact = [(name, frac * n_clients) for name, frac in LINK_MIX]
+    counts = {name: int(e) for name, e in exact}
+    short = n_clients - sum(counts.values())
+    by_rem = sorted(exact, key=lambda kv: kv[1] - int(kv[1]), reverse=True)
+    for name, _ in by_rem[:short]:
+        counts[name] += 1
+    return [(name, counts[name]) for name, _ in LINK_MIX]
+
+
+def sample_resource_arrays(scenario, n_clients: int,
+                           seed: int = 0) -> ResourceArrays:
+    """Struct-of-arrays resource draw (f64, shape (n_clients,) each)."""
     sc: SimScenario = get_scenario(scenario)
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0x51D]))
+    full = np.full
+
     if sc.kind in ("uniform", "diurnal"):
         # diurnal: identical clients; virtual TIME carries the variation
         # (bandwidth_multiplier, looked up per dispatch by the engines)
-        return [ClientResources(sc.step_time, sc.up_bw, sc.down_bw, sc.dropout)
-                for _ in range(n_clients)]
+        return ResourceArrays(full(n_clients, sc.step_time),
+                              full(n_clients, sc.up_bw),
+                              full(n_clients, sc.down_bw),
+                              full(n_clients, sc.dropout))
     if sc.kind == "lognormal":
         # multiplicative scatter with mean 1 (mu = -sigma^2/2)
         mu = -0.5 * sc.sigma ** 2
         slow = rng.lognormal(mu, sc.sigma, n_clients)        # compute slowdown
         link = rng.lognormal(mu, sc.sigma, n_clients)        # shared link quality
-        return [ClientResources(sc.step_time * s, sc.up_bw * l,
-                                sc.down_bw * l, sc.dropout)
-                for s, l in zip(slow, link)]
+        return ResourceArrays(sc.step_time * slow, sc.up_bw * link,
+                              sc.down_bw * link,
+                              full(n_clients, sc.dropout))
     if sc.kind == "bimodal":
         fast = rng.random(n_clients) < sc.fast_fraction
         jitter = rng.lognormal(0.0, 0.1, n_clients)          # mild within-mode scatter
-        out = []
-        for f, j in zip(fast, jitter):
-            if f:   # datacenter: fast compute, fat symmetric pipes, reliable
-                out.append(ClientResources(sc.step_time / sc.fast_speedup * j,
-                                           sc.up_bw * sc.fast_bw_scale,
-                                           sc.down_bw * sc.fast_bw_scale, 0.0))
-            else:   # mobile: slow compute, thin uplink, flaky
-                out.append(ClientResources(sc.step_time * j, sc.up_bw,
-                                           sc.down_bw, sc.dropout))
-        return out
+        # datacenter: fast compute, fat symmetric pipes, reliable;
+        # mobile: slow compute, thin uplink, flaky
+        return ResourceArrays(
+            np.where(fast, sc.step_time / sc.fast_speedup * jitter,
+                     sc.step_time * jitter),
+            np.where(fast, sc.up_bw * sc.fast_bw_scale, sc.up_bw),
+            np.where(fast, sc.down_bw * sc.fast_bw_scale, sc.down_bw),
+            np.where(fast, 0.0, sc.dropout))
+    if sc.kind == "measured":
+        # measured per-link goodput (launch/mesh.py), grouped by link
+        # class exactly like client_link_trace lays the population out
+        ups, downs = [], []
+        for name, count in _measured_link_counts(n_clients):
+            up, down = MEASURED_LINK_BW[name]
+            ups.append(full(count, up))
+            downs.append(full(count, down))
+        return ResourceArrays(full(n_clients, sc.step_time),
+                              np.concatenate(ups), np.concatenate(downs),
+                              full(n_clients, sc.dropout))
     raise ValueError(f"unknown scenario kind {sc.kind!r}")
+
+
+def sample_resources(scenario, n_clients: int, seed: int = 0) -> list[ClientResources]:
+    arrays = sample_resource_arrays(scenario, n_clients, seed)
+    return [arrays.row(i) for i in range(n_clients)]
 
 
 def bandwidth_multiplier(scenario, t: float) -> float:
     """Link-quality multiplier at virtual time ``t`` (1.0 = the mean).
 
-    Only the "diurnal" kind varies:  m(t) = 1 + A sin(2 pi t / P + phi)
-    with A = ``bw_amplitude`` in [0, 1) so bandwidth never reaches zero.
+    A nonzero ``bw_amplitude`` varies the links of ANY kind (the diurnal
+    preset sets it; a measured or lognormal scenario can layer the same
+    day/night cycle on top):  m(t) = 1 + A sin(2 pi t / P + phi) with
+    A = ``bw_amplitude`` in [0, 1) so bandwidth never reaches zero.
     The engines sample this once per DISPATCH and price the whole round
     trip at that instant's bandwidth — a client's transfer is short next
     to the cycle period, so the within-transfer variation is noise the
@@ -61,7 +102,7 @@ def bandwidth_multiplier(scenario, t: float) -> float:
     scenario resolution (``configs.base.validate_scenario``), not here in
     the per-dispatch hot path."""
     sc: SimScenario = get_scenario(scenario)
-    if sc.kind != "diurnal" or sc.bw_amplitude == 0.0:
+    if sc.bw_amplitude == 0.0:
         return 1.0
     return 1.0 + sc.bw_amplitude * math.sin(
         2.0 * math.pi * t / sc.bw_period + sc.bw_phase)

@@ -134,12 +134,59 @@ def test_fingerprint_is_line_independent():
     assert a.fingerprint != Finding("r", "p.py", 10, 0, "other").fingerprint
 
 
+# --- call-graph rooting ----------------------------------------------------
+
+
+def _graph_for(tmp_path, source: str):
+    from repro.analyze.callgraph import CallGraph
+    from repro.analyze.core import Project
+    mod = tmp_path / "src" / "proj" / "mod.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(source)
+    return CallGraph(Project.load(tmp_path))
+
+
+def test_shard_map_body_is_jit_root(tmp_path):
+    # the fleet wave-kernel shape: shard_map traces its body per shard
+    # exactly like jit traces its argument, including through a
+    # functools.partial wrapper
+    g = _graph_for(tmp_path, """\
+from functools import partial
+from jax.experimental.shard_map import shard_map
+
+def body(axes, key, x):
+    return x
+
+def make(mesh):
+    return shard_map(partial(body, ("data",)), mesh=mesh,
+                     in_specs=None, out_specs=None)
+""")
+    info = g.funcs["proj.mod:body"]
+    assert info.is_root and info.root_reason == "shard_map(...)"
+
+
+def test_vmap_wrapper_unwrapped_for_jit_root(tmp_path):
+    # jax.jit(jax.vmap(f)) traces f: the rooting must see through the
+    # transform wrapper (the fleet wave trainer's exact shape)
+    g = _graph_for(tmp_path, """\
+import jax
+
+def train_one(p, b):
+    return p
+
+def make():
+    return jax.jit(jax.vmap(train_one))
+""")
+    info = g.funcs["proj.mod:train_one"]
+    assert info.is_root and info.root_reason == "jax.jit(...)"
+
+
 # --- baseline workflow -----------------------------------------------------
 
 
 def test_baseline_roundtrip_suppresses(tmp_path, bad_findings):
     path = tmp_path / "baseline.json"
-    write_baseline(path, bad_findings)
+    write_baseline(path, bad_findings, reason="fixture: intentional bad code")
     fps = load_baseline(path)
     assert len(fps) == len({f.fingerprint for f in bad_findings})
     assert run_rules(BAD, baseline=fps) == []
@@ -151,6 +198,22 @@ def test_baseline_entry_without_reason_rejected(tmp_path):
         {"fingerprint": "abc123", "path": "x.py", "reason": "  "}]}
     path.write_text(json.dumps(doc))
     with pytest.raises(ValueError, match="has no reason"):
+        load_baseline(path)
+
+
+def test_baseline_todo_placeholder_rejected(tmp_path, bad_findings):
+    # the reason-less --write-baseline output must NOT load: a stamped
+    # placeholder that satisfied the mandatory-reason check forever was
+    # exactly the loophole this closes
+    path = tmp_path / "baseline.json"
+    write_baseline(path, bad_findings)
+    with pytest.raises(ValueError, match="placeholder reason"):
+        load_baseline(path)
+    doc = {"version": 1, "entries": [
+        {"fingerprint": "abc123", "path": "x.py",
+         "reason": "todo later, promise"}]}
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="placeholder reason"):
         load_baseline(path)
 
 
@@ -196,7 +259,18 @@ def test_cli_unknown_rule_is_usage_error(capsys):
 
 def test_cli_write_baseline_then_clean(tmp_path, capsys):
     bl = tmp_path / "bl.json"
-    assert main(["--root", str(BAD), "--write-baseline", str(bl)]) == 0
+    assert main(["--root", str(BAD), "--write-baseline", str(bl),
+                 "--reason", "fixture: intentional bad code"]) == 0
     assert main(["--root", str(BAD), "--baseline", str(bl)]) == 0
     out = capsys.readouterr().out
     assert "0 finding(s)" in out and "baselined" in out
+
+
+def test_cli_write_baseline_without_reason_is_inert(tmp_path, capsys):
+    # no --reason: the file writes (with a warning) but refuses to load,
+    # so the stamped TODO cannot silently grandfather findings
+    bl = tmp_path / "bl.json"
+    assert main(["--root", str(BAD), "--write-baseline", str(bl)]) == 0
+    assert "placeholder" in capsys.readouterr().out
+    assert main(["--root", str(BAD), "--baseline", str(bl)]) == 2
+    assert "placeholder reason" in capsys.readouterr().err

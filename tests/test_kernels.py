@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -272,3 +273,75 @@ def test_pack_unpack_roundtrip():
     back = unpack_applied(packed, layout, shapes, [l.dtype for l in leaves])
     for a, b in zip(leaves, back):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bf16 dtype bucket
+# ---------------------------------------------------------------------------
+
+
+def test_luar_agg_batched_all_bf16():
+    """A fully-bf16 model takes the single bf16 bucket (no f32 pack)."""
+    shapes = [(16, 8), (8,), (8, 4), (4,)]
+    _assert_batched_matches(shapes, [0, 0, 1, 1], [jnp.bfloat16] * 4, K=3)
+
+
+def test_bf16_bucket_storage_is_bf16_and_lossless():
+    """The bf16 bucket stores leaves in bf16 (half the HBM bytes) and
+    bf16 -> bf16 packing is bit-lossless round-trip."""
+    from repro.kernels.luar_agg import (build_pack_layout, pack_leaves,
+                                        unpack_applied)
+    shapes = ((16, 8), (8,))
+    leaf_unit = (0, 1)
+    rng = np.random.default_rng(7)
+    leaves = [jnp.asarray(rng.normal(size=s), jnp.bfloat16) for s in shapes]
+    layout = build_pack_layout(leaf_unit, shapes, 64, n_units=2, sublane=16)
+    assert layout.block_rows % 16 == 0
+    packed = pack_leaves(leaves, layout, dtype=jnp.bfloat16)
+    assert packed.dtype == jnp.bfloat16
+    back = unpack_applied(packed, layout, shapes, [l.dtype for l in leaves])
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_bf16_pack_layout_sublane_alignment():
+    """block_rows aligns DOWN to the dtype's sublane tile: a bf16 bucket
+    may never emit a block whose height isn't a multiple of 16."""
+    from repro.kernels.luar_agg import build_pack_layout
+    lay = build_pack_layout((0,), ((100, 128),), 24, n_units=1, sublane=16)
+    assert lay.block_rows == 16
+    lay8 = build_pack_layout((0,), ((100, 128),), 24, n_units=1, sublane=8)
+    assert lay8.block_rows == 24
+
+
+def test_pack_layout_absent_unit_gets_zero_block():
+    """A bucket holding only SOME units still spans the full unit-id
+    space — absent units get one zero block so the per-unit norm
+    accumulators align across buckets."""
+    from repro.kernels.luar_agg import build_pack_layout, pack_leaves
+    lay = build_pack_layout((2,), ((6,),), 8, n_units=4, sublane=8)
+    assert lay.n_units == 4 and len(lay.unit_rows) == 4
+    assert lay.seg.count(0) >= 1 and lay.seg.count(3) >= 1
+    packed = pack_leaves([jnp.ones((6,), jnp.float32)], lay)
+    v = np.asarray(packed).reshape(-1)
+    assert v.sum() == 6.0      # only the real leaf's payload is nonzero
+    start = lay.unit_row_start[2] * 128
+    assert (v[start:start + 6] == 1.0).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_luar_agg_batched_mixed_dtype_property(seed):
+    """Property fuzz: random per-leaf dtype assignment (f32/bf16 buckets
+    in one round, including stacked-depth leaves split across units)
+    always matches the per-leaf oracle."""
+    rng = np.random.default_rng(seed)
+    shapes = [(9, 4), (4,), (3, 8, 2), (17,), ()]
+    leaf_unit = [0, 0, (1, 3), 4, 4]
+    dtypes = [jnp.bfloat16 if rng.random() < 0.5 else jnp.float32
+              for _ in shapes]
+    K = int(rng.integers(1, 5))
+    _assert_batched_matches(shapes, leaf_unit, dtypes, K=K,
+                            seed=int(rng.integers(0, 2 ** 16)),
+                            block_rows=int(rng.choice([16, 32, 64])))
